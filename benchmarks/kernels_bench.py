@@ -1,0 +1,62 @@
+"""Kernel benchmarks: interpret-mode wall time (CPU correctness harness)
+plus the analytic TPU roofline for each kernel's target shapes.
+
+Wall times on CPU interpret mode are NOT TPU performance — the roofline
+columns (mxu_bound_us, hbm_bound_us) are the target-hardware estimates.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.roofline_report import HBM_BW, PEAK_FLOPS
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.split_gemm.ops import split_gemm
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_kernels() -> list[dict]:
+    rows = []
+    # split grouped GEMM: R1-shaped expert tile (E=16 slots visible/rank)
+    for (e, e_l, c, d, f) in [(8, 4, 128, 512, 256), (16, 8, 128, 256, 256)]:
+        ks = jax.random.split(jax.random.key(0), 3)
+        x = jax.random.normal(ks[0], (e, c, d), jnp.float32) * 0.1
+        wl = jax.random.normal(ks[1], (e_l, d, f), jnp.float32) * 0.1
+        wr = jax.random.normal(ks[2], (e - e_l, d, f), jnp.float32) * 0.1
+        us = _time(split_gemm, x, wl, wr) * 1e6
+        flops = 2 * e * c * d * f
+        byts = (e * c * d + e * d * f + e * c * f) * 2
+        rows.append({
+            "kernel": "split_gemm", "shape": f"E{e}/local{e_l} C{c} D{d} F{f}",
+            "interpret_us": round(us, 1),
+            "mxu_bound_us": round(flops / PEAK_FLOPS * 1e6, 2),
+            "hbm_bound_us": round(byts / HBM_BW * 1e6, 2),
+        })
+    # flash attention: context-phase tiles
+    for (b, s, h, kh, hd, w) in [(1, 1024, 8, 2, 128, 0), (1, 1024, 8, 2, 128, 256)]:
+        ks = jax.random.split(jax.random.key(1), 3)
+        q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, kh, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, kh, hd), jnp.float32)
+        us = _time(flash_attention, q, k, v, window=w) * 1e6
+        eff = min(w, s) if w else s
+        flops = 4 * b * h * hd * s * eff // (1 if w else 2)
+        byts = (3 * b * s * kh * hd + b * s * h * hd) * 2
+        rows.append({
+            "kernel": "flash_attention",
+            "shape": f"B{b} S{s} H{h}/{kh} hd{hd} win{w}",
+            "interpret_us": round(us, 1),
+            "mxu_bound_us": round(flops / PEAK_FLOPS * 1e6, 2),
+            "hbm_bound_us": round(byts / HBM_BW * 1e6, 2),
+        })
+    return rows

@@ -1,0 +1,263 @@
+"""One function per paper table/figure. Each returns a list of dict rows
+(and prints them) — the mapping to the paper artifact is in the docstring.
+
+GB200 constants are used when reproducing the paper's own numbers;
+the TPU-v5e analogue is reported alongside where meaningful.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+from repro.configs import get_arch
+from repro.core import contention, roofline
+from repro.core.placement import make_placement
+from repro.runtime.simulator import ClusterSimulator, SimConfig, pareto_sweep
+
+R1 = "deepseek-r1"
+
+
+def bench_fig1_sync_overhead() -> list[dict]:
+    """Fig. 1b: DEP synchronization overhead vs per-rank imbalance (CV of
+    sequence lengths). Model: rank latency ~ tokens; all ranks wait for the
+    slowest at each of the two all-to-alls."""
+    import random
+
+    rng = random.Random(0)
+    rows = []
+    # Only the compute segment between the two all-to-alls exposes skew
+    # (attention before the first, expert GEMM before the second); the
+    # rest of the layer overlaps across ranks. ~55% of the DEP iteration
+    # sits in sync-exposed segments (Table 1 categories).
+    exposed = 0.55
+    for cv in (0.0, 0.05, 0.10, 0.20, 0.30):
+        g = 4
+        trials = 400
+        overhead = 0.0
+        for _ in range(trials):
+            loads = [max(0.1, rng.gauss(1.0, cv)) for _ in range(g)]
+            overhead += max(loads) / (sum(loads) / g) - 1.0
+        overhead = overhead / trials * exposed
+        rows.append(
+            {
+                "cv_percent": int(cv * 100),
+                "sync_overhead_percent": round(100 * overhead, 1),
+            }
+        )
+    return rows
+
+
+def bench_fig3_roofline() -> list[dict]:
+    """Fig. 3: compute/prefetch ratio + DEP/DWDP ratio vs ISL (R1 ctx,
+    DWDP4 vs DEP4, batch 1, GB200). Paper: crossover ~16K tokens."""
+    cfg = get_arch(R1)
+    rows = roofline.figure3_sweep(cfg, group=4, hw=roofline.GB200)
+    x = roofline.crossover_isl(cfg, group=4)
+    rows.append({"crossover_isl": x})
+    # TPU-v5e analogue with the production group of 16
+    x_tpu = roofline.crossover_isl(cfg, group=16, hw=roofline.TPU_V5E)
+    rows.append({"crossover_isl_tpu_v5e_g16": x_tpu})
+    return rows
+
+
+def bench_table1_breakdown() -> list[dict]:
+    """Table 1: DEP4 vs DWDP4 context iteration breakdown (ISL=8K,
+    ratio 0.8, MNT=32K). Categories from the roofline operator model; the
+    paper's measured microseconds are included for comparison."""
+    cfg = get_arch(R1)
+    tokens = 32768  # MNT: context batch token budget
+    hw = roofline.GB200
+    moe_layer = cfg.moe.first_dense
+    lt = roofline.layer_times(cfg, tokens=tokens, group=4, hw=hw, layer=moe_layer)
+    n = cfg.num_layers
+
+    # paper-reported per-iteration microseconds (Table 1)
+    paper = {
+        "Attention": (269.67, 320.56),
+        "GroupedGEMM": (342.40, 337.42),
+        "DenseGEMM": (177.50, 189.28),
+        "Others": (241.69, 284.32),
+        "Communication": (126.74, 0.0),
+        "D2D Copy": (0.0, 34.00),
+        "P2P Copy": (0.0, 429.00),
+        "Synchronization Cost": (161.85, 0.0),
+        "Iteration Latency": (1319.85, 1165.58),
+    }
+    rows = [
+        {
+            "category": k,
+            "paper_dep4_us": v[0],
+            "paper_dwdp4_us": v[1],
+            "paper_delta_frac": round((v[0] - v[1]) / 1319.85, 4),
+        }
+        for k, v in paper.items()
+    ]
+    # model-derived aggregate check: per-iteration latencies
+    t_dep = (lt.compute + lt.all2all) * 1e6  # per layer, us
+    t_dwdp = max(lt.compute, lt.prefetch) * 1e6
+    rows.append(
+        {
+            "category": "model_per_layer",
+            "model_dep_us": round(t_dep, 2),
+            "model_dwdp_us": round(t_dwdp, 2),
+            "model_gain_frac": round(1 - t_dwdp / t_dep, 4),
+            "paper_gain_frac": round(1 - 1165.58 / 1319.85, 4),
+        }
+    )
+    return rows
+
+
+def bench_table2_contention() -> list[dict]:
+    """Table 2 (exact): contention probability Pr[C=c] per group size."""
+    rows = []
+    for n in (3, 4, 6, 8, 12, 16):
+        pr = contention.contention_probabilities(n)
+        rows.append(
+            {
+                "config": f"DWDP{n}",
+                **{
+                    f"C={c}": round(100 * p, 5)
+                    for c, p in sorted(pr.items())
+                    if p > 1e-9
+                },
+            }
+        )
+    return rows
+
+
+def bench_table3_ablations() -> list[dict]:
+    """Table 3: context-only TTFT / TPS-GPU speedup ablations. Speedup
+    model: DEP time = compute + all2all + imbalance sync; DWDP time =
+    max(compute, prefetch). (a) vs ISL; (b) vs MNT; (c) vs imbalance;
+    (d) vs group size."""
+    cfg = get_arch(R1)
+    hw = roofline.GB200
+    moe_layer = cfg.moe.first_dense
+
+    def speedup(tokens, group, isl, sync_frac=0.06):
+        lt = roofline.layer_times(
+            cfg, tokens=tokens, group=group, hw=hw, layer=moe_layer,
+            kv_len=isl,
+        )
+        dep = lt.compute * (1 + sync_frac) + lt.all2all
+        return round(dep / max(lt.compute, lt.prefetch), 3)
+
+    rows = []
+    for isl in (1024, 8192, 16384, 32768):
+        rows.append(
+            {"table": "3a", "isl": isl, "mnt": 32768,
+             "tps_gpu_speedup": speedup(32768, 4, isl)}
+            | ({"note": "MNT fixed: the runtime packs the token budget"}
+               if isl == 1024 else {})
+        )
+    for mnt in (16384, 32768):
+        rows.append({"table": "3b", "isl": 8192, "mnt": mnt,
+                     "tps_gpu_speedup": speedup(mnt, 4, 8192)})
+    for std_frac, sync in ((0.0, 0.0), (0.0625, 0.04), (0.125, 0.08),
+                           (0.25, 0.15)):
+        rows.append({"table": "3c", "isl": 16384,
+                     "isl_std": int(16384 * std_frac),
+                     "tps_gpu_speedup": speedup(32768, 4, 16384, sync)})
+    for g in (3, 4):
+        rows.append({"table": "3d", "group": g,
+                     "tps_gpu_speedup": speedup(32768, g, 16384)})
+    return rows
+
+
+def bench_table4_tdm() -> list[dict]:
+    """Table 4: contention mitigation (1MB TDM slices) vs merge-elim-only,
+    across (ISL ratio, MNT). The copy-engine simulator provides the
+    communication makespan; the compute window scales with ratio*MNT."""
+    cfg = get_arch(R1)
+    hw = roofline.GB200
+    moe = cfg.moe
+    layer_bytes = moe.num_experts * 3 * cfg.d_model * moe.d_ff  # NVFP4 ~1B
+    rows = []
+    for ratio in (0.5, 0.8):
+        for mnt in (16384, 32768):
+            tokens = int(ratio * mnt)
+            lt = roofline.layer_times(
+                cfg, tokens=tokens, group=4, hw=hw, layer=moe.first_dense
+            )
+            pull = layer_bytes // 4  # per-peer shard
+            # the copy engine only keeps SMALL requests two-in-flight
+            # (paper §4.3): monolithic pulls serialize (inflight=1)
+            sim_mono = contention.CopyEngineSim(4, hw.link_bw, None,
+                                                inflight=1)
+            sim_tdm = contention.CopyEngineSim(4, hw.link_bw, 1 << 20,
+                                               inflight=2)
+            # DWDP ranks are async: each rank's layer time is
+            # max(compute, its OWN pull completion); average the per-dst
+            # distribution over many random pull orders. TDM's benefit is
+            # variance reduction of comm_d (Jensen on the convex max).
+            import random as _r
+            def layer_time(sim):
+                ts = []
+                for seed in range(24):
+                    rr = _r.Random(seed)
+                    offs = [rr.uniform(0, lt.compute) for _ in range(4)]
+                    for c in sim.run_per_dst(pull, seed, offsets=offs):
+                        ts.append(max(lt.compute, c))
+                return sum(ts) / len(ts)
+            t_dwdp_mono = layer_time(sim_mono)
+            t_dwdp_tdm = layer_time(sim_tdm)
+            dep = lt.compute + lt.all2all
+            rows.append(
+                {
+                    "isl_ratio": ratio,
+                    "mnt": mnt,
+                    "dep": 1.0,
+                    "dwdp_merge_elim": round(dep / t_dwdp_mono, 3),
+                    "full_dwdp_tdm": round(dep / t_dwdp_tdm, 3),
+                }
+            )
+    return rows
+
+
+def bench_table5_e2e() -> list[dict]:
+    """Table 5 / Fig. 5: end-to-end Pareto — TPS/user vs output TPS/GPU,
+    baseline (DEP ctx) vs DWDP ctx, from the cluster simulator."""
+    cfg = get_arch(R1)
+    rows = []
+    for mode in ("dep", "dwdp"):
+        pts = pareto_sweep(
+            cfg, ctx_mode=mode,
+            ctx_gpu_options=(2, 4, 8),
+            rate_options=(0.5, 1.0, 2.0, 4.0),
+            horizon_s=120.0,
+        )
+        for p in pts:
+            rows.append({k: (round(v, 2) if isinstance(v, float) else v)
+                         for k, v in p.items()})
+    return rows
+
+
+def bench_table6_ttft() -> list[dict]:
+    """Table 6: TTFT at matched TPS/user (DWDP uses fewer ctx GPUs →
+    queueing can raise TTFT — the paper's trade-off)."""
+    cfg = get_arch(R1)
+    rows = []
+    for mode, ctx_gpus in (("dep", 8), ("dwdp", 4)):
+        sc = SimConfig(cfg=cfg, ctx_mode=mode, ctx_gpus=ctx_gpus,
+                       arrival_rate=2.0, horizon_s=120.0)
+        out = ClusterSimulator(sc).run()
+        rows.append({"mode": mode, "ctx_gpus": ctx_gpus,
+                     **{k: (round(v, 3) if isinstance(v, float) else v)
+                        for k, v in out.items()}})
+    return rows
+
+
+def bench_placement() -> list[dict]:
+    """DWDP flexible-placement table: remote prefetch fraction per
+    (experts x group) including non-divisible groups (paper §2)."""
+    rows = []
+    for e, g in ((8, 3), (8, 4), (8, 16), (128, 16), (256, 16),
+                 (256, 256), (128, 256)):
+        pl = make_placement(e, g)
+        rows.append({
+            "experts": e, "group": g, "redundancy": pl.redundancy,
+            "subgroup": pl.subgroup_size, "padded": pl.num_padded,
+            "remote_frac": round(pl.remote_fraction, 4),
+        })
+    return rows

@@ -1,0 +1,37 @@
+"""§Roofline table: summarize the dry-run JSONL outputs into the
+(arch x shape) baseline table with the three terms + dominant bottleneck.
+Reads results/dryrun_single.jsonl (and _multi) if present."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def bench_dryrun_roofline() -> list[dict]:
+    rows = []
+    for name in ("dryrun_all.jsonl",):
+        path = os.path.join(RESULTS, name)
+        if not os.path.exists(path):
+            rows.append({"missing": name,
+                         "hint": "run python -m repro.launch.dryrun --all"})
+            continue
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                rows.append(
+                    {
+                        "arch": r["arch"],
+                        "shape": r["shape"],
+                        "mesh": r["mesh"],
+                        "mode": r["mode"],
+                        "t_compute_ms": round(r["t_compute_ms"], 3),
+                        "t_memory_ms": round(r["t_memory_ms"], 3),
+                        "t_collective_ms": round(r["t_collective_ms"], 3),
+                        "dominant": r["dominant"],
+                        "useful_flop_ratio": round(r["useful_flop_ratio"], 3),
+                        "hbm_gb": round(r["hbm_gb_per_device"], 2),
+                    }
+                )
+    return rows

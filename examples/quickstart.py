@@ -1,0 +1,73 @@
+"""Quickstart: build an assigned architecture, run prefill + greedy decode.
+
+    PYTHONPATH=src python examples/quickstart.py --arch yi-9b
+
+Uses the reduced smoke variant so it runs on CPU in seconds; pass --full
+on real hardware.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced_variant
+from repro.configs.base import InputShape
+from repro.core import execution
+from repro.core.strategy import make_execution_plan
+from repro.launch.mesh import make_smoke_mesh, mesh_sizes
+from repro.models.cache import init_decode_state
+from repro.models.transformer import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-9b")
+    ap.add_argument("--mode", default="dwdp", choices=["dwdp", "dep", "replicated"])
+    ap.add_argument("--prefetch", default="ring",
+                    choices=["allgather", "ring", "ring_sliced"])
+    ap.add_argument("--tokens", type=int, default=12)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = reduced_variant(cfg)
+    mesh = make_smoke_mesh()
+    sizes = mesh_sizes(mesh)
+    model = build_model(cfg, sizes, dtype=jnp.float32)
+    print(f"{cfg.name}: {cfg.num_layers} layers, d={cfg.d_model}, "
+          f"params={cfg.param_count()/1e6:.1f}M, strategy={args.mode}")
+
+    params = model.init_params(jax.random.key(0))
+
+    # --- prefill (the DWDP context phase) -------------------------------
+    prompt_len, cache_len = 16, 64
+    prompt = jax.random.randint(jax.random.key(1), (1, prompt_len), 0,
+                                cfg.vocab_size)
+    xp = make_execution_plan(
+        model, InputShape("p", prompt_len, 1, "prefill"), sizes,
+        mode=args.mode, prefetch=args.prefetch,
+    )
+    prefill = execution.make_step_fn(model, xp, mesh, capture_len=cache_len)
+    out = prefill(params, {"tokens": prompt})
+    first = int(jnp.argmax(out["last_logits"][0]))
+    state = out["state"]
+    print("prompt:", prompt[0].tolist())
+    print("first token:", first)
+
+    # --- greedy decode ----------------------------------------------------
+    xp_d = make_execution_plan(
+        model, InputShape("d", cache_len, 1, "decode"), sizes, mode="dep"
+    )
+    decode = execution.make_step_fn(model, xp_d, mesh)
+    tok = jnp.asarray([[first]], jnp.int32)
+    generated = [first]
+    for _ in range(args.tokens - 1):
+        o = decode(params, {"token": tok}, state)
+        tok, state = o["next_token"], o["state"]
+        generated.append(int(tok[0, 0]))
+    print("generated:", generated)
+
+
+if __name__ == "__main__":
+    main()

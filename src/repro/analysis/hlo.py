@@ -1,0 +1,84 @@
+"""HLO text analysis: collective byte accounting.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+(optimized or unoptimized) HLO text and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+instruction. Async pairs count once (the -start op carries the operands;
+-done is skipped).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# one HLO instruction: `%name = TYPE[SHAPE]{layout} opcode(...operands...)`
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*)\s+([a-z0-9-]+)(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Per collective kind: {"bytes": operand bytes, "count": #ops}."""
+    out: dict[str, dict[str, float]] = defaultdict(
+        lambda: {"bytes": 0.0, "count": 0.0}
+    )
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        if op.endswith("-done"):
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in COLLECTIVE_OPS:
+            continue
+        # operand shapes: everything inside the top-level parens
+        call = line[m.end():]
+        depth = 1
+        i = 0
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        operands = call[:i]
+        nbytes = sum(
+            _shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(operands)
+        )
+        out[base]["bytes"] += nbytes
+        out[base]["count"] += 1
+    return dict(out)
+
+
+def collective_bytes(hlo_text: str) -> float:
+    """Total collective operand bytes (per device) in the module."""
+    return sum(v["bytes"] for v in parse_collectives(hlo_text).values())

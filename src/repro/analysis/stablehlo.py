@@ -1,0 +1,263 @@
+"""Interprocedural StableHLO cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` does not multiply while-loop trip
+counts (a 48-layer ``lax.scan`` counts as one layer), and the optimized
+HLO drops operand shapes from collective instructions. We therefore
+analyze the *lowered* StableHLO text, which keeps full type signatures,
+original dtypes, and an explicit loop/call structure:
+
+- every ``func.func`` is parsed into events (dot_generals, collectives,
+  op results) each tagged with the product of enclosing while trip counts
+  (trip = the loop-bound constant in the ``cond`` block);
+- ``func.call`` edges propagate multipliers through the call graph.
+
+Outputs per device: matmul FLOPs, bytes touched (sum of op result bytes —
+an upper-ish estimate since XLA fuses elementwise chains; documented in
+DESIGN.md §5), and per-kind collective wire bytes using ring-algorithm
+costs:
+
+    all_gather        operand x (G-1)
+    all_reduce        2 x operand x (G-1)/G
+    reduce_scatter    operand x (G-1)/G
+    all_to_all        operand x (G-1)/G
+    collective_permute operand
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "i1": 1, "i8": 1, "ui8": 1, "f8E4M3FN": 1, "f8E5M2": 1,
+    "i16": 2, "ui16": 2, "f16": 2, "bf16": 2,
+    "i32": 4, "ui32": 4, "f32": 4,
+    "i64": 8, "ui64": 8, "f64": 8,
+}
+
+_TENSOR_RE = re.compile(r"tensor<([0-9x]*)\s*x?\s*([A-Za-z0-9]+)>")
+_FUNC_RE = re.compile(r"func\.func\s+(?:public|private)?\s*@([\w.]+)")
+_CALL_RE = re.compile(r"(?:func\.)?call\s+@([\w.]+)")
+_COLLECTIVE_RE = re.compile(
+    r'"stablehlo\.(all_gather|all_reduce|reduce_scatter|all_to_all|'
+    r"collective_permute)\""
+)
+_GROUPS_RE = re.compile(r"replica_groups = dense<.*?> : tensor<(\d+)x(\d+)xi64>")
+_DENSE_INT_RE = re.compile(r"dense<(-?\d+)>")
+_CONTRACT_RE = re.compile(r"contracting_dims = \[([0-9, ]*)\] x \[([0-9, ]*)\]")
+
+
+def _tensor_bytes(dims: str, dtype: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.rstrip("x").split("x"):
+            if d:
+                n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _sig_tensors(line: str):
+    """Tensors in the trailing type signature `: (ops) -> res`."""
+    idx = line.rfind(" : ")
+    if idx < 0:
+        return [], []
+    sig = line[idx + 3:]
+    if "->" in sig:
+        ops_s, res_s = sig.split("->", 1)
+    else:
+        ops_s, res_s = "", sig
+    return _TENSOR_RE.findall(ops_s), _TENSOR_RE.findall(res_s)
+
+
+@dataclasses.dataclass
+class FuncCost:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    result_bytes: float = 0.0
+    coll: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: {"bytes": 0.0, "count": 0.0})
+    )
+    calls: list = dataclasses.field(default_factory=list)  # (name, mult)
+
+
+def _collective_wire_bytes(kind: str, op_bytes: float, group: int) -> float:
+    if kind == "collective_permute":
+        return op_bytes  # no replica_groups attr; always moves the operand
+    if group <= 1:
+        return 0.0
+    if kind == "all_gather":
+        return op_bytes * (group - 1)
+    if kind == "all_reduce":
+        return 2.0 * op_bytes * (group - 1) / group
+    if kind in ("reduce_scatter", "all_to_all"):
+        return op_bytes * (group - 1) / group
+    return op_bytes  # collective_permute
+
+
+_CONST_DEF_RE = re.compile(
+    r"%(\w+)\s*=\s*stablehlo\.constant\s+dense<(-?\d+)>"
+)
+_ITER_INIT_RE = re.compile(r"%iterArg\w*\s*=\s*%(\w+)")
+
+
+def _parse_func(lines: list[str]) -> FuncCost:
+    fc = FuncCost()
+    mult_stack: list[tuple[int, float]] = []  # (depth, trip)
+    depth = 0
+    mode = "normal"  # normal | cond
+    cond_consts: list[int] = []
+    init_consts: list[int] = []
+    const_table: dict[str, int] = {}
+
+    for line in lines:
+        s = line.strip()
+        cur_mult = math.prod(m for _, m in mult_stack) if mult_stack else 1.0
+
+        cm = _CONST_DEF_RE.match(s)
+        if cm:
+            const_table[cm.group(1)] = int(cm.group(2))
+
+        if mode == "cond":
+            if s.startswith("} do {"):
+                # count-up loops carry the bound in the cond; countdown
+                # loops (reverse-mode scans) start at N-1 and compare >= 0,
+                # so also consider the iterArg init constants.
+                up = max([c for c in cond_consts if c > 0] or [0])
+                down = max([c + 1 for c in init_consts if c > 0] or [0])
+                # prefer the explicit cond bound; fall back to the
+                # iterArg init for countdown (reverse-scan) loops
+                trip = up if up > 1 else max(down, 1)
+                # `} do {` closes cond and opens do at the same depth
+                mult_stack.append((depth, float(trip)))
+                mode = "normal"
+                continue
+            cond_consts += [int(v) for v in _DENSE_INT_RE.findall(s)]
+            continue
+
+        if "stablehlo.while" in s:
+            init_consts = [
+                const_table[name]
+                for name in _ITER_INIT_RE.findall(s)
+                if name in const_table
+            ]
+            # next structural line is `cond {`
+            mode = "await_cond"
+            continue
+        if mode == "await_cond":
+            if s.startswith("cond {"):
+                mode = "cond"
+                cond_consts = []
+                continue
+            mode = "normal"  # defensive
+
+        net = s.count("{") - s.count("}")
+        if net:
+            depth += net
+            if net < 0 and mult_stack and depth < mult_stack[-1][0]:
+                mult_stack.pop()
+            # fall through: a closing line may still carry an op? (rare)
+
+        m = _CALL_RE.search(s)
+        if m and "stablehlo" not in m.group(0):
+            fc.calls.append((m.group(1), cur_mult))
+            continue
+
+        mc = _COLLECTIVE_RE.search(s)
+        if mc:
+            kind = mc.group(1)
+            ops, _res = _sig_tensors(s)
+            op_bytes = sum(_tensor_bytes(d, t) for d, t in ops)
+            gm = _GROUPS_RE.search(s)
+            group = int(gm.group(2)) if gm else 1
+            fc.coll[kind]["bytes"] += cur_mult * _collective_wire_bytes(
+                kind, op_bytes, group
+            )
+            fc.coll[kind]["count"] += cur_mult
+            continue
+
+        if "stablehlo.dot_general" in s:
+            ops, res = _sig_tensors(s)
+            if res:
+                out_elems = 1
+                dims = res[0][0]
+                if dims:
+                    for d in dims.rstrip("x").split("x"):
+                        if d:
+                            out_elems *= int(d)
+                contract = 1
+                cm = _CONTRACT_RE.search(s)
+                if cm and ops:
+                    lhs_dims = [
+                        int(d)
+                        for d in ops[0][0].rstrip("x").split("x")
+                        if d
+                    ]
+                    for ci in cm.group(1).split(","):
+                        ci = ci.strip()
+                        if ci:
+                            contract *= lhs_dims[int(ci)]
+                fc.dot_flops += cur_mult * 2.0 * out_elems * contract
+                fc.dot_bytes += cur_mult * (
+                    sum(_tensor_bytes(d, t) for d, t in ops)
+                    + sum(_tensor_bytes(d, t) for d, t in res)
+                )
+        if "stablehlo." in s and " : " in s and "=" in s:
+            _ops, res = _sig_tensors(s)
+            fc.result_bytes += cur_mult * sum(
+                _tensor_bytes(d, t) for d, t in res
+            )
+    return fc
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float
+    dot_bytes: float
+    result_bytes: float
+    coll: dict  # kind -> {"bytes", "count"}
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.coll.values())
+
+
+def analyze_module(text: str, entry: str = "main") -> ModuleCost:
+    # split funcs
+    funcs: dict[str, list[str]] = {}
+    name = None
+    for line in text.splitlines():
+        m = _FUNC_RE.search(line)
+        if m:
+            name = m.group(1)
+            funcs[name] = []
+        if name is not None:
+            funcs[name].append(line)
+    costs = {n: _parse_func(ls) for n, ls in funcs.items()}
+
+    memo: dict[str, ModuleCost] = {}
+
+    def resolve(n: str) -> ModuleCost:
+        if n in memo:
+            return memo[n]
+        fc = costs.get(n)
+        if fc is None:
+            return ModuleCost(0, 0, 0, {})
+        coll = {
+            k: {"bytes": v["bytes"], "count": v["count"]}
+            for k, v in fc.coll.items()
+        }
+        total = ModuleCost(fc.dot_flops, fc.dot_bytes, fc.result_bytes, coll)
+        for callee, mult in fc.calls:
+            sub = resolve(callee)
+            total.flops += mult * sub.flops
+            total.dot_bytes += mult * sub.dot_bytes
+            total.result_bytes += mult * sub.result_bytes
+            for k, v in sub.coll.items():
+                slot = total.coll.setdefault(k, {"bytes": 0.0, "count": 0.0})
+                slot["bytes"] += mult * v["bytes"]
+                slot["count"] += mult * v["count"]
+        memo[n] = total
+        return total
+
+    return resolve(entry)

@@ -1,0 +1,79 @@
+"""npz-based sharded checkpointing.
+
+Each pytree leaf is stored under its "/".join(path) key; large leaves are
+split into row-chunks (``max_chunk_bytes``) so a multi-hundred-GB expert
+bank streams to disk without a full-tensor host copy. Structure and dtype
+metadata ride along so ``load_pytree`` restores exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_META = "__tree_meta__"
+
+
+def _flatten_with_paths(tree: PyTree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save_pytree(path: str, tree: PyTree, *, max_chunk_bytes: int = 1 << 30) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays: dict[str, np.ndarray] = {}
+    meta: dict[str, dict] = {}
+    for key, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        nbytes = arr.nbytes
+        if nbytes > max_chunk_bytes and arr.ndim >= 1 and arr.shape[0] > 1:
+            rows_per = max(1, int(max_chunk_bytes // max(1, nbytes // arr.shape[0])))
+            chunks = [
+                arr[i : i + rows_per] for i in range(0, arr.shape[0], rows_per)
+            ]
+            for ci, c in enumerate(chunks):
+                arrays[f"{key}@chunk{ci}"] = c
+            meta[key] = {"chunks": len(chunks), "dtype": str(arr.dtype)}
+        else:
+            arrays[key] = arr
+            meta[key] = {"chunks": 0, "dtype": str(arr.dtype)}
+    treedef = jax.tree_util.tree_structure(tree)
+    arrays[_META] = np.frombuffer(
+        json.dumps({"meta": meta, "treedef": str(treedef)}).encode(), np.uint8
+    )
+    np.savez(path, **arrays)
+
+
+def load_pytree(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    with np.load(path) as data:
+        blob = json.loads(bytes(data[_META].tobytes()).decode())
+        meta = blob["meta"]
+
+        def read(key):
+            info = meta[key]
+            if info["chunks"]:
+                return np.concatenate(
+                    [data[f"{key}@chunk{i}"] for i in range(info["chunks"])]
+                )
+            return data[key]
+
+        leaves = []
+        for key, ref_leaf in _flatten_with_paths(like):
+            arr = read(key)
+            assert arr.shape == tuple(ref_leaf.shape), (
+                key, arr.shape, ref_leaf.shape,
+            )
+            leaves.append(arr.astype(ref_leaf.dtype))
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, leaves)

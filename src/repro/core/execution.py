@@ -1,0 +1,1203 @@
+"""DWDP execution engine: the paper's strategy as a first-class feature.
+
+Everything that crosses ranks lives here, inside one whole-forward
+``shard_map``. The three strategies share all local math and differ only
+in *what moves*:
+
+- **dwdp**: weights move. Expert / FFN / (escalated) attention weights are
+  prefetch-gathered per layer — software-pipelined one layer ahead through
+  the ``lax.scan`` carry (the paper's double buffering) — or ring-rotated
+  through ranks when a full layer set cannot fit HBM. Activations never
+  cross ranks for the FFN path; each rank serves its own tokens end to
+  end.
+- **dep**: activations move. MoE uses all-to-all dispatch/combine; dense
+  layers use gather + reduce-scatter TP (the synchronizing layer-boundary
+  collectives of paper Fig. 1).
+- **replicated**: nothing moves (pure DP reference; only meaningful when
+  the weights fit replicated).
+
+Sequence sharding (when the batch can't cover the mesh), KV-cache decode
+with psum-LSE combine, RG-LRU cross-shard fix-up, vocab-sharded heads and
+ZeRO-style train gathers are all implemented here so every
+(arch x shape x mesh x mode) combination lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import BlockKind
+from repro.core import prefetch
+from repro.core.placement import Placement, make_placement
+from repro.core.strategy import ExecutionPlan, input_pspecs, output_pspecs, state_pspecs
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models.cache import init_decode_state
+from repro.models.layers import causal_conv1d, rms_norm, apply_rope, softcap
+from repro.models.recurrent import recurrent_block, rglru_parts
+from repro.models.transformer import AXIS_MODEL, Geometry, LayerSig, Model
+from repro.models.xlstm import mlstm_block, slstm_block
+
+PyTree = Any
+XENT_CHUNK = 512
+
+
+# ==========================================================================
+# Small axis helpers (all used inside shard_map).
+# ==========================================================================
+def _axsize(xp: ExecutionPlan, axes: tuple[str, ...]) -> int:
+    return math.prod(xp.mesh_sizes[a] for a in axes)
+
+
+def _shard_index(xp: ExecutionPlan, axes: tuple[str, ...]):
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * xp.mesh_sizes[a] + lax.axis_index(a)
+    return idx
+
+
+def _psum(x, axes):
+    return lax.psum(x, axes) if axes else x
+
+
+def _axes_arg(axes: tuple[str, ...]):
+    return axes if len(axes) > 1 else axes[0]
+
+
+@dataclasses.dataclass
+class Ctx:
+    model: Model
+    xp: ExecutionPlan
+    pos: Any = None          # decode: (B,) per-row positions (traced)
+    q_offset: Any = 0        # prefill/train: global offset of local seq slice
+    capture_len: int = 0     # prefill: also emit a decode state of this len
+
+    @property
+    def cfg(self):
+        return self.model.cfg
+
+    @property
+    def geom(self) -> Geometry:
+        return self.model.geom
+
+    @property
+    def decode(self) -> bool:
+        return self.xp.phase == "decode"
+
+
+# ==========================================================================
+# Gather set: which weight subtrees are prefetched per layer, per mode.
+# ==========================================================================
+def _dep_tp_ok(geom: Geometry, xp: ExecutionPlan, what: str) -> bool:
+    """Can DEP run this weight family as TP instead of gathering?"""
+    if what == "ffn":
+        return geom.ffn_axes == ("model",)
+    if what == "attn":
+        return (
+            geom.attn_tp_ok
+            and xp.phase != "decode"
+            and geom.model_size > 1
+        )
+    return False
+
+
+def gather_set(sig: LayerSig, geom: Geometry, xp: ExecutionPlan) -> tuple[tuple[str, ...], ...]:
+    """Key paths within a layer param dict that the prefetch pipeline
+    gathers before the layer executes."""
+    if xp.mode == "replicated":
+        return ()
+    out: list[tuple[str, ...]] = []
+    weights_move = xp.mode in ("dwdp", "hybrid")
+    is_attn = sig.kind in (BlockKind.GLOBAL_ATTN, BlockKind.LOCAL_ATTN)
+    if is_attn and geom.attn_axes and not _qgather_ok(geom, xp):
+        if weights_move or not _dep_tp_ok(geom, xp, "attn"):
+            out.append(("attn",))
+    if sig.kind == BlockKind.RECURRENT and geom.cell_axes:
+        out.append(("rec",))
+    if sig.kind in (BlockKind.MLSTM, BlockKind.SLSTM) and geom.cell_axes:
+        out.append(("cell",))
+    if sig.is_moe:
+        pl = geom.moe_placement
+        assert pl is not None
+        if (
+            xp.mode == "dwdp"
+            and geom.moe_exec == "gather"
+            and pl.subgroup_size > 1
+        ):
+            out.append(("moe", "experts"))
+        if sig.shared_d_ff and geom.ffn_axes:
+            if weights_move or not _dep_tp_ok(geom, xp, "ffn"):
+                out.append(("moe", "shared"))
+    elif sig.ffn_dim and geom.ffn_axes:
+        if weights_move or not _dep_tp_ok(geom, xp, "ffn"):
+            out.append(("ffn",))
+    return tuple(out)
+
+
+def _extract(lp: dict, paths) -> dict:
+    out = {}
+    for path in paths:
+        sub = lp
+        for k in path:
+            sub = sub[k]
+        out["/".join(path)] = sub
+    return out
+
+
+def _merge(lp: dict, gathered: dict) -> dict:
+    if not gathered:
+        return lp
+    lp = dict(lp)
+    for key, sub in gathered.items():
+        path = key.split("/")
+        node = lp
+        for k in path[:-1]:
+            node[k] = dict(node[k])
+            node = node[k]
+        node[path[-1]] = sub
+    return lp
+
+
+def _gather_leading(tree, axes: tuple[str, ...], xp: ExecutionPlan):
+    """Gather stacked-storage weights (leading shard axis) to full."""
+    size = _axsize(xp, axes)
+    if size == 1:
+        return tree
+    if len(axes) > 1 or xp.prefetch == "allgather":
+        ax = _axes_arg(axes)
+        return jax.tree.map(
+            lambda w: lax.all_gather(w, ax, axis=0, tiled=True), tree
+        )
+    pl = make_placement(size, size)
+    return prefetch.gather_shards(
+        tree, axes[0], pl, mode=xp.prefetch, num_slices=xp.num_slices
+    )
+
+
+def _gather_flat(tree, axes: tuple[str, ...], xp: ExecutionPlan):
+    """Gather flat (last-dim-sharded) cell weights to full.
+
+    Only the 2-D ``w_*`` projection matrices are ZeRO-sharded by the spec
+    builder (layer_pspecs); 1-D gains, conv kernels and per-head ``r_*``
+    recurrent blocks stay replicated and must pass through untouched.
+    """
+    if _axsize(xp, axes) == 1:
+        return tree
+    ax = _axes_arg(axes)
+    return {
+        k: (
+            lax.all_gather(w, ax, axis=w.ndim - 1, tiled=True)
+            if (k.startswith("w_") and w.ndim == 2)
+            else w
+        )
+        for k, w in tree.items()
+    }
+
+
+def gather_layer(gsub: dict, ctx: Ctx) -> dict:
+    geom, xp = ctx.geom, ctx.xp
+    out = {}
+    for key, tree in gsub.items():
+        if key == "attn":
+            out[key] = _gather_leading(tree, geom.attn_axes, xp)
+        elif key in ("ffn", "moe/shared"):
+            out[key] = _gather_leading(tree, geom.ffn_axes, xp)
+        elif key == "moe/experts":
+            pl = geom.moe_placement
+            assert pl is not None and len(geom.expert_axes) == 1
+            out[key] = prefetch.gather_shards(
+                tree,
+                geom.expert_axes[0],
+                pl,
+                mode=xp.prefetch,
+                num_slices=xp.num_slices,
+            )
+        elif key in ("rec", "cell"):
+            # norms and 1-d params are replicated; only shard-eligible
+            # (last dim divisible) leaves were sharded by the spec builder
+            out[key] = _gather_flat(tree, geom.cell_axes, xp)
+        else:
+            raise KeyError(key)
+    return out
+
+
+# ==========================================================================
+# Embedding / head.
+# ==========================================================================
+def _embed_table(params, ctx: Ctx):
+    """Full (V_pad, D) embedding — gathered over the vocab shards."""
+    emb = params["embed"]
+    if ctx.geom.model_size > 1:
+        emb = lax.all_gather(emb, AXIS_MODEL, axis=0, tiled=True)
+    return emb
+
+
+def _compute_dtype(model):
+    if model.dtype in (jnp.float8_e4m3fn, jnp.float8_e5m2):
+        return jnp.bfloat16
+    return model.dtype
+
+
+def _embed_decode(params, token, ctx: Ctx):
+    emb = params["embed"]  # local (V_l, D)
+    v_l = emb.shape[0]
+    off = lax.axis_index(AXIS_MODEL) * v_l if ctx.geom.model_size > 1 else 0
+    idx = token - off
+    valid = (idx >= 0) & (idx < v_l)
+    cd = _compute_dtype(ctx.model)
+    x = emb[jnp.clip(idx, 0, v_l - 1)].astype(cd) * valid[..., None].astype(cd)
+    if ctx.geom.model_size > 1:
+        x = lax.psum(x, AXIS_MODEL)
+    return x
+
+
+def _head_local(params, ctx: Ctx):
+    """Local (D, V_l) head slice for decode/prefill logits."""
+    if ctx.cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def _mask_vocab_cols(logits, ctx: Ctx, local: bool):
+    v = ctx.cfg.vocab_size
+    v_tot = ctx.geom.vocab_pad
+    if v == v_tot:
+        return logits
+    n = logits.shape[-1]
+    if local and ctx.geom.model_size > 1:
+        off = lax.axis_index(AXIS_MODEL) * n
+    else:
+        off = 0
+    cols = off + jnp.arange(n)
+    return jnp.where(cols < v, logits, -1e30)
+
+
+# ==========================================================================
+# Attention.
+# ==========================================================================
+def _w(w, like):
+    """Dequantize-on-use: fp8-stored weights compute in the activation
+    dtype (the paper's NVFP4-storage analogue)."""
+    return w.astype(like.dtype) if w.dtype != like.dtype else w
+
+
+def _project_heads(h, w, heads, head_dim):
+    """h: (B,S,D); w: (A, D, dim/A) stacked -> (B,S,heads,head_dim)."""
+    b, s, _ = h.shape
+    out = jnp.einsum("bsd,adh->bsah", h, _w(w, h))
+    return out.reshape(b, s, heads, head_dim)
+
+
+def _dedupe_kv(w, geom: Geometry):
+    """Gathered kv weights (A, D, kvd/ks) -> (ks, D, kvd/ks)."""
+    a = w.shape[0]
+    if a > geom.kv_shard:
+        w = w[:: a // geom.kv_shard]
+    return w
+
+
+def _attn_full(h, aw, sig: LayerSig, ctx: Ctx, lstate):
+    """Full-weight attention (replicated or DWDP-gathered weights)."""
+    cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
+    b, s, _ = h.shape
+    hd = cfg.head_dim
+    q = _project_heads(h, aw["wq"], cfg.num_heads, hd)
+    wk = _dedupe_kv(aw["wk"], geom)
+    wv = _dedupe_kv(aw["wv"], geom)
+    k = _project_heads(h, wk, cfg.num_kv_heads, hd)
+    v = _project_heads(h, wv, cfg.num_kv_heads, hd)
+
+    if ctx.decode:
+        pos = ctx.pos  # (B,) per-row decode positions
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k = apply_rope(k, pos[:, None], cfg.rope_theta)
+        out, new_state = _attn_decode_cache(q, k, v, sig, ctx, lstate)
+    else:
+        positions = ctx.q_offset + jnp.arange(s)
+        posb = jnp.broadcast_to(positions, (b, s))
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+        if xp.seq_axes:
+            ax = _axes_arg(xp.seq_axes)
+            k = lax.all_gather(k, ax, axis=1, tiled=True)
+            v = lax.all_gather(v, ax, axis=1, tiled=True)
+        out = attn_lib.mha_prefill(
+            q, k, v, window=sig.window, q_offset=ctx.q_offset,
+            block_causal=ctx.xp.block_causal,
+        )
+        if ctx.capture_len:
+            new_state = _capture_kv_state(k, v, sig, ctx)
+        else:
+            new_state = lstate
+    a = aw["wo"].shape[0]
+    out = out.reshape(b, out.shape[1], a, -1)
+    y = jnp.einsum("bsag,agd->bsd", out, _w(aw["wo"], out))
+    return y, new_state
+
+
+def _attn_decode_cache(q, k_new, v_new, sig: LayerSig, ctx: Ctx, lstate):
+    """Write each row's new token into the (possibly seq-sharded, possibly
+    ring) KV cache, then partial-attend + psum-LSE combine across shards.
+
+    Positions are per-row (B,) so continuously-batched rows can sit at
+    different depths; the write is a one-hot masked select per row."""
+    xp = ctx.xp
+    pos = ctx.pos  # (B,)
+    l_local = lstate["k"].shape[1]
+    n_sh = xp.seq_shards if xp.seq_axes else 1
+    l_total = l_local * n_sh
+    slot = pos % l_total                      # (B,)
+    owner = slot // l_local
+    li = slot % l_local
+    mine = _shard_index(xp, xp.seq_axes) if xp.seq_axes else jnp.int32(0)
+
+    write = (owner == mine)                   # (B,)
+    onehot = (
+        jnp.arange(l_local)[None, :] == li[:, None]
+    ) & write[:, None]                        # (B, L_local)
+    ck = jnp.where(
+        onehot[:, :, None, None],
+        k_new.astype(lstate["k"].dtype),      # (B,1,Kh,hd) broadcasts over L
+        lstate["k"],
+    )
+    cv = jnp.where(
+        onehot[:, :, None, None],
+        v_new.astype(lstate["v"].dtype),
+        lstate["v"],
+    )
+    sp = jnp.where(onehot, pos[:, None], lstate["slot_pos"])
+    new_state = {"k": ck, "v": cv, "slot_pos": sp}
+
+    out, lse = attn_lib.mha_decode_partial(
+        q[:, 0],
+        ck.astype(q.dtype),
+        cv.astype(q.dtype),
+        sp,
+        pos,
+        window=sig.window,
+    )
+    if xp.seq_axes:
+        m = lax.pmax(lse, xp.seq_axes)
+        w = jnp.exp(lse - m)
+        num = lax.psum(out.astype(jnp.float32) * w[..., None], xp.seq_axes)
+        den = lax.psum(w, xp.seq_axes)
+        out = (num / jnp.maximum(den, 1e-30)[..., None]).astype(q.dtype)
+    return out[:, None], new_state  # (B,1,H,hd)
+
+
+def _capture_kv_state(k, v, sig: LayerSig, ctx: Ctx):
+    """Turn prefill K/V into a ring-buffer decode state (the disaggregated
+    ctx->gen KV transfer payload). Ring slot l holds the latest position
+    p < S with p % L == l; slots that never filled stay empty (-1)."""
+    assert not ctx.xp.seq_axes, "KV capture requires unsharded sequence"
+    b, s = k.shape[0], k.shape[1]
+    length = min(sig.window, ctx.capture_len) if sig.window else ctx.capture_len
+    l_idx = jnp.arange(length)
+    pos_l = (s - 1) - ((s - 1 - l_idx) % length)
+    valid = pos_l >= 0
+    take = jnp.clip(pos_l, 0, s - 1)
+    ck = jnp.take(k, take, axis=1) * valid[None, :, None, None].astype(k.dtype)
+    cv = jnp.take(v, take, axis=1) * valid[None, :, None, None].astype(v.dtype)
+    slot_pos = jnp.broadcast_to(
+        jnp.where(valid, pos_l, -1)[None, :], (b, length)
+    ).astype(jnp.int32)
+    return {"k": ck, "v": cv, "slot_pos": slot_pos}
+
+
+def _qgather_ok(geom: Geometry, xp: ExecutionPlan) -> bool:
+    return (
+        xp.phase == "decode"
+        and getattr(xp, "decode_attn", "gather") == "qgather"
+        and geom.attn_axes == ("model",)
+        and AXIS_MODEL not in xp.batch_axes
+        and geom.model_size > 1
+    )
+
+
+def _attn_decode_qgather(h, aw, sig: LayerSig, ctx: Ctx, lstate):
+    """Beyond-paper decode attention for sharded attention weights: keep
+    weights LOCAL and all-gather the projected q/k/v activations instead
+    (B x 1 x dim — a few hundred KB vs hundreds of MB of weights/layer).
+    Requires tokens replicated over "model" (decode with seq-sharded KV).
+    """
+    cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
+    b = h.shape[0]
+    hd = cfg.head_dim
+    g = geom.attn_shards
+    ks = geom.kv_shard
+    # local feature slices: (B, 1, qd/g) and (B, 1, kvd/ks)
+    q_l = jnp.einsum("bsd,adh->bsh", h, _w(aw["wq"], h))
+    k_l = jnp.einsum("bsd,adh->bsh", h, _w(aw["wk"], h))
+    v_l = jnp.einsum("bsd,adh->bsh", h, _w(aw["wv"], h))
+    q = lax.all_gather(q_l, AXIS_MODEL, axis=2, tiled=True)  # (B,1,qd)
+    kg = lax.all_gather(k_l, AXIS_MODEL, axis=2, tiled=True)
+    vg = lax.all_gather(v_l, AXIS_MODEL, axis=2, tiled=True)
+    q = q.reshape(b, 1, cfg.num_heads, hd)
+    # kv gathered rank-major contains g/ks duplicates per group: dedupe
+    dup = g // ks
+    kvd_l = cfg.kv_dim // ks
+    k = kg.reshape(b, 1, g, kvd_l)[:, :, ::dup].reshape(
+        b, 1, cfg.num_kv_heads, hd
+    )
+    v = vg.reshape(b, 1, g, kvd_l)[:, :, ::dup].reshape(
+        b, 1, cfg.num_kv_heads, hd
+    )
+    pos = ctx.pos
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    out, new_state = _attn_decode_cache(q, k, v, sig, ctx, lstate)
+    # out (B,1,H,hd) replicated over "model" (LSE combine psums it);
+    # slice my flat-q features and apply the local wo shard + psum
+    qd_l = cfg.q_dim // g
+    flat = out.reshape(b, 1, cfg.q_dim)
+    my = lax.dynamic_slice_in_dim(
+        flat, lax.axis_index(AXIS_MODEL) * qd_l, qd_l, axis=2
+    )
+    y = jnp.einsum("bsg,agd->bsd", my, _w(aw["wo"], my))
+    return lax.psum(y, AXIS_MODEL), new_state
+
+
+def _attn_tp(h, aw, sig: LayerSig, ctx: Ctx):
+    """DEP tensor-parallel attention: gather tokens over "model", compute
+    the local head slice, reduce-scatter back — the synchronizing
+    activation collectives DWDP removes."""
+    cfg, xp = ctx.cfg, ctx.xp
+    hd = cfg.head_dim
+    g = ctx.geom.attn_shards
+    token_axis = 0 if AXIS_MODEL in xp.batch_axes else 1
+    hg = lax.all_gather(h, AXIS_MODEL, axis=token_axis, tiled=True)
+    b, s, _ = hg.shape
+    heads_l = cfg.num_heads // g
+    q = _project_heads(hg, aw["wq"], heads_l, hd)
+    kv_l = cfg.num_kv_heads // ctx.geom.kv_shard
+    k = _project_heads(hg, aw["wk"], kv_l, hd)
+    v = _project_heads(hg, aw["wv"], kv_l, hd)
+    if token_axis == 1:
+        positions = jnp.arange(s)
+    else:
+        positions = ctx.q_offset + jnp.arange(s)
+    posb = jnp.broadcast_to(positions, (b, s))
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    out = attn_lib.mha_prefill(q, k, v, window=sig.window)
+    out = out.reshape(b, s, 1, heads_l * hd)
+    y = jnp.einsum("bsag,agd->bsd", out, aw["wo"])
+    return lax.psum_scatter(
+        y, AXIS_MODEL, scatter_dimension=token_axis, tiled=True
+    )
+
+
+# ==========================================================================
+# FFN (dense "virtual experts") + MoE.
+# ==========================================================================
+def _ffn_full(x2d, fp):
+    """x2d: (T,D); fp stacked (S,D,F/S) full content."""
+    h = jax.nn.silu(
+        jnp.einsum("td,sdf->tsf", x2d, _w(fp["w_gate"], x2d))
+    ) * jnp.einsum("td,sdf->tsf", x2d, _w(fp["w_up"], x2d))
+    return jnp.einsum("tsf,sfd->td", h, _w(fp["w_down"], x2d))
+
+
+def _ffn_apply(x2d, fp, ctx: Ctx, gathered=None):
+    geom, xp = ctx.geom, ctx.xp
+    if not geom.ffn_axes:
+        return _ffn_full(x2d, fp)
+    if xp.mode in ("dwdp", "hybrid") or not _dep_tp_ok(geom, xp, "ffn"):
+        assert gathered is not None, "DWDP FFN weights must be prefetched"
+        return _ffn_full(x2d, gathered)
+    # DEP TP over "model"
+    if ctx.decode:
+        # tokens replicated over "model": partial-F compute + psum
+        h = jax.nn.silu(x2d @ _w(fp["w_gate"][0], x2d)) * (
+            x2d @ _w(fp["w_up"][0], x2d)
+        )
+        y = h @ _w(fp["w_down"][0], x2d)
+        return lax.psum(y, AXIS_MODEL)
+    # sequence-parallel TP: gather tokens, compute local F slice, scatter
+    xg = lax.all_gather(x2d, AXIS_MODEL, axis=0, tiled=True)
+    h = jax.nn.silu(xg @ _w(fp["w_gate"][0], xg)) * (xg @ _w(fp["w_up"][0], xg))
+    y = h @ _w(fp["w_down"][0], xg)
+    return lax.psum_scatter(y, AXIS_MODEL, scatter_dimension=0, tiled=True)
+
+
+def _expert_collective(geom: Geometry, xp: ExecutionPlan):
+    """(axis_arg, axis_index_groups) for DEP all-to-all within subgroups."""
+    pl = geom.moe_placement
+    assert pl is not None
+    axes = geom.expert_axes
+    if pl.redundancy == 1:
+        return _axes_arg(axes), None
+    ms = xp.mesh_sizes[axes[-1]]
+    g = pl.subgroup_size
+    if g <= ms and ms % g == 0:
+        groups = [
+            [j * g + i for i in range(g)] for j in range(ms // g)
+        ]
+        return axes[-1], groups
+    return _axes_arg(axes), pl.axis_index_groups()
+
+
+def _rotate_moe(xe, experts, ctx: Ctx):
+    """Ring-rotate expert shards through ranks, computing each resident
+    shard's contribution. Memory: 2x the local shard instead of the full
+    layer (the TPU adaptation of on-demand expert fetch; DESIGN.md §2)."""
+    geom, xp = ctx.geom, ctx.xp
+    pl = geom.moe_placement
+    assert pl is not None
+    g = pl.subgroup_size
+    local = pl.local_count
+    ye0 = jnp.zeros(xe.shape, xe.dtype)
+    if g == 1:
+        return _grouped_into(xe, ye0, experts, jnp.int32(0), local)
+    axes = geom.expert_axes
+    ms = xp.mesh_sizes[axes[-1]]
+
+    if g <= ms:
+        ax = axes[-1]
+        p = lax.axis_index(ax) % g
+        pairs = [
+            (int(b0 + i), int(b0 + (i + 1) % g))
+            for b0 in range(0, ms, g)
+            for i in range(g)
+        ]
+
+        def body(carry, t):
+            cur, ye = carry
+            src = (p - t) % g
+            ye = _grouped_into(xe, ye, cur, src * local, local)
+            cur = jax.tree.map(lambda w: lax.ppermute(w, ax, pairs), cur)
+            return (cur, ye), None
+
+        # g-1 permuted steps + one final compute without the realignment
+        # permute: total traffic (g-1)/g of the layer set, so redundant
+        # placement (smaller g) genuinely reduces wire bytes (paper §2).
+        (cur, ye), _ = lax.scan(body, (experts, ye0), jnp.arange(g - 1))
+        src_last = (p - (g - 1)) % g
+        ye = _grouped_into(xe, ye, cur, src_last * local, local)
+        return ye
+
+    # nested: inner ring over "model", outer ring over "data" rows
+    assert g % ms == 0 and len(axes) == 2
+    dp = g // ms
+    d_ax, m_ax = axes
+    d_size = xp.mesh_sizes[d_ax]
+    dc = lax.axis_index(d_ax) % dp
+    m = lax.axis_index(m_ax)
+    inner_pairs = [(i, (i + 1) % ms) for i in range(ms)]
+    outer_pairs = [
+        (int(b0 + i), int(b0 + (i + 1) % dp))
+        for b0 in range(0, d_size, dp)
+        for i in range(dp)
+    ]
+
+    def outer(carry, o):
+        cur, ye = carry
+
+        def inner(c2, i):
+            cur2, ye2 = c2
+            src = ((dc - o) % dp) * ms + ((m - i) % ms)
+            ye2 = _grouped_into(xe, ye2, cur2, src * local, local)
+            cur2 = jax.tree.map(
+                lambda w: lax.ppermute(w, m_ax, inner_pairs), cur2
+            )
+            return (cur2, ye2), None
+
+        (cur, ye), _ = lax.scan(inner, (cur, ye), jnp.arange(ms))
+        cur = jax.tree.map(lambda w: lax.ppermute(w, d_ax, outer_pairs), cur)
+        return (cur, ye), None
+
+    (_, ye), _ = lax.scan(outer, (experts, ye0), jnp.arange(dp))
+    return ye
+
+
+def _grouped_into(xe, ye, experts, start, count):
+    xe_t = lax.dynamic_slice_in_dim(xe, start, count, axis=0)
+    ye_t = moe_lib.grouped_ffn(
+        xe_t, experts["w_gate"], experts["w_up"], experts["w_down"]
+    )
+    return lax.dynamic_update_slice_in_dim(ye, ye_t, start, axis=0)
+
+
+def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict):
+    cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
+    moe = cfg.moe
+    pl = geom.moe_placement
+    assert moe is not None and pl is not None
+    t = x2d.shape[0]
+    e_pad = pl.num_padded
+    cap = moe_lib.capacity_for(t, moe.num_experts, moe.top_k, xp.capacity_factor)
+    d = moe_lib.route_topk(
+        x2d, mp["router"], moe.top_k, cap, num_real=moe.num_experts
+    )
+    aux = moe_lib.load_balance_loss(d, e_pad)
+
+    if xp.mode == "replicated" or pl.group_size == 1:
+        xe = moe_lib.dispatch_tokens(x2d, d, e_pad, cap)
+        ye = moe_lib.grouped_ffn(
+            xe, mp["experts"]["w_gate"], mp["experts"]["w_up"],
+            mp["experts"]["w_down"],
+        )
+    elif xp.mode == "dwdp":
+        xe = moe_lib.dispatch_tokens(x2d, d, e_pad, cap)
+        if geom.moe_exec == "gather":
+            full = gathered.get("moe/experts")
+            assert full is not None, "gather-mode experts must be prefetched"
+            full = jax.tree.map(lambda w: w[:e_pad], full)
+            ye = moe_lib.grouped_ffn(
+                xe, full["w_gate"], full["w_up"], full["w_down"]
+            )
+        else:
+            ye = _rotate_moe(xe, mp["experts"], ctx)
+    else:  # dep / hybrid expert path: all-to-all dispatch/combine
+        xe = moe_lib.dispatch_tokens(x2d, d, e_pad, cap)
+        ax, groups = _expert_collective(geom, xp)
+        xr = lax.all_to_all(
+            xe, ax, split_axis=0, concat_axis=1, tiled=True,
+            axis_index_groups=groups,
+        )
+        yr = moe_lib.grouped_ffn(
+            xr, mp["experts"]["w_gate"], mp["experts"]["w_up"],
+            mp["experts"]["w_down"],
+        )
+        ye = lax.all_to_all(
+            yr, ax, split_axis=1, concat_axis=0, tiled=True,
+            axis_index_groups=groups,
+        )
+    y = moe_lib.combine_tokens(ye, d, t)
+    if "shared" in mp:
+        y = y + _ffn_apply(x2d, mp["shared"], ctx, gathered.get("moe/shared"))
+    return y, aux
+
+
+# ==========================================================================
+# Recurrent / xLSTM blocks (with RG-LRU cross-shard fix-up).
+# ==========================================================================
+def _rec_apply(h, rp, ctx: Ctx, lstate):
+    xp = ctx.xp
+    if ctx.decode or not xp.seq_axes:
+        state = lstate if ctx.decode else None
+        out, new_state = recurrent_block(h, rp, state)
+        keep = ctx.decode or ctx.capture_len
+        return out, (new_state if keep else lstate)
+
+    # seq-sharded prefill/train: linear-recurrence fix-up (DESIGN.md §2)
+    assert len(xp.seq_axes) == 1, "RG-LRU seq sharding is single-axis"
+    ax = xp.seq_axes[0]
+    g = xp.mesh_sizes[ax]
+    b = h.shape[0]
+    branch = h @ rp["w_x"]
+    kw = rp["conv_w"].shape[0]
+    halo = lax.ppermute(
+        branch[:, -(kw - 1):], ax, [(i, i + 1) for i in range(g - 1)]
+    )  # shard 0 receives zeros = fresh conv state
+    branch, _ = causal_conv1d(branch, rp["conv_w"], halo.astype(branch.dtype))
+    A, h_loc = rglru_parts(branch, rp["w_r"], rp["w_i"], rp["a_param"])
+    a_last, h_last = A[:, -1], h_loc[:, -1]
+    ag = lax.all_gather(a_last, ax)   # (G,B,D)
+    hg = lax.all_gather(h_last, ax)
+    h0 = jnp.zeros_like(h_last)
+    prefixes = [h0]
+    for s_i in range(g - 1):
+        h0 = ag[s_i] * h0 + hg[s_i]
+        prefixes.append(h0)
+    h0_mine = jnp.take(
+        jnp.stack(prefixes), lax.axis_index(ax), axis=0
+    )
+    hfix = (h_loc + A * h0_mine[:, None]).astype(h.dtype)
+    gate = jax.nn.gelu(h @ rp["w_gate"], approximate=True)
+    out = (hfix * gate) @ rp["w_o"]
+    return out, lstate
+
+
+def _cell_apply(h, cp, sig: LayerSig, ctx: Ctx, lstate):
+    state = lstate if ctx.decode else None
+    fn = mlstm_block if sig.kind == BlockKind.MLSTM else slstm_block
+    out, new_state = fn(h, cp, state)
+    keep = ctx.decode or ctx.capture_len
+    return out, (new_state if keep else lstate)
+
+
+# ==========================================================================
+# One layer.
+# ==========================================================================
+def apply_layer(x, lp, sig: LayerSig, ctx: Ctx, lstate, gathered: dict):
+    cfg = ctx.cfg
+    eps = cfg.norm_eps
+    h = rms_norm(x, lp["norm1"], eps)
+    aux = jnp.float32(0.0)
+    if sig.kind in (BlockKind.GLOBAL_ATTN, BlockKind.LOCAL_ATTN):
+        aw = gathered.get("attn", lp["attn"])
+        if "attn" in gathered or not ctx.geom.attn_axes:
+            out, lstate = _attn_full(h, aw, sig, ctx, lstate)
+        elif _qgather_ok(ctx.geom, ctx.xp):
+            out, lstate = _attn_decode_qgather(h, lp["attn"], sig, ctx, lstate)
+        else:
+            out = _attn_tp(h, lp["attn"], sig, ctx)
+    elif sig.kind == BlockKind.RECURRENT:
+        rp = gathered.get("rec", lp["rec"])
+        out, lstate = _rec_apply(h, rp, ctx, lstate)
+    else:
+        cp = gathered.get("cell", lp["cell"])
+        out, lstate = _cell_apply(h, cp, sig, ctx, lstate)
+    x = x + out
+    if "norm2" in lp:
+        h2 = rms_norm(x, lp["norm2"], eps)
+        b, s, dm = h2.shape
+        h2f = h2.reshape(b * s, dm)
+        if sig.is_moe:
+            y, aux = _moe_apply(h2f, lp["moe"], sig, ctx, gathered)
+        else:
+            y = _ffn_apply(h2f, lp["ffn"], ctx, gathered.get("ffn"))
+        x = x + y.reshape(b, s, dm)
+    return x, lstate, aux
+
+
+# ==========================================================================
+# The layer stack with prefetch double-buffering.
+# ==========================================================================
+def _run_stack(params, x, ctx: Ctx, states):
+    model = ctx.model
+    aux_total = jnp.float32(0.0)
+    new_states: dict = {}
+    for group in model.plan:
+        gp = params["layers"][group.name]
+        gs = states["layers"][group.name] if states is not None else None
+        if group.scan and group.n_cycles > 1:
+            x, ns, aux = _run_scan_group(group, gp, x, ctx, gs)
+        else:
+            x, ns, aux = _run_unrolled(group, gp, x, ctx, gs)
+        new_states[group.name] = ns
+        aux_total = aux_total + aux
+    return x, new_states, aux_total
+
+
+def _run_unrolled(group, gp, x, ctx: Ctx, gs):
+    aux_total = jnp.float32(0.0)
+    new_states = {}
+    for j, sig in enumerate(group.sigs):
+        lp = gp[f"pos{j}"]
+        paths = gather_set(sig, ctx.geom, ctx.xp)
+        gathered = gather_layer(_extract(lp, paths), ctx) if paths else {}
+        lstate = gs[f"pos{j}"] if gs is not None else None
+        x, ns, aux = apply_layer(x, lp, sig, ctx, lstate, gathered)
+        new_states[f"pos{j}"] = ns
+        aux_total = aux_total + aux
+    return x, new_states, aux_total
+
+
+def _run_scan_group(group, gp, x, ctx: Ctx, gs):
+    sigs = group.sigs
+    period = len(sigs)
+    paths = [gather_set(s, ctx.geom, ctx.xp) for s in sigs]
+    pipelined = ctx.xp.mode in ("dwdp", "hybrid") and any(paths)
+
+    g0 = {}
+    pos0_g = None
+    n_cycles = group.n_cycles
+    if pipelined and paths[0]:
+        pos0_g = _extract(gp["pos0"], paths[0])  # stacked (n_cycles, ...)
+        first = jax.tree.map(lambda w: w[0], pos0_g)
+        g0 = gather_layer(first, ctx)
+
+    def body(carry, xs):
+        x, g = carry
+        lp_all, st_all, cyc = xs
+        aux_c = jnp.float32(0.0)
+        new_sts = {}
+        for j, sig in enumerate(sigs):
+            lp = lp_all[f"pos{j}"]
+            if pipelined:
+                nj = (j + 1) % period
+                nxt_paths = paths[nj]
+                if not nxt_paths:
+                    g_next = {}
+                elif nj == 0:
+                    # cross-cycle prefetch: index the closure-captured
+                    # stacked bank at (cyc+1) mod n — a per-iteration
+                    # dynamic slice instead of a whole-bank jnp.roll copy
+                    nxt_raw = jax.tree.map(
+                        lambda w: lax.dynamic_index_in_dim(
+                            w, (cyc + 1) % n_cycles, 0, keepdims=False
+                        ),
+                        pos0_g,
+                    )
+                    g_next = gather_layer(nxt_raw, ctx)
+                else:
+                    g_next = gather_layer(
+                        _extract(lp_all[f"pos{nj}"], nxt_paths), ctx
+                    )
+            else:
+                g_next = {}
+                g = (
+                    gather_layer(_extract(lp, paths[j]), ctx)
+                    if paths[j]
+                    else {}
+                )
+            lstate = st_all[f"pos{j}"] if st_all is not None else None
+            x, ns, aux = apply_layer(x, lp, sig, ctx, lstate, g)
+            new_sts[f"pos{j}"] = ns
+            g = g_next
+            aux_c = aux_c + aux
+        return (x, g), (new_sts, aux_c)
+
+    if ctx.xp.phase == "train":
+        # remat the cycle: without this, backward saves every layer's
+        # *gathered* full weight set (ZeRO-3's classic memory blow-up);
+        # with it, backward re-gathers — trading one extra prefetch for
+        # O(L x full-layer) HBM.
+        body = jax.checkpoint(body)
+
+    (x, _), (new_states, auxs) = lax.scan(
+        body, (x, g0), (gp, gs, jnp.arange(n_cycles))
+    )
+    return x, new_states, jnp.sum(auxs)
+
+
+# ==========================================================================
+# Phase entry points (run inside shard_map).
+# ==========================================================================
+def _positions_offset(ctx: Ctx):
+    xp = ctx.xp
+    if xp.seq_axes:
+        return _shard_index(xp, xp.seq_axes) * xp.local_seq
+    return 0  # static: enables block-causal KV skipping
+
+
+def _input_embed(params, batch, ctx: Ctx):
+    cd = _compute_dtype(ctx.model)
+    if "embeds" in batch:
+        return batch["embeds"].astype(cd)
+    emb = _embed_table(params, ctx)
+    return emb[batch["tokens"]].astype(cd)
+
+
+def _last_token_hidden(x, ctx: Ctx):
+    xp = ctx.xp
+    xl = x[:, -1]
+    if xp.seq_axes:
+        is_last = (_shard_index(xp, xp.seq_axes) == xp.seq_shards - 1)
+        xl = xl * is_last.astype(xl.dtype)
+        xl = lax.psum(xl, xp.seq_axes)
+    return xl
+
+
+def forward_prefill(params, batch, ctx: Ctx):
+    ctx.q_offset = _positions_offset(ctx)
+    x = _input_embed(params, batch, ctx)
+    x, new_states, _ = _run_stack(params, x, ctx, None)
+    x = rms_norm(x, params["final_norm"], ctx.cfg.norm_eps)
+    xl = _last_token_hidden(x, ctx)
+    out_state = None
+    if ctx.capture_len:
+        b = xl.shape[0]
+        seq = batch["tokens"].shape[1] if "tokens" in batch else batch["embeds"].shape[1]
+        out_state = {
+            "pos": jnp.full((b,), seq, jnp.int32),
+            "layers": new_states,
+        }
+    if AXIS_MODEL in ctx.xp.batch_axes:
+        # tokens are batch-sharded over the vocab axis: use the gathered
+        # (train-style) head so each rank scores its own rows fully
+        if ctx.cfg.tie_embeddings:
+            head = _embed_table(params, ctx).T
+        else:
+            head = params["lm_head"]
+            if ctx.geom.model_size > 1:
+                head = lax.all_gather(head, AXIS_MODEL, axis=1, tiled=True)
+        logits = (xl @ head).astype(jnp.float32)
+        logits = softcap(logits, ctx.cfg.logit_softcap)
+        out = {"last_logits": _mask_vocab_cols(logits, ctx, local=False)}
+    else:
+        logits = (xl @ _head_local(params, ctx)).astype(jnp.float32)
+        logits = softcap(logits, ctx.cfg.logit_softcap)
+        out = {"last_logits": _mask_vocab_cols(logits, ctx, local=True)}
+    if out_state is not None:
+        out["state"] = out_state
+    return out
+
+
+def forward_decode(params, batch, state, ctx: Ctx):
+    assert AXIS_MODEL not in ctx.xp.batch_axes
+    ctx.pos = state["pos"]
+    token = batch["token"]
+    x = _embed_decode(params, token, ctx)
+    x, new_layer_states, _ = _run_stack(params, x, ctx, state)
+    x = rms_norm(x, params["final_norm"], ctx.cfg.norm_eps)
+    logits = (x[:, 0] @ _w(_head_local(params, ctx), x)).astype(jnp.float32)
+    logits = softcap(logits, ctx.cfg.logit_softcap)
+    logits = _mask_vocab_cols(logits, ctx, local=True)
+    # greedy sharded argmax over the vocab shards
+    v_l = logits.shape[-1]
+    val = jnp.max(logits, axis=-1)
+    idx = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if ctx.geom.model_size > 1:
+        off = lax.axis_index(AXIS_MODEL) * v_l
+        vals = lax.all_gather(val, AXIS_MODEL)        # (G, B)
+        idxs = lax.all_gather(idx + off, AXIS_MODEL)  # (G, B)
+        best = jnp.argmax(vals, axis=0)
+        nxt = jnp.take_along_axis(idxs, best[None], axis=0)[0]
+    else:
+        nxt = idx
+    new_state = dict(state)
+    new_state["layers"] = new_layer_states
+    new_state["pos"] = state["pos"] + 1
+    return {"next_token": nxt[:, None], "state": new_state}
+
+
+def _chunked_xent(x2d, head, labels, ctx: Ctx):
+    """Memory-bounded sharded cross-entropy: scan over token chunks."""
+    t, dm = x2d.shape
+    nchunk = -(-t // XENT_CHUNK)
+    pad = nchunk * XENT_CHUNK - t
+    xpad = jnp.pad(x2d, ((0, pad), (0, 0)))
+    lpad = jnp.pad(labels, (0, pad), constant_values=-1)
+    v = ctx.cfg.vocab_size
+    cap = ctx.cfg.logit_softcap
+
+    @jax.checkpoint  # logits are recomputed in backward, never stored
+    def body(carry, i):
+        ls, cnt = carry
+        xc = lax.dynamic_slice_in_dim(xpad, i * XENT_CHUNK, XENT_CHUNK, 0)
+        lc = lax.dynamic_slice_in_dim(lpad, i * XENT_CHUNK, XENT_CHUNK, 0)
+        logits = (xc @ head).astype(jnp.float32)
+        logits = softcap(logits, cap)
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < v, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(
+            logits, jnp.clip(lc, 0, v - 1)[:, None], axis=-1
+        )[:, 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        ls = ls + jnp.sum((lse - ll) * valid)
+        cnt = cnt + jnp.sum(valid)
+        return (ls, cnt), None
+
+    (ls, cnt), _ = lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), jnp.arange(nchunk)
+    )
+    return ls, cnt
+
+
+def forward_train(params, batch, ctx: Ctx):
+    """Returns (loss_for_grad, metrics).
+
+    ``loss_for_grad`` is the *local* (per-rank, unreduced) contribution
+    divided by the global token count: differentiating it per rank and
+    psum-ing grads in ``sync_grads`` yields exactly d(global mean)/dw.
+    (Reducing the loss itself before grad would double-count through the
+    psum transpose under check_vma=False.) ``metrics`` carry the properly
+    psum-reduced scalars.
+    """
+    ctx.q_offset = _positions_offset(ctx)
+    x = _input_embed(params, batch, ctx)
+    x, _, aux = _run_stack(params, x, ctx, None)
+    x = rms_norm(x, params["final_norm"], ctx.cfg.norm_eps)
+    b, s, dm = x.shape
+    if ctx.cfg.tie_embeddings:
+        head = _embed_table(params, ctx).T
+    else:
+        head = params["lm_head"]
+        if ctx.geom.model_size > 1:
+            head = lax.all_gather(head, AXIS_MODEL, axis=1, tiled=True)
+    ls, cnt = _chunked_xent(
+        x.reshape(b * s, dm), head, batch["labels"].reshape(-1), ctx
+    )
+    all_axes = tuple(ctx.xp.mesh_sizes)
+    n_ranks = math.prod(ctx.xp.mesh_sizes.values())
+    cnt_g = lax.stop_gradient(lax.psum(cnt, all_axes))
+    denom = jnp.maximum(cnt_g, 1.0)
+    # If tokens are replicated over idle mesh axes, both psum(ls) and
+    # cnt_g carry the same replication factor — it cancels in the mean
+    # and in the synced gradient alike, so no explicit correction needed.
+    rep = n_ranks // max(1, ctx.xp.batch_shards * ctx.xp.seq_shards)
+    loss_local = ls / denom + 0.01 * aux / n_ranks
+    loss_g = lax.psum(ls, all_axes) / denom
+    aux_g = lax.psum(aux, all_axes) / n_ranks
+    return loss_local, {"loss": loss_g, "aux_loss": aux_g, "tokens": cnt_g / rep}
+
+
+# ==========================================================================
+# shard_map-wrapped step builders.
+# ==========================================================================
+def _grad_sync_axes(spec, mesh_axes: tuple[str, ...]) -> tuple[str, ...]:
+    used: set[str] = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        if isinstance(entry, tuple):
+            used.update(entry)
+        else:
+            used.add(entry)
+    return tuple(a for a in mesh_axes if a not in used)
+
+
+def sync_grads(grads, pspecs, mesh_axes: tuple[str, ...]):
+    """psum each grad over the axes its param is replicated on."""
+
+    def f(g, spec):
+        axes = _grad_sync_axes(spec, mesh_axes)
+        return lax.psum(g, axes) if axes else g
+
+    return jax.tree.map(
+        f, grads, pspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def _sharded_global_norm(grads, pspecs, mesh_axes, model: Model):
+    """Global grad norm with every logical element counted exactly once:
+    sharded leaves psum their sumsq over their shard axes; redundant
+    expert copies (already grad-synced, hence identical) divide by R."""
+    pl = model.geom.moe_placement
+    r_fac = float(pl.redundancy) if pl is not None else 1.0
+    terms = []
+
+    def walk(g, spec, in_experts):
+        if isinstance(g, dict):
+            for k in g:
+                walk(g[k], spec[k], in_experts or k == "experts")
+            return
+        s = jnp.sum(jnp.square(g.astype(jnp.float32)))
+        axes = tuple(
+            a for a in mesh_axes if a not in _grad_sync_axes(spec, mesh_axes)
+        )
+        if axes:
+            s = lax.psum(s, axes)
+        terms.append(s / r_fac if in_experts else s)
+
+    walk(grads, pspecs, False)
+    return jnp.sqrt(sum(terms))
+
+
+def sync_redundant_expert_grads(grads, model: Model, xp: ExecutionPlan):
+    """Redundant placement (R > 1) stores each expert on R subgroups; the
+    copies must train identically, so their grads are psum'd across the
+    subgroups holding the same expert (ranks {p, p+G', p+2G', ...})."""
+    pl = model.geom.moe_placement
+    if pl is None or pl.redundancy == 1:
+        return grads
+    groups = [
+        [p + s * pl.subgroup_size for s in range(pl.redundancy)]
+        for p in range(pl.subgroup_size)
+    ]
+    ax = _axes_arg(model.geom.expert_axes)
+
+    def fix(tree):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if k == "experts":
+                    out[k] = jax.tree.map(
+                        lambda g: lax.psum(g, ax, axis_index_groups=groups), v
+                    )
+                else:
+                    out[k] = fix(v)
+            return out
+        return tree
+
+    new = dict(grads)
+    new["layers"] = fix(grads["layers"])
+    return new
+
+
+def build_inner_fns(model: Model, xp: ExecutionPlan, capture_len: int = 0):
+    """Phase-appropriate function to run inside shard_map."""
+    if xp.phase == "train":
+
+        def inner(params, batch):
+            ctx = Ctx(model=model, xp=xp)
+            return forward_train(params, batch, ctx)
+
+        return inner
+    if xp.phase == "prefill":
+
+        def inner(params, batch):
+            ctx = Ctx(model=model, xp=xp, capture_len=capture_len)
+            return forward_prefill(params, batch, ctx)
+
+        return inner
+
+    def inner(params, batch, state):
+        ctx = Ctx(model=model, xp=xp)
+        return forward_decode(params, batch, state, ctx)
+
+    return inner
+
+
+def make_step_fn(model: Model, xp: ExecutionPlan, mesh, *, capture_len: int = 0):
+    """jit(shard_map(...)) step for the plan's phase.
+
+    - train: (params, opt, batch, lr) -> (params, opt, metrics)
+    - prefill: (params, batch) -> {"last_logits"[, "state"]}
+      (capture_len > 0 additionally emits the decode state — the
+       disaggregated ctx->gen KV transfer payload)
+    - decode: (params, batch, state) -> {"next_token", "state"}
+    """
+    pspecs = model.param_pspecs()
+    in_b = input_pspecs(model, xp)
+    mesh_axes = tuple(xp.mesh_sizes)
+    inner = build_inner_fns(model, xp, capture_len)
+
+    if xp.phase == "train":
+        from repro.optim.adamw import AdamWState, adamw_update
+
+        def step(params, opt_state, batch, lr):
+            (_, metrics), grads = jax.value_and_grad(
+                lambda p: inner(p, batch), has_aux=True
+            )(params)
+            grads = sync_grads(grads, pspecs, mesh_axes)
+            grads = sync_redundant_expert_grads(grads, model, xp)
+            gn = _sharded_global_norm(grads, pspecs, mesh_axes, model)
+            scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+            new_params, new_opt = adamw_update(
+                grads, opt_state, params, lr=lr, clip_norm=0.0
+            )
+            return new_params, new_opt, metrics
+
+        opt_specs = AdamWState(step=P(), m=pspecs, v=pspecs)
+        sharded = jax.shard_map(
+            step,
+            mesh=mesh,
+            in_specs=(pspecs, opt_specs, in_b, P()),
+            out_specs=(
+                pspecs,
+                opt_specs,
+                {"loss": P(), "aux_loss": P(), "tokens": P()},
+            ),
+            check_vma=False,
+        )
+        return jax.jit(sharded, donate_argnums=(0, 1))
+
+    if xp.phase == "prefill":
+        out_sp = output_pspecs(model, xp)
+        if capture_len:
+            out_sp = dict(out_sp)
+            out_sp["state"] = state_pspecs(model, xp)
+        sharded = jax.shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=(pspecs, in_b),
+            out_specs=out_sp,
+            check_vma=False,
+        )
+        return jax.jit(sharded)
+
+    st_specs = state_pspecs(model, xp)
+    sharded = jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(pspecs, in_b, st_specs),
+        out_specs={
+            "next_token": P(xp.batch_spec(), None),
+            "state": st_specs,
+        },
+        check_vma=False,
+    )
+    # donate the KV cache / recurrent state: serving updates it in place
+    return jax.jit(sharded, donate_argnums=(2,))

@@ -1,0 +1,171 @@
+"""Paper §3: layer-wise roofline model for DWDP vs DEP.
+
+Reproduces Figure 3 (compute/prefetch ratio and DEP/DWDP speedup vs ISL)
+with the paper's GB200 constants, and re-derives the same analysis for the
+TPU v5e target so the dry-run §Roofline numbers have an analytic
+counterpart.
+
+Model (paper §3):
+    T_op      = max(F / P_peak, B / BW_mem)            per operator
+    T_compute = sum of attention + MoE operator times
+    T_DWDP    = max(T_compute, T_prefetch)
+    T_DEP     = T_compute + T_all2all
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    flops: float        # peak FLOP/s (dense bf16/fp8 as configured)
+    hbm_bw: float       # bytes/s
+    link_bw: float      # bytes/s per-direction interconnect per chip
+    hbm_bytes: float
+
+
+# GB200 (paper): ~2.25 PFLOP/s dense FP8 per GPU in practice for these
+# kernels (NVFP4 MoE weights), 8 TB/s HBM3e, ~900 GB/s/dir NVLink5.
+GB200 = Hardware("GB200", flops=2.25e15, hbm_bw=8e12, link_bw=900e9,
+                 hbm_bytes=186e9)
+# TPU v5e (target): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+# (we count ~4 usable links -> 200 GB/s aggregate per chip).
+TPU_V5E = Hardware("TPUv5e", flops=197e12, hbm_bw=819e9, link_bw=200e9,
+                   hbm_bytes=16e9)
+
+
+def op_time(flops: float, bytes_: float, hw: Hardware) -> float:
+    return max(flops / hw.flops, bytes_ / hw.hbm_bw)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerTimes:
+    compute: float
+    prefetch: float
+    all2all: float
+
+    @property
+    def t_dwdp(self) -> float:
+        return max(self.compute, self.prefetch)
+
+    @property
+    def t_dep(self) -> float:
+        return self.compute + self.all2all
+
+    @property
+    def speedup(self) -> float:
+        return self.t_dep / self.t_dwdp
+
+    @property
+    def compute_to_prefetch(self) -> float:
+        return self.compute / max(self.prefetch, 1e-30)
+
+
+def layer_times(
+    cfg: ArchConfig,
+    *,
+    tokens: int,
+    group: int,
+    hw: Hardware = GB200,
+    weight_bytes: int = 1,     # NVFP4 ~ 1 byte/param in the paper's setup
+    act_bytes: int = 2,
+    kv_len: Optional[int] = None,
+    layer: int = 0,
+    redundancy: int = 1,
+) -> LayerTimes:
+    """Per-layer roofline terms for the context phase (batch of `tokens`).
+
+    prefetch: each rank pulls the experts it does not hold: (G'-1)/G' of
+    the layer's expert bytes over the peer link.
+    all2all: DEP exchanges each token's hidden state twice (dispatch +
+    combine) across the group: 2 * tokens * D * topk/… bytes (we follow
+    the paper and count the full dispatched activation volume).
+    """
+    d = cfg.d_model
+    kv_len = kv_len or tokens
+    # --- attention ---------------------------------------------------------
+    qkv_flops = 2 * tokens * d * (cfg.q_dim + 2 * cfg.kv_dim) + (
+        2 * tokens * cfg.q_dim * d
+    )
+    attn_flops = 2 * 2 * cfg.num_heads * cfg.head_dim * tokens * kv_len // 2
+    attn_w_bytes = (
+        d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d
+    ) * weight_bytes
+    attn_act_bytes = 3 * tokens * d * act_bytes + 2 * tokens * (
+        cfg.kv_dim
+    ) * act_bytes
+    t_attn = op_time(qkv_flops + attn_flops, attn_w_bytes + attn_act_bytes, hw)
+
+    # --- FFN / MoE ----------------------------------------------------------
+    if cfg.moe is not None and cfg.is_moe_layer(layer):
+        moe = cfg.moe
+        e, k, f = moe.num_experts, moe.top_k, moe.d_ff
+        ffn_flops = 2 * 3 * tokens * k * d * f
+        if moe.shared_d_ff:
+            ffn_flops += 2 * 3 * tokens * d * moe.shared_d_ff
+        # active expert weights read once each (upper bound: all experts)
+        w_bytes = min(e, tokens * k) * 3 * d * f * weight_bytes
+        sub = max(1, group // redundancy)
+        layer_expert_bytes = e * 3 * d * f * weight_bytes
+        prefetch_bytes = layer_expert_bytes * (sub - 1) / sub
+        a2a_bytes = 2 * tokens * k * d * act_bytes * (sub - 1) / sub
+    else:
+        f = cfg.ffn_dim(layer) or cfg.d_ff
+        ffn_flops = 2 * 3 * tokens * d * f
+        w_bytes = 3 * d * f * weight_bytes
+        layer_bytes = 3 * d * f * weight_bytes
+        prefetch_bytes = layer_bytes * (group - 1) / group
+        # dense DEP analogue: gather + reduce-scatter of activations
+        a2a_bytes = 2 * tokens * d * act_bytes * (group - 1) / group
+    t_ffn = op_time(ffn_flops, w_bytes + 2 * tokens * d * act_bytes, hw)
+
+    compute = t_attn + t_ffn
+    prefetch = prefetch_bytes / hw.link_bw
+    all2all = a2a_bytes / hw.link_bw
+    return LayerTimes(compute=compute, prefetch=prefetch, all2all=all2all)
+
+
+def figure3_sweep(
+    cfg: ArchConfig,
+    *,
+    group: int = 4,
+    hw: Hardware = GB200,
+    isls: tuple[int, ...] = (1024, 2048, 4096, 8192, 16384, 32768, 65536,
+                             131072),
+    batch: int = 1,
+) -> list[dict]:
+    """Reproduce Fig. 3: compute/prefetch ratio + DEP/DWDP speedup vs ISL."""
+    rows = []
+    moe_layer = (cfg.moe.first_dense if cfg.moe else 0)
+    for isl in isls:
+        lt = layer_times(cfg, tokens=batch * isl, group=group, hw=hw,
+                         layer=moe_layer)
+        rows.append(
+            {
+                "isl": isl,
+                "compute_to_prefetch": lt.compute_to_prefetch,
+                "dep_to_dwdp": lt.speedup,
+                "t_compute_us": lt.compute * 1e6,
+                "t_prefetch_us": lt.prefetch * 1e6,
+                "t_all2all_us": lt.all2all * 1e6,
+            }
+        )
+    return rows
+
+
+def crossover_isl(cfg: ArchConfig, *, group: int = 4, hw: Hardware = GB200,
+                  batch: int = 1) -> Optional[int]:
+    """Smallest ISL where prefetch is fully hidden (ratio >= 1). The paper
+    reports ~16K for DeepSeek-R1 ctx at batch 1 on GB200."""
+    moe_layer = (cfg.moe.first_dense if cfg.moe else 0)
+    for isl in range(1024, 1 << 20, 1024):
+        lt = layer_times(cfg, tokens=batch * isl, group=group, hw=hw,
+                         layer=moe_layer)
+        if lt.compute_to_prefetch >= 1.0:
+            return isl
+    return None

@@ -1,0 +1,179 @@
+"""Strategy planner: DWDP / DEP / replicated execution plans.
+
+``make_execution_plan`` decides, per (arch x input-shape x mesh):
+
+- which mesh axes carry the batch (pure data parallelism — DWDP's ranks),
+- which axes shard the sequence / KV cache (when the batch is too small
+  to cover the mesh),
+- how the FFN/MoE path executes:
+    * ``dwdp``       — weights move (async gather or rotate), activations
+                       never cross ranks. The paper's strategy.
+    * ``dep``        — activations move (all_to_all for MoE, gather +
+                       reduce-scatter for dense TP). The paper's baseline.
+    * ``replicated`` — weights fully replicated, pure DP (reference).
+
+and derives the PartitionSpecs for params, inputs, decode state, outputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, BlockKind, InputShape
+from repro.models.cache import decode_state_pspecs
+from repro.models.transformer import AXIS_MODEL, Model
+
+PyTree = Any
+
+MODES = ("dwdp", "dep", "replicated", "hybrid")
+PREFETCH_MODES = ("allgather", "ring", "ring_sliced")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    mode: str                        # dwdp | dep | replicated
+    phase: str                       # train | prefill | decode
+    prefetch: str                    # allgather | ring | ring_sliced
+    num_slices: int                  # for ring_sliced
+    batch_axes: tuple[str, ...]
+    seq_axes: tuple[str, ...]
+    mesh_sizes: dict[str, int]       # ordered as the mesh axes
+    capacity_factor: float
+    global_batch: int
+    seq_len: int
+    block_causal: bool = False   # skip fully-masked KV blocks (needs
+                                 # unsharded sequence; see DESIGN.md §9)
+    decode_attn: str = "gather"  # "gather" weights per layer, or "qgather":
+                                 # keep weights sharded and move the (tiny)
+                                 # q/k/v activations instead (beyond-paper)
+
+    @property
+    def batch_shards(self) -> int:
+        return math.prod(self.mesh_sizes[a] for a in self.batch_axes)
+
+    @property
+    def seq_shards(self) -> int:
+        return math.prod(self.mesh_sizes[a] for a in self.seq_axes)
+
+    @property
+    def local_batch(self) -> int:
+        return self.global_batch // self.batch_shards
+
+    @property
+    def local_seq(self) -> int:
+        return self.seq_len // self.seq_shards
+
+    def batch_spec(self) -> Any:
+        return self.batch_axes if self.batch_axes else None
+
+    def seq_spec(self) -> Any:
+        return self.seq_axes if self.seq_axes else None
+
+
+def plan_activation_sharding(
+    cfg: ArchConfig, shape: InputShape, mesh_sizes: dict[str, int]
+) -> tuple[tuple[str, ...], tuple[str, ...]]:
+    """Greedy: batch over (pod, data, model) while divisible; remaining axes
+    shard the sequence/KV if divisible and the architecture permits it.
+
+    sLSTM recurrence is sequential in time (h_{t-1} feeds the gates) so
+    sequence sharding is impossible for xLSTM — those archs replicate over
+    the leftover axes (noted in DESIGN.md). RG-LRU and mLSTM are linear
+    given the gates; RG-LRU cross-shard fixup is implemented, so hybrids
+    may seq-shard.
+    """
+    order = [
+        a for a in ("pod", "data", "model")
+        if mesh_sizes.get(a, 1) > 1
+    ]
+    batch_axes: list[str] = []
+    rem = shape.global_batch
+    for a in order:
+        if rem % mesh_sizes[a] == 0:
+            batch_axes.append(a)
+            rem //= mesh_sizes[a]
+        else:
+            break
+    left = [a for a in order if a not in batch_axes]
+    seq_axes: list[str] = []
+    can_seq_shard = not any(
+        k in (BlockKind.SLSTM, BlockKind.MLSTM) for k in cfg.block_pattern
+    )
+    if can_seq_shard:
+        s = shape.seq_len
+        for a in left:
+            if s % mesh_sizes[a] == 0:
+                seq_axes.append(a)
+                s //= mesh_sizes[a]
+            else:
+                break
+    return tuple(batch_axes), tuple(seq_axes)
+
+
+def make_execution_plan(
+    model: Model,
+    shape: InputShape,
+    mesh_sizes: dict[str, int],
+    *,
+    mode: str = "dwdp",
+    prefetch: str = "allgather",
+    num_slices: int = 4,
+    capacity_factor: float = 1.25,
+    block_causal: bool = False,
+    decode_attn: str = "gather",
+) -> ExecutionPlan:
+    assert mode in MODES and prefetch in PREFETCH_MODES
+    batch_axes, seq_axes = plan_activation_sharding(
+        model.cfg, shape, mesh_sizes
+    )
+    return ExecutionPlan(
+        mode=mode,
+        phase=shape.phase,
+        prefetch=prefetch,
+        num_slices=num_slices,
+        batch_axes=batch_axes,
+        seq_axes=seq_axes,
+        mesh_sizes=dict(mesh_sizes),
+        capacity_factor=capacity_factor,
+        global_batch=shape.global_batch,
+        seq_len=shape.seq_len,
+        block_causal=block_causal and not seq_axes,
+        decode_attn=decode_attn,
+    )
+
+
+# --------------------------------------------------------------------------
+# Input / output / state specs.
+# --------------------------------------------------------------------------
+def input_pspecs(model: Model, xp: ExecutionPlan) -> dict:
+    b, s = xp.batch_spec(), xp.seq_spec()
+    if xp.phase == "decode":
+        return {"token": P(b, None)}
+    specs = {}
+    if model.cfg.modality == "text":
+        specs["tokens"] = P(b, s)
+    else:
+        specs["embeds"] = P(b, s, None)
+    if xp.phase == "train":
+        specs["labels"] = P(b, s)
+    return specs
+
+
+def output_pspecs(model: Model, xp: ExecutionPlan) -> dict:
+    b = xp.batch_spec()
+    if xp.phase == "decode":
+        return {"next_token": P(b, None), "state": state_pspecs(model, xp)}
+    if xp.phase == "prefill":
+        # last-token logits: vocab-sharded over "model" unless the batch
+        # already covers the model axis (then the head is gathered)
+        if AXIS_MODEL in xp.batch_axes:
+            return {"last_logits": P(b, None)}
+        return {"last_logits": P(b, AXIS_MODEL)}
+    return {"loss": P(), "metrics": P()}
+
+
+def state_pspecs(model: Model, xp: ExecutionPlan):
+    return decode_state_pspecs(model, xp.batch_axes, xp.seq_axes)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTextDataset, make_train_batches, pack_documents
+
+__all__ = ["SyntheticTextDataset", "make_train_batches", "pack_documents"]

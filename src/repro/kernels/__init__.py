@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the DWDP hot spots.
+
+- ``split_gemm``: §4.2 split-weight grouped GEMM — consumes the resident
+  local expert bank and the freshly-landed remote bank as *separate* HBM
+  buffers, selecting per expert inside the kernel (no merge copy).
+- ``flash_attention``: blockwise causal/sliding-window GQA attention for
+  the context phase (the compute window that hides DWDP prefetch).
+
+Each kernel ships ``ops.py`` (jit'd wrapper, interpret-mode on CPU) and
+``ref.py`` (pure-jnp oracle used by the allclose test sweeps).
+"""

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for blockwise causal/sliding GQA attention."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # (B, Sq, H, hd)
+    k: jnp.ndarray,  # (B, Sk, K, hd)
+    v: jnp.ndarray,
+    *,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    b, sq, h, hd = q.shape
+    sk, kh = k.shape[1], k.shape[2]
+    rep = h // kh
+    scale = 1.0 / math.sqrt(hd)
+    kx = jnp.repeat(k, rep, axis=2)
+    vx = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum(
+        "bqhd,bkhd->bhqk", q * scale, kx, preferred_element_type=jnp.float32
+    )
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = kpos <= qpos
+    if window:
+        mask &= qpos - kpos < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vx)
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.split_gemm.ops import split_grouped_gemm
+from repro.kernels.split_gemm.ref import split_grouped_gemm_ref
+
+__all__ = ["split_grouped_gemm", "split_grouped_gemm_ref"]

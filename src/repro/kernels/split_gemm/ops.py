@@ -1,0 +1,25 @@
+"""jit'd public wrapper for the split-weight grouped GEMM.
+
+On CPU (this container) the kernel executes in Pallas interpret mode; on a
+real TPU backend set ``interpret=False`` to compile the Mosaic kernel.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.split_gemm.split_gemm import split_grouped_gemm
+from repro.kernels.split_gemm.ref import split_grouped_gemm_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def split_gemm(x, w_local, w_remote, **kw):
+    """Grouped GEMM over split expert banks. x: (E, C, D);
+    w_local: (E_l, D, F); w_remote: (E-E_l, D, F) -> (E, C, F)."""
+    kw.setdefault("interpret", not on_tpu())
+    return split_grouped_gemm(x, w_local, w_remote, **kw)
+
+
+__all__ = ["split_gemm", "split_grouped_gemm", "split_grouped_gemm_ref"]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the split-weight grouped GEMM.
+
+The reference implements the *naive baseline* the paper's §4.2 removes:
+merge local + remote banks into one contiguous buffer (the D2D copy),
+then run a standard grouped GEMM.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def merge_banks(w_local: jnp.ndarray, w_remote: jnp.ndarray) -> jnp.ndarray:
+    """The D2D merge copy DWDP's kernel eliminates. w_local: (E_l, D, F);
+    w_remote: (E_r, D, F) -> (E_l + E_r, D, F)."""
+    return jnp.concatenate([w_local, w_remote], axis=0)
+
+
+def split_grouped_gemm_ref(
+    x: jnp.ndarray,        # (E, C, D) per-expert token batches
+    w_local: jnp.ndarray,  # (E_l, D, F) resident experts
+    w_remote: jnp.ndarray,  # (E - E_l, D, F) prefetched experts
+) -> jnp.ndarray:
+    w = merge_banks(w_local, w_remote)
+    return jnp.einsum(
+        "ecd,edf->ecf", x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)

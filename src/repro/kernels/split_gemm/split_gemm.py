@@ -1,0 +1,112 @@
+"""Split-weight grouped GEMM Pallas kernel (paper §4.2, TPU adaptation).
+
+The CUDA original extends a CuTeDSL grouped GEMM with TensorList inputs so
+the kernel can read each expert's weights from either the resident-local
+bank or the prefetched-remote bank. On TPU the analogous structure is two
+HBM operands with *predicated BlockSpec streaming*: both banks are blocked
+into VMEM tiles by the same grid, their index_maps clamp to a valid tile,
+and the kernel body selects the correct tile with ``pl.when`` on the
+expert coordinate — so only the selected bank's tile participates in the
+MXU matmul and no merged contiguous buffer ever exists in HBM.
+
+Grid: (E, C/bc, F/bf, D/bd) with an fp32 VMEM accumulator scratch;
+the K (=D) loop is the innermost grid dimension so the accumulator
+carries across it (standard Pallas matmul pipelining).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(n_local: int, x_ref, wl_ref, wr_ref, o_ref, acc_ref):
+    e = pl.program_id(0)
+    kd = pl.program_id(3)
+
+    @pl.when(kd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]  # (bc, bd)
+
+    @pl.when(e < n_local)
+    def _local():
+        acc_ref[...] += jnp.dot(
+            x, wl_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(e >= n_local)
+    def _remote():
+        acc_ref[...] += jnp.dot(
+            x, wr_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(kd == pl.num_programs(3) - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_c", "block_f", "block_d", "interpret"),
+)
+def split_grouped_gemm(
+    x: jax.Array,         # (E, C, D)
+    w_local: jax.Array,   # (E_l, D, F)
+    w_remote: jax.Array,  # (E - E_l, D, F)
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    block_d: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    e, c, d = x.shape
+    e_l, _, f = w_local.shape
+    e_r = w_remote.shape[0]
+    assert e_l + e_r == e, (e_l, e_r, e)
+    # empty banks (fully-local or fully-remote layers) still need a
+    # streamable dummy tile; the e<e_l predicate keeps it out of the MXU
+    if e_l == 0:
+        w_local = jnp.zeros((1, d, f), w_remote.dtype)
+    if e_r == 0:
+        w_remote = jnp.zeros((1, d, f), w_local.dtype)
+    n_wl = w_local.shape[0]
+    n_wr = w_remote.shape[0]
+
+    bc = min(block_c, c)
+    bf = min(block_f, f)
+    bd = min(block_d, d)
+    assert c % bc == 0 and f % bf == 0 and d % bd == 0, (c, f, d, bc, bf, bd)
+
+    grid = (e, c // bc, f // bf, d // bd)
+
+    def x_map(ei, ci, fi, di):
+        return (ei, ci, di)
+
+    def wl_map(ei, ci, fi, di):
+        # clamp: when this expert is remote, stream tile 0 (discarded)
+        return (jnp.clip(ei, 0, n_wl - 1), di, fi)
+
+    def wr_map(ei, ci, fi, di):
+        return (jnp.clip(ei - e_l, 0, n_wr - 1), di, fi)
+
+    def o_map(ei, ci, fi, di):
+        return (ei, ci, fi)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, e_l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), x_map),
+            pl.BlockSpec((1, bd, bf), wl_map),
+            pl.BlockSpec((1, bd, bf), wr_map),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), o_map),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w_local, w_remote)

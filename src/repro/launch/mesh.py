@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before the
+first device query.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mesh(shape, axes):
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def mesh_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for CPU smoke tests (axis names match production)."""
+    return _mesh((data, model), ("data", "model"))

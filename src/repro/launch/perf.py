@@ -1,0 +1,328 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+
+"""§Perf hillclimbing driver: named experiments over dryrun_one.
+
+Each experiment is (pair, variation kwargs); the driver lowers, compiles,
+extracts roofline terms and appends hypothesis/result rows to
+results/perf_log.jsonl. The narrative lives in EXPERIMENTS.md §Perf.
+
+    python -m repro.launch.perf --list
+    python -m repro.launch.perf ds67b_decode_baseline ds67b_decode_fp8
+"""
+
+import argparse
+import json
+import sys
+
+from repro.launch.dryrun import dryrun_one
+
+try:
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jnp = None
+
+
+EXPERIMENTS: dict[str, dict] = {
+    # ---- pair 1: deepseek-67b x decode_32k (most collective-bound) -------
+    "ds67b_decode_baseline": dict(
+        arch="deepseek-67b", shape="decode_32k",
+        hypothesis="baseline: wide (data,model) weight storage forces a "
+                   "per-layer full-weight gather every decode step; the "
+                   "collective term should dwarf compute (~150ms vs ~2ms).",
+    ),
+    "ds67b_decode_fp8": dict(
+        arch="deepseek-67b", shape="decode_32k",
+        kwargs=dict(
+            dtype="float8_e4m3fn",
+            ffn_axes_override=("model",),
+            attn_axes_override=("model",),
+        ),
+        hypothesis="fp8 storage (the paper's NVFP4 analogue) halves "
+                   "resident bytes so FFN+attention fit model-only "
+                   "sharding; decode becomes DEP partial-psum with NO "
+                   "weight gathers: collective term ~150ms -> <1ms, "
+                   "memory term also halves (fp8 weight reads).",
+    ),
+    "ds67b_decode_fp8_qgather": dict(
+        arch="deepseek-67b", shape="decode_32k",
+        kwargs=dict(
+            dtype="float8_e4m3fn",
+            ffn_axes_override=("model",),
+            attn_axes_override=("model",),
+        ),
+        plan_kwargs=dict(decode_attn="qgather"),
+        hypothesis="the remaining 75ms collective = per-layer attention "
+                   "weight gathers (95 x 134MB fp8). qgather keeps weights "
+                   "local and gathers the projected q/k/v activations "
+                   "instead (~0.5MB/layer) + a psum after wo: collective "
+                   "term should drop to ~1ms; decode becomes memory-bound "
+                   "on the KV cache (the right regime).",
+    ),
+    # ---- pair 2: llama4 x prefill_32k (memory-bound: expert streaming) ---
+    "llama4_prefill_baseline": dict(
+        arch="llama4-maverick-400b-a17b", shape="prefill_32k",
+        hypothesis="baseline: rotate-mode DWDP streams the full 25GB/layer "
+                   "expert bank through every rank; memory term ~2s "
+                   "dominates compute ~1.4s.",
+    ),
+    "llama4_prefill_dep": dict(
+        arch="llama4-maverick-400b-a17b", shape="prefill_32k",
+        mode="dep",
+        hypothesis="pure DEP moves only routed activations "
+                   "(2*T*D*topk ~ 168MB/layer vs 25GB/layer weights): "
+                   "memory term collapses; the cost is the paper's "
+                   "synchronizing all-to-all on the critical path.",
+    ),
+    "llama4_prefill_hybrid": dict(
+        arch="llama4-maverick-400b-a17b", shape="prefill_32k",
+        mode="hybrid",
+        hypothesis="beyond-paper hybrid: DEP all-to-all for experts only, "
+                   "DWDP async gather for dense FFN + attention — keeps "
+                   "the memory win of DEP while the only sync collective "
+                   "left is the MoE dispatch pair.",
+    ),
+    # ---- pair 3: grok x prefill_32k (paper-representative: redundant
+    #      placement MoE DWDP) ---------------------------------------------
+    "grok_prefill_baseline": dict(
+        arch="grok-1-314b", shape="prefill_32k",
+        hypothesis="baseline: rotate DWDP with R=2 redundancy; compute "
+                   "term dominated by capacity-padded grouped GEMM "
+                   "(cf=1.25 -> +25% expert FLOPs) + masked-full "
+                   "attention.",
+    ),
+    "grok_prefill_cf1": dict(
+        arch="grok-1-314b", shape="prefill_32k",
+        plan_kwargs=dict(capacity_factor=1.0),
+        hypothesis="capacity factor 1.25 -> 1.0 cuts grouped-GEMM slots "
+                   "20%: expert FLOPs are ~75% of the compute term, so "
+                   "expect ~15% lower compute term (inference-lossy only "
+                   "under extreme routing skew).",
+    ),
+    "grok_prefill_ring": dict(
+        arch="grok-1-314b", shape="prefill_32k",
+        prefetch="ring",
+        hypothesis="ring prefetch moves the same bytes as allgather in "
+                   "G'-1 pairwise neighbor permutes (contention-free on "
+                   "the ICI torus) — collective TERM unchanged, but the "
+                   "schedule is the paper's serial-P2P analogue; verify "
+                   "byte parity from the HLO.",
+    ),
+    "grok_prefill_r64": dict(
+        arch="grok-1-314b", shape="prefill_32k",
+        kwargs=dict(redundancy=64),
+        hypothesis="rotate traffic per layer = (G'-1)/G' x layer set. "
+                   "Default R=32 gives G'=8 (7/8 = 8.5GB/layer/rank). "
+                   "R=64 -> G'=4 subgroups: 3/4 x 9.7GB = 7.3GB (-14%) at "
+                   "2.4GB/rank resident (still fits) — the paper's "
+                   "redundant-placement lever, pushed further than the "
+                   "paper's R examples.",
+    ),
+    "grok_prefill_hybrid": dict(
+        arch="grok-1-314b", shape="prefill_32k",
+        mode="hybrid",
+        hypothesis="A2A moves 2*T*k*D activations (~0.4GB/layer) instead "
+                   "of 8.5GB/layer of expert weights: collective term "
+                   "~3.2s -> ~0.2s. Trade: the all-to-all synchronizes "
+                   "ranks at every MoE layer (the paper's Fig.1 cost "
+                   "returns for the expert path only).",
+    ),
+    # ---- qgather generalization: other collective-bound decodes ----------
+    "gemma3_decode_baseline": dict(
+        arch="gemma3-27b", shape="decode_32k",
+        hypothesis="gemma3 decode gathers its (model-sharded) attention "
+                   "weights per step: Tcoll 38ms vs Tc 0.5ms.",
+    ),
+    "gemma3_decode_qgather": dict(
+        arch="gemma3-27b", shape="decode_32k",
+        plan_kwargs=dict(decode_attn="qgather"),
+        hypothesis="gemma3 has 32 heads % 16 == 0 and kv=16: qgather "
+                   "eligible; expect collective -> ~0 and memory-bound "
+                   "decode.",
+    ),
+    "chameleon_decode_qgather": dict(
+        arch="chameleon-34b", shape="decode_32k",
+        plan_kwargs=dict(decode_attn="qgather"),
+        hypothesis="same mechanism for chameleon (64 heads, kv=8): "
+                   "75.5ms collective -> ~0.",
+    ),
+    # ---- llama4 train: rotate traffic also dominates train ----------------
+    "llama4_train_baseline": dict(
+        arch="llama4-maverick-400b-a17b", shape="train_4k",
+        hypothesis="train_4k rotate streams the bank fwd AND re-streams "
+                   "in remat'd backward: Tcoll 12.7s dominates Tc 3.2s.",
+    ),
+    "llama4_train_hybrid": dict(
+        arch="llama4-maverick-400b-a17b", shape="train_4k",
+        mode="hybrid",
+        hypothesis="hybrid moves routed activations (A2A transposes to "
+                   "A2A in backward): expect Tcoll ~< 1s, compute-bound "
+                   "training.",
+    ),
+    # ---- ring_sliced: the §4.3 TDM analogue on ICI -------------------------
+    "yi_prefill_ring_sliced": dict(
+        arch="yi-9b", shape="prefill_32k",
+        prefetch="ring_sliced",
+        hypothesis="ring_sliced splits each permute into 4 slices: same "
+                   "bytes, 4x the permute count (finer overlap units for "
+                   "the scheduler) — verify byte parity + count from HLO.",
+    ),
+    "yi_prefill_ring": dict(
+        arch="yi-9b", shape="prefill_32k", prefetch="ring",
+        hypothesis="ring vs allgather byte parity for the dense FFN "
+                   "gathers.",
+    ),
+    "yi_prefill_baseline": dict(
+        arch="yi-9b", shape="prefill_32k",
+        hypothesis="allgather reference for the prefetch-mode comparison.",
+    ),
+    # ---- beyond-paper global: block-causal attention ---------------------
+    "grok_train_baseline": dict(
+        arch="grok-1-314b", shape="train_4k",
+        hypothesis="train_4k keeps the sequence unsharded (batch covers "
+                   "the mesh): masked-full attention computes 2x the "
+                   "causal FLOPs.",
+    ),
+    "grok_train_block_causal": dict(
+        arch="grok-1-314b", shape="train_4k",
+        plan_kwargs=dict(block_causal=True),
+        hypothesis="block-causal KV skipping halves attention FLOPs; "
+                   "attention is ~20% of grok's train compute term -> "
+                   "expect ~10% lower compute term.",
+    ),
+    "gemma3_train_block_causal": dict(
+        arch="gemma3-27b", shape="train_4k",
+        plan_kwargs=dict(block_causal=True),
+        hypothesis="gemma3's 5:1 sliding:global pattern also skips "
+                   "out-of-window KV blocks: local layers at 4K seq with "
+                   "window 1024 drop ~60% of their attention FLOPs.",
+    ),
+    "gemma3_train_baseline": dict(
+        arch="gemma3-27b", shape="train_4k",
+        hypothesis="baseline for gemma3 block-causal comparison.",
+    ),
+}
+
+
+EXPERIMENTS.update({
+    # ---- deepseek-r1: the paper's own model, on the TPU roofline ----------
+    "r1_prefill_dwdp": dict(
+        arch="deepseek-r1", shape="prefill_32k",
+        hypothesis="the paper's model on our mesh: rotate-DWDP context. "
+                   "Expect compute-bound (top-8 of 256 experts at 2048 "
+                   "tok/rank: intensity 2*T*k/E = 128 FLOP/byte < 985 "
+                   "— marginal; measure which side it lands).",
+    ),
+    "r1_prefill_dep": dict(
+        arch="deepseek-r1", shape="prefill_32k", mode="dep",
+        hypothesis="DEP reference for the paper's model: activation "
+                   "all-to-all volume 2*T*k*D.",
+    ),
+    "r1_prefill_hybrid": dict(
+        arch="deepseek-r1", shape="prefill_32k", mode="hybrid",
+        hypothesis="hybrid expected best-bound for R1 too (fine-grained "
+                   "256-expert bank is the llama4 regime, not grok's).",
+    ),
+    "grok_train_bf16_moments": dict(
+        arch="grok-1-314b", shape="train_4k",
+        kwargs=dict(moment_dtype="bfloat16"),
+        hypothesis="bf16 Adam moments: per-param train bytes 14 -> 6; "
+                   "grok single-pod residency 25.8GB -> ~13GB (fits).",
+    ),
+})
+
+
+EXPERIMENTS.update({
+    # ---- §4.3 TDM analogue ablation: slice count -------------------------
+    "grok_prefill_ring_s2": dict(
+        arch="grok-1-314b", shape="prefill_32k", prefetch="ring_sliced",
+        plan_kwargs=dict(num_slices=2),
+        hypothesis="slice count changes granularity only: byte parity "
+                   "with ring, 2x the permute count on sliced tensors.",
+    ),
+    "grok_prefill_ring_s8": dict(
+        arch="grok-1-314b", shape="prefill_32k", prefetch="ring_sliced",
+        plan_kwargs=dict(num_slices=8),
+        hypothesis="8 slices: same bytes, 8x permute count — the TPU "
+                   "ring_sliced lever mirrors the paper's 1MB-slice TDM.",
+    ),
+    # ---- complete deepseek-r1 coverage (paper's model, 4 shapes) ----------
+    "r1_train": dict(
+        arch="deepseek-r1", shape="train_4k",
+        kwargs=dict(moment_dtype="bfloat16"),
+        hypothesis="R1 train on 256 chips with bf16 moments: rotate "
+                   "traffic large (like llama4) — expect collective-heavy; "
+                   "hybrid would fix (same mechanism).",
+    ),
+    "r1_train_hybrid": dict(
+        arch="deepseek-r1", shape="train_4k", mode="hybrid",
+        kwargs=dict(moment_dtype="bfloat16"),
+        hypothesis="hybrid fixes R1 train like llama4: rotate's 21.3s "
+                   "fwd+bwd expert streaming replaced by A2A pairs.",
+    ),
+    "r1_decode": dict(
+        arch="deepseek-r1", shape="decode_32k",
+        plan_kwargs=dict(decode_attn="qgather"),
+        hypothesis="R1 decode with qgather: attention weight gathers "
+                   "avoided; MoE A2A small at 8 tokens/rank — expect "
+                   "memory-bound.",
+    ),
+    "r1_long": dict(
+        arch="deepseek-r1", shape="long_500k",
+        plan_kwargs=dict(decode_attn="qgather"),
+        hypothesis="R1 long_500k (sliding variant): KV sharded 256-way; "
+                   "memory-bound decode.",
+    ),
+})
+
+
+def run_experiment(name: str) -> dict:
+    exp = dict(EXPERIMENTS[name])
+    hypothesis = exp.pop("hypothesis", "")
+    arch = exp.pop("arch")
+    shape = exp.pop("shape")
+    mode = exp.pop("mode", None)
+    prefetch = exp.pop("prefetch", "allgather")
+    plan_kwargs = exp.pop("plan_kwargs", {})
+    kwargs = exp.pop("kwargs", {})
+    for k in ("dtype", "moment_dtype"):
+        if k in kwargs and jnp is not None:
+            kwargs[k] = getattr(jnp, kwargs[k])
+    row = dryrun_one(
+        arch, shape, mode=mode, prefetch=prefetch, verbose=False,
+        plan_kwargs=plan_kwargs, **kwargs,
+    )
+    row["experiment"] = name
+    row["hypothesis"] = hypothesis
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("names", nargs="*")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="results/perf_log.jsonl")
+    args = ap.parse_args(argv)
+    if args.list:
+        for k, v in EXPERIMENTS.items():
+            print(f"{k:32s} {v['arch']} x {v['shape']}")
+        return 0
+    names = args.names or list(EXPERIMENTS)
+    for name in names:
+        row = run_experiment(name)
+        print(json.dumps(
+            {k: row[k] for k in
+             ("experiment", "t_compute_ms", "t_memory_ms",
+              "t_collective_ms", "dominant", "useful_flop_ratio",
+              "residency_gb")},
+            default=str,
+        ))
+        with open(args.out, "a") as f:
+            f.write(json.dumps(row, default=str) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,100 @@
+"""Training driver: ``python -m repro.launch.train --arch yi-9b ...``.
+
+Runs real steps on whatever devices exist (CPU smoke scale by default);
+the production-mesh path is exercised by dryrun.py. The ~100M end-to-end
+example in examples/train_small.py uses this module's ``train_loop``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, reduced_variant
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import execution
+from repro.core.strategy import make_execution_plan
+from repro.data import make_train_batches
+from repro.models.transformer import build_model
+from repro.optim import adamw_init, cosine_schedule
+
+
+def train_loop(
+    cfg: ArchConfig,
+    *,
+    steps: int = 100,
+    seq_len: int = 256,
+    global_batch: int = 8,
+    mesh_shape: tuple[int, int] = (1, 1),
+    mode: str = "dwdp",
+    prefetch: str = "allgather",
+    peak_lr: float = 3e-4,
+    dtype=jnp.float32,
+    log_every: int = 10,
+    seed: int = 0,
+):
+    from repro.launch.mesh import _mesh
+    mesh = _mesh(mesh_shape, ("data", "model"))
+    sizes = {"data": mesh_shape[0], "model": mesh_shape[1]}
+    model = build_model(cfg, sizes, dtype=dtype, train=True)
+    shape = InputShape("train", seq_len, global_batch, "train")
+    xp = make_execution_plan(model, shape, sizes, mode=mode, prefetch=prefetch)
+    step_fn = execution.make_step_fn(model, xp, mesh)
+
+    params = model.init_params(jax.random.key(seed))
+    opt = adamw_init(params)
+    batches = make_train_batches(
+        cfg.vocab_size, seq_len, global_batch, seed=seed
+    )
+    history = []
+    t0 = time.time()
+    with mesh:
+        for i in range(steps):
+            batch = next(batches)
+            lr = cosine_schedule(
+                i, peak_lr=peak_lr, warmup_steps=max(1, steps // 10),
+                total_steps=steps,
+            )
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            params, opt, metrics = step_fn(
+                params, opt, batch, jnp.float32(lr)
+            )
+            loss = float(metrics["loss"])
+            history.append(loss)
+            if log_every and i % log_every == 0:
+                tok_s = (i + 1) * shape.tokens / (time.time() - t0)
+                print(
+                    f"step {i:5d} loss {loss:8.4f} aux "
+                    f"{float(metrics['aux_loss']):.4f} tok/s {tok_s:,.0f}"
+                )
+    return params, opt, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--mode", default="dwdp")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the 2-layer smoke variant")
+    args = ap.parse_args(argv)
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = reduced_variant(cfg)
+    _, _, hist = train_loop(
+        cfg,
+        steps=args.steps,
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+        mode=args.mode,
+    )
+    print(f"final loss {hist[-1]:.4f} (from {hist[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

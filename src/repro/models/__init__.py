@@ -1,0 +1,13 @@
+"""Composable decoder-only model zoo.
+
+Pure per-device math lives here (attention, MoE expert compute, RG-LRU,
+xLSTM, norms, RoPE); all cross-device movement is orchestrated by
+``repro.core`` (the paper's contribution) and ``repro.launch``.
+"""
+from repro.models.transformer import (
+    Model,
+    build_model,
+)
+from repro.models.cache import DecodeState, init_decode_state
+
+__all__ = ["Model", "build_model", "DecodeState", "init_decode_state"]

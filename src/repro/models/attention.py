@@ -1,0 +1,189 @@
+"""GQA attention: chunked (flash-style) prefill + cache decode with LSE.
+
+All functions are local per-device math. Sequence-sharded decode returns
+``(out_local, lse)`` pairs so ``repro.core.strategy`` can combine shards
+with a psum-LSE reduction.
+
+The prefill path scans over KV blocks with an online softmax so the
+(S_q x S_k) score matrix is never materialized — required for the 32K
+shapes to fit. Note the HLO FLOP count of this path is the full S^2
+(masked blocks are still multiplied); the analysis layer applies the
+causal 0.5 correction factor (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_logits(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,K,rep,Sq,hd), k: (B,K,L,hd) -> (B,K,rep,Sq,L)."""
+    return jnp.einsum("bkrqd,bkld->bkrql", q, k, preferred_element_type=jnp.float32)
+
+
+def mha_prefill(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int = 0,
+    q_offset=0,
+    kv_offset: int = 0,
+    block_kv: int = 512,
+    block_causal: bool = False,
+    block_q: int = 512,
+) -> jax.Array:
+    """Chunked causal attention. q: (B,Sq,H,hd); k,v: (B,Sk,Kh,hd).
+
+    window=0 means full causal; window=w limits attention to the last w
+    keys. ``kv_offset`` is the absolute position of k[:, 0].
+
+    ``block_causal=True`` (requires a static ``q_offset``) skips fully
+    masked KV blocks: each q block only visits keys up to its own end (and
+    above its window start), halving causal FLOPs/traffic vs the masked
+    full rectangle. Sequence-sharded ranks cannot use it (their kv extent
+    is rank-dependent, which SPMD cannot express) — see DESIGN.md §9.
+    Returns (B,Sq,H,hd).
+    """
+    B, Sq, H, hd = q.shape
+    if block_causal and isinstance(q_offset, int):
+        bq = min(block_q, Sq)
+        sk = k.shape[1]
+        outs = []
+        for qi in range(-(-Sq // bq)):
+            lo_q = qi * bq
+            hi_q = min(Sq, lo_q + bq)
+            abs_hi = q_offset + hi_q          # last key this block can see
+            kv_hi = min(sk, abs_hi - kv_offset)
+            kv_lo = 0
+            if window:
+                kv_lo = max(0, q_offset + lo_q - window + 1 - kv_offset)
+                kv_lo = (kv_lo // block_kv) * block_kv
+            outs.append(
+                mha_prefill(
+                    q[:, lo_q:hi_q],
+                    k[:, kv_lo:kv_hi],
+                    v[:, kv_lo:kv_hi],
+                    window=window,
+                    q_offset=q_offset + lo_q,
+                    kv_offset=kv_offset + kv_lo,
+                    block_kv=block_kv,
+                )
+            )
+        return jnp.concatenate(outs, axis=1)
+    Sk, Kh = k.shape[1], k.shape[2]
+    rep = H // Kh
+    scale = 1.0 / math.sqrt(hd)
+
+    qt = (q * scale).transpose(0, 2, 1, 3).reshape(B, Kh, rep, Sq, hd)
+    kt = k.transpose(0, 2, 1, 3)  # (B,Kh,Sk,hd)
+    vt = v.transpose(0, 2, 1, 3)
+
+    block_kv = min(block_kv, Sk)
+    nblk = -(-Sk // block_kv)
+    pad = nblk * block_kv - Sk
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, blk):
+        acc, m_run, l_run = carry
+        start = blk * block_kv
+        kj = jax.lax.dynamic_slice_in_dim(kt, start, block_kv, axis=2)
+        vj = jax.lax.dynamic_slice_in_dim(vt, start, block_kv, axis=2)
+        logits = _gqa_logits(qt, kj)  # (B,Kh,rep,Sq,block)
+        k_pos = kv_offset + start + jnp.arange(block_kv)
+        mask = (k_pos[None, :] <= q_pos[:, None]) & (
+            k_pos[None, :] < kv_offset + Sk
+        )
+        if window:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkrql,bkld->bkrqd", p, vj, preferred_element_type=jnp.float32
+        )
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, Kh, rep, Sq, hd), jnp.float32)
+    m0 = jnp.full((B, Kh, rep, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Kh, rep, Sq), jnp.float32)
+    (acc, _, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nblk))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def mha_decode_partial(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    kv_positions: jax.Array,
+    q_position: jax.Array,
+    *,
+    window: int = 0,
+):
+    """Single-token attention over a (possibly sequence-sharded) KV cache.
+
+    q: (B,H,hd); k_cache,v_cache: (B,L,Kh,hd); kv_positions: (B,L) absolute
+    positions of cache slots (negative = empty); q_position: (B,) per-row
+    decode positions (continuous batching serves rows at different depths).
+
+    Returns (out_local, lse): out_local (B,H,hd) is the softmax output over
+    *local* keys only; lse (B,H) the local logsumexp. Shards combine as
+      out = sum_i softmax_i(lse) * out_local_i.
+    """
+    B, H, hd = q.shape
+    L, Kh = k_cache.shape[1], k_cache.shape[2]
+    rep = H // Kh
+    scale = 1.0 / math.sqrt(hd)
+
+    qt = (q * scale).reshape(B, Kh, rep, hd)
+    kt = k_cache.transpose(0, 2, 1, 3)  # (B,Kh,L,hd)
+    vt = v_cache.transpose(0, 2, 1, 3)
+
+    logits = jnp.einsum("bkrd,bkld->bkrl", qt, kt, preferred_element_type=jnp.float32)
+    mask = (kv_positions >= 0) & (kv_positions <= q_position[:, None])
+    if window:
+        mask &= q_position[:, None] - kv_positions < window
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    m = jnp.max(logits, axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    denom = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bkrl,bkld->bkrd", p, vt, preferred_element_type=jnp.float32)
+    out = out / jnp.maximum(denom, 1e-30)[..., None]
+    empty = denom <= 0.0
+    lse = jnp.where(empty, NEG_INF, m + jnp.log(jnp.maximum(denom, 1e-30)))
+    return (
+        out.reshape(B, H, hd).astype(q.dtype),
+        lse.reshape(B, H),
+    )
+
+
+def combine_partials(outs: jax.Array, lses: jax.Array) -> jax.Array:
+    """Combine stacked shard partials. outs: (P,B,H,hd), lses: (P,B,H)."""
+    w = jax.nn.softmax(lses, axis=0)
+    return jnp.sum(outs * w[..., None], axis=0).astype(outs.dtype)
+
+
+def mha_decode(q, k_cache, v_cache, kv_positions, q_position, *, window: int = 0):
+    """Unsharded decode convenience wrapper."""
+    out, _ = mha_decode_partial(
+        q, k_cache, v_cache, kv_positions, q_position, window=window
+    )
+    return out
+
+
+def attention_flops(seq_q: int, seq_k: int, heads: int, head_dim: int, causal: bool) -> int:
+    """Analytic attention FLOPs (for roofline): 2 matmuls, causal halves."""
+    f = 2 * 2 * heads * head_dim * seq_q * seq_k
+    return f // 2 if causal else f

@@ -1,0 +1,120 @@
+"""Decode-time state: KV caches (ring-buffered for sliding-window layers)
+and recurrent states, structured to mirror the layer plan (stacked leading
+cycle axis for scan groups) so the same ``lax.scan`` drives decode.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, BlockKind
+from repro.models.transformer import LayerSig, Model
+from repro.models.xlstm import init_mlstm_state, init_slstm_state
+
+PyTree = Any
+
+
+def _attn_cache_len(sig: LayerSig, seq_len: int) -> int:
+    if sig.window:
+        return min(sig.window, seq_len)
+    return seq_len
+
+
+def init_layer_state(
+    cfg: ArchConfig, sig: LayerSig, batch: int, seq_len: int, dtype
+) -> dict:
+    if sig.kind in (BlockKind.GLOBAL_ATTN, BlockKind.LOCAL_ATTN):
+        length = _attn_cache_len(sig, seq_len)
+        kh, hd = cfg.num_kv_heads, cfg.head_dim
+        return {
+            "k": jnp.zeros((batch, length, kh, hd), dtype),
+            "v": jnp.zeros((batch, length, kh, hd), dtype),
+            "slot_pos": jnp.full((batch, length), -1, jnp.int32),
+        }
+    if sig.kind == BlockKind.RECURRENT:
+        return {
+            "conv": jnp.zeros((batch, 3, cfg.d_model), dtype),
+            "h": jnp.zeros((batch, cfg.d_model), dtype),
+        }
+    if sig.kind == BlockKind.MLSTM:
+        return init_mlstm_state(batch, cfg.num_heads, cfg.d_model // cfg.num_heads, dtype)
+    if sig.kind == BlockKind.SLSTM:
+        return init_slstm_state(batch, cfg.d_model, dtype)
+    raise ValueError(sig.kind)
+
+
+def layer_state_pspecs(
+    sig: LayerSig, batch_axes: tuple[str, ...], seq_axes: tuple[str, ...]
+) -> dict:
+    b = batch_axes if batch_axes else None
+    s = seq_axes if seq_axes else None
+    if sig.kind in (BlockKind.GLOBAL_ATTN, BlockKind.LOCAL_ATTN):
+        return {
+            "k": P(b, s, None, None),
+            "v": P(b, s, None, None),
+            "slot_pos": P(b, s),
+        }
+    if sig.kind == BlockKind.RECURRENT:
+        return {"conv": P(b, None, None), "h": P(b, None)}
+    if sig.kind == BlockKind.MLSTM:
+        return {"C": P(b, None, None, None), "n": P(b, None, None), "m": P(b, None)}
+    if sig.kind == BlockKind.SLSTM:
+        return {k: P(b, None) for k in ("c", "n", "h", "m")}
+    raise ValueError(sig.kind)
+
+
+# A decode state is a plain dict pytree:
+#   {"pos": int32 scalar, "layers": {group: {posJ: state}}}
+DecodeState = dict
+
+
+def init_decode_state(
+    model: Model, batch: int, seq_len: int, *, prefilled: int = 0
+) -> DecodeState:
+    """``prefilled`` may be a scalar or a (batch,) per-row fill depth
+    (continuous batching serves rows at different positions)."""
+    cfg = model.cfg
+    layers: dict = {}
+    for group in model.plan:
+        gdict = {}
+        for j, sig in enumerate(group.sigs):
+            st = init_layer_state(cfg, sig, batch, seq_len, model.dtype)
+            if group.scan:
+                st = jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (group.n_cycles,) + x.shape
+                    ),
+                    st,
+                )
+            gdict[f"pos{j}"] = st
+        layers[group.name] = gdict
+    pos = jnp.broadcast_to(jnp.asarray(prefilled, jnp.int32), (batch,))
+    return {"pos": pos, "layers": layers}
+
+
+def decode_state_pspecs(
+    model: Model, batch_axes: tuple[str, ...], seq_axes: tuple[str, ...]
+) -> DecodeState:
+    layers: dict = {}
+    for group in model.plan:
+        gdict = {}
+        for j, sig in enumerate(group.sigs):
+            sp = layer_state_pspecs(sig, batch_axes, seq_axes)
+            if group.scan:
+                sp = jax.tree.map(
+                    lambda s: P(None, *s), sp,
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+            gdict[f"pos{j}"] = sp
+        layers[group.name] = gdict
+    b = batch_axes if batch_axes else None
+    return {"pos": P(b), "layers": layers}
+
+
+def decode_state_struct(model: Model, batch: int, seq_len: int) -> PyTree:
+    return jax.eval_shape(
+        lambda: init_decode_state(model, batch, seq_len)
+    )

@@ -1,0 +1,121 @@
+"""MoE routing + grouped expert FFN (local math, capacity-based dispatch).
+
+Dispatch uses scatter/gather with flat (expert, slot) indices instead of a
+dense (T, E, C) one-hot so memory stays O(T*k + E*C*D). Cross-rank MoE
+execution (DEP all-to-all, DWDP weight gather) is orchestrated in
+``repro.core``; this module is purely per-device.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Dispatch(NamedTuple):
+    flat_slot: jax.Array   # (T*k,) int32 index into (E*C) expert slots
+    weight: jax.Array      # (T*k,) f32 combine weight (0 for dropped tokens)
+    keep: jax.Array        # (T*k,) bool
+    gates: jax.Array       # (T, E) full softmax gates (for aux loss)
+    top_experts: jax.Array  # (T, k)
+
+
+def capacity_for(tokens: int, num_experts: int, top_k: int, factor: float) -> int:
+    cap = int(tokens * top_k / num_experts * factor) + 1
+    if cap >= 8:
+        return -(-cap // 8) * 8  # round up to a lane-aligned multiple of 8
+    # decode-scale batches: an 8-slot floor would compute 8x the routed
+    # tokens per expert (EXPERIMENTS.md §Perf, r1 decode) — keep it exact
+    return cap
+
+
+def route_topk(
+    x: jax.Array, w_router: jax.Array, top_k: int, capacity: int,
+    num_real: int | None = None,
+) -> Dispatch:
+    """x: (T, D); w_router: (D, E). Experts >= num_real are padding slots
+    (from the weak placement constraint) and are masked out of routing."""
+    T = x.shape[0]
+    E = w_router.shape[1]
+    if w_router.dtype != x.dtype:
+        w_router = w_router.astype(x.dtype)
+    logits = (x @ w_router).astype(jnp.float32)
+    if num_real is not None and num_real < E:
+        mask = jnp.arange(E) < num_real
+        logits = jnp.where(mask, logits, -1e30)
+    gates = jax.nn.softmax(logits, axis=-1)  # (T, E)
+    top_vals, top_idx = jax.lax.top_k(gates, top_k)  # (T, k)
+    top_vals = top_vals / jnp.maximum(
+        jnp.sum(top_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    flat_exp = top_idx.reshape(-1)  # (T*k,) token-major priority
+    oh = jax.nn.one_hot(flat_exp, E, dtype=jnp.int32)
+    pos = jnp.sum((jnp.cumsum(oh, axis=0) - 1) * oh, axis=-1)  # slot within expert
+    keep = pos < capacity
+    flat_slot = flat_exp * capacity + jnp.minimum(pos, capacity - 1)
+    weight = top_vals.reshape(-1) * keep
+    return Dispatch(flat_slot, weight, keep, gates, top_idx)
+
+
+def dispatch_tokens(x: jax.Array, d: Dispatch, num_experts: int, capacity: int):
+    """Scatter tokens into (E, C, D) expert batches."""
+    T, D = x.shape
+    k = d.flat_slot.shape[0] // T
+    xk = jnp.repeat(x, k, axis=0) * d.keep[:, None].astype(x.dtype)
+    xe = jnp.zeros((num_experts * capacity, D), x.dtype).at[d.flat_slot].add(xk)
+    return xe.reshape(num_experts, capacity, D)
+
+
+def combine_tokens(ye: jax.Array, d: Dispatch, tokens: int) -> jax.Array:
+    """Gather expert outputs back to (T, D) with combine weights."""
+    E, C, D = ye.shape
+    k = d.flat_slot.shape[0] // tokens
+    yk = ye.reshape(E * C, D)[d.flat_slot] * d.weight[:, None].astype(ye.dtype)
+    return yk.reshape(tokens, k, D).sum(axis=1)
+
+
+def grouped_ffn(xe: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    """Batched per-expert SwiGLU. xe: (E,C,D); w_*: (E,D,F)/(E,F,D).
+    fp8-stored weights dequantize to the activation dtype on use."""
+    cast = lambda w: w.astype(xe.dtype) if w.dtype != xe.dtype else w
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, cast(w_gate))) * jnp.einsum(
+        "ecd,edf->ecf", xe, cast(w_up)
+    )
+    return jnp.einsum("ecf,efd->ecd", h, cast(w_down))
+
+
+def moe_ffn(
+    x: jax.Array,
+    w_router: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    capacity: int | None = None,
+    num_real: int | None = None,
+):
+    """Full local MoE FFN over flattened tokens x: (T, D) -> (T, D), aux."""
+    T = x.shape[0]
+    E = w_router.shape[1]
+    if capacity is None:
+        capacity = capacity_for(T, num_real or E, top_k, capacity_factor)
+    d = route_topk(x, w_router, top_k, capacity, num_real=num_real)
+    xe = dispatch_tokens(x, d, E, capacity)
+    ye = grouped_ffn(xe, w_gate, w_up, w_down)
+    y = combine_tokens(ye, d, T)
+    return y, load_balance_loss(d, E)
+
+
+def load_balance_loss(d: Dispatch, num_experts: int) -> jax.Array:
+    """Switch-style auxiliary load-balance loss."""
+    T = d.gates.shape[0]
+    k = d.top_experts.shape[1]
+    frac_tokens = jnp.zeros(num_experts).at[d.top_experts.reshape(-1)].add(1.0) / (
+        T * k
+    )
+    frac_gates = jnp.mean(d.gates, axis=0)
+    return num_experts * jnp.sum(frac_tokens * frac_gates)

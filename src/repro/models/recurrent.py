@@ -1,0 +1,82 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The diagonal linear recurrence h_t = a_t*h_{t-1} + b_t is evaluated with an
+associative scan (log-depth, O(S*D) memory); qkv-style projections stay
+outside the scan so HLO FLOP accounting remains matmul-dominated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d
+
+_RGLRU_C = 8.0
+
+
+def rglru_parts(x: jax.Array, w_r: jax.Array, w_i: jax.Array, a_param: jax.Array):
+    """Real-Gated LRU pieces for h_t = a_t*h_{t-1} + b_t with h0 = 0.
+
+    Returns (A, h_loc): A (B,S,D) is the cumulative decay prod_{s<=t} a_s
+    and h_loc the zero-state solution. Because the recurrence is linear
+    and diagonal, the solution for any h0 is ``h_loc + A * h0`` — this is
+    what makes cross-shard sequence sharding a local fix-up (execution.py).
+    """
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, w_r))
+    i = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, w_i))
+    log_a = -_RGLRU_C * jax.nn.softplus(a_param) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (x * i).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * gated
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    A, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return A, h
+
+
+def rglru(x: jax.Array, w_r: jax.Array, w_i: jax.Array, a_param: jax.Array, h0: jax.Array):
+    """Real-Gated LRU. x: (B,S,D); h0: (B,D). Returns (y, h_last)."""
+    A, h_loc = rglru_parts(x, w_r, w_i, a_param)
+    h = h_loc + A * h0.astype(jnp.float32)[:, None]
+    return h.astype(x.dtype), h[:, -1].astype(x.dtype)
+
+
+def recurrent_block(x: jax.Array, p: dict, state: dict | None):
+    """Griffin recurrent block: (linear->conv->RG-LRU) * gelu(linear) -> out.
+
+    x: (B,S,D). state: {"conv": (B,K-1,D), "h": (B,D)} or None (zeros).
+    Returns (out, new_state).
+    """
+    B, S, D = x.shape
+    if state is None:
+        state = {
+            "conv": jnp.zeros((B, p["conv_w"].shape[0] - 1, D), x.dtype),
+            "h": jnp.zeros((B, D), x.dtype),
+        }
+    branch = x @ p["w_x"]
+    branch, conv_state = causal_conv1d(branch, p["conv_w"], state["conv"])
+    branch, h_last = rglru(branch, p["w_r"], p["w_i"], p["a_param"], state["h"])
+    gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+    out = (branch * gate) @ p["w_o"]
+    return out, {"conv": conv_state, "h": h_last}
+
+
+def init_recurrent_params(key: jax.Array, d_model: int, dtype, conv_width: int = 4) -> dict:
+    ks = jax.random.split(key, 6)
+    s = d_model**-0.5
+    # a_param init so that a ~ U[0.9, 0.999]^(1/c) band (Griffin's init)
+    u = jax.random.uniform(ks[5], (d_model,), jnp.float32, 0.9, 0.999)
+    a_param = jnp.log(jnp.expm1(-jnp.log(u) / _RGLRU_C))
+    return {
+        "w_x": (jax.random.normal(ks[0], (d_model, d_model)) * s).astype(dtype),
+        "w_gate": (jax.random.normal(ks[1], (d_model, d_model)) * s).astype(dtype),
+        "w_o": (jax.random.normal(ks[2], (d_model, d_model)) * s).astype(dtype),
+        "w_r": (jax.random.normal(ks[3], (d_model, d_model)) * s).astype(dtype),
+        "w_i": (jax.random.normal(ks[4], (d_model, d_model)) * s).astype(dtype),
+        "conv_w": jnp.zeros((conv_width, d_model), dtype).at[-1].set(1.0),
+        "a_param": a_param,
+    }

@@ -1,0 +1,542 @@
+"""Layer plan, parameter init/specs, and local projection helpers.
+
+Storage layout convention (the backbone of the whole framework): every
+shardable weight carries an explicit leading *shard axis*:
+
+- dense FFN:       (S, D, F/S) / (S, F/S, D)      S = geom.ffn_shards
+- MoE experts:     (G*local, D, Fe) / (..., Fe, D) placement-expanded
+- attention:       (A, D, qdim/A) etc.             A = geom.attn_shards
+- embed/lm_head:   vocab-sharded over "model"
+
+With shard axis 1 the tensor is replicated. The same einsum consumes the
+tensor whether it arrives replicated, locally sharded (TP), or freshly
+gathered (DWDP) — this uniformity is the TPU analogue of the paper's §4.2
+split-weight TensorList kernel: no layout change is ever needed between
+"resident" and "fetched" weights.
+
+Heterogeneous stacks (sliding/global mixes, RG-LRU hybrids, xLSTM) are
+grouped into scan-able cycles by ``make_layer_plan`` so 95-layer models
+lower as a short ``lax.scan`` over stacked params, not 95 inlined layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, BlockKind
+from repro.core.placement import Placement, expand_to_storage, make_placement
+from repro.models.recurrent import init_recurrent_params
+from repro.models.xlstm import init_mlstm_params, init_slstm_params
+
+PyTree = Any
+AXIS_MODEL = "model"
+
+
+# --------------------------------------------------------------------------
+# Geometry: how weights are laid out for a given mesh (mode-independent).
+# --------------------------------------------------------------------------
+HBM_BYTES = 16e9  # TPU v5e
+
+
+@dataclasses.dataclass(frozen=True)
+class Geometry:
+    """Weight storage geometry for one mesh.
+
+    Each weight family gets a tuple of mesh axes it is sharded over
+    (empty tuple = replicated — the paper-faithful layout for attention):
+
+    - ``expert_axes``: the MoE expert bank. On v5e the big banks (grok
+      294B, R1 656GB, llama4 383GB of expert weights) bust 16GB HBM when
+      sharded over "model" alone, so the planner widens the DWDP group to
+      ("data","model"). ``moe_exec`` selects per-layer execution: "gather"
+      (paper-faithful full-layer prefetch; needs 2x the layer's expert
+      bytes resident) or "rotate" (ring-rotate weight shards through
+      ranks, computing each resident shard's contribution — the TPU
+      memory-hierarchy adaptation, DESIGN.md §2/§7).
+    - ``ffn_axes`` / ``attn_axes`` / ``cell_axes``: dense FFN ("virtual
+      experts" — the DWDP generalization), attention projections, and
+      recurrent-cell weights. Serve mode shards FFN over "model" and
+      escalates attention only when replication busts HBM; train mode
+      shards everything over ("data","model") (ZeRO-3-style — the gather
+      machinery doubles as the train-time weight fetch).
+    """
+
+    model_size: int
+    expert_axes: tuple[str, ...]
+    moe_placement: Optional[Placement]
+    moe_exec: str                    # "gather" | "rotate"
+    ffn_axes: tuple[str, ...]
+    ffn_shards: int
+    attn_axes: tuple[str, ...]
+    attn_shards: int
+    kv_shard: int                    # distinct kv groups when attention sharded
+    cell_axes: tuple[str, ...]
+    cell_shards: int
+    vocab_pad: int
+    train: bool
+    attn_tp_ok: bool = False   # heads divide the model axis (DEP TP legal)
+
+    @classmethod
+    def build(
+        cls,
+        cfg: ArchConfig,
+        mesh_sizes: dict[str, int],
+        *,
+        dtype_bytes: int = 2,
+        train: bool = False,
+        shard_ffn: bool = True,
+        shard_attention: Optional[bool] = None,
+        redundancy: Optional[int] = None,
+        moe_exec: Optional[str] = None,
+        expert_axes: Optional[tuple[str, ...]] = None,
+        ffn_axes_override: Optional[tuple[str, ...]] = None,
+        attn_axes_override: Optional[tuple[str, ...]] = None,
+    ) -> "Geometry":
+        g_model = mesh_sizes.get("model", 1)
+        wide = tuple(a for a in ("data", "model") if a in mesh_sizes)
+        n_wide = math.prod(mesh_sizes[a] for a in wide)
+
+        def axsize(axes):
+            return math.prod(mesh_sizes.get(a, 1) for a in axes)
+
+        # --- per-rank byte pressure estimates (bf16-equivalent) -----------
+        bytes_per_param = dtype_bytes + (12 if train else 0)  # + grads/adam
+        attn_bytes = sum(
+            cfg._mixer_params(l) for l in range(cfg.num_layers)
+        ) * bytes_per_param
+        dense_ffn_bytes = sum(
+            3 * cfg.d_model * cfg.ffn_dim(l)
+            for l in range(cfg.num_layers)
+            if cfg.ffn_dim(l)
+        ) * bytes_per_param
+
+        # --- MoE expert bank ----------------------------------------------
+        placement = None
+        chosen_exec = "gather"
+        if cfg.moe is not None:
+            moe_cfg = cfg.moe
+            n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
+            per_expert = 3 * cfg.d_model * moe_cfg.d_ff * dtype_bytes
+            bank = n_moe * moe_cfg.num_experts * per_expert * (
+                bytes_per_param / dtype_bytes
+            )
+            if expert_axes is None:
+                expert_axes = ("model",) if g_model > 1 else wide[-1:] or ("model",)
+                if bank / g_model > 0.55 * HBM_BYTES and len(wide) > 1:
+                    expert_axes = wide
+                if train and len(wide) > 1 and bank / g_model > 0.3 * HBM_BYTES:
+                    expert_axes = wide
+            placement = make_placement(
+                moe_cfg.num_experts, axsize(expert_axes), redundancy=redundancy
+            )
+            layer_set = placement.num_padded * per_expert
+            chosen_exec = moe_exec or (
+                "gather" if 2 * layer_set < 0.3 * HBM_BYTES else "rotate"
+            )
+            if len(expert_axes) > 1 and chosen_exec == "gather" and moe_exec is None:
+                # gather mode keeps 2x a full layer resident; multi-axis
+                # groups only arise for banks that need rotate anyway.
+                chosen_exec = "rotate" if 2 * layer_set > 0.3 * HBM_BYTES else "gather"
+        else:
+            expert_axes = expert_axes or ("model",)
+
+        # --- dense FFN ("virtual experts") ---------------------------------
+        has_dense = any(cfg.ffn_dim(l) for l in range(cfg.num_layers)) or (
+            cfg.moe is not None and cfg.moe.shared_d_ff
+        )
+        if not has_dense or not shard_ffn or g_model == 1:
+            ffn_axes: tuple[str, ...] = ()
+        elif (train and dense_ffn_bytes / n_wide * len(wide) > 0.3 * HBM_BYTES) or (
+            dense_ffn_bytes / g_model > 0.6 * HBM_BYTES
+        ):
+            ffn_axes = wide
+        else:
+            ffn_axes = ("model",)
+        if train and has_dense and g_model > 1:
+            ffn_axes = ffn_axes or ("model",)
+        if ffn_axes_override is not None:
+            ffn_axes = ffn_axes_override
+
+        # --- attention ------------------------------------------------------
+        if shard_attention is None:
+            if train:
+                shard_attention = attn_bytes > 0.3 * HBM_BYTES * g_model / n_wide
+            else:
+                shard_attention = attn_bytes > 0.35 * HBM_BYTES
+        attn_axes: tuple[str, ...] = ()
+        if shard_attention and cfg.has_attention and g_model > 1:
+            attn_axes = ("model",)
+            if train or attn_bytes / g_model > 0.6 * HBM_BYTES:
+                attn_axes = wide
+        if attn_axes_override is not None:
+            attn_axes = attn_axes_override
+        a_sh = axsize(attn_axes)
+        if attn_axes and cfg.q_dim % a_sh:
+            attn_axes = ()
+            a_sh = 1
+        kv_shard = math.gcd(a_sh, cfg.num_kv_heads) if attn_axes else 1
+        attn_tp_ok = bool(
+            attn_axes == ("model",)
+            and cfg.num_heads % g_model == 0
+            and kv_shard
+            and cfg.num_kv_heads % kv_shard == 0
+        )
+
+        # --- recurrent cells (train-time ZeRO only) -------------------------
+        cell_kinds = {BlockKind.RECURRENT, BlockKind.MLSTM, BlockKind.SLSTM}
+        has_cells = any(k in cell_kinds for k in cfg.block_pattern)
+        cell_axes: tuple[str, ...] = ()
+        if train and has_cells and attn_axes:
+            cell_axes = attn_axes
+
+        vocab_pad = -(-cfg.vocab_size // max(g_model, 1)) * max(g_model, 1)
+        return cls(
+            model_size=g_model,
+            expert_axes=tuple(expert_axes),
+            moe_placement=placement,
+            moe_exec=chosen_exec,
+            ffn_axes=ffn_axes,
+            ffn_shards=axsize(ffn_axes),
+            attn_axes=attn_axes,
+            attn_shards=a_sh,
+            kv_shard=kv_shard,
+            cell_axes=cell_axes,
+            cell_shards=axsize(cell_axes),
+            vocab_pad=vocab_pad,
+            train=train,
+            attn_tp_ok=attn_tp_ok,
+        )
+
+
+# --------------------------------------------------------------------------
+# Layer plan: group layers into scan-able cycles.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LayerSig:
+    kind: BlockKind
+    window: int          # 0 = full attention
+    is_moe: bool
+    ffn_dim: int         # dense FFN dim on this layer (0 = none/MoE)
+    shared_d_ff: int = 0  # always-on shared expert dim (MoE layers)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGroup:
+    name: str
+    scan: bool
+    n_cycles: int                 # 1 for unrolled groups
+    sigs: tuple[LayerSig, ...]    # one per position in the cycle
+    first_layer: int
+
+
+def signature(cfg: ArchConfig, layer: int, *, long_variant: bool = False) -> LayerSig:
+    kind = cfg.block_kind(layer)
+    window = cfg.window if kind == BlockKind.LOCAL_ATTN else 0
+    if long_variant and kind == BlockKind.GLOBAL_ATTN:
+        kind = BlockKind.LOCAL_ATTN
+        window = cfg.long_context_window
+    is_moe = cfg.is_moe_layer(layer)
+    return LayerSig(
+        kind=kind,
+        window=window,
+        is_moe=is_moe,
+        ffn_dim=cfg.ffn_dim(layer),
+        shared_d_ff=(cfg.moe.shared_d_ff if (is_moe and cfg.moe) else 0),
+    )
+
+
+def make_layer_plan(cfg: ArchConfig, *, long_variant: bool = False) -> list[LayerGroup]:
+    prefix = cfg.moe.first_dense if cfg.moe else 0
+    pat = len(cfg.block_pattern)
+    if prefix and pat > 1 and prefix % pat:
+        raise ValueError(f"{cfg.name}: first_dense must align with block pattern")
+    period = pat
+    if cfg.moe is not None:
+        period = math.lcm(pat, cfg.moe.every)
+    groups: list[LayerGroup] = []
+    sig = lambda l: signature(cfg, l, long_variant=long_variant)
+    if prefix:
+        groups.append(
+            LayerGroup(
+                "prefix", False, 1, tuple(sig(l) for l in range(prefix)), 0
+            )
+        )
+    body = cfg.num_layers - prefix
+    n_cycles, rem = divmod(body, period)
+    if n_cycles:
+        sigs = tuple(sig(prefix + j) for j in range(period))
+        # verify periodicity holds across the whole body
+        for c in range(n_cycles):
+            for j in range(period):
+                assert sig(prefix + c * period + j) == sigs[j], (cfg.name, c, j)
+        groups.append(LayerGroup("body", n_cycles > 1, n_cycles, sigs, prefix))
+    if rem:
+        start = prefix + n_cycles * period
+        groups.append(
+            LayerGroup(
+                "suffix",
+                False,
+                1,
+                tuple(sig(l) for l in range(start, cfg.num_layers)),
+                start,
+            )
+        )
+    return groups
+
+
+# --------------------------------------------------------------------------
+# Parameter init + PartitionSpecs (built together, same tree structure).
+# --------------------------------------------------------------------------
+def _norm(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def _dense(key, shape, dtype, scale=None):
+    if scale is None:
+        scale = shape[-2] ** -0.5 if len(shape) >= 2 else 1.0
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_attn_params(key, cfg: ArchConfig, geom: Geometry, dtype) -> dict:
+    """Init from canonical (D, dim) tensors, then reshape into the stacked
+    storage layout — identical values for every mesh/sharding geometry."""
+    a = geom.attn_shards
+    ks = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    scale = d**-0.5
+    wq_c = _dense(ks[0], (d, qd), dtype, scale)
+    wo_c = _dense(ks[3], (qd, d), dtype, qd**-0.5)
+    wk_c = _dense(ks[1], (d, kvd), dtype, scale)
+    wv_c = _dense(ks[2], (d, kvd), dtype, scale)
+    wq = wq_c.reshape(d, a, qd // a).transpose(1, 0, 2)
+    wo = wo_c.reshape(a, qd // a, d)
+    ksd = geom.kv_shard
+    table = np.arange(a) // (a // ksd)
+    wk = wk_c.reshape(d, ksd, kvd // ksd).transpose(1, 0, 2)[table]
+    wv = wv_c.reshape(d, ksd, kvd // ksd).transpose(1, 0, 2)[table]
+    return {"wq": wq, "wk": wk, "wv": wv, "wo": wo}
+
+
+def _axes_entry(axes: tuple[str, ...]):
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def attn_pspecs(geom: Geometry) -> dict:
+    ax = _axes_entry(geom.attn_axes)
+    w = P(ax, None, None)
+    return {"wq": w, "wk": w, "wv": w, "wo": w}
+
+
+def init_ffn_params(key, cfg: ArchConfig, geom: Geometry, ffn_dim: int, dtype) -> dict:
+    s = geom.ffn_shards
+    f_pad = -(-ffn_dim // s) * s
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    wg = _dense(ks[0], (d, f_pad), dtype, d**-0.5)
+    wu = _dense(ks[1], (d, f_pad), dtype, d**-0.5)
+    wd = _dense(ks[2], (f_pad, d), dtype, f_pad**-0.5)
+    if f_pad != ffn_dim:  # padded hidden units must not contribute
+        wd = wd.at[ffn_dim:].set(0.0)
+    return {
+        "w_gate": wg.reshape(d, s, f_pad // s).transpose(1, 0, 2),
+        "w_up": wu.reshape(d, s, f_pad // s).transpose(1, 0, 2),
+        "w_down": wd.reshape(s, f_pad // s, d),
+    }
+
+
+def ffn_pspecs(geom: Geometry) -> dict:
+    ax = _axes_entry(geom.ffn_axes)
+    return {
+        "w_gate": P(ax, None, None),
+        "w_up": P(ax, None, None),
+        "w_down": P(ax, None, None),
+    }
+
+
+def init_moe_params(key, cfg: ArchConfig, geom: Geometry, dtype) -> dict:
+    moe, pl = cfg.moe, geom.moe_placement
+    assert moe is not None and pl is not None
+    ks = jax.random.split(key, 5)
+    d, fe = cfg.d_model, moe.d_ff
+
+    storage_table = jnp.asarray(pl.table().reshape(-1))  # (G*local,)
+
+    def expert_bank(k, shape_tail, scale):
+        base = _dense(k, (pl.num_padded,) + shape_tail, jnp.float32, scale)
+        # zero padded (dummy) experts, then expand to the placement layout
+        valid = (jnp.arange(pl.num_padded) < moe.num_experts).astype(base.dtype)
+        base = base * valid.reshape((-1,) + (1,) * len(shape_tail))
+        return jnp.take(base, storage_table, axis=0).astype(dtype)
+
+    out = {
+        "router": _dense(ks[0], (d, pl.num_padded), dtype, d**-0.5),
+        "experts": {
+            "w_gate": expert_bank(ks[1], (d, fe), d**-0.5),
+            "w_up": expert_bank(ks[2], (d, fe), d**-0.5),
+            "w_down": expert_bank(ks[3], (fe, d), fe**-0.5),
+        },
+    }
+    if moe.shared_d_ff:
+        out["shared"] = init_ffn_params(ks[4], cfg, geom, moe.shared_d_ff, dtype)
+    return out
+
+
+def moe_pspecs(cfg: ArchConfig, geom: Geometry) -> dict:
+    w = P(_axes_entry(geom.expert_axes), None, None)
+    out = {
+        "router": P(None, None),
+        "experts": {"w_gate": w, "w_up": w, "w_down": w},
+    }
+    assert cfg.moe is not None
+    if cfg.moe.shared_d_ff:
+        out["shared"] = ffn_pspecs(geom)
+    return out
+
+
+def init_layer_params(key, cfg: ArchConfig, geom: Geometry, sig: LayerSig, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p: dict = {"norm1": _norm((cfg.d_model,), dtype)}
+    if sig.kind in (BlockKind.GLOBAL_ATTN, BlockKind.LOCAL_ATTN):
+        p["attn"] = init_attn_params(ks[0], cfg, geom, dtype)
+    elif sig.kind == BlockKind.RECURRENT:
+        p["rec"] = init_recurrent_params(ks[0], cfg.d_model, dtype)
+    elif sig.kind == BlockKind.MLSTM:
+        p["cell"] = init_mlstm_params(ks[0], cfg.d_model, cfg.num_heads, dtype)
+    elif sig.kind == BlockKind.SLSTM:
+        p["cell"] = init_slstm_params(ks[0], cfg.d_model, cfg.num_heads, dtype)
+    if sig.is_moe:
+        p["norm2"] = _norm((cfg.d_model,), dtype)
+        p["moe"] = init_moe_params(ks[1], cfg, geom, dtype)
+    elif sig.ffn_dim:
+        p["norm2"] = _norm((cfg.d_model,), dtype)
+        p["ffn"] = init_ffn_params(ks[1], cfg, geom, sig.ffn_dim, dtype)
+    return p
+
+
+def layer_pspecs(cfg: ArchConfig, geom: Geometry, sig: LayerSig) -> dict:
+    p: dict = {"norm1": P(None)}
+    if sig.kind in (BlockKind.GLOBAL_ATTN, BlockKind.LOCAL_ATTN):
+        p["attn"] = attn_pspecs(geom)
+    elif sig.kind == BlockKind.RECURRENT:
+        ax = _axes_entry(geom.cell_axes)
+        big = P(None, ax)  # (D, D) mats: ZeRO-shard the last dim in train
+        p["rec"] = {
+            "w_x": big, "w_gate": big, "w_o": big, "w_r": big, "w_i": big,
+            "conv_w": P(None, None), "a_param": P(None),
+        }
+    elif sig.kind in (BlockKind.MLSTM, BlockKind.SLSTM):
+        ax = _axes_entry(geom.cell_axes)
+        big = P(None, ax)
+        names = (
+            ["w_q", "w_k", "w_v", "w_if", "w_og", "w_out"]
+            if sig.kind == BlockKind.MLSTM
+            else ["w_z", "w_i", "w_f", "w_o", "w_out"]
+        )
+        p["cell"] = {k: big for k in names}
+        if sig.kind == BlockKind.SLSTM:
+            p["cell"].update({f"r_{g}": P(None, None, None) for g in "zifo"})
+    if sig.is_moe:
+        p["norm2"] = P(None)
+        p["moe"] = moe_pspecs(cfg, geom)
+    elif sig.ffn_dim:
+        p["norm2"] = P(None)
+        p["ffn"] = ffn_pspecs(geom)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Whole-model init / specs / abstract shapes.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    geom: Geometry
+    plan: tuple[LayerGroup, ...]
+    dtype: Any
+
+    def init_params(self, key: jax.Array) -> PyTree:
+        cfg, geom, dtype = self.cfg, self.geom, self.dtype
+        k_embed, k_head, k_layers = jax.random.split(key, 3)
+        params: dict = {
+            "embed": _dense(
+                k_embed, (geom.vocab_pad, cfg.d_model), dtype, 1.0
+            ),
+            "final_norm": _norm((cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = _dense(
+                k_head, (cfg.d_model, geom.vocab_pad), dtype
+            )
+        layers: dict = {}
+        keys = jax.random.split(k_layers, len(self.plan))
+        for group, gk in zip(self.plan, keys):
+            gdict: dict = {}
+            pos_keys = jax.random.split(gk, len(group.sigs))
+            for j, (sig, pk) in enumerate(zip(group.sigs, pos_keys)):
+                if group.scan:
+                    cyc_keys = jax.random.split(pk, group.n_cycles)
+                    stacked = [
+                        init_layer_params(ck, cfg, geom, sig, self.dtype)
+                        for ck in cyc_keys
+                    ]
+                    gdict[f"pos{j}"] = jax.tree.map(
+                        lambda *xs: jnp.stack(xs), *stacked
+                    )
+                else:
+                    gdict[f"pos{j}"] = init_layer_params(
+                        pk, cfg, geom, sig, self.dtype
+                    )
+            layers[group.name] = gdict
+        params["layers"] = layers
+        return params
+
+    def param_pspecs(self) -> PyTree:
+        cfg, geom = self.cfg, self.geom
+        specs: dict = {
+            "embed": P(AXIS_MODEL, None),
+            "final_norm": P(None),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = P(None, AXIS_MODEL)
+        layers: dict = {}
+        for group in self.plan:
+            gdict = {}
+            for j, sig in enumerate(group.sigs):
+                sp = layer_pspecs(cfg, geom, sig)
+                if group.scan:
+                    sp = jax.tree.map(
+                        lambda s: P(None, *s), sp,
+                        is_leaf=lambda x: isinstance(x, P),
+                    )
+                gdict[f"pos{j}"] = sp
+            layers[group.name] = gdict
+        specs["layers"] = layers
+        return specs
+
+    def param_struct(self) -> PyTree:
+        """ShapeDtypeStruct tree without allocating (for the dry-run)."""
+        return jax.eval_shape(self.init_params, jax.random.key(0))
+
+
+def build_model(
+    cfg: ArchConfig,
+    mesh_sizes: dict[str, int],
+    *,
+    dtype=jnp.float32,
+    long_variant: bool = False,
+    **geom_kwargs,
+) -> Model:
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    geom = Geometry.build(
+        cfg, mesh_sizes, dtype_bytes=dtype_bytes, **geom_kwargs
+    )
+    plan = tuple(make_layer_plan(cfg, long_variant=long_variant))
+    return Model(cfg=cfg, geom=geom, plan=plan, dtype=dtype)

@@ -1,0 +1,158 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Both use exponential gating with the log-space max stabilizer from the
+xLSTM paper (arXiv:2405.04517). Projections run outside the time scan;
+only the (cheap, elementwise / outer-product) recurrence is sequential,
+so HLO FLOP accounting stays projection-dominated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# mLSTM: per-head matrix memory C (hd x hd), parallel-friendly recurrence.
+# --------------------------------------------------------------------------
+def mlstm_block(x: jax.Array, p: dict, state: dict | None):
+    """x: (B,S,D). state: {"C": (B,H,hd,hd), "n": (B,H,hd), "m": (B,H)}."""
+    B, S, D = x.shape
+    H = p["w_if"].shape[1] // 2
+    hd = D // H
+    if state is None:
+        state = init_mlstm_state(B, H, hd, x.dtype)
+
+    q = (x @ p["w_q"]).reshape(B, S, H, hd)
+    k = (x @ p["w_k"]).reshape(B, S, H, hd) * (hd**-0.5)
+    v = (x @ p["w_v"]).reshape(B, S, H, hd)
+    gates = x @ p["w_if"]  # (B,S,2H): [i_raw, f_raw]
+    i_raw = gates[..., :H].astype(jnp.float32)
+    f_raw = gates[..., H:].astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    o_gate = jax.nn.sigmoid(x @ p["w_og"])  # (B,S,D)
+
+    def step(carry, inp):
+        C, n, m = carry
+        qt, kt, vt, it, lft = inp  # (B,H,hd) x3, (B,H) x2
+        m_new = jnp.maximum(lft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(lft + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhde,bhd->bhe", C, qt)
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhd,bhd->bh", n, qt)), jnp.exp(-m_new)
+        )
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (
+        q.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        i_raw.transpose(1, 0, 2),
+        log_f.transpose(1, 0, 2),
+    )
+    (C, n, m), hs = jax.lax.scan(step, (state["C"], state["n"], state["m"]), xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    out = (h * o_gate) @ p["w_out"]
+    return out, {"C": C, "n": n, "m": m}
+
+
+def init_mlstm_state(batch: int, heads: int, head_dim: int, dtype) -> dict:
+    return {
+        "C": jnp.zeros((batch, heads, head_dim, head_dim), jnp.float32),
+        "n": jnp.zeros((batch, heads, head_dim), jnp.float32),
+        "m": jnp.full((batch, heads), 0.0, jnp.float32),
+    }
+
+
+def init_mlstm_params(key: jax.Array, d_model: int, heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    s = d_model**-0.5
+    return {
+        "w_q": (jax.random.normal(ks[0], (d_model, d_model)) * s).astype(dtype),
+        "w_k": (jax.random.normal(ks[1], (d_model, d_model)) * s).astype(dtype),
+        "w_v": (jax.random.normal(ks[2], (d_model, d_model)) * s).astype(dtype),
+        "w_if": (jax.random.normal(ks[3], (d_model, 2 * heads)) * s).astype(dtype),
+        "w_og": (jax.random.normal(ks[4], (d_model, d_model)) * s).astype(dtype),
+        "w_out": (jax.random.normal(ks[5], (d_model, d_model)) * s).astype(dtype),
+    }
+
+
+# --------------------------------------------------------------------------
+# sLSTM: scalar memory with per-head block-diagonal recurrent weights.
+# Strictly sequential (h_{t-1} feeds the gates) — scan over time.
+# --------------------------------------------------------------------------
+def slstm_block(x: jax.Array, p: dict, state: dict | None):
+    """x: (B,S,D). state: {"c","n","h": (B,D), "m": (B,D)}."""
+    B, S, D = x.shape
+    H = p["r_z"].shape[0]
+    hd = D // H
+    if state is None:
+        state = init_slstm_state(B, D, x.dtype)
+
+    # input contributions for all gates, computed outside the scan
+    zx = x @ p["w_z"]
+    ix = x @ p["w_i"]
+    fx = x @ p["w_f"]
+    ox = x @ p["w_o"]
+
+    def rmul(h, r):  # per-head block-diagonal recurrent matmul
+        hh = h.reshape(B, H, hd)
+        return jnp.einsum("bhd,hde->bhe", hh, r).reshape(B, D)
+
+    def step(carry, inp):
+        c, n, h, m = carry
+        zxt, ixt, fxt, oxt = inp
+        z = jnp.tanh(zxt + rmul(h, p["r_z"])).astype(jnp.float32)
+        i_raw = (ixt + rmul(h, p["r_i"])).astype(jnp.float32)
+        f_raw = (fxt + rmul(h, p["r_f"])).astype(jnp.float32)
+        o = jax.nn.sigmoid(oxt + rmul(h, p["r_o"])).astype(jnp.float32)
+        log_f = jax.nn.log_sigmoid(f_raw)
+        m_new = jnp.maximum(log_f + m, i_raw)
+        i_p = jnp.exp(i_raw - m_new)
+        f_p = jnp.exp(log_f + m - m_new)
+        c = f_p * c + i_p * z
+        n = f_p * n + i_p
+        h_new = (o * c / jnp.maximum(n, 1e-12)).astype(x.dtype)
+        return (c, n, h_new, m_new), h_new
+
+    xs = tuple(a.transpose(1, 0, 2) for a in (zx, ix, fx, ox))
+    (c, n, h, m), hs = jax.lax.scan(
+        step, (state["c"], state["n"], state["h"], state["m"]), xs
+    )
+    out = hs.transpose(1, 0, 2) @ p["w_out"]
+    return out, {"c": c, "n": n, "h": h, "m": m}
+
+
+def init_slstm_state(batch: int, d_model: int, dtype) -> dict:
+    return {
+        "c": jnp.zeros((batch, d_model), jnp.float32),
+        "n": jnp.zeros((batch, d_model), jnp.float32),
+        "h": jnp.zeros((batch, d_model), dtype),
+        "m": jnp.zeros((batch, d_model), jnp.float32),
+    }
+
+
+def init_slstm_params(key: jax.Array, d_model: int, heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 9)
+    s = d_model**-0.5
+    hd = d_model // heads
+    sr = hd**-0.5
+    p = {
+        f"w_{g}": (jax.random.normal(k, (d_model, d_model)) * s).astype(dtype)
+        for g, k in zip("zifo", ks[:4])
+    }
+    p.update(
+        {
+            f"r_{g}": (jax.random.normal(k, (heads, hd, hd)) * sr).astype(dtype)
+            for g, k in zip("zifo", ks[4:8])
+        }
+    )
+    p["w_out"] = (jax.random.normal(ks[8], (d_model, d_model)) * s).astype(dtype)
+    return p

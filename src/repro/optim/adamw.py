@@ -1,0 +1,77 @@
+"""AdamW with global-norm clipping, pytree-native (no optax dependency).
+
+Moments inherit each param's sharding (elementwise ops preserve layout),
+so with ZeRO-sharded weights the optimizer state is ZeRO-sharded for free.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: PyTree
+    v: PyTree
+
+
+def adamw_init(params: PyTree, moment_dtype=jnp.float32) -> AdamWState:
+    """moment_dtype=bfloat16 halves optimizer residency (used for the
+    single-pod grok/llama4 train fits — EXPERIMENTS.md §Roofline)."""
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        step=jnp.int32(0),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+    *,
+    lr: float | jax.Array = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> tuple[PyTree, AdamWState]:
+    """Returns (new_params, new_state)."""
+    if clip_norm:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    step = state.step + 1
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        mdt = m.dtype
+        m32 = m.astype(jnp.float32)
+        v32 = v.astype(jnp.float32)
+        m32 = b1 * m32 + (1 - b1) * g32
+        v32 = b2 * v32 + (1 - b2) * jnp.square(g32)
+        mh = m32 / b1c
+        vh = v32 / b2c
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m32.astype(mdt), v32.astype(mdt)
+
+    flat = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v)

@@ -1,0 +1,12 @@
+from repro.runtime.engine import ContextServer, GenerationServer, DisaggregatedEngine
+from repro.runtime.metrics import ServingMetrics
+from repro.runtime.simulator import ClusterSimulator, SimConfig
+
+__all__ = [
+    "ContextServer",
+    "GenerationServer",
+    "DisaggregatedEngine",
+    "ServingMetrics",
+    "ClusterSimulator",
+    "SimConfig",
+]

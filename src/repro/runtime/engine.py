@@ -1,0 +1,175 @@
+"""Disaggregated serving engine (paper §5 setting, CPU-demo scale).
+
+- ``ContextServer``: runs DWDP (or DEP) prefill with KV capture — the
+  captured decode state is the ctx->gen transfer payload.
+- ``GenerationServer``: slot-based continuous batching over the decode
+  step. Each slot has its own position (the per-row position machinery in
+  core/execution); requests join whenever a slot frees, without draining
+  the batch — the paper's independent-worker property.
+- ``DisaggregatedEngine``: queues, rate-matching and metrics glue.
+
+Real arrays throughout: this is what examples/serve_demo.py runs on CPU
+with a reduced model; the cluster-scale behaviour is explored by
+runtime/simulator.py with roofline-modelled service times.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import execution
+from repro.core.strategy import make_execution_plan
+from repro.configs.base import InputShape
+from repro.models.cache import init_decode_state
+from repro.models.transformer import Model
+from repro.runtime.metrics import RequestRecord, ServingMetrics
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    tokens: np.ndarray        # (prompt_len,)
+    target_len: int           # output tokens to generate
+    arrival: float = 0.0
+
+
+class ContextServer:
+    """Prefill worker: returns (first_token, captured decode state)."""
+
+    def __init__(self, model: Model, mesh, mesh_sizes, *, mode="dwdp",
+                 prefill_len: int, cache_len: int, prefetch="allgather"):
+        self.model = model
+        self.prefill_len = prefill_len
+        shape = InputShape("ctx", prefill_len, 1, "prefill")
+        self.xp = make_execution_plan(
+            model, shape, mesh_sizes, mode=mode, prefetch=prefetch
+        )
+        self.step = execution.make_step_fn(
+            model, self.xp, mesh, capture_len=cache_len
+        )
+
+    def prefill(self, params, tokens: np.ndarray):
+        """tokens: (prompt_len,) -> (first_token, state). The demo engine
+        uses fixed-length prompts (the request generator packs/clips);
+        variable lengths are exercised by the cluster simulator."""
+        assert len(tokens) == self.prefill_len, (
+            len(tokens), self.prefill_len,
+        )
+        row = jnp.asarray(tokens[None, :], jnp.int32)
+        out = self.step(params, {"tokens": row})
+        logits = out["last_logits"]
+        first = int(jnp.argmax(logits[0]))
+        return first, out["state"]
+
+
+class GenerationServer:
+    """Slot-based continuous-batching decode worker."""
+
+    def __init__(self, model: Model, mesh, mesh_sizes, *, mode="dep",
+                 max_batch: int, cache_len: int):
+        self.model = model
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        shape = InputShape("gen", cache_len, max_batch, "decode")
+        self.xp = make_execution_plan(model, shape, mesh_sizes, mode=mode)
+        self.step = execution.make_step_fn(model, self.xp, mesh)
+        self.state = init_decode_state(model, max_batch, cache_len)
+        # inactive slots: pos points at an empty cache; emitted tokens junk
+        self.slot_req: list[Optional[int]] = [None] * max_batch
+        self.slot_remaining = np.zeros(max_batch, np.int64)
+        self.cur_token = jnp.zeros((max_batch, 1), jnp.int32)
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def admit(self, slot: int, req_id: int, first_token: int, ctx_state):
+        """Install a context-server state into one batch slot. Scan groups
+        carry a leading cycle axis, so the batch axis is 1 there."""
+        new_layers = {}
+        for group in self.model.plan:
+            stacked = group.scan and group.n_cycles > 1
+            bax = 1 if stacked else 0
+
+            def write(dst, src, bax=bax):
+                idx = (slice(None),) * bax + (slot,)
+                src_row = src[(slice(None),) * bax + (0,)]
+                return dst.at[idx].set(src_row.astype(dst.dtype))
+
+            new_layers[group.name] = jax.tree.map(
+                write,
+                self.state["layers"][group.name],
+                ctx_state["layers"][group.name],
+            )
+        self.state = {
+            "pos": self.state["pos"].at[slot].set(ctx_state["pos"][0]),
+            "layers": new_layers,
+        }
+        self.cur_token = self.cur_token.at[slot, 0].set(first_token)
+        self.slot_req[slot] = req_id
+
+    def decode_step(self, params):
+        out = self.step(params, {"token": self.cur_token}, self.state)
+        self.state = out["state"]
+        self.cur_token = out["next_token"]
+        return np.asarray(out["next_token"][:, 0])
+
+    def release(self, slot: int):
+        self.slot_req[slot] = None
+
+
+class DisaggregatedEngine:
+    """Queues + rate matching between context and generation servers."""
+
+    def __init__(self, params, ctx: ContextServer, gen: GenerationServer):
+        self.params = params
+        self.ctx = ctx
+        self.gen = gen
+        self.queue: list[Request] = []
+        self.records: dict[int, RequestRecord] = {}
+        self.outputs: dict[int, list[int]] = {}
+        self.metrics = ServingMetrics(num_gpus=1)
+        self.t = 0.0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+        self.records[req.req_id] = RequestRecord(
+            req_id=req.req_id,
+            arrival=self.t,
+            prompt_len=len(req.tokens),
+            target_len=req.target_len,
+        )
+        self.outputs[req.req_id] = []
+
+    def run(self, steps: int) -> ServingMetrics:
+        """Drive the engine: each step = one decode iteration; free slots
+        pull queued requests through the context server first."""
+        for _ in range(steps):
+            for slot in self.gen.free_slots():
+                if not self.queue:
+                    break
+                req = self.queue.pop(0)
+                first, state = self.ctx.prefill(self.params, req.tokens)
+                rec = self.records[req.req_id]
+                rec.first_token_time = self.t
+                rec.tokens_out = 1
+                self.outputs[req.req_id].append(first)
+                self.gen.admit(slot, req.req_id, first, state)
+                self.gen.slot_remaining[slot] = req.target_len - 1
+            toks = self.gen.decode_step(self.params)
+            self.t += 1.0
+            for slot, rid in enumerate(self.gen.slot_req):
+                if rid is None:
+                    continue
+                rec = self.records[rid]
+                self.outputs[rid].append(int(toks[slot]))
+                rec.tokens_out += 1
+                self.gen.slot_remaining[slot] -= 1
+                if self.gen.slot_remaining[slot] <= 0:
+                    rec.done_time = self.t
+                    self.metrics.records.append(rec)
+                    self.gen.release(slot)
+        return self.metrics

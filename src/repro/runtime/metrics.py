@@ -1,0 +1,53 @@
+"""Serving metrics: TPS/user, TPS/GPU, TTFT (median, incl. queueing)."""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Optional
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    req_id: int
+    arrival: float
+    prompt_len: int
+    target_len: int
+    first_token_time: Optional[float] = None
+    done_time: Optional[float] = None
+    tokens_out: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    @property
+    def tps_user(self) -> Optional[float]:
+        if self.done_time is None or self.first_token_time is None:
+            return None
+        dur = self.done_time - self.first_token_time
+        if dur <= 0:
+            return None
+        return (self.tokens_out - 1) / dur
+
+
+@dataclasses.dataclass
+class ServingMetrics:
+    records: list = dataclasses.field(default_factory=list)
+    num_gpus: int = 1
+
+    def summary(self, horizon: float) -> dict:
+        done = [r for r in self.records if r.done_time is not None]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tps_users = [t for t in (r.tps_user for r in done) if t]
+        total_tokens = sum(r.tokens_out for r in done)
+        return {
+            "completed": len(done),
+            "median_ttft_s": statistics.median(ttfts) if ttfts else None,
+            "mean_tps_user": (
+                sum(tps_users) / len(tps_users) if tps_users else None
+            ),
+            "tps_per_gpu": total_tokens / horizon / self.num_gpus,
+            "total_output_tokens": total_tokens,
+        }

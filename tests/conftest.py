@@ -1,0 +1,37 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+real single CPU device; multi-device tests spawn subprocesses."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+
+@pytest.fixture(scope="session")
+def smoke_mesh():
+    from repro.launch.mesh import make_smoke_mesh
+
+    return make_smoke_mesh()
+
+
+@pytest.fixture(scope="session")
+def mesh_sizes_1x1():
+    return {"data": 1, "model": 1}
+
+
+def tiny_batch(cfg, batch=2, seq=64, *, train=False, key=0):
+    k = jax.random.key(key)
+    if cfg.modality == "text":
+        toks = jax.random.randint(k, (batch, seq), 0, cfg.vocab_size)
+        out = {"tokens": toks}
+        if train:
+            out["labels"] = jnp.roll(toks, -1, axis=1)
+    else:
+        out = {"embeds": jax.random.normal(k, (batch, seq, cfg.d_model)) * 0.02}
+        if train:
+            out["labels"] = jax.random.randint(
+                jax.random.key(key + 1), (batch, seq), 0, cfg.vocab_size
+            )
+    return out

@@ -1,0 +1,175 @@
+"""Unit + property tests for the paper's core: placement, contention
+model, roofline model, copy plan (Listing 1), and MoE dispatch."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.core import contention, roofline
+from repro.core.placement import expand_to_storage, make_placement
+from repro.models import moe as moe_lib
+
+
+# --------------------------------------------------------------------------
+# placement (paper §2: weak placement constraint)
+# --------------------------------------------------------------------------
+@settings(deadline=None, max_examples=60)
+@given(e=st.integers(1, 300), g=st.integers(1, 64))
+def test_placement_invariants(e, g):
+    pl = make_placement(e, g)
+    # every rank stores the same number of experts (paper: uniform local)
+    assert pl.local_count * pl.subgroup_size == pl.num_padded >= e
+    assert pl.subgroup_size * pl.redundancy == pl.group_size == g
+    table = pl.table()
+    assert table.shape == (g, pl.local_count)
+    # every subgroup collectively covers every real expert exactly once
+    for s in range(pl.redundancy):
+        rows = table[s * pl.subgroup_size : (s + 1) * pl.subgroup_size]
+        ids = sorted(rows.reshape(-1).tolist())
+        assert ids == list(range(pl.num_padded))
+
+
+@settings(deadline=None, max_examples=30)
+@given(e=st.integers(1, 64), g=st.integers(1, 32))
+def test_placement_expand_roundtrip(e, g):
+    pl = make_placement(e, g)
+    experts = np.arange(pl.num_padded * 3).reshape(pl.num_padded, 3)
+    stor = expand_to_storage(experts, pl)
+    assert stor.shape == (pl.storage_size, 3)
+    # rank r's shard equals the experts its table row names
+    t = pl.table()
+    for r in range(g):
+        np.testing.assert_array_equal(
+            stor[r * pl.local_count : (r + 1) * pl.local_count], experts[t[r]]
+        )
+
+
+def test_placement_grok_case():
+    """Paper's motivating case: 8 experts, group sizes that don't divide."""
+    pl3 = make_placement(8, 3)   # DWDP3 from Table 3d
+    assert pl3.redundancy == 1 and pl3.num_padded == 9
+    pl16 = make_placement(8, 16)  # grok on the 16-wide model axis
+    assert pl16.redundancy == 2 and pl16.subgroup_size == 8
+    assert pl16.remote_fraction == pytest.approx(7 / 8)
+
+
+# --------------------------------------------------------------------------
+# contention model (paper §4.3, Table 2)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "n,expected",
+    [
+        (3, {1: 0.5, 2: 0.5}),
+        (4, {1: 4 / 9, 2: 4 / 9, 3: 1 / 9}),
+    ],
+)
+def test_contention_table2_exact(n, expected):
+    got = contention.contention_probabilities(n)
+    for c, p in expected.items():
+        assert got[c] == pytest.approx(p, abs=1e-12)
+
+
+@settings(deadline=None, max_examples=20)
+@given(n=st.integers(2, 24))
+def test_contention_is_distribution(n):
+    pr = contention.contention_probabilities(n)
+    assert sum(pr.values()) == pytest.approx(1.0, abs=1e-9)
+    assert all(p >= 0 for p in pr.values())
+    # paper's observation: C=1 and C=2 are the most likely outcomes
+    if n >= 3:
+        top = max(pr, key=pr.get)
+        assert top in (1, 2)
+
+
+def test_contention_table2_row_dwdp8():
+    pr = contention.contention_probabilities(8)
+    # Table 2, DWDP8 row (percent, 2dp)
+    assert round(100 * pr[1], 2) == 39.66
+    assert round(100 * pr[2], 2) == 39.66
+    assert round(100 * pr[3], 2) == 16.52
+    assert round(100 * pr[4], 2) == 3.67
+
+
+def test_copy_plan_listing1():
+    plan = contention.build_copy_plan({"w": 10}, [1, 2, 3], slice_bytes=4)
+    # slices interleave peers round-robin; all bytes covered per peer
+    per_peer = {}
+    for name, peer, off, chunk in plan:
+        per_peer.setdefault(peer, []).append((off, chunk))
+    for peer, chunks in per_peer.items():
+        assert sorted(chunks) == [(0, 4), (4, 4), (8, 2)]
+    # round-robin rotation: first slice order 1,2,3; second 2,3,1
+    order = [p for (_, p, o, _) in plan if o == 0]
+    order2 = [p for (_, p, o, _) in plan if o == 4]
+    assert order == [1, 2, 3] and order2 == [2, 3, 1]
+
+
+def test_tdm_mitigation_helps_when_contended():
+    out = contention.tdm_speedup(8, pull_bytes=64 << 20, bw=900e9)
+    assert out["speedup"] >= 1.0  # slicing never hurts in the model
+
+
+# --------------------------------------------------------------------------
+# roofline model (paper §3, Fig. 3)
+# --------------------------------------------------------------------------
+def test_fig3_crossover_near_paper():
+    """Paper: DWDP4 prefetch fully hidden at ~16K ISL for R1 ctx, bs=1."""
+    cfg = get_arch("deepseek-r1")
+    x = roofline.crossover_isl(cfg, group=4, batch=1)
+    assert x is not None and 4096 <= x <= 40960, x
+
+
+def test_fig3_speedup_shape():
+    """DEP/DWDP speedup >1 past crossover and decreasing at very long ISL."""
+    cfg = get_arch("deepseek-r1")
+    rows = roofline.figure3_sweep(cfg, group=4)
+    sp = {r["isl"]: r["dep_to_dwdp"] for r in rows}
+    assert sp[32768] > 1.0
+    assert sp[131072] < sp[32768]  # marginal gain shrinks with ISL (paper)
+    ratios = [r["compute_to_prefetch"] for r in rows]
+    assert ratios == sorted(ratios)  # monotone in ISL
+
+
+# --------------------------------------------------------------------------
+# MoE dispatch math
+# --------------------------------------------------------------------------
+@settings(deadline=None, max_examples=20)
+@given(
+    t=st.sampled_from([16, 64]),
+    e=st.sampled_from([4, 8, 16]),
+    k=st.integers(1, 4),
+)
+def test_moe_dispatch_combine_identity(t, e, k):
+    """With infinite capacity, dispatch->identity-experts->combine equals
+    the input (combine weights sum to 1)."""
+    k = min(k, e)
+    d = 8
+    key = jax.random.key(t + e + k)
+    x = jax.random.normal(key, (t, d))
+    w_router = jax.random.normal(jax.random.key(1), (d, e)) * 0.3
+    disp = moe_lib.route_topk(x, w_router, k, capacity=t * k)
+    xe = moe_lib.dispatch_tokens(x, disp, e, t * k)
+    y = moe_lib.combine_tokens(xe, disp, t)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=2e-5, atol=2e-5)
+
+
+def test_moe_padded_experts_never_routed():
+    t, e_real, e_pad, d = 32, 5, 8, 16
+    x = jax.random.normal(jax.random.key(0), (t, d))
+    w_router = jax.random.normal(jax.random.key(1), (d, e_pad))
+    disp = moe_lib.route_topk(x, w_router, 2, capacity=16, num_real=e_real)
+    assert int(disp.top_experts.max()) < e_real
+
+
+def test_moe_capacity_drops_tokens():
+    t, e, d = 64, 2, 8
+    x = jax.random.normal(jax.random.key(0), (t, d))
+    x = x.at[:, 0].set(1.0)  # deterministic routing feature
+    w_router = jnp.zeros((d, e)).at[0, 0].set(10.0)  # all tokens -> expert 0
+    cap = 8
+    disp = moe_lib.route_topk(x, w_router, 1, capacity=cap)
+    assert int(disp.keep.sum()) == cap

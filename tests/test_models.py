@@ -1,0 +1,219 @@
+"""Unit tests for model primitives: norms, RoPE, RG-LRU, xLSTM, attention
+decode math, layer plan."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, get_arch
+from repro.configs.base import BlockKind
+from repro.models import attention as attn_lib
+from repro.models.layers import apply_rope, causal_conv1d, rms_norm, softcap
+from repro.models.recurrent import init_recurrent_params, recurrent_block, rglru
+from repro.models.transformer import make_layer_plan, signature
+from repro.models.xlstm import (
+    init_mlstm_params, init_slstm_params, mlstm_block, slstm_block,
+)
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+def test_rms_norm_normalizes():
+    x = jax.random.normal(jax.random.key(0), (4, 32)) * 7
+    y = rms_norm(x, jnp.zeros(32), 1e-6)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    q = jax.random.normal(jax.random.key(0), (1, 8, 2, 64))
+    pos = jnp.arange(8)[None]
+    r = apply_rope(q, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(r), axis=-1),
+        np.linalg.norm(np.asarray(q), axis=-1),
+        rtol=1e-5,
+    )
+    # dot(q_i, k_j) depends only on i-j: shift both positions by 5
+    k = jax.random.normal(jax.random.key(1), (1, 8, 2, 64))
+    r2q = apply_rope(q, pos + 5, 10_000.0)
+    r2k = apply_rope(k, pos + 5, 10_000.0)
+    rk = apply_rope(k, pos, 10_000.0)
+    d1 = jnp.einsum("bshd,bthd->bhst", r, rk)
+    d2 = jnp.einsum("bshd,bthd->bhst", r2q, r2k)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-3)
+
+
+def test_softcap_bounds():
+    x = jnp.array([-1e5, -1.0, 0.0, 1.0, 1e5])
+    y = softcap(x, 30.0)
+    assert float(jnp.abs(y).max()) <= 30.0
+    np.testing.assert_allclose(float(y[2]), 0.0, atol=1e-6)
+
+
+def test_causal_conv1d_matches_numpy_and_streams():
+    x = jax.random.normal(jax.random.key(0), (2, 10, 3))
+    w = jax.random.normal(jax.random.key(1), (4, 3))
+    full, _ = causal_conv1d(x, w)
+    # streaming: run in two halves carrying the state
+    a, st = causal_conv1d(x[:, :6], w)
+    b, _ = causal_conv1d(x[:, 6:], w, st)
+    np.testing.assert_allclose(
+        np.asarray(full), np.concatenate([np.asarray(a), np.asarray(b)], 1),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+# --------------------------------------------------------------------------
+# RG-LRU / xLSTM: parallel form == streaming form
+# --------------------------------------------------------------------------
+@settings(deadline=None, max_examples=8)
+@given(s=st.sampled_from([4, 16]), split=st.integers(1, 3))
+def test_rglru_streaming_consistency(s, split):
+    d = 16
+    p = init_recurrent_params(jax.random.key(0), d, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, s, d)) * 0.5
+    h0 = jnp.zeros((2, d))
+    full, hf = rglru(x, p["w_r"], p["w_i"], p["a_param"], h0)
+    cut = min(split * s // 4, s - 1) or 1
+    a, ha = rglru(x[:, :cut], p["w_r"], p["w_i"], p["a_param"], h0)
+    b, hb = rglru(x[:, cut:], p["w_r"], p["w_i"], p["a_param"], ha)
+    np.testing.assert_allclose(
+        np.asarray(full),
+        np.concatenate([np.asarray(a), np.asarray(b)], 1),
+        rtol=1e-4, atol=1e-5,
+    )
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hb), rtol=1e-4, atol=1e-5)
+
+
+def test_recurrent_block_decode_streaming():
+    d = 16
+    p = init_recurrent_params(jax.random.key(0), d, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 6, d)) * 0.5
+    full, _ = recurrent_block(x, p, None)
+    st_ = None
+    outs = []
+    for t in range(6):
+        o, st_ = recurrent_block(x[:, t : t + 1], p, st_)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(full), np.concatenate([np.asarray(o) for o in outs], 1),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("block,init", [
+    (mlstm_block, lambda k, d: init_mlstm_params(k, d, 2, jnp.float32)),
+    (slstm_block, lambda k, d: init_slstm_params(k, d, 2, jnp.float32)),
+])
+def test_xlstm_blocks_decode_streaming(block, init):
+    d = 16
+    p = init(jax.random.key(0), d)
+    x = jax.random.normal(jax.random.key(1), (1, 5, d)) * 0.5
+    full, _ = block(x, p, None)
+    st_, outs = None, []
+    for t in range(5):
+        o, st_ = block(x[:, t : t + 1], p, st_)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(full), np.concatenate([np.asarray(o) for o in outs], 1),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+# --------------------------------------------------------------------------
+# attention decode partials
+# --------------------------------------------------------------------------
+def test_decode_partial_combine_equals_full():
+    """Sharded LSE combine over two KV halves == attention over the whole."""
+    b, h, kh, hd, L = 2, 4, 2, 32, 16
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    kc = jax.random.normal(ks[1], (b, L, kh, hd))
+    vc = jax.random.normal(ks[2], (b, L, kh, hd))
+    kv_pos = jnp.broadcast_to(jnp.arange(L), (b, L))
+    q_pos = jnp.full((b,), L - 1)
+    full, _ = attn_lib.mha_decode_partial(q, kc, vc, kv_pos, q_pos)
+    o1, l1 = attn_lib.mha_decode_partial(
+        q, kc[:, : L // 2], vc[:, : L // 2], kv_pos[:, : L // 2], q_pos
+    )
+    o2, l2 = attn_lib.mha_decode_partial(
+        q, kc[:, L // 2 :], vc[:, L // 2 :], kv_pos[:, L // 2 :], q_pos
+    )
+    got = attn_lib.combine_partials(
+        jnp.stack([o1, o2]), jnp.stack([l1, l2])
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), rtol=1e-5, atol=1e-5)
+
+
+def test_decode_partial_empty_shard_is_neutral():
+    b, h, kh, hd, L = 1, 2, 2, 16, 8
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, h, hd))
+    kc = jax.random.normal(ks[1], (b, L, kh, hd))
+    vc = jax.random.normal(ks[2], (b, L, kh, hd))
+    kv_pos = jnp.broadcast_to(jnp.arange(L), (b, L))
+    empty_pos = jnp.full((b, L), -1)
+    q_pos = jnp.full((b,), L - 1)
+    full, lfull = attn_lib.mha_decode_partial(q, kc, vc, kv_pos, q_pos)
+    oe, le = attn_lib.mha_decode_partial(q, kc, vc, empty_pos, q_pos)
+    got = attn_lib.combine_partials(
+        jnp.stack([full, oe]), jnp.stack([lfull, le])
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full), rtol=1e-5, atol=1e-5)
+
+
+def test_mha_prefill_matches_decode_chain():
+    """Prefill attention row t == decode attention at position t."""
+    b, s, h, kh, hd = 1, 8, 2, 1, 16
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kh, hd))
+    v = jax.random.normal(ks[2], (b, s, kh, hd))
+    pre = attn_lib.mha_prefill(q, k, v, block_kv=4)
+    kv_pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    for t in range(s):
+        dec, _ = attn_lib.mha_decode_partial(
+            q[:, t], k, v, kv_pos, jnp.full((b,), t)
+        )
+        np.testing.assert_allclose(
+            np.asarray(pre[:, t]), np.asarray(dec), rtol=1e-4, atol=1e-5
+        )
+
+
+# --------------------------------------------------------------------------
+# layer plan
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_layer_plan_covers_all_layers(arch):
+    cfg = ARCHS[arch]
+    plan = make_layer_plan(cfg)
+    total = sum(
+        g.n_cycles * len(g.sigs) if g.scan else len(g.sigs) for g in plan
+    )
+    assert total == cfg.num_layers
+    # signatures in the plan match per-layer signatures
+    i = 0
+    for g in plan:
+        reps = g.n_cycles if g.scan else 1
+        for _ in range(reps):
+            for s in g.sigs:
+                assert s == signature(cfg, i)
+                i += 1
+
+
+def test_gemma3_pattern_five_to_one():
+    cfg = get_arch("gemma3-27b")
+    kinds = [cfg.block_kind(i) for i in range(12)]
+    assert kinds.count(BlockKind.GLOBAL_ATTN) == 2
+    assert kinds[5] == kinds[11] == BlockKind.GLOBAL_ATTN
+
+
+def test_moe_interleave_llama4():
+    cfg = get_arch("llama4-maverick-400b-a17b")
+    moe_layers = [l for l in range(cfg.num_layers) if cfg.is_moe_layer(l)]
+    assert len(moe_layers) == 24 and all(l % 2 == 1 for l in moe_layers)
