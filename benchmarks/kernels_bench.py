@@ -6,6 +6,8 @@ columns (mxu_bound_us, hbm_bound_us) are the target-hardware estimates.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -13,7 +15,16 @@ import jax.numpy as jnp
 
 from repro.analysis.roofline_report import HBM_BW, PEAK_FLOPS
 from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.split_gemm.ops import split_gemm
+from repro.kernels.split_gemm.ops import (
+    split_gemm,
+    split_grouped_swiglu_ref,
+    split_swiglu,
+    split_swiglu_jnp,
+)
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_split_gemm.json"
+)
 
 
 def _time(fn, *args, reps=3, **kw):
@@ -59,4 +70,71 @@ def bench_kernels() -> list[dict]:
             "mxu_bound_us": round(flops / PEAK_FLOPS * 1e6, 2),
             "hbm_bound_us": round(byts / HBM_BW * 1e6, 2),
         })
+    return rows
+
+
+def bench_split_moe(out_path: str = BENCH_JSON) -> list[dict]:
+    """Merged vs split MoE FFN micro-bench (the §4.2 delta).
+
+    merged = concatenate both banks (the D2D merge copy) + grouped SwiGLU;
+    split  = the no-merge formulation over the same operands. Both run the
+    identical jnp math under jit, so the wall-time delta isolates the
+    merge copy. The Pallas kernel's interpret-mode time is reported
+    alongside for correctness tracking, not raced (interpret mode is not
+    TPU performance — see the roofline columns for the target estimate).
+
+    peak_weight_buffer_bytes is the gathered-bank HBM footprint each path
+    holds per layer: merged lands the full canonical (E, D, F) set, split
+    only the (E - E/G') remote bank. Rewrites BENCH_split_gemm.json with
+    the current rows; the file is committed per PR, so the perf
+    trajectory lives in its git history.
+    """
+    rows = []
+    # (experts, subgroup G', capacity, d_model, d_ff): R1/grok-shaped
+    # weight-heavy tiles — the regime the merge copy actually costs in
+    for (e, g, c, d, f) in [
+        (8, 2, 128, 512, 256),
+        (16, 4, 128, 512, 512),
+        (8, 4, 64, 256, 512),
+    ]:
+        local = e // g
+        ks = jax.random.split(jax.random.key(e + g), 7)
+        x = jax.random.normal(ks[0], (e, c, d), jnp.float32) * 0.1
+        mk = lambda k, sh: jax.random.normal(k, sh, jnp.float32) * 0.1
+        banks = (
+            mk(ks[1], (local, d, f)), mk(ks[2], (local, d, f)),
+            mk(ks[3], (local, f, d)),
+            mk(ks[4], (e - local, d, f)), mk(ks[5], (e - local, d, f)),
+            mk(ks[6], (e - local, f, d)),
+        )
+        merged_fn = jax.jit(split_grouped_swiglu_ref)
+        split_fn = jax.jit(split_swiglu_jnp)
+        t_merged = _time(merged_fn, x, *banks, reps=10) * 1e6
+        t_split = _time(split_fn, x, *banks, reps=10) * 1e6
+        t_pallas = _time(split_swiglu, x, *banks) * 1e6
+        per_expert = 3 * d * f * 4  # gate+up+down, f32
+        merged_peak = e * per_expert
+        split_peak = (e - local) * per_expert
+        flops = 3 * 2 * e * c * d * f
+        # target-HBM bound: bank read + gather landing write + activations
+        act = 2 * e * c * d * 4
+        byts_m = e * per_expert + merged_peak + act
+        byts_s = e * per_expert + split_peak + act
+        rows.append({
+            "kernel": "split_moe_ffn",
+            "shape": f"E{e} G'{g} C{c} D{d} F{f}",
+            "subgroup_size": g,
+            "merged_us": round(t_merged, 1),
+            "split_us": round(t_split, 1),
+            "split_speedup": round(t_merged / t_split, 3),
+            "pallas_interpret_us": round(t_pallas, 1),
+            "merged_peak_weight_buffer_bytes": merged_peak,
+            "split_peak_weight_buffer_bytes": split_peak,
+            "peak_bytes_ratio": round(split_peak / merged_peak, 4),
+            "mxu_bound_us": round(flops / PEAK_FLOPS * 1e6, 2),
+            "hbm_bound_merged_us": round(byts_m / HBM_BW * 1e6, 2),
+            "hbm_bound_split_us": round(byts_s / HBM_BW * 1e6, 2),
+        })
+    with open(out_path, "w") as fh:
+        json.dump(rows, fh, indent=2)
     return rows

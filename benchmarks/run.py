@@ -23,6 +23,7 @@ def _all_benchmarks():
         "table6_ttft": paper_tables.bench_table6_ttft,
         "placement": paper_tables.bench_placement,
         "kernels": kernels_bench.bench_kernels,
+        "split_moe": kernels_bench.bench_split_moe,
         "dryrun_roofline": roofline_table.bench_dryrun_roofline,
     }
 

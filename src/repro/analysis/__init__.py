@@ -1,10 +1,15 @@
-from repro.analysis.hlo import collective_bytes, parse_collectives
+from repro.analysis.hlo import (
+    collective_bytes,
+    parse_collectives,
+    tensor_shape_count,
+)
 from repro.analysis.roofline_report import RooflineReport, report_from_lowered
 from repro.analysis.stablehlo import analyze_module, ModuleCost
 
 __all__ = [
     "collective_bytes",
     "parse_collectives",
+    "tensor_shape_count",
     "RooflineReport",
     "report_from_lowered",
     "analyze_module",

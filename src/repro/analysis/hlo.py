@@ -82,3 +82,22 @@ def parse_collectives(hlo_text: str) -> dict[str, dict[str, float]]:
 def collective_bytes(hlo_text: str) -> float:
     """Total collective operand bytes (per device) in the module."""
     return sum(v["bytes"] for v in parse_collectives(hlo_text).values())
+
+
+def tensor_shape_count(text: str, dims) -> int:
+    """Occurrences of a tensor type with exactly these dims (any dtype) in
+    HLO (``f32[6,32,48]``) or StableHLO (``tensor<6x32x48xf32>``) text.
+
+    The §4.2 structural assertion is built on this: a module lowered with
+    ``moe_ffn="split"`` must contain zero tensors of the full canonical
+    expert-bank shape ``(num_padded, D, F)`` — only the resident shard and
+    the ``(num_padded - local, D, F)`` remote bank may appear — while the
+    merged path necessarily materializes it."""
+    dims = tuple(int(d) for d in dims)
+    stable = re.compile(
+        r"tensor<" + r"x".join(str(d) for d in dims) + r"x[a-z]"
+    )
+    hlo = re.compile(
+        r"\[" + r",".join(str(d) for d in dims) + r"\]"
+    )
+    return len(stable.findall(text)) + len(hlo.findall(text))

@@ -103,12 +103,22 @@ def analytic_residency_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2,
         opt_bytes_per_param if shape.phase == "train" else 0
     )
     weights = n * per_param / shard
-    # double-buffered gather window: 2x the largest single layer set
+    # double-buffered gather window: 2x the largest single layer set.
+    # split moe_ffn buffers only the remote bank — the resident shard is
+    # consumed in place by the split kernel, shrinking the window by 1/G'.
     layer_sets = [0.0]
     if cfg.moe is not None and geom.moe_exec == "gather" and geom.moe_placement:
+        from repro.core.execution import moe_split_active
+
+        pl = geom.moe_placement
+        window_experts = pl.num_padded
+        if moe_split_active(geom, xp):
+            # gate on the engine's own predicate (not the knob alone) so
+            # the report never claims a saving for plans that fall back
+            # to the merged path
+            window_experts = pl.num_padded - pl.local_count
         layer_sets.append(
-            geom.moe_placement.num_padded * 3 * cfg.d_model * cfg.moe.d_ff
-            * dtype_bytes
+            window_experts * 3 * cfg.d_model * cfg.moe.d_ff * dtype_bytes
         )
     if cfg.moe is not None and geom.moe_exec == "rotate" and geom.moe_placement:
         # rotate holds the resident shard + the in-flight one (the 2x
@@ -174,9 +184,37 @@ def analytic_hbm_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2) -> float:
     gathered_extra = 0.0
     if xp.mode == "dwdp":
         # full per-layer weight set lands and is read back
-        gathered_extra = 2.0 * n_params * dtype_bytes * (
-            1.0 if geom.moe_exec == "gather" else 1.0
-        ) * (1 - 1 / model_shards)
+        gathered_extra = (
+            2.0 * n_params * dtype_bytes * (1 - 1 / model_shards)
+        )
+        if cfg.moe is not None and geom.moe_exec == "gather" and geom.moe_placement:
+            # expert portion, exactly: merged lands+reads the full canonical
+            # bank (the §4.2 merge copy — resident shard re-written too);
+            # split lands+reads only the (G'-1)/G' remote bank, the resident
+            # shard is read in place (already counted in `resident`).
+            from repro.core.execution import moe_split_active
+
+            pl = geom.moe_placement
+            n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
+            per_layer = 3 * cfg.d_model * cfg.moe.d_ff
+            # what the coarse n_params-based term above actually contained:
+            # the REAL experts only — padding dummies are not parameters
+            bank_logical = n_moe * cfg.moe.num_experts * per_layer
+            # what actually lands: the padded canonical bank
+            bank_landed = n_moe * pl.num_padded * per_layer
+            # replace the coarse (1 - 1/shards) estimate for the expert part
+            gathered_extra -= 2.0 * bank_logical * dtype_bytes * (
+                1 - 1 / model_shards
+            )
+            if pl.subgroup_size > 1:
+                # subgroup 1 = fully resident: no expert gather happens at
+                # all (gather_set skips the path), so no landing either way
+                if moe_split_active(geom, xp):
+                    gathered_extra += (
+                        2.0 * bank_landed * dtype_bytes * pl.remote_fraction
+                    )
+                else:
+                    gathered_extra += 2.0 * bank_landed * dtype_bytes
     if cfg.moe is not None and shape.phase == "decode":
         # decode touches only routed experts' weights
         moe = cfg.moe

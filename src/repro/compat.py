@@ -1,0 +1,44 @@
+"""Version compatibility shims for the jax API surface this repo targets.
+
+The codebase is written against the modern spellings (``jax.shard_map``
+with ``check_vma``, ``jax.make_mesh(..., axis_types=...)``); older
+jaxlibs (< 0.5) expose the same functionality as
+``jax.experimental.shard_map.shard_map(..., check_rep=...)`` and a
+``make_mesh`` without ``axis_types``. Route every use through here so the
+rest of the tree stays on one spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """``jax.shard_map`` with the replication-check kwarg spelled per
+    the installed jax version (``check_vma`` >= 0.5, ``check_rep`` before)."""
+    return _shard_map(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        **{_CHECK_KW: check_vma},
+    )
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    try:
+        from jax.sharding import AxisType
+
+        return jax.make_mesh(
+            shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+        )
+    except ImportError:
+        return jax.make_mesh(shape, axes)

@@ -9,7 +9,11 @@ in *what moves*:
   the ``lax.scan`` carry (the paper's double buffering) — or ring-rotated
   through ranks when a full layer set cannot fit HBM. Activations never
   cross ranks for the FFN path; each rank serves its own tokens end to
-  end.
+  end. With ``ExecutionPlan.moe_ffn == "split"`` the MoE gather is
+  remote-only (§4.2 fast path): the resident shard never re-lands, the
+  prefetched payload is the ``(G'-1)/G'`` remote bank, and the fused
+  split grouped-SwiGLU kernel consumes both banks directly — no merged
+  ``(num_padded, D, F)`` expert buffer is ever materialized.
 - **dep**: activations move. MoE uses all-to-all dispatch/combine; dense
   layers use gather + reduce-scatter TP (the synchronizing layer-boundary
   collectives of paper Fig. 1).
@@ -33,8 +37,10 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import BlockKind
 from repro.core import prefetch
+from repro.kernels import split_gemm as split_gemm_lib
 from repro.core.placement import Placement, make_placement
 from repro.core.strategy import ExecutionPlan, input_pspecs, output_pspecs, state_pspecs
 from repro.models import attention as attn_lib
@@ -106,6 +112,18 @@ def _dep_tp_ok(geom: Geometry, xp: ExecutionPlan, what: str) -> bool:
             and geom.model_size > 1
         )
     return False
+
+
+def moe_split_active(geom: Geometry, xp: ExecutionPlan) -> bool:
+    """Does the DWDP-gather MoE path run the §4.2 split fast path?"""
+    pl = geom.moe_placement
+    return (
+        getattr(xp, "moe_ffn", "merged") == "split"
+        and xp.mode == "dwdp"
+        and geom.moe_exec == "gather"
+        and pl is not None
+        and pl.subgroup_size > 1
+    )
 
 
 def gather_set(sig: LayerSig, geom: Geometry, xp: ExecutionPlan) -> tuple[tuple[str, ...], ...]:
@@ -212,13 +230,25 @@ def gather_layer(gsub: dict, ctx: Ctx) -> dict:
         elif key == "moe/experts":
             pl = geom.moe_placement
             assert pl is not None and len(geom.expert_axes) == 1
-            out[key] = prefetch.gather_shards(
-                tree,
-                geom.expert_axes[0],
-                pl,
-                mode=xp.prefetch,
-                num_slices=xp.num_slices,
-            )
+            if moe_split_active(geom, xp):
+                # §4.2 fast path: only the remote bank crosses the wire
+                # (rotated canonical order); the resident shard is read
+                # straight from the layer params at execute time.
+                _, out[key] = prefetch.gather_remote_shards(
+                    tree,
+                    geom.expert_axes[0],
+                    pl,
+                    mode=xp.prefetch,
+                    num_slices=xp.num_slices,
+                )
+            else:
+                out[key] = prefetch.gather_shards(
+                    tree,
+                    geom.expert_axes[0],
+                    pl,
+                    mode=xp.prefetch,
+                    num_slices=xp.num_slices,
+                )
         elif key in ("rec", "cell"):
             # norms and 1-d params are replicated; only shard-eligible
             # (last dim divisible) leaves were sharded by the spec builder
@@ -625,6 +655,17 @@ def _grouped_into(xe, ye, experts, start, count):
     return lax.dynamic_update_slice_in_dim(ye, ye_t, start, axis=0)
 
 
+def _rolled_dispatch(d, roll, e_pad: int, capacity: int):
+    """Rotate the dispatch's expert coordinate by ``-roll`` (mod e_pad) so
+    the caller's resident experts occupy positions [0, local) — the order
+    the split banks arrive in (prefetch.gather_remote_shards). Only
+    ``flat_slot`` moves; gates / combine weights are order-independent."""
+    exp = d.flat_slot // capacity
+    slot = d.flat_slot - exp * capacity
+    exp = (exp - roll) % e_pad
+    return d._replace(flat_slot=exp * capacity + slot)
+
+
 def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict):
     cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
     moe = cfg.moe
@@ -644,12 +685,32 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict):
             xe, mp["experts"]["w_gate"], mp["experts"]["w_up"],
             mp["experts"]["w_down"],
         )
+    elif moe_split_active(geom, xp):
+        # §4.2 split fast path: tokens dispatch in rotated canonical order
+        # (resident experts first), the fused kernel consumes the resident
+        # shard + prefetched remote bank as two operands — the merged
+        # (e_pad, D, F) buffer of the branch below never exists.
+        remote = gathered.get("moe/experts")
+        assert remote is not None, "split-mode remote bank must be prefetched"
+        roll = (
+            lax.axis_index(geom.expert_axes[0]) % pl.subgroup_size
+        ) * pl.local_count
+        d = _rolled_dispatch(d, roll, e_pad, cap)
+        xe = moe_lib.dispatch_tokens(x2d, d, e_pad, cap)
+        exp = mp["experts"]
+        ye = split_gemm_lib.split_swiglu(
+            xe,
+            exp["w_gate"], exp["w_up"], exp["w_down"],
+            remote["w_gate"], remote["w_up"], remote["w_down"],
+            # pallas_call has no VJP; the jnp formulation (still merge-free)
+            # carries the ZeRO-style train gathers
+            impl="jnp" if xp.phase == "train" else "pallas",
+        )
     elif xp.mode == "dwdp":
         xe = moe_lib.dispatch_tokens(x2d, d, e_pad, cap)
         if geom.moe_exec == "gather":
             full = gathered.get("moe/experts")
             assert full is not None, "gather-mode experts must be prefetched"
-            full = jax.tree.map(lambda w: w[:e_pad], full)
             ye = moe_lib.grouped_ffn(
                 xe, full["w_gate"], full["w_up"], full["w_down"]
             )
@@ -1161,7 +1222,7 @@ def make_step_fn(model: Model, xp: ExecutionPlan, mesh, *, capture_len: int = 0)
             return new_params, new_opt, metrics
 
         opt_specs = AdamWState(step=P(), m=pspecs, v=pspecs)
-        sharded = jax.shard_map(
+        sharded = shard_map(
             step,
             mesh=mesh,
             in_specs=(pspecs, opt_specs, in_b, P()),
@@ -1179,7 +1240,7 @@ def make_step_fn(model: Model, xp: ExecutionPlan, mesh, *, capture_len: int = 0)
         if capture_len:
             out_sp = dict(out_sp)
             out_sp["state"] = state_pspecs(model, xp)
-        sharded = jax.shard_map(
+        sharded = shard_map(
             inner,
             mesh=mesh,
             in_specs=(pspecs, in_b),
@@ -1189,7 +1250,7 @@ def make_step_fn(model: Model, xp: ExecutionPlan, mesh, *, capture_len: int = 0)
         return jax.jit(sharded)
 
     st_specs = state_pspecs(model, xp)
-    sharded = jax.shard_map(
+    sharded = shard_map(
         inner,
         mesh=mesh,
         in_specs=(pspecs, in_b, st_specs),

@@ -58,12 +58,22 @@ class Placement:
         ]
 
     def ring_pairs(self) -> list[tuple[int, int]]:
-        """ppermute (src, dst) pairs: each subgroup forms its own ring."""
+        """ppermute (src, dst) pairs: each subgroup forms its own ring
+        (each rank's shard moves one position forward = everyone receives
+        from neighbor p-1; equivalently ``shift_pairs(-1)``)."""
+        return self.shift_pairs(-1)
+
+    def shift_pairs(self, t: int) -> list[tuple[int, int]]:
+        """ppermute (src, dst) pairs delivering subgroup neighbor ``p + t``'s
+        data to each rank ``p`` (i.e. every rank's shard travels ``t``
+        positions *backwards* around its subgroup ring). ``shift_pairs(1)``
+        chained G'-1 times walks the ring; ``shift_pairs(t)`` one-shot pulls
+        the t-th neighbor directly (remote-only allgather mode)."""
         pairs = []
         g = self.subgroup_size
         for s in range(self.redundancy):
             for i in range(g):
-                pairs.append((s * g + i, s * g + (i + 1) % g))
+                pairs.append((s * g + i, s * g + (i - t) % g))
         return pairs
 
 

@@ -14,9 +14,23 @@ Three modes, all running *inside* shard_map on the "model" axis:
   the per-step permutes are issued slice-interleaved, giving the scheduler
   finer-grained units to overlap with compute.
 
-All modes deposit shards in canonical expert order (see placement.py), so
-no post-gather merge copy exists — §4.2's merge elimination is structural
-here.
+Two gather primitives share those modes:
+
+- ``gather_shards``: the merged gather. Deposits shards in canonical
+  expert order and returns exactly the canonical ``(num_padded, ...)``
+  buffer — *the* post-gather shape; no other is ever produced.
+- ``gather_remote_shards``: the §4.2 fast-path gather. Returns the
+  ``(local_bank, remote_bank)`` pair where the resident shard is passed
+  through untouched and only the ``(G'-1) * local`` remote experts cross
+  the wire — the resident shard is never concatenated into the wire
+  buffer, so no full-layer ``(num_padded, ...)`` weight buffer exists.
+  The remote bank is in **rotated canonical order**: position
+  ``j * local + i`` holds expert ``((p + 1 + j) % G') * local + i`` for
+  caller subgroup position ``p`` — i.e. canonical order rolled so the
+  caller's own experts (which lead the rolled order as the local bank)
+  are exactly the experts the split kernel predicates as local.
+  Consumers roll their dispatch indices by ``p * local`` to match
+  (see ``execution._moe_apply``).
 
 Gradients flow through every mode (ppermute transposes to the inverse
 permute; all_gather to psum_scatter), which is what makes DWDP usable for
@@ -109,8 +123,12 @@ def gather_shards(
     num_slices: int = 4,
 ) -> PyTree:
     """Gather a pytree of locally-sharded arrays (leading dim = local shard)
-    into full arrays (leading dim = subgroup_size * local) in canonical
-    order. This is the DWDP prefetch primitive."""
+    into full arrays in canonical order. This is the DWDP prefetch
+    primitive; its output leading dim is always ``placement.num_padded``
+    (``subgroup_size * local``) — the one canonical post-gather shape.
+    (``Placement.storage_size`` = ``group_size * local`` by contrast is
+    the *global, redundancy-expanded* array layout, never a gather
+    result.)"""
     if mode == "allgather":
         f = functools.partial(_allgather_one, axis=axis, placement=placement)
     elif mode == "ring":
@@ -121,16 +139,101 @@ def gather_shards(
         )
     else:
         raise ValueError(f"unknown prefetch mode {mode!r}")
-    return jax.tree.map(f, tree)
+    return jax.tree.map(lambda x: f(x)[: placement.num_padded], tree)
 
 
-def dedupe_gathered(x: jax.Array, placement: Placement) -> jax.Array:
-    """Slice a gathered (subgroup*local, ...) buffer down to the canonical
-    (num_padded, ...) expert set. With the canonical placement this is the
-    identity (num_padded == subgroup*local); kept for clarity."""
-    return x[: placement.num_padded]
+# --------------------------------------------------------------------------
+# Remote-only gather: the §4.2 split-path prefetch.
+# --------------------------------------------------------------------------
+def _remote_allgather_one(
+    x: jax.Array, axis: str, placement: Placement
+) -> jax.Array:
+    """G'-1 *independent* one-shot permutes (they can all be in flight at
+    once — the fused-collective analogue), chunk j pulled from subgroup
+    neighbor p+1+j."""
+    g = placement.subgroup_size
+    chunks = [
+        jax.lax.ppermute(x, axis, placement.shift_pairs(t))
+        for t in range(1, g)
+    ]
+    return jnp.concatenate(chunks, axis=0)
+
+
+def _remote_ring_one(x: jax.Array, axis: str, placement: Placement) -> jax.Array:
+    """Chained neighbor passes: after step t every rank holds the shard of
+    subgroup neighbor p+t — exactly remote chunk t-1 in rotated order."""
+    g = placement.subgroup_size
+    step = placement.shift_pairs(1)
+    chunks = []
+    cur = x
+    for _ in range(g - 1):
+        cur = jax.lax.ppermute(cur, axis, step)
+        chunks.append(cur)
+    return jnp.concatenate(chunks, axis=0)
+
+
+def _remote_ring_sliced_one(
+    x: jax.Array, axis: str, placement: Placement, num_slices: int
+) -> jax.Array:
+    g = placement.subgroup_size
+    feat = x.shape[-1]
+    s = num_slices
+    while feat % s:
+        s -= 1
+    if s <= 1:
+        return _remote_ring_one(x, axis, placement)
+    step = placement.shift_pairs(1)
+    curs = list(jnp.split(x, s, axis=-1))
+    chunks = []
+    # step-major, slice-minor issue order: the TDM round-robin of Listing 1
+    for _ in range(g - 1):
+        for j in range(s):
+            curs[j] = jax.lax.ppermute(curs[j], axis, step)
+        chunks.append(jnp.concatenate(curs, axis=-1))
+    return jnp.concatenate(chunks, axis=0)
+
+
+def gather_remote_shards(
+    tree: PyTree,
+    axis: str,
+    placement: Placement,
+    *,
+    mode: str = "allgather",
+    num_slices: int = 4,
+) -> tuple[PyTree, PyTree]:
+    """Remote-only DWDP prefetch: return the ``(local_bank, remote_bank)``
+    pair for the split §4.2 fast path.
+
+    ``local_bank`` is the input tree untouched (the resident shard,
+    leading dim ``local``); ``remote_bank`` has leading dim
+    ``(subgroup_size - 1) * local`` in rotated canonical order (see module
+    docstring). Only the remote fraction ``(G'-1)/G'`` of the layer's
+    bytes crosses the wire, and no buffer of the full layer's
+    ``num_padded`` experts is ever materialized. Differentiable in every
+    mode (ppermute transposes to the inverse permute), so the ZeRO-style
+    train gathers can ride the same path.
+    """
+    if placement.subgroup_size == 1:
+        empty = jax.tree.map(lambda x: x[:0], tree)
+        return tree, empty
+    if mode == "allgather":
+        f = functools.partial(_remote_allgather_one, axis=axis, placement=placement)
+    elif mode == "ring":
+        f = functools.partial(_remote_ring_one, axis=axis, placement=placement)
+    elif mode == "ring_sliced":
+        f = functools.partial(
+            _remote_ring_sliced_one,
+            axis=axis,
+            placement=placement,
+            num_slices=num_slices,
+        )
+    else:
+        raise ValueError(f"unknown prefetch mode {mode!r}")
+    return tree, jax.tree.map(f, tree)
 
 
 def gather_bytes(placement: Placement, bytes_per_expert: int) -> int:
-    """Remote bytes fetched per rank per layer (analytic, for roofline)."""
+    """Remote bytes fetched per rank per layer (analytic, for roofline).
+    Identical for merged and split gathers — the split path saves HBM
+    merge-copy bytes (see roofline_report), not wire bytes."""
     return (placement.subgroup_size - 1) * placement.local_count * bytes_per_expert

@@ -48,6 +48,16 @@ class LayerTimes:
     compute: float
     prefetch: float
     all2all: float
+    land_bytes: float = 0.0   # HBM write of the gathered bank landing:
+                              # full layer set (merged) vs remote-only
+                              # (split) — the §4.2 merge-copy delta.
+    land_time: float = 0.0    # the same, as HBM time. Reported separately
+                              # and NOT folded into `compute`: only the
+                              # DWDP path lands gathered weights, so
+                              # folding it in would inflate t_dep (which
+                              # reuses `compute`) and shift the paper's
+                              # §3 model; consumers that want the landing
+                              # cost add it to the DWDP side explicitly.
 
     @property
     def t_dwdp(self) -> float:
@@ -77,6 +87,7 @@ def layer_times(
     kv_len: Optional[int] = None,
     layer: int = 0,
     redundancy: int = 1,
+    moe_ffn: str = "merged",
 ) -> LayerTimes:
     """Per-layer roofline terms for the context phase (batch of `tokens`).
 
@@ -85,6 +96,12 @@ def layer_times(
     all2all: DEP exchanges each token's hidden state twice (dispatch +
     combine) across the group: 2 * tokens * D * topk/… bytes (we follow
     the paper and count the full dispatched activation volume).
+    moe_ffn: gathered-weight landing traffic, reported via the
+    ``land_bytes``/``land_time`` fields (DWDP-only cost — see LayerTimes).
+    "merged" materializes the full contiguous layer bank (the §4.2 merge
+    copy: every expert — resident included — is written once into the
+    gather buffer); "split" lands only the (G'-1)/G' remote bank and the
+    kernel reads the resident shard in place.
     """
     d = cfg.d_model
     kv_len = kv_len or tokens
@@ -113,6 +130,13 @@ def layer_times(
         sub = max(1, group // redundancy)
         layer_expert_bytes = e * 3 * d * f * weight_bytes
         prefetch_bytes = layer_expert_bytes * (sub - 1) / sub
+        # HBM landing write of the gathered bank: full layer (merged) vs
+        # remote-only (split — the eliminated merge copy shows up here)
+        land_bytes = 0.0
+        if sub > 1:
+            land_bytes = (
+                layer_expert_bytes if moe_ffn == "merged" else prefetch_bytes
+            )
         a2a_bytes = 2 * tokens * k * d * act_bytes * (sub - 1) / sub
     else:
         f = cfg.ffn_dim(layer) or cfg.d_ff
@@ -120,6 +144,7 @@ def layer_times(
         w_bytes = 3 * d * f * weight_bytes
         layer_bytes = 3 * d * f * weight_bytes
         prefetch_bytes = layer_bytes * (group - 1) / group
+        land_bytes = 0.0
         # dense DEP analogue: gather + reduce-scatter of activations
         a2a_bytes = 2 * tokens * d * act_bytes * (group - 1) / group
     t_ffn = op_time(ffn_flops, w_bytes + 2 * tokens * d * act_bytes, hw)
@@ -127,7 +152,13 @@ def layer_times(
     compute = t_attn + t_ffn
     prefetch = prefetch_bytes / hw.link_bw
     all2all = a2a_bytes / hw.link_bw
-    return LayerTimes(compute=compute, prefetch=prefetch, all2all=all2all)
+    return LayerTimes(
+        compute=compute,
+        prefetch=prefetch,
+        all2all=all2all,
+        land_bytes=land_bytes,
+        land_time=land_bytes / hw.hbm_bw,
+    )
 
 
 def figure3_sweep(
@@ -138,13 +169,14 @@ def figure3_sweep(
     isls: tuple[int, ...] = (1024, 2048, 4096, 8192, 16384, 32768, 65536,
                              131072),
     batch: int = 1,
+    moe_ffn: str = "merged",
 ) -> list[dict]:
     """Reproduce Fig. 3: compute/prefetch ratio + DEP/DWDP speedup vs ISL."""
     rows = []
     moe_layer = (cfg.moe.first_dense if cfg.moe else 0)
     for isl in isls:
         lt = layer_times(cfg, tokens=batch * isl, group=group, hw=hw,
-                         layer=moe_layer)
+                         layer=moe_layer, moe_ffn=moe_ffn)
         rows.append(
             {
                 "isl": isl,
@@ -153,6 +185,8 @@ def figure3_sweep(
                 "t_compute_us": lt.compute * 1e6,
                 "t_prefetch_us": lt.prefetch * 1e6,
                 "t_all2all_us": lt.all2all * 1e6,
+                "land_mb": lt.land_bytes / 1e6,
+                "t_land_us": lt.land_time * 1e6,
             }
         )
     return rows

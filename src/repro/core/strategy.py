@@ -30,6 +30,7 @@ PyTree = Any
 
 MODES = ("dwdp", "dep", "replicated", "hybrid")
 PREFETCH_MODES = ("allgather", "ring", "ring_sliced")
+MOE_FFN_MODES = ("merged", "split")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +50,15 @@ class ExecutionPlan:
     decode_attn: str = "gather"  # "gather" weights per layer, or "qgather":
                                  # keep weights sharded and move the (tiny)
                                  # q/k/v activations instead (beyond-paper)
+    moe_ffn: str = "merged"      # DWDP-gather MoE FFN execution:
+                                 # "merged": prefetch lands the full
+                                 #   canonical (num_padded, ...) expert
+                                 #   bank, plain grouped_ffn consumes it.
+                                 # "split": §4.2 fast path — only the
+                                 #   remote bank is prefetched and the
+                                 #   fused split grouped-SwiGLU kernel
+                                 #   consumes (resident, remote) directly;
+                                 #   no merged weight buffer ever exists.
 
     @property
     def batch_shards(self) -> int:
@@ -124,8 +134,10 @@ def make_execution_plan(
     capacity_factor: float = 1.25,
     block_causal: bool = False,
     decode_attn: str = "gather",
+    moe_ffn: str = "merged",
 ) -> ExecutionPlan:
     assert mode in MODES and prefetch in PREFETCH_MODES
+    assert moe_ffn in MOE_FFN_MODES
     batch_axes, seq_axes = plan_activation_sharding(
         model.cfg, shape, mesh_sizes
     )
@@ -142,6 +154,7 @@ def make_execution_plan(
         seq_len=shape.seq_len,
         block_causal=block_causal and not seq_axes,
         decode_attn=decode_attn,
+        moe_ffn=moe_ffn,
     )
 
 

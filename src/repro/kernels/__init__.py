@@ -6,6 +6,55 @@
 - ``flash_attention``: blockwise causal/sliding-window GQA attention for
   the context phase (the compute window that hides DWDP prefetch).
 
-Each kernel ships ``ops.py`` (jit'd wrapper, interpret-mode on CPU) and
-``ref.py`` (pure-jnp oracle used by the allclose test sweeps).
+Each kernel ships ``ops.py`` (jit'd wrapper; ``interpret`` defaults from
+the backend — interpret mode off TPU, Mosaic on TPU) and ``ref.py``
+(pure-jnp oracle used by the allclose test sweeps).
+
+Split-weight fast path (§4.2, end to end)
+-----------------------------------------
+
+``ExecutionPlan.moe_ffn = "split"`` routes the DWDP-gather MoE layers
+through this package's fused ``split_grouped_swiglu`` kernel instead of
+the merged ``grouped_ffn`` path:
+
+- **Remote-only gather contract**: ``prefetch.gather_remote_shards``
+  returns the ``(local_bank, remote_bank)`` pair for all three prefetch
+  modes (allgather / ring / ring_sliced). The resident shard never enters
+  the wire buffer; the remote bank arrives in *rotated canonical order*
+  (the caller's own experts lead, then subgroup neighbors p+1, p+2, ...),
+  so the engine only rolls its dispatch indices — integer arithmetic, no
+  data movement — to line tokens up with the banks.
+- **Fused kernel**: gate/up/down stream both banks via predicated
+  BlockSpecs (index maps clamp, ``pl.when`` on the expert coordinate
+  selects), silu·mul fuses on the fp32 VMEM accumulators between stages,
+  and the (E, C, F) hidden activation never round-trips HBM. Block sizes
+  auto-select per dimension, so non-128-multiple (even sub-8 decode)
+  capacities stream.
+- **Memory**: the prefetched window shrinks from the full canonical
+  ``num_padded`` bank to the ``(G'-1)/G'`` remote fraction, and the
+  merged buffer's landing write is eliminated — accounted in
+  ``core.roofline.layer_times(moe_ffn=...)`` and
+  ``analysis.roofline_report``; asserted structurally in
+  ``tests/test_multidevice.py`` (no full-bank tensor shape in the split
+  lowering).
+- **Training**: ``split_swiglu(impl="jnp")`` is the differentiable
+  no-merge formulation (per-bank grouped FFN, outputs concatenated) —
+  grads flow through the remote-only gather for the ZeRO-style train
+  shapes; ``pallas_call`` itself has no VJP.
+
+Remaining: an attention-weight split path (today DWDP-gathered attention
+still lands a merged per-layer buffer), and a Mosaic-native down-proj
+output-dim blocking for d_model beyond the VMEM accumulator budget.
 """
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """The one backend-derived interpret policy for every kernel family:
+    compile to Mosaic on a real TPU, interpret everywhere else. ``None``
+    means "decide from the backend"; an explicit bool wins."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -1,18 +1,13 @@
 """jit'd public wrapper for the flash attention kernel."""
 from __future__ import annotations
 
-import jax
-
+from repro.kernels import resolve_interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention as _fa
 from repro.kernels.flash_attention.ref import flash_attention_ref
 
 
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def flash_attention(q, k, v, **kw):
-    kw.setdefault("interpret", not on_tpu())
+    kw.setdefault("interpret", resolve_interpret())
     return _fa(q, k, v, **kw)
 
 

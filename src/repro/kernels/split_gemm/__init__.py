@@ -1,4 +1,19 @@
-from repro.kernels.split_gemm.ops import split_grouped_gemm
-from repro.kernels.split_gemm.ref import split_grouped_gemm_ref
+from repro.kernels.split_gemm.ops import (
+    split_gemm,
+    split_grouped_gemm,
+    split_grouped_gemm_ref,
+    split_grouped_swiglu,
+    split_grouped_swiglu_ref,
+    split_swiglu,
+    split_swiglu_jnp,
+)
 
-__all__ = ["split_grouped_gemm", "split_grouped_gemm_ref"]
+__all__ = [
+    "split_gemm",
+    "split_grouped_gemm",
+    "split_grouped_gemm_ref",
+    "split_grouped_swiglu",
+    "split_grouped_swiglu_ref",
+    "split_swiglu",
+    "split_swiglu_jnp",
+]

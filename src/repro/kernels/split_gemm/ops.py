@@ -1,25 +1,71 @@
-"""jit'd public wrapper for the split-weight grouped GEMM.
+"""jit'd public wrappers for the split-weight grouped kernels.
 
-On CPU (this container) the kernel executes in Pallas interpret mode; on a
-real TPU backend set ``interpret=False`` to compile the Mosaic kernel.
+On CPU (this container) the kernels execute in Pallas interpret mode; on
+a real TPU backend they compile to Mosaic (``interpret`` defaults from
+the backend — pass ``interpret=...`` explicitly to override).
+
+``split_swiglu`` is the engine-facing op. ``impl`` selects:
+
+- ``"pallas"`` — the fused §4.2 kernel (inference hot path).
+- ``"jnp"``    — a differentiable formulation that computes each bank's
+  expert slice separately and concatenates the *outputs* (activations,
+  (E, C, D)) — never the weight banks. Grad-through-gather for the train
+  shapes routes here, since ``pallas_call`` has no registered VJP.
+- ``None``     — "pallas".
+
+Both impls honor the same contract: experts [0, E_l) read the local bank,
+[E_l, E) the remote bank; no merged (E, D, F) weight buffer is ever
+materialized.
 """
 from __future__ import annotations
 
-import jax
+import jax.numpy as jnp
 
-from repro.kernels.split_gemm.split_gemm import split_grouped_gemm
-from repro.kernels.split_gemm.ref import split_grouped_gemm_ref
-
-
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.split_gemm.split_gemm import (
+    split_grouped_gemm,
+    split_grouped_swiglu,
+)
+from repro.kernels.split_gemm.ref import (
+    split_grouped_gemm_ref,
+    split_grouped_swiglu_ref,
+)
+from repro.models.moe import grouped_ffn
 
 
 def split_gemm(x, w_local, w_remote, **kw):
     """Grouped GEMM over split expert banks. x: (E, C, D);
     w_local: (E_l, D, F); w_remote: (E-E_l, D, F) -> (E, C, F)."""
-    kw.setdefault("interpret", not on_tpu())
     return split_grouped_gemm(x, w_local, w_remote, **kw)
 
 
-__all__ = ["split_gemm", "split_grouped_gemm", "split_grouped_gemm_ref"]
+def split_swiglu_jnp(x, wg_l, wu_l, wd_l, wg_r, wu_r, wd_r):
+    """Differentiable split SwiGLU without a bank merge: per-bank grouped
+    FFN over the matching expert slice of ``x``, outputs concatenated.
+    The concat is over (E, C, D) activations — a factor d_ff/d_model
+    smaller than the weight merge the paper eliminates — and gradients
+    flow to both banks (and through any gather that produced them)."""
+    e_l = wg_l.shape[0]
+    y_l = grouped_ffn(x[:e_l], wg_l, wu_l, wd_l)
+    y_r = grouped_ffn(x[e_l:], wg_r, wu_r, wd_r)
+    return jnp.concatenate([y_l, y_r], axis=0)
+
+
+def split_swiglu(x, wg_l, wu_l, wd_l, wg_r, wu_r, wd_r, *, impl=None, **kw):
+    """Fused split grouped SwiGLU. x: (E, C, D); gate/up banks (E_*, D, F),
+    down banks (E_*, F, D) -> (E, C, D). See module docstring for impl."""
+    if impl in (None, "pallas"):
+        return split_grouped_swiglu(x, wg_l, wu_l, wd_l, wg_r, wu_r, wd_r, **kw)
+    if impl == "jnp":
+        return split_swiglu_jnp(x, wg_l, wu_l, wd_l, wg_r, wu_r, wd_r)
+    raise ValueError(f"unknown split_swiglu impl {impl!r}")
+
+
+__all__ = [
+    "split_gemm",
+    "split_grouped_gemm",
+    "split_grouped_gemm_ref",
+    "split_swiglu",
+    "split_swiglu_jnp",
+    "split_grouped_swiglu",
+    "split_grouped_swiglu_ref",
+]

@@ -1,17 +1,22 @@
-"""Pure-jnp oracle for the split-weight grouped GEMM.
+"""Pure-jnp oracles for the split-weight kernels.
 
-The reference implements the *naive baseline* the paper's §4.2 removes:
+The references implement the *naive baseline* the paper's §4.2 removes:
 merge local + remote banks into one contiguous buffer (the D2D copy),
-then run a standard grouped GEMM.
+then run the canonical grouped GEMM / grouped SwiGLU
+(``repro.models.moe.grouped_ffn`` — the same routine the merged engine
+path executes, so kernel tests compare against exactly what production
+merged mode computes, fp8 dequant policy included).
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.models.moe import grouped_ffn
+
 
 def merge_banks(w_local: jnp.ndarray, w_remote: jnp.ndarray) -> jnp.ndarray:
-    """The D2D merge copy DWDP's kernel eliminates. w_local: (E_l, D, F);
-    w_remote: (E_r, D, F) -> (E_l + E_r, D, F)."""
+    """The D2D merge copy DWDP's kernel eliminates. w_local: (E_l, ...);
+    w_remote: (E_r, ...) -> (E_l + E_r, ...)."""
     return jnp.concatenate([w_local, w_remote], axis=0)
 
 
@@ -21,6 +26,27 @@ def split_grouped_gemm_ref(
     w_remote: jnp.ndarray,  # (E - E_l, D, F) prefetched experts
 ) -> jnp.ndarray:
     w = merge_banks(w_local, w_remote)
+    if w.dtype != x.dtype:  # fp8-stored weights dequantize on use
+        w = w.astype(x.dtype)
     return jnp.einsum(
         "ecd,edf->ecf", x, w, preferred_element_type=jnp.float32
     ).astype(x.dtype)
+
+
+def split_grouped_swiglu_ref(
+    x: jnp.ndarray,          # (E, C, D)
+    wg_local: jnp.ndarray,   # (E_l, D, F)
+    wu_local: jnp.ndarray,
+    wd_local: jnp.ndarray,   # (E_l, F, D)
+    wg_remote: jnp.ndarray,  # (E - E_l, D, F)
+    wu_remote: jnp.ndarray,
+    wd_remote: jnp.ndarray,  # (E - E_l, F, D)
+) -> jnp.ndarray:
+    """Merged-baseline SwiGLU: concatenate both banks (the copy §4.2
+    eliminates), then run the canonical grouped FFN."""
+    return grouped_ffn(
+        x,
+        merge_banks(wg_local, wg_remote),
+        merge_banks(wu_local, wu_remote),
+        merge_banks(wd_local, wd_remote),
+    )

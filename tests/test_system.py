@@ -152,9 +152,11 @@ def test_analyzer_collective_bytes():
     from repro.launch.mesh import make_smoke_mesh
     mesh = make_smoke_mesh(1, 1)
 
+    from repro.compat import shard_map
+
     # trivially sized mesh: collectives lower but carry group size 1
     def f(x):
-        return jax.shard_map(
+        return shard_map(
             lambda y: jax.lax.psum(y, "model"),
             mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
             out_specs=jax.sharding.PartitionSpec(), check_vma=False,
