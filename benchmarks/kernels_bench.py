@@ -18,12 +18,18 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.split_gemm.ops import (
     split_gemm,
     split_grouped_swiglu_ref,
+    split_reduce_matmul,
+    split_stack_gemm_ref,
+    split_stack_matmul,
     split_swiglu,
     split_swiglu_jnp,
 )
 
 BENCH_JSON = os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_split_gemm.json"
+)
+BENCH_ATTN_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_split_attn.json"
 )
 
 
@@ -135,6 +141,109 @@ def bench_split_moe(out_path: str = BENCH_JSON) -> list[dict]:
             "hbm_bound_merged_us": round(byts_m / HBM_BW * 1e6, 2),
             "hbm_bound_split_us": round(byts_s / HBM_BW * 1e6, 2),
         })
+    with open(out_path, "w") as fh:
+        json.dump(rows, fh, indent=2)
+    return rows
+
+
+def bench_split_attn(out_path: str = BENCH_ATTN_JSON) -> list[dict]:
+    """Merged vs split ATTENTION projection micro-bench (the §4.2 delta
+    extended to the second-largest per-layer weight transfer).
+
+    merged = concatenate the (resident, remote) slice banks into the full
+    (A, D, qd/A) stack (the merge copy the split layout eliminates) +
+    one stacked projection einsum; split = the no-merge stacked
+    formulation over the same operands (per-bank projection, outputs
+    combined on the activation side). Both run identical jnp math under
+    jit, so the wall-time delta isolates the merge copy. The Pallas
+    kernel's interpret-mode time is reported alongside for correctness
+    tracking, not raced.
+
+    peak_weight_buffer_bytes is the gathered-stack HBM footprint each
+    path holds per projection: merged lands all A slices, split only the
+    A-1 remote ones. Rewrites BENCH_split_attn.json; committed per PR so
+    the perf trajectory lives in git history.
+    """
+    rows = []
+    # (shards A, tokens T, d_model D, slice dim fs): weight-heavy
+    # attention projection tiles (qd = A * fs) — the small-batch/decode
+    # regime where the weight merge actually dominates and DWDP-gathered
+    # attention lives; at large T the activation side dwarfs the weights
+    # and the layout is irrelevant either way.
+    for (a, t, d, fs) in [
+        (4, 256, 1024, 256),
+        (8, 128, 2048, 256),
+        (4, 256, 4096, 1024),
+    ]:
+        ks = jax.random.split(jax.random.key(a * 7 + t), 2)
+        x = jax.random.normal(ks[0], (t, d), jnp.float32) * 0.1
+        w = jax.random.normal(ks[1], (a, d, fs), jnp.float32) * 0.1
+        wl, wr = w[:1], w[1:]
+
+        def merged_fn(x, wl, wr):
+            return split_stack_gemm_ref(x, wl, wr)  # concat + einsum
+
+        def split_fn(x, wl, wr):
+            return split_stack_matmul(x, wl, wr, impl="jnp")
+
+        t_merged = _time(jax.jit(merged_fn), x, wl, wr, reps=10) * 1e6
+        t_split = _time(jax.jit(split_fn), x, wl, wr, reps=10) * 1e6
+        t_pallas = _time(split_stack_matmul, x, wl, wr) * 1e6
+        per_slice = d * fs * 4
+        merged_peak = a * per_slice
+        split_peak = (a - 1) * per_slice
+        flops = 2 * t * d * a * fs
+        act = (t * d + a * t * fs) * 4
+        byts_m = a * per_slice + merged_peak + act
+        byts_s = a * per_slice + split_peak + act
+        rows.append({
+            "kernel": "split_attn_proj",
+            "shape": f"A{a} T{t} D{d} fs{fs}",
+            "merged_us": round(t_merged, 1),
+            "split_us": round(t_split, 1),
+            "split_speedup": round(t_merged / t_split, 3),
+            "pallas_interpret_us": round(t_pallas, 1),
+            "merged_peak_weight_buffer_bytes": merged_peak,
+            "split_peak_weight_buffer_bytes": split_peak,
+            "peak_bytes_ratio": round(split_peak / merged_peak, 4),
+            "mxu_bound_us": round(flops / PEAK_FLOPS * 1e6, 2),
+            "hbm_bound_merged_us": round(byts_m / HBM_BW * 1e6, 2),
+            "hbm_bound_split_us": round(byts_s / HBM_BW * 1e6, 2),
+        })
+    # the output projection (row-split reduce) at one representative tile
+    a, t, d, fs = 4, 256, 1024, 256
+    ks = jax.random.split(jax.random.key(99), 2)
+    xo = jax.random.normal(ks[0], (a, t, fs), jnp.float32) * 0.1
+    wo = jax.random.normal(ks[1], (a, fs, d), jnp.float32) * 0.1
+
+    def merged_o(xo, wl, wr):
+        w = jnp.concatenate([wl, wr], axis=0)
+        return jnp.einsum("stf,sfd->td", xo, w)
+
+    def split_o(xo, wl, wr):
+        return split_reduce_matmul(xo, wl, wr, impl="jnp")
+
+    t_merged = _time(jax.jit(merged_o), xo, wo[:1], wo[1:], reps=10) * 1e6
+    t_split = _time(jax.jit(split_o), xo, wo[:1], wo[1:], reps=10) * 1e6
+    t_pallas = _time(split_reduce_matmul, xo, wo[:1], wo[1:]) * 1e6
+    per_slice = d * fs * 4
+    act_o = (a * t * fs + t * d) * 4
+    byts_mo = a * per_slice + a * per_slice + act_o
+    byts_so = a * per_slice + (a - 1) * per_slice + act_o
+    rows.append({
+        "kernel": "split_attn_out_proj",
+        "shape": f"A{a} T{t} D{d} fs{fs}",
+        "merged_us": round(t_merged, 1),
+        "split_us": round(t_split, 1),
+        "split_speedup": round(t_merged / t_split, 3),
+        "pallas_interpret_us": round(t_pallas, 1),
+        "merged_peak_weight_buffer_bytes": a * per_slice,
+        "split_peak_weight_buffer_bytes": (a - 1) * per_slice,
+        "peak_bytes_ratio": round((a - 1) / a, 4),
+        "mxu_bound_us": round(2 * a * t * fs * d / PEAK_FLOPS * 1e6, 2),
+        "hbm_bound_merged_us": round(byts_mo / HBM_BW * 1e6, 2),
+        "hbm_bound_split_us": round(byts_so / HBM_BW * 1e6, 2),
+    })
     with open(out_path, "w") as fh:
         json.dump(rows, fh, indent=2)
     return rows

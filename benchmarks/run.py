@@ -24,6 +24,7 @@ def _all_benchmarks():
         "placement": paper_tables.bench_placement,
         "kernels": kernels_bench.bench_kernels,
         "split_moe": kernels_bench.bench_split_moe,
+        "split_attn": kernels_bench.bench_split_attn,
         "dryrun_roofline": roofline_table.bench_dryrun_roofline,
     }
 

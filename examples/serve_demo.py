@@ -21,6 +21,10 @@ def main():
     ap.add_argument("--output-len", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--ctx-mode", default="dwdp", choices=["dwdp", "dep"])
+    ap.add_argument("--weight-layout", default="split",
+                    choices=["merged", "split"],
+                    help="gathered-weight representation (split = the "
+                         "§4.2 fast path, the engine default)")
     args = ap.parse_args()
 
     cfg = reduced_variant(get_arch(args.arch))
@@ -30,6 +34,7 @@ def main():
         cache_len=args.prefill_len + args.output_len + 4,
         max_batch=args.max_batch,
         ctx_mode=args.ctx_mode,
+        weight_layout=args.weight_layout,
     )
     rng = np.random.default_rng(0)
     for i in range(args.requests):

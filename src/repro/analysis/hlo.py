@@ -89,10 +89,12 @@ def tensor_shape_count(text: str, dims) -> int:
     HLO (``f32[6,32,48]``) or StableHLO (``tensor<6x32x48xf32>``) text.
 
     The §4.2 structural assertion is built on this: a module lowered with
-    ``moe_ffn="split"`` must contain zero tensors of the full canonical
-    expert-bank shape ``(num_padded, D, F)`` — only the resident shard and
-    the ``(num_padded - local, D, F)`` remote bank may appear — while the
-    merged path necessarily materializes it."""
+    ``weight_layout="split"`` must contain zero tensors of the full
+    canonical gathered shape of ANY weight family — the
+    ``(num_padded, D, F)`` expert bank, the ``(A, D, qd/A)`` /
+    ``(A, qd/A, D)`` attention stacks, the ``(S, D, F/S)`` dense-FFN
+    stack — only the resident shard and the remote bank may appear —
+    while the merged path necessarily materializes them."""
     dims = tuple(int(d) for d in dims)
     stable = re.compile(
         r"tensor<" + r"x".join(str(d) for d in dims) + r"x[a-z]"

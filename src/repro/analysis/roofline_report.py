@@ -104,15 +104,16 @@ def analytic_residency_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2,
     )
     weights = n * per_param / shard
     # double-buffered gather window: 2x the largest single layer set.
-    # split moe_ffn buffers only the remote bank — the resident shard is
-    # consumed in place by the split kernel, shrinking the window by 1/G'.
+    # A split-active family buffers only the remote bank — the resident
+    # shard is consumed in place by the split kernels, shrinking the
+    # window by 1/G' (experts) / 1/shards (attention, dense FFN).
+    from repro.core.execution import _qgather_ok, split_bank_active
+
     layer_sets = [0.0]
     if cfg.moe is not None and geom.moe_exec == "gather" and geom.moe_placement:
-        from repro.core.execution import moe_split_active
-
         pl = geom.moe_placement
         window_experts = pl.num_padded
-        if moe_split_active(geom, xp):
+        if split_bank_active(geom, xp, "moe/experts"):
             # gate on the engine's own predicate (not the knob alone) so
             # the report never claims a saving for plans that fall back
             # to the merged path
@@ -128,12 +129,19 @@ def analytic_residency_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2,
             * cfg.moe.d_ff * dtype_bytes
         )
     if geom.ffn_axes and cfg.d_ff:
-        layer_sets.append(3 * cfg.d_model * cfg.d_ff * dtype_bytes)
-    if geom.attn_axes:
-        layer_sets.append(
-            (cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * cfg.d_model)
-            * dtype_bytes
-        )
+        ffn_set = 3 * cfg.d_model * cfg.d_ff * dtype_bytes
+        if split_bank_active(geom, xp, "ffn"):
+            ffn_set *= 1 - 1 / max(1, geom.ffn_shards)
+        layer_sets.append(ffn_set)
+    if geom.attn_axes and not _qgather_ok(geom, xp):
+        # qgather decode keeps attention weights sharded (no gather
+        # window at all) — mirror gather_set, like the moe gate above
+        attn_set = (
+            cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * cfg.d_model
+        ) * dtype_bytes
+        if split_bank_active(geom, xp, "attn"):
+            attn_set *= 1 - 1 / max(1, geom.attn_shards)
+        layer_sets.append(attn_set)
     gather_buf = 2 * max(layer_sets)
     # KV cache (decode) / activations
     kv = 0.0
@@ -183,38 +191,86 @@ def analytic_hbm_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2) -> float:
     resident = n_params * dtype_bytes / model_shards
     gathered_extra = 0.0
     if xp.mode == "dwdp":
-        # full per-layer weight set lands and is read back
-        gathered_extra = (
-            2.0 * n_params * dtype_bytes * (1 - 1 / model_shards)
-        )
-        if cfg.moe is not None and geom.moe_exec == "gather" and geom.moe_placement:
-            # expert portion, exactly: merged lands+reads the full canonical
-            # bank (the §4.2 merge copy — resident shard re-written too);
-            # split lands+reads only the (G'-1)/G' remote bank, the resident
-            # shard is read in place (already counted in `resident`).
-            from repro.core.execution import moe_split_active
+        # Per-family gathered landing + read-back, each family paying its
+        # own layout: merged lands+reads the full canonical buffer (the
+        # §4.2 merge copy — resident shard re-written too); a split-active
+        # family lands+reads only its remote bank, the resident shard is
+        # read in place (already counted in `resident`).
+        from repro.core.execution import _qgather_ok, split_bank_active
 
+        _ATTN = ("global_attn", "local_attn")
+
+        def _land(total_bytes, shards, split):
+            if shards <= 1:
+                return 0.0
+            frac = (1 - 1 / shards) if split else 1.0
+            return 2.0 * total_bytes * frac
+
+        def axsize(axes):
+            return max(1, _m.prod(xp.mesh_sizes.get(a, 1) for a in axes))
+
+        # vocab family (embed gather / train head gather): always merged
+        vocab_params = cfg.vocab_size * cfg.d_model * (
+            1 if cfg.tie_embeddings else 2
+        )
+        gathered_extra += _land(
+            vocab_params * dtype_bytes, xp.mesh_sizes.get("model", 1), False
+        )
+        # attention projections / recurrent cells (mixer family)
+        attn_w = sum(
+            cfg._mixer_params(l) for l in range(cfg.num_layers)
+            if cfg.block_kind(l).value in _ATTN
+        ) * dtype_bytes
+        cell_w = sum(
+            cfg._mixer_params(l) for l in range(cfg.num_layers)
+            if cfg.block_kind(l).value not in _ATTN
+        ) * dtype_bytes
+        if geom.attn_axes and not _qgather_ok(geom, xp):
+            # qgather decode never gathers attention weights (it moves
+            # q/k/v activations instead) — mirror gather_set
+            gathered_extra += _land(
+                attn_w, axsize(geom.attn_axes),
+                split_bank_active(geom, xp, "attn"),
+            )
+        if geom.cell_axes:
+            gathered_extra += _land(cell_w, axsize(geom.cell_axes), False)
+        # dense FFN slices (+ always-on shared experts)
+        dense_w = sum(
+            3 * cfg.d_model * cfg.ffn_dim(l)
+            for l in range(cfg.num_layers) if cfg.ffn_dim(l)
+        ) * dtype_bytes
+        if cfg.moe is not None and cfg.moe.shared_d_ff:
+            n_moe_l = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
+            dense_w += (
+                n_moe_l * 3 * cfg.d_model * cfg.moe.shared_d_ff * dtype_bytes
+            )
+        if geom.ffn_axes:
+            gathered_extra += _land(
+                dense_w, axsize(geom.ffn_axes),
+                split_bank_active(geom, xp, "ffn"),
+            )
+        # expert bank, exactly: the padded canonical bank lands (merged)
+        # or only the (G'-1)/G' remote fraction (split); subgroup 1 =
+        # fully resident, no expert gather at all (gather_set skips it)
+        if cfg.moe is not None and geom.moe_placement:
             pl = geom.moe_placement
             n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
             per_layer = 3 * cfg.d_model * cfg.moe.d_ff
-            # what the coarse n_params-based term above actually contained:
-            # the REAL experts only — padding dummies are not parameters
-            bank_logical = n_moe * cfg.moe.num_experts * per_layer
-            # what actually lands: the padded canonical bank
             bank_landed = n_moe * pl.num_padded * per_layer
-            # replace the coarse (1 - 1/shards) estimate for the expert part
-            gathered_extra -= 2.0 * bank_logical * dtype_bytes * (
-                1 - 1 / model_shards
-            )
-            if pl.subgroup_size > 1:
-                # subgroup 1 = fully resident: no expert gather happens at
-                # all (gather_set skips the path), so no landing either way
-                if moe_split_active(geom, xp):
+            if geom.moe_exec == "gather" and pl.subgroup_size > 1:
+                if split_bank_active(geom, xp, "moe/experts"):
                     gathered_extra += (
                         2.0 * bank_landed * dtype_bytes * pl.remote_fraction
                     )
                 else:
                     gathered_extra += 2.0 * bank_landed * dtype_bytes
+            elif geom.moe_exec == "rotate" and pl.subgroup_size > 1:
+                # rotate streams every non-resident shard through HBM
+                # once per layer (transient landing + read) — same remote
+                # fraction as the split gather, never the full merge
+                gathered_extra += (
+                    2.0 * bank_landed * dtype_bytes * pl.remote_fraction
+                )
     if cfg.moe is not None and shape.phase == "decode":
         # decode touches only routed experts' weights
         moe = cfg.moe

@@ -9,11 +9,17 @@ in *what moves*:
   the ``lax.scan`` carry (the paper's double buffering) — or ring-rotated
   through ranks when a full layer set cannot fit HBM. Activations never
   cross ranks for the FFN path; each rank serves its own tokens end to
-  end. With ``ExecutionPlan.moe_ffn == "split"`` the MoE gather is
-  remote-only (§4.2 fast path): the resident shard never re-lands, the
-  prefetched payload is the ``(G'-1)/G'`` remote bank, and the fused
-  split grouped-SwiGLU kernel consumes both banks directly — no merged
-  ``(num_padded, D, F)`` expert buffer is ever materialized.
+  end. With ``ExecutionPlan.weight_layout == "split"`` (the default) the
+  gather is remote-only for EVERY prefetched family (§4.2 generalized):
+  the prefetch pipeline emits a ``prefetch.SplitBank`` per family — MoE
+  expert banks, attention QKV/O, dense-FFN slices — the resident shard
+  never re-lands, the prefetched payload is the ``(G'-1)/G'`` remote
+  bank, and the fused split kernels consume both banks directly. No
+  merged gathered-weight buffer (``(num_padded, D, F)`` expert bank,
+  ``(A, D, qd/A)`` attention stack, ``(S, D, F/S)`` FFN stack) is ever
+  materialized. ``weight_layout == "merged"`` keeps the legacy explicit
+  merge (one canonical contiguous landing per family) as the baseline;
+  multi-axis (ZeRO-wide) gathers fall back to it automatically.
 - **dep**: activations move. MoE uses all-to-all dispatch/combine; dense
   layers use gather + reduce-scatter TP (the synchronizing layer-boundary
   collectives of paper Fig. 1).
@@ -118,12 +124,41 @@ def moe_split_active(geom: Geometry, xp: ExecutionPlan) -> bool:
     """Does the DWDP-gather MoE path run the §4.2 split fast path?"""
     pl = geom.moe_placement
     return (
-        getattr(xp, "moe_ffn", "merged") == "split"
+        getattr(xp, "weight_layout", "merged") == "split"
         and xp.mode == "dwdp"
         and geom.moe_exec == "gather"
         and pl is not None
         and pl.subgroup_size > 1
     )
+
+
+def dense_split_active(geom: Geometry, xp: ExecutionPlan, axes: tuple[str, ...]) -> bool:
+    """Does a leading-stacked dense family (attention, dense FFN) gathered
+    over ``axes`` use the split-bank representation?
+
+    Split covers the weights-move modes over a single mesh axis (the
+    remote-only permutes are single-axis primitives); multi-axis ZeRO-wide
+    train gathers and the DEP fallback gathers keep the legacy merged
+    landing."""
+    return (
+        getattr(xp, "weight_layout", "merged") == "split"
+        and xp.mode in ("dwdp", "hybrid")
+        and len(axes) == 1
+        and _axsize(xp, axes) > 1
+    )
+
+
+def split_bank_active(geom: Geometry, xp: ExecutionPlan, key: str) -> bool:
+    """Unified per-family predicate: does gather_layer emit a SplitBank
+    for this gather-set key? (The one switch the roofline/residency
+    accounting mirrors.)"""
+    if key == "moe/experts":
+        return moe_split_active(geom, xp)
+    if key == "attn":
+        return dense_split_active(geom, xp, geom.attn_axes)
+    if key in ("ffn", "moe/shared"):
+        return dense_split_active(geom, xp, geom.ffn_axes)
+    return False
 
 
 def gather_set(sig: LayerSig, geom: Geometry, xp: ExecutionPlan) -> tuple[tuple[str, ...], ...]:
@@ -184,7 +219,10 @@ def _merge(lp: dict, gathered: dict) -> dict:
 
 
 def _gather_leading(tree, axes: tuple[str, ...], xp: ExecutionPlan):
-    """Gather stacked-storage weights (leading shard axis) to full."""
+    """Legacy merged gather of stacked-storage weights (leading shard
+    axis) to full — the *explicit merge step*: every shard, resident
+    included, lands once in the canonical contiguous buffer. Split mode
+    never calls this for a split-active family."""
     size = _axsize(xp, axes)
     if size == 1:
         return tree
@@ -197,6 +235,13 @@ def _gather_leading(tree, axes: tuple[str, ...], xp: ExecutionPlan):
     return prefetch.gather_shards(
         tree, axes[0], pl, mode=xp.prefetch, num_slices=xp.num_slices
     )
+
+
+def _leading_placement(axes: tuple[str, ...], xp: ExecutionPlan):
+    """Trivial one-slice-per-rank placement for stacked dense families
+    (subgroup == the whole axis, local_count == 1)."""
+    size = _axsize(xp, axes)
+    return make_placement(size, size)
 
 
 def _gather_flat(tree, axes: tuple[str, ...], xp: ExecutionPlan):
@@ -220,41 +265,45 @@ def _gather_flat(tree, axes: tuple[str, ...], xp: ExecutionPlan):
 
 
 def gather_layer(gsub: dict, ctx: Ctx) -> dict:
+    """One gather routine for every prefetched family.
+
+    Split-active families come back as a ``prefetch.SplitBank`` — THE
+    canonical gathered representation (remote-only wire traffic, resident
+    shard untouched, rotated canonical order). Everything else takes the
+    legacy path through the explicit merge (``_gather_leading`` /
+    ``gather_shards``), which is the only place a full canonical weight
+    buffer is ever created."""
     geom, xp = ctx.geom, ctx.xp
     out = {}
     for key, tree in gsub.items():
-        if key == "attn":
-            out[key] = _gather_leading(tree, geom.attn_axes, xp)
-        elif key in ("ffn", "moe/shared"):
-            out[key] = _gather_leading(tree, geom.ffn_axes, xp)
-        elif key == "moe/experts":
-            pl = geom.moe_placement
-            assert pl is not None and len(geom.expert_axes) == 1
-            if moe_split_active(geom, xp):
-                # §4.2 fast path: only the remote bank crosses the wire
-                # (rotated canonical order); the resident shard is read
-                # straight from the layer params at execute time.
-                _, out[key] = prefetch.gather_remote_shards(
-                    tree,
-                    geom.expert_axes[0],
-                    pl,
-                    mode=xp.prefetch,
-                    num_slices=xp.num_slices,
-                )
-            else:
-                out[key] = prefetch.gather_shards(
-                    tree,
-                    geom.expert_axes[0],
-                    pl,
-                    mode=xp.prefetch,
-                    num_slices=xp.num_slices,
-                )
-        elif key in ("rec", "cell"):
+        if key in ("rec", "cell"):
             # norms and 1-d params are replicated; only shard-eligible
             # (last dim divisible) leaves were sharded by the spec builder
             out[key] = _gather_flat(tree, geom.cell_axes, xp)
+            continue
+        if key == "attn":
+            axes, pl = geom.attn_axes, None
+        elif key in ("ffn", "moe/shared"):
+            axes, pl = geom.ffn_axes, None
+        elif key == "moe/experts":
+            axes, pl = geom.expert_axes, geom.moe_placement
+            assert pl is not None and len(axes) == 1
         else:
             raise KeyError(key)
+        if split_bank_active(geom, xp, key):
+            out[key] = prefetch.gather_split_bank(
+                tree,
+                axes[0],
+                pl if pl is not None else _leading_placement(axes, xp),
+                mode=xp.prefetch,
+                num_slices=xp.num_slices,
+            )
+        elif pl is not None:
+            out[key] = prefetch.gather_shards(
+                tree, axes[0], pl, mode=xp.prefetch, num_slices=xp.num_slices
+            )
+        else:
+            out[key] = _gather_leading(tree, axes, xp)
     return out
 
 
@@ -333,16 +382,79 @@ def _dedupe_kv(w, geom: Geometry):
     return w
 
 
+def _attn_split_position(geom: Geometry):
+    """Caller position on the (single-axis) attention shard ring."""
+    return lax.axis_index(geom.attn_axes[0]) % geom.attn_shards
+
+
+def _attn_split_qkv(h, bank, ctx: Ctx):
+    """q/k/v projections straight off a SplitBank — no merged ``(A, D,
+    qd/A)`` weight stack ever exists.
+
+    The split kernel emits per-slice outputs in rotated bank order
+    (resident slice first); the roll back to canonical head order happens
+    on the *projected activations* (a gather of (T, A, fs) — a factor
+    D/fs smaller than the weight merge the paper eliminates, and pure
+    index arithmetic on the weight side). KV slices are computed for all
+    A stacked positions and deduped post-projection — a GQA-duplicate
+    recompute bounded by A/kv_shard on the (small) KV projections.
+    """
+    cfg, geom = ctx.cfg, ctx.geom
+    a = geom.attn_shards
+    p = _attn_split_position(geom)
+    b, s, dm = h.shape
+    h2d = h.reshape(b * s, dm)
+    impl = split_gemm_lib.default_dense_impl(ctx.xp.phase)
+    canon = (jnp.arange(a) - p) % a  # canonical slice j sits at rotated j-p
+
+    def stack(name):
+        out = split_gemm_lib.split_stack_matmul(
+            h2d, bank.local[name], bank.remote[name], impl=impl
+        )  # (A, T, fs) rotated
+        return jnp.take(jnp.moveaxis(out, 0, 1), canon, axis=1)  # (T, A, fs)
+
+    hd = cfg.head_dim
+    q = stack("wq").reshape(b, s, cfg.num_heads, hd)
+    dup = a // geom.kv_shard
+    k = stack("wk")[:, ::dup].reshape(b, s, cfg.num_kv_heads, hd)
+    v = stack("wv")[:, ::dup].reshape(b, s, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def _attn_split_out(out, bank, ctx: Ctx):
+    """Output projection off a SplitBank: roll the attention output's
+    head slices into rotated bank order (activation-side, index-only),
+    then let the reduce kernel sum per-slice contributions — the sum is
+    order-independent, so no post-fix-up is needed."""
+    geom = ctx.geom
+    a = geom.attn_shards
+    p = _attn_split_position(geom)
+    b, s = out.shape[:2]
+    impl = split_gemm_lib.default_dense_impl(ctx.xp.phase)
+    rot = (jnp.arange(a) + p) % a  # rotated slice j is canonical p+j
+    out = jnp.take(out.reshape(b, s, a, -1), rot, axis=2)
+    out = jnp.moveaxis(out.reshape(b * s, a, -1), 1, 0)  # (A, T, fs)
+    y = split_gemm_lib.split_reduce_matmul(
+        out, bank.local["wo"], bank.remote["wo"], impl=impl
+    )
+    return y.reshape(b, s, -1)
+
+
 def _attn_full(h, aw, sig: LayerSig, ctx: Ctx, lstate):
-    """Full-weight attention (replicated or DWDP-gathered weights)."""
+    """Full-weight attention: replicated, DWDP-gathered merged, or — when
+    ``aw`` is a ``prefetch.SplitBank`` — the §4.2 split fast path."""
     cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
     b, s, _ = h.shape
     hd = cfg.head_dim
-    q = _project_heads(h, aw["wq"], cfg.num_heads, hd)
-    wk = _dedupe_kv(aw["wk"], geom)
-    wv = _dedupe_kv(aw["wv"], geom)
-    k = _project_heads(h, wk, cfg.num_kv_heads, hd)
-    v = _project_heads(h, wv, cfg.num_kv_heads, hd)
+    split = isinstance(aw, prefetch.SplitBank)
+    if split:
+        q, k, v = _attn_split_qkv(h, aw, ctx)
+    else:
+        q = _project_heads(h, aw["wq"], cfg.num_heads, hd)
+        wk = _dedupe_kv(aw["wk"], geom)
+        wv = _dedupe_kv(aw["wv"], geom)
+        k = _project_heads(h, wk, cfg.num_kv_heads, hd)
+        v = _project_heads(h, wv, cfg.num_kv_heads, hd)
 
     if ctx.decode:
         pos = ctx.pos  # (B,) per-row decode positions
@@ -366,6 +478,8 @@ def _attn_full(h, aw, sig: LayerSig, ctx: Ctx, lstate):
             new_state = _capture_kv_state(k, v, sig, ctx)
         else:
             new_state = lstate
+    if split:
+        return _attn_split_out(out, aw, ctx), new_state
     a = aw["wo"].shape[0]
     out = out.reshape(b, out.shape[1], a, -1)
     y = jnp.einsum("bsag,agd->bsd", out, _w(aw["wo"], out))
@@ -541,6 +655,18 @@ def _ffn_apply(x2d, fp, ctx: Ctx, gathered=None):
         return _ffn_full(x2d, fp)
     if xp.mode in ("dwdp", "hybrid") or not _dep_tp_ok(geom, xp, "ffn"):
         assert gathered is not None, "DWDP FFN weights must be prefetched"
+        if isinstance(gathered, prefetch.SplitBank):
+            # split layout: y = sum_s swiglu_s(x) over (resident, remote)
+            # slice banks — the stacked-FFN sum is order-independent, so
+            # the rotated bank order needs no fix-up and no merged
+            # (S, D, F/S) buffer ever exists.
+            lo, re = gathered.local, gathered.remote
+            return split_gemm_lib.split_dense_ffn(
+                x2d,
+                lo["w_gate"], lo["w_up"], lo["w_down"],
+                re["w_gate"], re["w_up"], re["w_down"],
+                impl=split_gemm_lib.default_dense_impl(xp.phase),
+            )
         return _ffn_full(x2d, gathered)
     # DEP TP over "model"
     if ctx.decode:
@@ -666,17 +792,40 @@ def _rolled_dispatch(d, roll, e_pad: int, capacity: int):
     return d._replace(flat_slot=exp * capacity + slot)
 
 
-def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict):
+def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int):
     cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
     moe = cfg.moe
     pl = geom.moe_placement
     assert moe is not None and pl is not None
     t = x2d.shape[0]
     e_pad = pl.num_padded
-    cap = moe_lib.capacity_for(t, moe.num_experts, moe.top_k, xp.capacity_factor)
-    d = moe_lib.route_topk(
-        x2d, mp["router"], moe.top_k, cap, num_real=moe.num_experts
-    )
+    if getattr(xp, "capacity_from", "local") == "global":
+        # Layout-invariant capacity (ROADMAP decision): derive the slot
+        # budget per ROW from the *global* per-row token count and
+        # restrict capacity competition to the row. Rows never split
+        # across ranks under batch sharding, so every mesh reshape of the
+        # same global batch drops the identical token set. (Sequence
+        # sharding splits rows; the per-rank slice then gets a ceil-
+        # divided share — deterministic across batch reshapes, not across
+        # seq-shard degree changes.)
+        row_tokens = 1 if ctx.decode else xp.seq_len
+        cap_row = moe_lib.capacity_for(
+            row_tokens, moe.num_experts, moe.top_k, xp.capacity_factor
+        )
+        if not ctx.decode and xp.seq_shards > 1:
+            cap_row = -(-cap_row // xp.seq_shards)
+        cap = rows * cap_row
+        d = moe_lib.route_topk_rows(
+            x2d.reshape(rows, -1, x2d.shape[-1]), mp["router"], moe.top_k,
+            cap_row, num_real=moe.num_experts,
+        )
+    else:
+        cap = moe_lib.capacity_for(
+            t, moe.num_experts, moe.top_k, xp.capacity_factor
+        )
+        d = moe_lib.route_topk(
+            x2d, mp["router"], moe.top_k, cap, num_real=moe.num_experts
+        )
     aux = moe_lib.load_balance_loss(d, e_pad)
 
     if xp.mode == "replicated" or pl.group_size == 1:
@@ -687,21 +836,21 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict):
         )
     elif moe_split_active(geom, xp):
         # §4.2 split fast path: tokens dispatch in rotated canonical order
-        # (resident experts first), the fused kernel consumes the resident
-        # shard + prefetched remote bank as two operands — the merged
-        # (e_pad, D, F) buffer of the branch below never exists.
-        remote = gathered.get("moe/experts")
-        assert remote is not None, "split-mode remote bank must be prefetched"
+        # (resident experts first), the fused kernel consumes the
+        # SplitBank's (resident, remote) trees as two operands — the
+        # merged (e_pad, D, F) buffer of the branch below never exists.
+        bank = gathered.get("moe/experts")
+        assert bank is not None, "split-mode expert bank must be prefetched"
         roll = (
             lax.axis_index(geom.expert_axes[0]) % pl.subgroup_size
         ) * pl.local_count
         d = _rolled_dispatch(d, roll, e_pad, cap)
         xe = moe_lib.dispatch_tokens(x2d, d, e_pad, cap)
-        exp = mp["experts"]
+        lo, re = bank.local, bank.remote
         ye = split_gemm_lib.split_swiglu(
             xe,
-            exp["w_gate"], exp["w_up"], exp["w_down"],
-            remote["w_gate"], remote["w_up"], remote["w_down"],
+            lo["w_gate"], lo["w_up"], lo["w_down"],
+            re["w_gate"], re["w_up"], re["w_down"],
             # pallas_call has no VJP; the jnp formulation (still merge-free)
             # carries the ZeRO-style train gathers
             impl="jnp" if xp.phase == "train" else "pallas",
@@ -813,7 +962,7 @@ def apply_layer(x, lp, sig: LayerSig, ctx: Ctx, lstate, gathered: dict):
         b, s, dm = h2.shape
         h2f = h2.reshape(b * s, dm)
         if sig.is_moe:
-            y, aux = _moe_apply(h2f, lp["moe"], sig, ctx, gathered)
+            y, aux = _moe_apply(h2f, lp["moe"], sig, ctx, gathered, rows=b)
         else:
             y = _ffn_apply(h2f, lp["ffn"], ctx, gathered.get("ffn"))
         x = x + y.reshape(b, s, dm)

@@ -16,21 +16,35 @@ Three modes, all running *inside* shard_map on the "model" axis:
 
 Two gather primitives share those modes:
 
-- ``gather_shards``: the merged gather. Deposits shards in canonical
-  expert order and returns exactly the canonical ``(num_padded, ...)``
-  buffer — *the* post-gather shape; no other is ever produced.
-- ``gather_remote_shards``: the §4.2 fast-path gather. Returns the
+- ``gather_shards``: the merged (legacy) gather. Deposits shards in
+  canonical expert order and returns exactly the canonical
+  ``(num_padded, ...)`` buffer — the explicit merge step: every shard,
+  resident included, is copied into one contiguous buffer (precisely the
+  §4.2 merge-copy HBM tax the split layout eliminates).
+- ``gather_split_bank``: the §4.2 fast-path gather and the engine's
+  *canonical* gathered-weight representation (``weight_layout="split"``,
+  the default — shared by MoE experts, attention projections and dense
+  FFN slices alike). Returns a :class:`SplitBank` — the
   ``(local_bank, remote_bank)`` pair where the resident shard is passed
-  through untouched and only the ``(G'-1) * local`` remote experts cross
+  through untouched and only the ``(G'-1) * local`` remote slices cross
   the wire — the resident shard is never concatenated into the wire
   buffer, so no full-layer ``(num_padded, ...)`` weight buffer exists.
   The remote bank is in **rotated canonical order**: position
-  ``j * local + i`` holds expert ``((p + 1 + j) % G') * local + i`` for
+  ``j * local + i`` holds slice ``((p + 1 + j) % G') * local + i`` for
   caller subgroup position ``p`` — i.e. canonical order rolled so the
-  caller's own experts (which lead the rolled order as the local bank)
-  are exactly the experts the split kernel predicates as local.
-  Consumers roll their dispatch indices by ``p * local`` to match
-  (see ``execution._moe_apply``).
+  caller's own slices (which lead the rolled order as the local bank)
+  are exactly the slices the split kernels predicate as local.
+  Consumers compensate with index arithmetic only: MoE rolls its
+  dispatch indices by ``p * local`` (``execution._moe_apply``), attention
+  rolls the *projected activations* back to canonical head order
+  (``execution._attn_full``), and the dense FFN needs nothing at all
+  (its slice sum is order-independent).
+
+``merge_split_bank`` is the explicit activation-side merge of a
+``SplitBank`` back into the canonical buffer (roll + concat) — it exists
+for fallbacks and tests; the engine's legacy mode gathers canonically
+via ``gather_shards`` instead so the merged baseline's collectives stay
+byte-identical to the paper's reference point.
 
 Gradients flow through every mode (ppermute transposes to the inverse
 permute; all_gather to psum_scatter), which is what makes DWDP usable for
@@ -39,7 +53,7 @@ the train_4k shape (ZeRO-3-style gather-forward / scatter-grad).
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +61,23 @@ import jax.numpy as jnp
 from repro.core.placement import Placement
 
 PyTree = Any
+
+
+class SplitBank(NamedTuple):
+    """First-class output of the split prefetch pipeline.
+
+    ``local``: the resident shard tree, untouched (leading dim = the
+    per-rank slice count — never copied, never re-landed).
+    ``remote``: the prefetched remote tree, leading dim
+    ``(G'-1) * local`` in rotated canonical order (module docstring).
+
+    Registered as a pytree (NamedTuple), so a SplitBank rides the
+    layer-stack scan carry exactly like a merged buffer would — the
+    double-buffered prefetch pipeline is representation-agnostic.
+    """
+
+    local: PyTree
+    remote: PyTree
 
 
 def _subgroup_position(axis: str, placement: Placement) -> jax.Array:
@@ -230,6 +261,45 @@ def gather_remote_shards(
     else:
         raise ValueError(f"unknown prefetch mode {mode!r}")
     return tree, jax.tree.map(f, tree)
+
+
+def gather_split_bank(
+    tree: PyTree,
+    axis: str,
+    placement: Placement,
+    *,
+    mode: str = "allgather",
+    num_slices: int = 4,
+) -> SplitBank:
+    """Split-layout prefetch: the ``SplitBank`` form of
+    ``gather_remote_shards`` — the canonical gathered-weight
+    representation every DWDP-gathered family shares."""
+    local, remote = gather_remote_shards(
+        tree, axis, placement, mode=mode, num_slices=num_slices
+    )
+    return SplitBank(local=local, remote=remote)
+
+
+def merge_split_bank(bank: SplitBank, axis: str, placement: Placement) -> PyTree:
+    """Explicit merge of a SplitBank into the canonical ``(num_padded,
+    ...)`` buffer — the §4.2 merge copy, performed on purpose.
+
+    The rotated-order concat ``[local; remote]`` holds slice
+    ``(p + j) % G'`` at position ``j``; rolling by ``p * local`` restores
+    canonical order. Differentiable; used by fallbacks and by tests that
+    check a bank's content against the merged gather."""
+    g = placement.subgroup_size
+    if g == 1:
+        return bank.local
+    p = _subgroup_position(axis, placement)
+    shift = p * placement.local_count
+
+    def merge(lo, re):
+        merged_rot = jnp.concatenate([lo, re], axis=0)
+        idx = (jnp.arange(placement.num_padded) - shift) % placement.num_padded
+        return jnp.take(merged_rot, idx, axis=0)
+
+    return jax.tree.map(merge, bank.local, bank.remote)
 
 
 def gather_bytes(placement: Placement, bytes_per_expert: int) -> int:

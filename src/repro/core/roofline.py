@@ -87,6 +87,8 @@ def layer_times(
     kv_len: Optional[int] = None,
     layer: int = 0,
     redundancy: int = 1,
+    weight_layout: Optional[str] = None,
+    attn_gathered: bool = False,
     moe_ffn: str = "merged",
 ) -> LayerTimes:
     """Per-layer roofline terms for the context phase (batch of `tokens`).
@@ -96,13 +98,21 @@ def layer_times(
     all2all: DEP exchanges each token's hidden state twice (dispatch +
     combine) across the group: 2 * tokens * D * topk/… bytes (we follow
     the paper and count the full dispatched activation volume).
-    moe_ffn: gathered-weight landing traffic, reported via the
+    weight_layout: gathered-weight landing traffic, reported via the
     ``land_bytes``/``land_time`` fields (DWDP-only cost — see LayerTimes).
     "merged" materializes the full contiguous layer bank (the §4.2 merge
-    copy: every expert — resident included — is written once into the
+    copy: every slice — resident included — is written once into the
     gather buffer); "split" lands only the (G'-1)/G' remote bank and the
-    kernel reads the resident shard in place.
+    split kernels read the resident shard in place. Applies uniformly to
+    the expert bank, the dense-FFN slices, and (when ``attn_gathered``)
+    the attention projections — the layout is one engine-wide switch.
+    ``moe_ffn`` is the deprecated PR 1 spelling of the same knob.
+    attn_gathered: model DWDP-gathered attention weights (the escalated
+    sharded-attention geometry) — adds the attention projections'
+    (group-1)/group wire bytes to the prefetch term and their landing
+    write per the layout.
     """
+    layout = weight_layout if weight_layout is not None else moe_ffn
     d = cfg.d_model
     kv_len = kv_len or tokens
     # --- attention ---------------------------------------------------------
@@ -135,7 +145,7 @@ def layer_times(
         land_bytes = 0.0
         if sub > 1:
             land_bytes = (
-                layer_expert_bytes if moe_ffn == "merged" else prefetch_bytes
+                layer_expert_bytes if layout == "merged" else prefetch_bytes
             )
         a2a_bytes = 2 * tokens * k * d * act_bytes * (sub - 1) / sub
     else:
@@ -144,10 +154,21 @@ def layer_times(
         w_bytes = 3 * d * f * weight_bytes
         layer_bytes = 3 * d * f * weight_bytes
         prefetch_bytes = layer_bytes * (group - 1) / group
+        # dense-FFN slices land like any other gathered family
         land_bytes = 0.0
+        if group > 1:
+            land_bytes = layer_bytes if layout == "merged" else prefetch_bytes
         # dense DEP analogue: gather + reduce-scatter of activations
         a2a_bytes = 2 * tokens * d * act_bytes * (group - 1) / group
     t_ffn = op_time(ffn_flops, w_bytes + 2 * tokens * d * act_bytes, hw)
+
+    # attention projections: replicated in the paper-faithful layout
+    # (no traffic); when DWDP gathers them (escalated sharding), they pay
+    # the same per-mode wire + landing accounting as every other family.
+    if attn_gathered and group > 1:
+        attn_prefetch = attn_w_bytes * (group - 1) / group
+        prefetch_bytes += attn_prefetch
+        land_bytes += attn_w_bytes if layout == "merged" else attn_prefetch
 
     compute = t_attn + t_ffn
     prefetch = prefetch_bytes / hw.link_bw
@@ -169,14 +190,18 @@ def figure3_sweep(
     isls: tuple[int, ...] = (1024, 2048, 4096, 8192, 16384, 32768, 65536,
                              131072),
     batch: int = 1,
+    weight_layout: Optional[str] = None,
+    attn_gathered: bool = False,
     moe_ffn: str = "merged",
 ) -> list[dict]:
     """Reproduce Fig. 3: compute/prefetch ratio + DEP/DWDP speedup vs ISL."""
     rows = []
     moe_layer = (cfg.moe.first_dense if cfg.moe else 0)
+    layout = weight_layout if weight_layout is not None else moe_ffn
     for isl in isls:
         lt = layer_times(cfg, tokens=batch * isl, group=group, hw=hw,
-                         layer=moe_layer, moe_ffn=moe_ffn)
+                         layer=moe_layer, weight_layout=layout,
+                         attn_gathered=attn_gathered)
         rows.append(
             {
                 "isl": isl,

@@ -12,6 +12,15 @@
                        reduce-scatter for dense TP). The paper's baseline.
     * ``replicated`` — weights fully replicated, pure DP (reference).
 
+- how gathered weights are *represented* (``weight_layout``): "split"
+  (the default §4.2 split-bank fast path — one engine-wide switch, per
+  Shift-Parallelism-style layout design, covering MoE experts, attention
+  projections and dense-FFN slices alike) or "merged" (the legacy
+  explicit-merge baseline),
+- and how MoE capacity is derived (``capacity_from``): from the local
+  token count ("local") or layout-invariantly per row from the global
+  shape ("global" — deterministic drops across batch-sharding reshapes),
+
 and derives the PartitionSpecs for params, inputs, decode state, outputs.
 """
 from __future__ import annotations
@@ -30,7 +39,9 @@ PyTree = Any
 
 MODES = ("dwdp", "dep", "replicated", "hybrid")
 PREFETCH_MODES = ("allgather", "ring", "ring_sliced")
-MOE_FFN_MODES = ("merged", "split")
+WEIGHT_LAYOUTS = ("merged", "split")
+MOE_FFN_MODES = WEIGHT_LAYOUTS  # deprecated alias (PR 1 name)
+CAPACITY_FROM = ("local", "global")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,15 +61,39 @@ class ExecutionPlan:
     decode_attn: str = "gather"  # "gather" weights per layer, or "qgather":
                                  # keep weights sharded and move the (tiny)
                                  # q/k/v activations instead (beyond-paper)
-    moe_ffn: str = "merged"      # DWDP-gather MoE FFN execution:
-                                 # "merged": prefetch lands the full
-                                 #   canonical (num_padded, ...) expert
-                                 #   bank, plain grouped_ffn consumes it.
-                                 # "split": §4.2 fast path — only the
-                                 #   remote bank is prefetched and the
-                                 #   fused split grouped-SwiGLU kernel
-                                 #   consumes (resident, remote) directly;
-                                 #   no merged weight buffer ever exists.
+    weight_layout: str = "split"
+    # Engine-wide gathered-weight representation, covering every family
+    # the weights-move modes prefetch (MoE experts, attention QKV/O,
+    # dense-FFN slices):
+    #   "split" (default): §4.2 fast path — the prefetch pipeline emits a
+    #     (local_bank, remote_bank) SplitBank; only the remote fraction
+    #     crosses the wire and the fused split kernels consume both banks
+    #     directly. No merged gathered-weight buffer of ANY family is
+    #     ever materialized (asserted structurally on the lowering in
+    #     tests/test_multidevice.py).
+    #   "merged": legacy explicit-merge mode — prefetch lands the full
+    #     canonical (num_padded, ...) / (S, D, F/S) buffer (the §4.2
+    #     merge-copy HBM tax) and the plain merged consumers run. Kept
+    #     selectable as the paper's baseline and for families the split
+    #     path does not cover (multi-axis ZeRO-wide gathers fall back to
+    #     it automatically).
+    capacity_from: str = "local"
+    # MoE capacity derivation:
+    #   "local": capacity_for(local token count) — the PR 1 behavior.
+    #     Layouts with different shard counts legitimately drop different
+    #     tokens near the capacity edge (the diagnosed llama4 rotate
+    #     "divergence").
+    #   "global": capacity is derived per ROW from the global sequence
+    #     length, and capacity competition is restricted to the row — the
+    #     drop set becomes a function of the row alone, so DWDP ranks
+    #     drop identical tokens across any batch-sharding mesh reshape
+    #     (batch determinism for serving; see execution._moe_apply).
+
+    @property
+    def moe_ffn(self) -> str:
+        """Deprecated PR 1 alias for ``weight_layout`` (MoE was the only
+        split family then); reads forward to the generalized flag."""
+        return self.weight_layout
 
     @property
     def batch_shards(self) -> int:
@@ -134,10 +169,22 @@ def make_execution_plan(
     capacity_factor: float = 1.25,
     block_causal: bool = False,
     decode_attn: str = "gather",
-    moe_ffn: str = "merged",
+    weight_layout: Optional[str] = None,
+    capacity_from: str = "local",
+    moe_ffn: Optional[str] = None,
 ) -> ExecutionPlan:
     assert mode in MODES and prefetch in PREFETCH_MODES
-    assert moe_ffn in MOE_FFN_MODES
+    if moe_ffn is not None and weight_layout is not None and moe_ffn != weight_layout:
+        raise ValueError(
+            f"conflicting weight_layout={weight_layout!r} and deprecated "
+            f"moe_ffn={moe_ffn!r} — pass only weight_layout"
+        )
+    if weight_layout is None:
+        # moe_ffn is the deprecated PR 1 spelling; honor it when the new
+        # flag is not given, else default to the split fast path.
+        weight_layout = moe_ffn if moe_ffn is not None else "split"
+    assert weight_layout in WEIGHT_LAYOUTS
+    assert capacity_from in CAPACITY_FROM
     batch_axes, seq_axes = plan_activation_sharding(
         model.cfg, shape, mesh_sizes
     )
@@ -154,7 +201,8 @@ def make_execution_plan(
         seq_len=shape.seq_len,
         block_causal=block_causal and not seq_axes,
         decode_attn=decode_attn,
-        moe_ffn=moe_ffn,
+        weight_layout=weight_layout,
+        capacity_from=capacity_from,
     )
 
 

@@ -13,9 +13,13 @@ the backend — interpret mode off TPU, Mosaic on TPU) and ``ref.py``
 Split-weight fast path (§4.2, end to end)
 -----------------------------------------
 
-``ExecutionPlan.moe_ffn = "split"`` routes the DWDP-gather MoE layers
-through this package's fused ``split_grouped_swiglu`` kernel instead of
-the merged ``grouped_ffn`` path:
+``ExecutionPlan.weight_layout = "split"`` (the engine default; the PR 1
+spelling ``moe_ffn`` survives as a deprecated alias) makes the
+``(local_bank, remote_bank)`` SplitBank the canonical gathered-weight
+representation for EVERY DWDP-prefetched family: MoE expert banks route
+through the fused ``split_grouped_swiglu`` kernel, attention QKV/O and
+dense-FFN projections through the ``split_gemm.dense`` family
+(``split_stack_gemm`` / ``split_reduce_gemm`` / ``split_dense_swiglu``):
 
 - **Remote-only gather contract**: ``prefetch.gather_remote_shards``
   returns the ``(local_bank, remote_bank)`` pair for all three prefetch
@@ -32,19 +36,23 @@ the merged ``grouped_ffn`` path:
   capacities stream.
 - **Memory**: the prefetched window shrinks from the full canonical
   ``num_padded`` bank to the ``(G'-1)/G'`` remote fraction, and the
-  merged buffer's landing write is eliminated — accounted in
-  ``core.roofline.layer_times(moe_ffn=...)`` and
+  merged buffer's landing write is eliminated — accounted per family in
+  ``core.roofline.layer_times(weight_layout=...)`` and
   ``analysis.roofline_report``; asserted structurally in
-  ``tests/test_multidevice.py`` (no full-bank tensor shape in the split
-  lowering).
-- **Training**: ``split_swiglu(impl="jnp")`` is the differentiable
-  no-merge formulation (per-bank grouped FFN, outputs concatenated) —
-  grads flow through the remote-only gather for the ZeRO-style train
-  shapes; ``pallas_call`` itself has no VJP.
-
-Remaining: an attention-weight split path (today DWDP-gathered attention
-still lands a merged per-layer buffer), and a Mosaic-native down-proj
-output-dim blocking for d_model beyond the VMEM accumulator budget.
+  ``tests/test_multidevice.py`` (no full-bank / full-stack tensor shape
+  of ANY gathered family in the split lowering).
+- **Down-proj blocking**: ``split_grouped_swiglu(block_o=...)`` blocks
+  the down projection's output dim so d_model beyond the VMEM
+  accumulator budget lowers (auto-selected; gate/up recompute only when
+  blocking engages).
+- **Training**: the ``impl="jnp"`` formulations are differentiable and
+  merge-free (per-bank compute, activations combined) — grads flow
+  through the remote-only gather for the ZeRO-style train shapes;
+  ``pallas_call`` itself has no VJP.
+- **Order fix-ups are index-only**: MoE rolls dispatch indices,
+  attention rolls projected activations back to canonical head order,
+  the dense FFN needs nothing (slice sum commutes) — weights are never
+  reordered or copied.
 """
 from __future__ import annotations
 

@@ -9,8 +9,10 @@ merged mode computes, fp8 dequant policy included).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
+from repro.kernels.split_gemm.split_gemm import _cast
 from repro.models.moe import grouped_ffn
 
 
@@ -25,12 +27,58 @@ def split_grouped_gemm_ref(
     w_local: jnp.ndarray,  # (E_l, D, F) resident experts
     w_remote: jnp.ndarray,  # (E - E_l, D, F) prefetched experts
 ) -> jnp.ndarray:
-    w = merge_banks(w_local, w_remote)
-    if w.dtype != x.dtype:  # fp8-stored weights dequantize on use
-        w = w.astype(x.dtype)
+    # fp8-stored weights dequantize on use (the one shared cast policy)
+    w = _cast(merge_banks(w_local, w_remote), x)
     return jnp.einsum(
         "ecd,edf->ecf", x, w, preferred_element_type=jnp.float32
     ).astype(x.dtype)
+
+
+def split_stack_gemm_ref(
+    x: jnp.ndarray,        # (T, D) shared activations
+    w_local: jnp.ndarray,  # (S_l, D, Fs)
+    w_remote: jnp.ndarray,  # (S - S_l, D, Fs)
+) -> jnp.ndarray:
+    """Merged-baseline column-split projection: concatenate the slice
+    banks (the copy §4.2 eliminates), then one stacked einsum."""
+    w = _cast(merge_banks(w_local, w_remote), x)
+    return jnp.einsum(
+        "td,sdf->stf", x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def split_reduce_gemm_ref(
+    x: jnp.ndarray,        # (S, T, Fs) per-slice activations
+    w_local: jnp.ndarray,  # (S_l, Fs, D)
+    w_remote: jnp.ndarray,  # (S - S_l, Fs, D)
+) -> jnp.ndarray:
+    """Merged-baseline row-split reduction: concatenate, then contract the
+    slice axis in one einsum."""
+    w = _cast(merge_banks(w_local, w_remote), x)
+    return jnp.einsum(
+        "stf,sfd->td", x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+def split_dense_swiglu_ref(
+    x: jnp.ndarray,          # (T, D)
+    wg_local: jnp.ndarray,   # (S_l, D, Fs)
+    wu_local: jnp.ndarray,
+    wd_local: jnp.ndarray,   # (S_l, Fs, D)
+    wg_remote: jnp.ndarray,  # (S - S_l, D, Fs)
+    wu_remote: jnp.ndarray,
+    wd_remote: jnp.ndarray,  # (S - S_l, Fs, D)
+) -> jnp.ndarray:
+    """Merged-baseline stacked-slice dense SwiGLU — exactly the math the
+    merged engine path (``execution._ffn_full``) runs on a gathered
+    (S, D, F/S) buffer, fp8 dequant policy included."""
+    wg = _cast(merge_banks(wg_local, wg_remote), x)
+    wu = _cast(merge_banks(wu_local, wu_remote), x)
+    wd = _cast(merge_banks(wd_local, wd_remote), x)
+    h = jax.nn.silu(jnp.einsum("td,sdf->tsf", x, wg)) * jnp.einsum(
+        "td,sdf->tsf", x, wu
+    )
+    return jnp.einsum("tsf,sfd->td", h, wd)
 
 
 def split_grouped_swiglu_ref(

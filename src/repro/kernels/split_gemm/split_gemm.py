@@ -19,13 +19,23 @@ Two kernels:
   straight into a per-(expert, token-block) fp32 output accumulator. The
   intermediate (E, C, F) hidden activation never round-trips HBM.
 
-Grid: (E, C/bc, F/bf, D/bd) with fp32 VMEM accumulator scratch; the
-reduction loop is the innermost grid dimension so the accumulator carries
-across it (standard Pallas matmul pipelining). Block sizes are
-auto-selected per dimension (largest lane-friendly divisor), so
-capacities that are not multiples of 128 — e.g. decode-scale MoE
-capacities, which ``capacity_for`` only rounds to 8 — stream correctly;
-a dimension with no aligned divisor falls back to a single block.
+Grid: (E, C/bc, F/bf, D/bd) for the single GEMM and
+(E, C/bc, D/bo, F/bf, D/bd) for the fused SwiGLU, with fp32 VMEM
+accumulator scratch; the reduction loop is the innermost grid dimension
+so the accumulator carries across it (standard Pallas matmul pipelining).
+The SwiGLU's D/bo coordinate blocks the down-projection *output* dim so
+d_model beyond the VMEM accumulator budget lowers (bo = D, i.e. a single
+output block, whenever it fits — gate/up recompute only kicks in when
+blocking does). Block sizes are auto-selected per dimension (largest
+lane-friendly divisor), so capacities that are not multiples of 128 —
+e.g. decode-scale MoE capacities, which ``capacity_for`` only rounds to
+8 — stream correctly; a dimension with no aligned divisor falls back to
+a single block.
+
+The dense (non-grouped) siblings — ``split_stack_gemm``,
+``split_reduce_gemm``, ``split_dense_swiglu`` in ``dense.py`` — extend
+the same predicated two-bank streaming to attention QKV/O and dense-FFN
+projections for ``weight_layout="split"``.
 """
 from __future__ import annotations
 
@@ -166,10 +176,10 @@ def _swiglu_kernel(
     acc_g, acc_u, acc_y,
 ):
     e = pl.program_id(0)
-    fi = pl.program_id(2)
-    di = pl.program_id(3)
-    last_f = fi == pl.num_programs(2) - 1
-    last_d = di == pl.num_programs(3) - 1
+    fi = pl.program_id(3)
+    di = pl.program_id(4)
+    last_f = fi == pl.num_programs(3) - 1
+    last_d = di == pl.num_programs(4) - 1
     is_local = e < n_local
 
     @pl.when(jnp.logical_and(fi == 0, di == 0))
@@ -222,9 +232,24 @@ def _swiglu_kernel(
         o_ref[0] = acc_y[...].astype(o_ref.dtype)
 
 
+# fp32 scratch budget for the fused SwiGLU accumulators. When the
+# unblocked (bc, D) down accumulator (+ gate/up tiles) would exceed it,
+# the down projection's output dim is blocked automatically.
+_ACC_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def _auto_block_o(d: int, bc: int, bf: int) -> int:
+    """Largest output block keeping the fp32 scratch (gate + up + y) and
+    the streamed down tile inside ``_ACC_BUDGET_BYTES``."""
+    fixed = 2 * bc * bf * 4                 # gate + up accumulators
+    avail = max(_ACC_BUDGET_BYTES - fixed, 4 * (bc + bf) * 128)
+    limit = max(avail // (4 * (bc + bf)), 128)  # y acc + down tile per col
+    return _pick_block(d, int(limit))
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("block_c", "block_f", "block_d", "interpret"),
+    static_argnames=("block_c", "block_f", "block_d", "block_o", "interpret"),
 )
 def split_grouped_swiglu(
     x: jax.Array,          # (E, C, D)
@@ -238,14 +263,19 @@ def split_grouped_swiglu(
     block_c: int = 128,
     block_f: int = 256,
     block_d: int = 512,
+    block_o: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused per-expert SwiGLU over split weight banks: (E, C, D) -> (E, C, D).
 
     Experts [0, E_l) read the local bank, [E_l, E) the remote bank. The
-    down-projection accumulates into a (bc, D) fp32 scratch — full model
-    width per token block, which fits VMEM for the target d_model range;
-    output-dim blocking is a follow-up if a config outgrows it.
+    down-projection accumulates into a (bc, block_o) fp32 scratch.
+    ``block_o`` blocks the down projection's *output* dim so d_model
+    beyond the VMEM accumulator budget still lowers: with n_o = D/block_o
+    output blocks the gate/up stages are recomputed once per block (the
+    standard recompute-vs-residency trade), and ``block_o=None``
+    auto-selects — the full D (today's single-pass schedule) whenever it
+    fits ``_ACC_BUDGET_BYTES``, the largest fitting divisor otherwise.
     """
     e, c, d = x.shape
     e_l, _, f = wg_local.shape
@@ -260,26 +290,27 @@ def split_grouped_swiglu(
     bc = _pick_block(c, block_c)
     bf = _pick_block(f, block_f)
     bd = _pick_block(d, block_d)
+    bo = _auto_block_o(d, bc, bf) if block_o is None else _pick_block(d, block_o)
 
-    grid = (e, c // bc, f // bf, d // bd)
+    grid = (e, c // bc, d // bo, f // bf, d // bd)
 
-    def x_map(ei, ci, fi, di):
+    def x_map(ei, ci, oi, fi, di):
         return (ei, ci, di)
 
-    def up_l_map(ei, ci, fi, di):
+    def up_l_map(ei, ci, oi, fi, di):
         return (jnp.clip(ei, 0, n_wl - 1), di, fi)
 
-    def up_r_map(ei, ci, fi, di):
+    def up_r_map(ei, ci, oi, fi, di):
         return (jnp.clip(ei - e_l, 0, n_wr - 1), di, fi)
 
-    def down_l_map(ei, ci, fi, di):
-        return (jnp.clip(ei, 0, n_wl - 1), fi, 0)
+    def down_l_map(ei, ci, oi, fi, di):
+        return (jnp.clip(ei, 0, n_wl - 1), fi, oi)
 
-    def down_r_map(ei, ci, fi, di):
-        return (jnp.clip(ei - e_l, 0, n_wr - 1), fi, 0)
+    def down_r_map(ei, ci, oi, fi, di):
+        return (jnp.clip(ei - e_l, 0, n_wr - 1), fi, oi)
 
-    def o_map(ei, ci, fi, di):
-        return (ei, ci, 0)
+    def o_map(ei, ci, oi, fi, di):
+        return (ei, ci, oi)
 
     return pl.pallas_call(
         functools.partial(_swiglu_kernel, e_l),
@@ -288,17 +319,17 @@ def split_grouped_swiglu(
             pl.BlockSpec((1, bc, bd), x_map),
             pl.BlockSpec((1, bd, bf), up_l_map),
             pl.BlockSpec((1, bd, bf), up_l_map),
-            pl.BlockSpec((1, bf, d), down_l_map),
+            pl.BlockSpec((1, bf, bo), down_l_map),
             pl.BlockSpec((1, bd, bf), up_r_map),
             pl.BlockSpec((1, bd, bf), up_r_map),
-            pl.BlockSpec((1, bf, d), down_r_map),
+            pl.BlockSpec((1, bf, bo), down_r_map),
         ],
-        out_specs=pl.BlockSpec((1, bc, d), o_map),
+        out_specs=pl.BlockSpec((1, bc, bo), o_map),
         out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
         scratch_shapes=[
             pltpu.VMEM((bc, bf), jnp.float32),
             pltpu.VMEM((bc, bf), jnp.float32),
-            pltpu.VMEM((bc, d), jnp.float32),
+            pltpu.VMEM((bc, bo), jnp.float32),
         ],
         interpret=resolve_interpret(interpret),
     )(x, wg_local, wu_local, wd_local, wg_remote, wu_remote, wd_remote)

@@ -31,6 +31,8 @@ def build_engine(
     max_batch: int = 4,
     ctx_mode: str = "dwdp",
     prefetch: str = "allgather",
+    weight_layout: str | None = None,
+    capacity_from: str = "local",
     dtype=jnp.float32,
     seed: int = 0,
 ):
@@ -42,10 +44,12 @@ def build_engine(
     ctx = ContextServer(
         model, mesh, sizes, mode=ctx_mode, prefill_len=prefill_len,
         cache_len=cache_len, prefetch=prefetch,
+        weight_layout=weight_layout, capacity_from=capacity_from,
     )
     gen = GenerationServer(
         model, mesh, sizes, mode="dep", max_batch=max_batch,
         cache_len=cache_len,
+        weight_layout=weight_layout, capacity_from=capacity_from,
     )
     return DisaggregatedEngine(params, ctx, gen), model
 
@@ -58,6 +62,14 @@ def main(argv=None):
     ap.add_argument("--output-len", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--ctx-mode", default="dwdp")
+    ap.add_argument("--weight-layout", default="split",
+                    choices=["merged", "split"],
+                    help="gathered-weight representation for every DWDP "
+                         "family (experts, attention, dense FFN)")
+    ap.add_argument("--capacity-from", default="local",
+                    choices=["local", "global"],
+                    help="MoE capacity derivation: local shard count or "
+                         "layout-invariant per-row global shape")
     ap.add_argument("--full", action="store_true",
                     help="use the full config (default: reduced smoke)")
     args = ap.parse_args(argv)
@@ -70,6 +82,8 @@ def main(argv=None):
         cache_len=args.prefill_len + args.output_len,
         max_batch=args.max_batch,
         ctx_mode=args.ctx_mode,
+        weight_layout=args.weight_layout,
+        capacity_from=args.capacity_from,
     )
     rng = np.random.default_rng(0)
     for i in range(args.requests):

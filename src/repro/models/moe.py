@@ -59,6 +59,44 @@ def route_topk(
     return Dispatch(flat_slot, weight, keep, gates, top_idx)
 
 
+def route_topk_rows(
+    x: jax.Array, w_router: jax.Array, top_k: int, capacity_per_row: int,
+    num_real: int | None = None,
+) -> Dispatch:
+    """Row-independent routing for layout-invariant drops
+    (``ExecutionPlan.capacity_from == "global"``).
+
+    x: (R, S, D). Each row competes only with itself for its own
+    ``capacity_per_row`` slots per expert, so whether a token is dropped
+    is a function of its row alone — under batch sharding rows never
+    split across ranks, hence every DWDP layout of the same global batch
+    drops the *identical* token set (1-device included). This is the
+    "global" capacity derivation: ``capacity_per_row`` comes from the
+    global per-row token count, never from the local shard size.
+
+    Returns a Dispatch over the flattened (R*S) tokens whose
+    ``flat_slot`` indexes an ``(E, R * capacity_per_row)`` slot grid
+    (row-major within each expert), directly consumable by
+    ``dispatch_tokens(..., capacity=R * capacity_per_row)``.
+    """
+    r, s, _ = x.shape
+    e = w_router.shape[1]
+    cap = capacity_per_row
+    d = jax.vmap(
+        lambda xb: route_topk(xb, w_router, top_k, cap, num_real=num_real)
+    )(x)
+    exp = d.flat_slot // cap                       # (R, S*k)
+    pos = d.flat_slot - exp * cap
+    flat = exp * (r * cap) + jnp.arange(r)[:, None] * cap + pos
+    return Dispatch(
+        flat.reshape(-1),
+        d.weight.reshape(-1),
+        d.keep.reshape(-1),
+        d.gates.reshape(r * s, e),
+        d.top_experts.reshape(r * s, top_k),
+    )
+
+
 def dispatch_tokens(x: jax.Array, d: Dispatch, num_experts: int, capacity: int):
     """Scatter tokens into (E, C, D) expert batches."""
     T, D = x.shape

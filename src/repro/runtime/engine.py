@@ -41,12 +41,15 @@ class ContextServer:
     """Prefill worker: returns (first_token, captured decode state)."""
 
     def __init__(self, model: Model, mesh, mesh_sizes, *, mode="dwdp",
-                 prefill_len: int, cache_len: int, prefetch="allgather"):
+                 prefill_len: int, cache_len: int, prefetch="allgather",
+                 weight_layout: Optional[str] = None,
+                 capacity_from: str = "local"):
         self.model = model
         self.prefill_len = prefill_len
         shape = InputShape("ctx", prefill_len, 1, "prefill")
         self.xp = make_execution_plan(
-            model, shape, mesh_sizes, mode=mode, prefetch=prefetch
+            model, shape, mesh_sizes, mode=mode, prefetch=prefetch,
+            weight_layout=weight_layout, capacity_from=capacity_from,
         )
         self.step = execution.make_step_fn(
             model, self.xp, mesh, capture_len=cache_len
@@ -70,12 +73,17 @@ class GenerationServer:
     """Slot-based continuous-batching decode worker."""
 
     def __init__(self, model: Model, mesh, mesh_sizes, *, mode="dep",
-                 max_batch: int, cache_len: int):
+                 max_batch: int, cache_len: int,
+                 weight_layout: Optional[str] = None,
+                 capacity_from: str = "local"):
         self.model = model
         self.max_batch = max_batch
         self.cache_len = cache_len
         shape = InputShape("gen", cache_len, max_batch, "decode")
-        self.xp = make_execution_plan(model, shape, mesh_sizes, mode=mode)
+        self.xp = make_execution_plan(
+            model, shape, mesh_sizes, mode=mode,
+            weight_layout=weight_layout, capacity_from=capacity_from,
+        )
         self.step = execution.make_step_fn(model, self.xp, mesh)
         self.state = init_decode_state(model, max_batch, cache_len)
         # inactive slots: pos points at an empty cache; emitted tokens junk

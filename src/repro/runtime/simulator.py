@@ -28,6 +28,13 @@ class SimConfig:
     ctx_gpus: int = 4
     gen_gpus: int = 8
     ctx_mode: str = "dwdp"              # dwdp | dep
+    weight_layout: str = "split"        # gathered-weight representation of
+                                        # the DWDP context phase (engine
+                                        # default): "split" lands only the
+                                        # remote bank, "merged" pays the
+                                        # §4.2 merge-copy HBM write
+    attn_gathered: bool = False         # model DWDP-gathered attention
+                                        # (escalated sharding) land-bytes
     gen_batch: int = 64
     isl_max: int = 8192
     isl_ratio: float = 0.8              # lengths U[ratio*max, max]
@@ -53,11 +60,16 @@ class ClusterSimulator:
         moe_layer = sc.cfg.moe.first_dense if sc.cfg.moe else 0
         lt = roofline.layer_times(
             sc.cfg, tokens=tokens, group=sc.ctx_gpus, hw=sc.hw,
-            layer=moe_layer,
+            layer=moe_layer, weight_layout=sc.weight_layout,
+            attn_gathered=sc.attn_gathered,
         )
         n_layers = sc.cfg.num_layers
         if sc.ctx_mode == "dwdp":
-            per_layer = lt.t_dwdp
+            # the gathered-bank landing write is HBM work on the DWDP
+            # critical path (DEP lands nothing), so the modeled frontier
+            # moves with the weight_layout: split's smaller landing shows
+            # up as context-phase throughput.
+            per_layer = max(lt.compute + lt.land_time, lt.prefetch)
         else:
             # DEP pays all2all + imbalance-induced sync (paper Fig. 1)
             cv = _cv(batch_isls)

@@ -8,9 +8,16 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention.ops import flash_attention, flash_attention_ref
 from repro.kernels.split_gemm.ops import (
+    split_dense_ffn,
+    split_dense_ffn_jnp,
+    split_dense_swiglu_ref,
     split_gemm,
     split_grouped_gemm_ref,
     split_grouped_swiglu_ref,
+    split_reduce_gemm_ref,
+    split_reduce_matmul,
+    split_stack_gemm_ref,
+    split_stack_matmul,
     split_swiglu,
     split_swiglu_jnp,
 )
@@ -164,6 +171,179 @@ def test_split_swiglu_grad_matches_merged():
 
     def loss_merged(args):
         return jnp.sum(jnp.sin(split_grouped_swiglu_ref(*args)))
+
+    g_split = jax.grad(loss_split)(ops)
+    g_merged = jax.grad(loss_merged)(ops)
+    for gs, gm in zip(g_split, g_merged):
+        np.testing.assert_allclose(
+            np.asarray(gs), np.asarray(gm), atol=2e-5, rtol=2e-5
+        )
+
+
+def test_split_swiglu_down_proj_output_blocking():
+    """block_o blocks the down-projection output dim (the VMEM-budget
+    lowering path): every blocking choice — including a non-dividing one
+    that falls back — matches the unblocked result and the merged
+    oracle."""
+    ops = _swiglu_operands(4, 2, 64, 256, 128, jnp.float32)
+    ref = split_grouped_swiglu_ref(*ops)
+    for bo in (None, 64, 128, 100, 256):
+        got = split_swiglu(
+            *ops, block_c=64, block_f=64, block_d=128, block_o=bo
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref), atol=2e-5,
+            err_msg=f"block_o={bo}",
+        )
+
+
+# --------------------------------------------------------------------------
+# split dense matmul family (attention QKV/O, dense FFN slices)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "s,s_l,t,d,f",
+    [
+        (4, 1, 128, 64, 32),    # the attention-shard shape (1 resident)
+        (8, 3, 64, 128, 64),
+        (4, 4, 64, 48, 16),     # all-local
+        (3, 0, 64, 48, 16),     # all-remote
+        (5, 2, 7, 64, 128),     # decode-scale token count
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_split_stack_gemm_shapes(s, s_l, t, d, f, dtype):
+    ks = jax.random.split(jax.random.key(s * 13 + s_l), 2)
+    x = (jax.random.normal(ks[0], (t, d)) * 0.1).astype(dtype)
+    w = (jax.random.normal(ks[1], (s, d, f)) * 0.1).astype(dtype)
+    got = split_stack_matmul(
+        x, w[:s_l], w[s_l:], block_c=64, block_d=64, impl="pallas"
+    )
+    ref = split_stack_gemm_ref(x, w[:s_l], w[s_l:])
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+    jnp_got = split_stack_matmul(x, w[:s_l], w[s_l:], impl="jnp")
+    np.testing.assert_allclose(
+        np.asarray(jnp_got, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize(
+    "s,s_l,t,d,f",
+    [
+        (4, 1, 128, 64, 32),
+        (8, 3, 64, 128, 64),
+        (4, 4, 64, 48, 16),
+        (3, 0, 64, 48, 16),
+        (5, 2, 7, 64, 128),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_split_reduce_gemm_shapes(s, s_l, t, d, f, dtype):
+    ks = jax.random.split(jax.random.key(s * 17 + s_l), 2)
+    x = (jax.random.normal(ks[0], (s, t, f)) * 0.1).astype(dtype)
+    w = (jax.random.normal(ks[1], (s, f, d)) * 0.1).astype(dtype)
+    got = split_reduce_matmul(
+        x, w[:s_l], w[s_l:], block_c=64, block_k=64, impl="pallas"
+    )
+    ref = split_reduce_gemm_ref(x, w[:s_l], w[s_l:])
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+    jnp_got = split_reduce_matmul(x, w[:s_l], w[s_l:], impl="jnp")
+    np.testing.assert_allclose(
+        np.asarray(jnp_got, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def _dense_swiglu_operands(s, s_l, t, d, f, dtype, wdtype=None, key=0):
+    wdtype = wdtype or dtype
+    ks = jax.random.split(jax.random.key(key + s * 11 + s_l * 3 + t), 7)
+    x = (jax.random.normal(ks[0], (t, d)) * 0.1).astype(dtype)
+    mk = lambda k, sh: (jax.random.normal(k, sh) * 0.1).astype(wdtype)
+    return (
+        x,
+        mk(ks[1], (s_l, d, f)), mk(ks[2], (s_l, d, f)), mk(ks[3], (s_l, f, d)),
+        mk(ks[4], (s - s_l, d, f)), mk(ks[5], (s - s_l, d, f)),
+        mk(ks[6], (s - s_l, f, d)),
+    )
+
+
+@pytest.mark.parametrize(
+    "s,s_l,t,d,f",
+    [
+        (4, 1, 64, 48, 32),     # the dense-FFN shard shape
+        (2, 0, 32, 32, 40),     # all-remote
+        (3, 3, 24, 64, 16),     # all-local
+        (8, 5, 7, 64, 32),      # decode-scale token count, uneven split
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_split_dense_swiglu_shapes(s, s_l, t, d, f, dtype):
+    ops = _dense_swiglu_operands(s, s_l, t, d, f, dtype)
+    got = split_dense_ffn(
+        *ops, block_c=32, block_f=16, block_d=32, impl="pallas"
+    )
+    ref = split_dense_swiglu_ref(*ops)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+    jnp_got = split_dense_ffn(*ops, impl="jnp")
+    np.testing.assert_allclose(
+        np.asarray(jnp_got, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    s=st.integers(1, 5),
+    split=st.floats(0.0, 1.0),
+    t=st.sampled_from([8, 24, 64]),
+)
+def test_split_dense_swiglu_property(s, split, t):
+    """Property: the dense split FFN is independent of WHERE the
+    local/remote split falls AND of slice order — which is exactly why
+    the rotated remote bank needs no canonicalization on this path."""
+    d, f = 64, 32
+    s_l = int(round(split * s))
+    ks = jax.random.split(jax.random.key(s * 7 + s_l + t), 4)
+    x = jax.random.normal(ks[0], (t, d)) * 0.1
+    wg = jax.random.normal(ks[1], (s, d, f)) * 0.1
+    wu = jax.random.normal(ks[2], (s, d, f)) * 0.1
+    wd = jax.random.normal(ks[3], (s, f, d)) * 0.1
+    got = split_dense_ffn(
+        x, wg[:s_l], wu[:s_l], wd[:s_l], wg[s_l:], wu[s_l:], wd[s_l:]
+    )
+    ref = split_dense_swiglu_ref(
+        x, wg, wu, wd, wg[:0], wu[:0], wd[:0]
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+    # slice order independence (the rotated-bank property)
+    perm = np.random.RandomState(s).permutation(s)
+    got_p = split_dense_ffn(
+        x, wg[perm][:s_l], wu[perm][:s_l], wd[perm][:s_l],
+        wg[perm][s_l:], wu[perm][s_l:], wd[perm][s_l:]
+    )
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(ref), atol=2e-5)
+
+
+def test_split_dense_ffn_grad_matches_merged():
+    """Grad of the dense no-merge formulation w.r.t. both banks and the
+    tokens equals the merged baseline's — the property that lets the
+    ZeRO-style train gathers ride the split dense path."""
+    ops = _dense_swiglu_operands(4, 2, 32, 48, 32, jnp.float32)
+
+    def loss_split(args):
+        return jnp.sum(jnp.sin(split_dense_ffn_jnp(*args)))
+
+    def loss_merged(args):
+        return jnp.sum(jnp.sin(split_dense_swiglu_ref(*args)))
 
     g_split = jax.grad(loss_split)(ops)
     g_merged = jax.grad(loss_merged)(ops)
