@@ -13,7 +13,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.analysis.roofline_report import HBM_BW, PEAK_FLOPS
+from repro.analysis.roofline_report import HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.core import roofline
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.split_gemm.ops import (
     split_gemm,
@@ -22,6 +23,8 @@ from repro.kernels.split_gemm.ops import (
     split_stack_gemm_ref,
     split_stack_matmul,
     split_swiglu,
+    split_swiglu_demand,
+    split_swiglu_demand_jnp,
     split_swiglu_jnp,
 )
 
@@ -30,6 +33,9 @@ BENCH_JSON = os.path.join(
 )
 BENCH_ATTN_JSON = os.path.join(
     os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_split_attn.json"
+)
+BENCH_DEMAND_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_demand_moe.json"
 )
 
 
@@ -140,6 +146,86 @@ def bench_split_moe(out_path: str = BENCH_JSON) -> list[dict]:
             "mxu_bound_us": round(flops / PEAK_FLOPS * 1e6, 2),
             "hbm_bound_merged_us": round(byts_m / HBM_BW * 1e6, 2),
             "hbm_bound_split_us": round(byts_s / HBM_BW * 1e6, 2),
+        })
+    with open(out_path, "w") as fh:
+        json.dump(rows, fh, indent=2)
+    return rows
+
+
+def bench_demand_moe(out_path: str = BENCH_DEMAND_JSON) -> list[dict]:
+    """On-demand vs all-fetch expert gather micro-bench at decode shapes
+    (the route-before-gather win).
+
+    For each (E, G', top_k, B) decode shape the all-fetch split path
+    computes the full (E, C, D) dispatch over (resident, full-remote)
+    banks, while the demand path computes the compact
+    (local + (G'-1)*budget, C, D) dispatch over (resident, fetched)
+    banks — identical jnp math under jit, so the wall-time delta
+    isolates the avoided dead-expert compute + dispatch width; the
+    demand kernel's interpret-mode time is reported alongside for
+    correctness tracking, not raced.
+
+    wire bytes are the analytic per-rank payload each path ships: the
+    full remote bank vs the budget-padded demand rows + index round
+    (exactly what the lowered programs move). ``expected_distinct`` is
+    the §3-style closed-form coverage the auto-budget doubles. Rewrites
+    BENCH_demand_moe.json; committed per PR so the perf trajectory lives
+    in git history.
+    """
+    from repro.models.moe import capacity_for
+
+    rows = []
+    # (experts E, subgroup G', top_k, decode batch B, d_model, d_ff):
+    # R1/grok-like ratios at CPU-benchable dims — the decode regime where
+    # B * k activates a small fraction of the remote bank (first row is
+    # the acceptance shape's E=256, G'=4, k=8, B=8)
+    for (e, g, k, b, d, f) in [
+        (256, 4, 8, 8, 256, 128),
+        (128, 4, 2, 4, 256, 256),
+        (128, 8, 2, 4, 512, 128),
+    ]:
+        local = e // g
+        # the engine's auto-budget rule, from the one shared closed form
+        budget = roofline.demand_budget_rows(b * k, e, local)
+        n_fetch = (g - 1) * budget
+        cap = capacity_for(b, e, k, 1.25)
+        ks = jax.random.split(jax.random.key(e + g + b), 7)
+        mk = lambda kk, sh: jax.random.normal(kk, sh, jnp.float32) * 0.1
+        x_full = jax.random.normal(ks[0], (e, cap, d), jnp.float32) * 0.1
+        lo = (mk(ks[1], (local, d, f)), mk(ks[2], (local, d, f)),
+              mk(ks[3], (local, f, d)))
+        re = (mk(ks[4], (e - local, d, f)), mk(ks[5], (e - local, d, f)),
+              mk(ks[6], (e - local, f, d)))
+        fe = tuple(w[:n_fetch] for w in re)
+        x_demand = x_full[: local + n_fetch]
+        valid = jnp.ones((n_fetch,), bool)
+
+        full_fn = jax.jit(split_swiglu_jnp)
+        demand_fn = jax.jit(split_swiglu_demand_jnp)
+        t_full = _time(full_fn, x_full, *lo, *re, reps=10) * 1e6
+        t_demand = _time(demand_fn, x_demand, *lo, *fe, valid, reps=10) * 1e6
+        t_pallas = _time(split_swiglu_demand, x_demand, *lo, *fe, valid) * 1e6
+
+        per_expert = 3 * d * f * 4  # gate+up+down, f32
+        wire_full = (g - 1) * local * per_expert
+        wire_demand = roofline.demand_prefetch_bytes(
+            b, k, e, g, per_expert, budget=budget
+        )
+        hit = roofline.expected_distinct_experts(b * k, e)
+        rows.append({
+            "kernel": "demand_moe",
+            "shape": f"E{e} G'{g} k{k} B{b} D{d} F{f}",
+            "budget_per_peer": budget,
+            "expected_distinct": round(hit, 2),
+            "wire_bytes_full": wire_full,
+            "wire_bytes_demand": wire_demand,
+            "wire_ratio": round(wire_demand / wire_full, 4),
+            "full_us": round(t_full, 1),
+            "demand_us": round(t_demand, 1),
+            "demand_speedup": round(t_full / t_demand, 3),
+            "pallas_interpret_us": round(t_pallas, 1),
+            "wire_bound_full_us": round(wire_full / LINK_BW * 1e6, 2),
+            "wire_bound_demand_us": round(wire_demand / LINK_BW * 1e6, 2),
         })
     with open(out_path, "w") as fh:
         json.dump(rows, fh, indent=2)

@@ -25,6 +25,7 @@ def _all_benchmarks():
         "kernels": kernels_bench.bench_kernels,
         "split_moe": kernels_bench.bench_split_moe,
         "split_attn": kernels_bench.bench_split_attn,
+        "demand_moe": kernels_bench.bench_demand_moe,
         "dryrun_roofline": roofline_table.bench_dryrun_roofline,
     }
 

@@ -46,6 +46,24 @@ def main():
     print("  " + "  ".join(f"C={c}:{100*p:.2f}%" for c, p in pr.items()
                            if p > 1e-4))
 
+    if cfg.moe:
+        # on-demand expert fetch: decode-batch sweep of the expected-
+        # coverage wire bytes vs the full remote gather (route-before-
+        # gather win; expert_fetch="demand")
+        e, k = cfg.moe.num_experts, cfg.moe.top_k
+        pe = 3 * cfg.d_model * cfg.moe.d_ff  # NVFP4-ish bytes/expert
+        sub = max(1, args.group // pl.redundancy)
+        full = e * pe * (sub - 1) / sub
+        print("\non-demand expert fetch (decode, wire MB/layer/rank):")
+        print("  batch   E[distinct]   demand      full    ratio")
+        for b in (1, 4, 8, 16, 64):
+            hit = roofline.expected_distinct_experts(b * k, e)
+            dem = roofline.demand_prefetch_bytes(
+                b, k, e, args.group, pe, redundancy=pl.redundancy
+            )
+            print(f"  {b:>5}   {hit:>11.1f}   {dem/1e6:>7.1f}"
+                  f"   {full/1e6:>7.1f}   {dem/full:>6.2f}")
+
 
 if __name__ == "__main__":
     main()

@@ -3,8 +3,37 @@ a DWDP context server prefills and hands KV to a continuous-batching
 generation server.
 
     PYTHONPATH=src python examples/serve_demo.py --arch glm4-9b
+
+Multi-rank on CPU (to see the DWDP gathers in the per-request
+gathered-weight counters):
+
+    PYTHONPATH=src python examples/serve_demo.py --arch glm4-9b \
+        --fake-devices 8 --mesh 2,4 --gen-mode dwdp --expert-fetch demand
+
+Note the reduced CPU variants clamp MoE to 4 experts, so decode coverage
+is full and the demand ratio reads 1.0 (the eligibility gate correctly
+keeps the all-fetch gather); the savings appear at real expert counts —
+see BENCH_demand_moe.json and the roofline sweep in
+examples/dwdp_analysis.py for the E=256 decode figures.
 """
 import argparse
+import os
+import sys
+
+# must land before jax initializes (transitively via the repro imports);
+# accept both "--fake-devices N" and "--fake-devices=N"
+for _i, _a in enumerate(sys.argv):
+    if _a == "--fake-devices" and _i + 1 < len(sys.argv):
+        _n = sys.argv[_i + 1]
+    elif _a.startswith("--fake-devices="):
+        _n = _a.split("=", 1)[1]
+    else:
+        continue
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_n}"
+    )
+    break
 
 import numpy as np
 
@@ -21,20 +50,36 @@ def main():
     ap.add_argument("--output-len", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--ctx-mode", default="dwdp", choices=["dwdp", "dep"])
+    ap.add_argument("--gen-mode", default="dep", choices=["dep", "dwdp"])
     ap.add_argument("--weight-layout", default="split",
                     choices=["merged", "split"],
                     help="gathered-weight representation (split = the "
                          "§4.2 fast path, the engine default)")
+    ap.add_argument("--expert-fetch", default="all",
+                    choices=["all", "demand"],
+                    help="route-before-gather demand fetch of only the "
+                         "activated experts (vs every remote expert)")
+    ap.add_argument("--demand-budget", type=int, default=0,
+                    help="per-peer demand-fetch row budget (0 = auto)")
+    ap.add_argument("--mesh", default="1,1",
+                    help="data,model mesh shape (e.g. 2,4)")
+    ap.add_argument("--fake-devices", type=int, default=0,
+                    help="force N fake host devices (CPU multi-rank demo)")
     args = ap.parse_args()
+    mesh_shape = tuple(int(x) for x in args.mesh.split(","))
 
     cfg = reduced_variant(get_arch(args.arch))
     engine, model = build_engine(
         cfg,
+        mesh_shape=mesh_shape,
         prefill_len=args.prefill_len,
         cache_len=args.prefill_len + args.output_len + 4,
         max_batch=args.max_batch,
         ctx_mode=args.ctx_mode,
+        gen_mode=args.gen_mode,
         weight_layout=args.weight_layout,
+        expert_fetch=args.expert_fetch,
+        demand_budget=args.demand_budget,
     )
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -46,7 +91,16 @@ def main():
         ))
     steps = args.output_len * (args.requests // args.max_batch + 2)
     metrics = engine.run(steps)
-    print("summary:", metrics.summary(horizon=float(steps)))
+    summary = metrics.summary(horizon=float(steps))
+    print("summary:", summary)
+    if "gather_fetch_ratio" in summary:
+        saved = 1.0 - summary["gather_fetch_ratio"]
+        print(
+            f"gathered weights: {summary['gathered_mb_fetched']} MB shipped"
+            f" vs {summary['gathered_mb_full']} MB full-remote"
+            f" ({100 * saved:.1f}% saved by expert_fetch="
+            f"{args.expert_fetch!r})"
+        )
     for rid in sorted(engine.outputs)[:4]:
         toks = engine.outputs[rid]
         print(f"req {rid}: {toks}")

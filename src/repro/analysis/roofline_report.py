@@ -107,13 +107,25 @@ def analytic_residency_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2,
     # A split-active family buffers only the remote bank — the resident
     # shard is consumed in place by the split kernels, shrinking the
     # window by 1/G' (experts) / 1/shards (attention, dense FFN).
-    from repro.core.execution import _qgather_ok, split_bank_active
+    from repro.core.execution import (
+        _qgather_ok,
+        demand_fetch_active,
+        resolve_demand_budget,
+        split_bank_active,
+    )
 
     layer_sets = [0.0]
     if cfg.moe is not None and geom.moe_exec == "gather" and geom.moe_placement:
         pl = geom.moe_placement
         window_experts = pl.num_padded
-        if split_bank_active(geom, xp, "moe/experts"):
+        if demand_fetch_active(cfg, geom, xp):
+            # route-before-gather: the layer holds only the budget-padded
+            # fetched rows (the resident shard is consumed in place)
+            budget = resolve_demand_budget(cfg, geom, xp)
+            window_experts = (pl.subgroup_size - 1) * min(
+                budget, pl.local_count
+            )
+        elif split_bank_active(geom, xp, "moe/experts"):
             # gate on the engine's own predicate (not the knob alone) so
             # the report never claims a saving for plans that fall back
             # to the merged path
@@ -196,7 +208,12 @@ def analytic_hbm_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2) -> float:
         # §4.2 merge copy — resident shard re-written too); a split-active
         # family lands+reads only its remote bank, the resident shard is
         # read in place (already counted in `resident`).
-        from repro.core.execution import _qgather_ok, split_bank_active
+        from repro.core.execution import (
+            _qgather_ok,
+            demand_fetch_active,
+            resolve_demand_budget,
+            split_bank_active,
+        )
 
         _ATTN = ("global_attn", "local_attn")
 
@@ -258,7 +275,18 @@ def analytic_hbm_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2) -> float:
             per_layer = 3 * cfg.d_model * cfg.moe.d_ff
             bank_landed = n_moe * pl.num_padded * per_layer
             if geom.moe_exec == "gather" and pl.subgroup_size > 1:
-                if split_bank_active(geom, xp, "moe/experts"):
+                if demand_fetch_active(cfg, geom, xp):
+                    # demand lands + reads back only the budget-padded
+                    # fetched rows — strictly below the full remote bank
+                    # whenever the budget is (rows * top_k under-full)
+                    budget = resolve_demand_budget(cfg, geom, xp)
+                    fetch_rows = (pl.subgroup_size - 1) * min(
+                        budget, pl.local_count
+                    )
+                    gathered_extra += (
+                        2.0 * n_moe * fetch_rows * per_layer * dtype_bytes
+                    )
+                elif split_bank_active(geom, xp, "moe/experts"):
                     gathered_extra += (
                         2.0 * bank_landed * dtype_bytes * pl.remote_fraction
                     )

@@ -26,6 +26,26 @@ in *what moves*:
 - **replicated**: nothing moves (pure DP reference; only meaningful when
   the weights fit replicated).
 
+On-demand expert fetch (``ExecutionPlan.expert_fetch == "demand"`` — the
+paper's "fetching missing experts on demand") inverts the engine's layer
+structure for eligible MoE layers: **route-before-gather**. The
+layer-ahead double buffering assumes the gather operand is known before
+the layer runs — true for whole weight families, false for the
+demand-selected expert subset, which only exists once the current
+layer's routing has run. So for demand-active layers ``gather_set``
+excludes the expert bank from the prefetch pipeline entirely (every
+other family keeps its layer-ahead double buffering), and
+``_moe_apply`` runs the inverted order: route (router weights are
+local — a cheap (T, D) @ (D, E) matmul), build the activated-expert
+bitmap, exchange indices, then fetch exactly the activated remote
+experts into a compacted ``prefetch.DemandBank`` (budget-padded). Token
+dispatch is remapped through ``fetched_ids`` instead of the PR 1
+rotation roll, and the validity-predicated demand kernel consumes the
+(resident, fetched) banks. When the activated set overflows the static
+budget, an axis-agreed flag falls back per-layer to the full remote
+gather (``lax.cond`` — all ranks take the same branch), so results are
+always exact and never a function of the budget.
+
 Sequence sharding (when the batch can't cover the mesh), KV-cache decode
 with psum-LSE combine, RG-LRU cross-shard fix-up, vocab-sharded heads and
 ZeRO-style train gathers are all implemented here so every
@@ -161,9 +181,69 @@ def split_bank_active(geom: Geometry, xp: ExecutionPlan, key: str) -> bool:
     return False
 
 
-def gather_set(sig: LayerSig, geom: Geometry, xp: ExecutionPlan) -> tuple[tuple[str, ...], ...]:
+def _routed_tokens(xp: ExecutionPlan) -> int:
+    """Per-rank routed token count (static — must agree between
+    ``gather_set`` and the ``x2d`` the layer actually routes)."""
+    if xp.phase == "decode":
+        return max(1, xp.local_batch)
+    return max(1, xp.local_batch) * max(1, xp.local_seq)
+
+
+def demand_fetch_active(cfg, geom: Geometry, xp: ExecutionPlan) -> bool:
+    """Does the MoE gather run the on-demand route-before-gather path?
+
+    Requires the split fast path (the demand bank is a split-bank
+    refinement) over a single-axis placement, and engages only when
+    expected coverage is partial — ``rows * top_k < remote experts`` —
+    i.e. when the activated set *can* be a strict subset of the remote
+    bank (decode, small-batch prefill). At full coverage the "all"
+    gather is never worse, so the plan silently keeps it."""
+    if getattr(xp, "expert_fetch", "all") != "demand":
+        return False
+    if cfg.moe is None or not moe_split_active(geom, xp):
+        return False
+    if len(geom.expert_axes) != 1:
+        return False
+    pl = geom.moe_placement
+    num_remote = (pl.subgroup_size - 1) * pl.local_count
+    return _routed_tokens(xp) * cfg.moe.top_k < num_remote
+
+
+def resolve_demand_budget(cfg, geom: Geometry, xp: ExecutionPlan) -> int:
+    """Static per-peer demand-fetch row budget.
+
+    ``xp.demand_budget`` > 0 is honored (clamped to the per-rank expert
+    count, at which point overflow is impossible). Auto (0) applies
+    ``roofline.demand_budget_rows`` — 2x the expected per-peer
+    distinct-expert coverage, 8-aligned — the ONE closed form the
+    roofline/simulator wire models price, so the analytics and the
+    lowered program always ship the same payload. Overflow beyond the
+    budget is handled exactly by the per-layer fallback, so the estimate
+    only tunes wire bytes, never correctness."""
+    from repro.core.roofline import demand_budget_rows
+
+    pl = geom.moe_placement
+    assert pl is not None and cfg.moe is not None
+    local = pl.local_count
+    user = getattr(xp, "demand_budget", 0)
+    if user > 0:
+        return min(user, local)
+    return demand_budget_rows(
+        _routed_tokens(xp) * cfg.moe.top_k, cfg.moe.num_experts, local
+    )
+
+
+def gather_set(
+    sig: LayerSig, geom: Geometry, xp: ExecutionPlan, cfg=None
+) -> tuple[tuple[str, ...], ...]:
     """Key paths within a layer param dict that the prefetch pipeline
-    gathers before the layer executes."""
+    gathers before the layer executes.
+
+    Demand-active MoE layers (route-before-gather) exclude the expert
+    bank: their gather depends on the current layer's routing, so it
+    runs *inside* ``_moe_apply`` instead of the layer-ahead pipeline.
+    ``cfg`` is needed for that eligibility check only; callers that pass
+    none get the demand-oblivious set."""
     if xp.mode == "replicated":
         return ()
     out: list[tuple[str, ...]] = []
@@ -183,6 +263,7 @@ def gather_set(sig: LayerSig, geom: Geometry, xp: ExecutionPlan) -> tuple[tuple[
             xp.mode == "dwdp"
             and geom.moe_exec == "gather"
             and pl.subgroup_size > 1
+            and not (cfg is not None and demand_fetch_active(cfg, geom, xp))
         ):
             out.append(("moe", "experts"))
         if sig.shared_d_ff and geom.ffn_axes:
@@ -192,6 +273,62 @@ def gather_set(sig: LayerSig, geom: Geometry, xp: ExecutionPlan) -> tuple[tuple[
         if weights_move or not _dep_tp_ok(geom, xp, "ffn"):
             out.append(("ffn",))
     return tuple(out)
+
+
+def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
+    """Static per-rank gathered-weight wire bytes for one forward step:
+    ``{"full": ..., "fetched": ...}``.
+
+    ``fetched`` is what the lowered program actually ships (demand-active
+    expert layers pay the budget-padded payload + the index round);
+    ``full`` is the same step under ``expert_fetch="all"`` — the
+    counterfactual the serving metrics report savings against. Families
+    other than the expert bank contribute equally to both. Counts the
+    stacked transformer families (attention, dense FFN, shared experts,
+    MoE experts); the rare flat cell/rec gathers are not modeled here.
+    """
+    cfg, geom = model.cfg, model.geom
+    ws = jnp.dtype(model.dtype).itemsize
+    d = cfg.d_model
+    full = 0.0
+    fetched = 0.0
+    for group in model.plan:
+        for sig in group.sigs:
+            paths = gather_set(sig, geom, xp, cfg)
+            per_layer_full = 0.0
+            per_layer_fetched = 0.0
+            for path in paths:
+                key = "/".join(path)
+                if key == "moe/experts":
+                    pl = geom.moe_placement
+                    pe = 3 * d * cfg.moe.d_ff * ws
+                    b = prefetch.gather_bytes(pl, pe)
+                    per_layer_full += b
+                    per_layer_fetched += b
+                elif key == "attn":
+                    a = _axsize(xp, geom.attn_axes)
+                    w = (d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d) * ws
+                    per_layer_full += w * (a - 1) / max(1, a)
+                    per_layer_fetched += w * (a - 1) / max(1, a)
+                elif key in ("ffn", "moe/shared"):
+                    s = _axsize(xp, geom.ffn_axes)
+                    f = sig.shared_d_ff if key == "moe/shared" else sig.ffn_dim
+                    w = 3 * d * (f or 0) * ws
+                    per_layer_full += w * (s - 1) / max(1, s)
+                    per_layer_fetched += w * (s - 1) / max(1, s)
+            if sig.is_moe and demand_fetch_active(cfg, geom, xp):
+                # route-before-gather layers: gather_set excluded the
+                # expert bank; the demand fetch happens inside the layer
+                pl = geom.moe_placement
+                pe = 3 * d * cfg.moe.d_ff * ws
+                budget = resolve_demand_budget(cfg, geom, xp)
+                per_layer_full += prefetch.gather_bytes(pl, pe)
+                per_layer_fetched += prefetch.demand_fetch_bytes(
+                    pl, budget, pe
+                )
+            full += per_layer_full * group.n_cycles
+            fetched += per_layer_fetched * group.n_cycles
+    return {"full": full, "fetched": fetched}
 
 
 def _extract(lp: dict, paths) -> dict:
@@ -792,6 +929,97 @@ def _rolled_dispatch(d, roll, e_pad: int, capacity: int):
     return d._replace(flat_slot=exp * capacity + slot)
 
 
+def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx):
+    """Route-before-gather MoE execution (``expert_fetch="demand"``).
+
+    The routing decision ``d`` already exists — this is the inverted
+    layer order — so the activated-expert bitmap is exact, not a
+    prediction. Round 1 (index exchange) always runs: it is a few
+    hundred bytes and produces the axis-agreed overflow flag that picks
+    the branch. Only the taken branch's payload permutes execute:
+
+    - demand: fetch the activated remote experts compacted to the
+      per-peer budget, remap the dispatch's expert coordinate through
+      ``fetched_ids`` (resident experts at [0, local) in storage order,
+      fetched rows after them — index arithmetic only, the demand
+      analogue of the PR 1 rotation roll), and run the
+      validity-predicated demand kernel over the compact
+      ``(local + fetched)`` bank. No buffer wider than that exists.
+    - overflow fallback: the PR 1 split path verbatim (full remote bank,
+      rolled dispatch) — exact for any routing, so correctness never
+      depends on the budget estimate.
+    """
+    cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
+    pl = geom.moe_placement
+    assert pl is not None
+    axis = geom.expert_axes[0]
+    g, local = pl.subgroup_size, pl.local_count
+    e_pad = pl.num_padded
+    t = x2d.shape[0]
+    budget = resolve_demand_budget(cfg, geom, xp)
+    n_fetch = (g - 1) * min(budget, local)
+    p = lax.axis_index(axis) % g
+    # pallas_call has no VJP; the jnp formulation (still merge-free)
+    # carries the ZeRO-style train gathers
+    impl = "jnp" if xp.phase == "train" else "pallas"
+
+    # activated-expert bitmap from the routing decision. Kept tokens
+    # only: dropped tokens carry zero combine weight and dispatch zeroed
+    # rows, so their experts need no fetch.
+    wanted = (
+        jnp.zeros((e_pad,), bool).at[d.top_experts.reshape(-1)].max(d.keep)
+    )
+    plan = prefetch.plan_demand_fetch(
+        wanted, axis, pl, budget=budget, agree_axes=tuple(xp.mesh_sizes)
+    )
+
+    def demand_branch(experts, d):
+        bank = prefetch.gather_demand_payload(
+            experts, plan, axis, pl, budget=budget, mode=xp.prefetch,
+            num_slices=xp.num_slices,
+        )
+        # expert-id -> compact-bank position. Experts neither resident
+        # nor fetched receive only zero-weight traffic (every kept
+        # token's expert is in the bitmap), so they may map anywhere
+        # in range; position 0 keeps the scatter dense.
+        pos = jnp.zeros((e_pad,), jnp.int32)
+        pos = pos.at[p * local + jnp.arange(local)].set(
+            jnp.arange(local, dtype=jnp.int32)
+        )
+        pos = pos.at[jnp.where(plan.valid, plan.fetched_ids, e_pad)].set(
+            local + jnp.arange(n_fetch, dtype=jnp.int32), mode="drop"
+        )
+        exp = d.flat_slot // cap
+        slot = d.flat_slot - exp * cap
+        d2 = d._replace(flat_slot=pos[exp] * cap + slot)
+        xe = moe_lib.dispatch_tokens(x2d, d2, local + n_fetch, cap)
+        lo, fe = bank.local, bank.fetched
+        ye = split_gemm_lib.split_swiglu_demand(
+            xe,
+            lo["w_gate"], lo["w_up"], lo["w_down"],
+            fe["w_gate"], fe["w_up"], fe["w_down"],
+            bank.valid,
+            impl=impl,
+        )
+        return moe_lib.combine_tokens(ye, d2, t)
+
+    def full_branch(experts, d):
+        lo, re = prefetch.gather_remote_shards(
+            experts, axis, pl, mode=xp.prefetch, num_slices=xp.num_slices
+        )
+        d2 = _rolled_dispatch(d, p * local, e_pad, cap)
+        xe = moe_lib.dispatch_tokens(x2d, d2, e_pad, cap)
+        ye = split_gemm_lib.split_swiglu(
+            xe,
+            lo["w_gate"], lo["w_up"], lo["w_down"],
+            re["w_gate"], re["w_up"], re["w_down"],
+            impl=impl,
+        )
+        return moe_lib.combine_tokens(ye, d2, t)
+
+    return lax.cond(plan.overflow, full_branch, demand_branch, experts, d)
+
+
 def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int):
     cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
     moe = cfg.moe
@@ -827,6 +1055,7 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int):
             x2d, mp["router"], moe.top_k, cap, num_real=moe.num_experts
         )
     aux = moe_lib.load_balance_loss(d, e_pad)
+    y = None
 
     if xp.mode == "replicated" or pl.group_size == 1:
         xe = moe_lib.dispatch_tokens(x2d, d, e_pad, cap)
@@ -834,6 +1063,16 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int):
             xe, mp["experts"]["w_gate"], mp["experts"]["w_up"],
             mp["experts"]["w_down"],
         )
+    elif demand_fetch_active(cfg, geom, xp):
+        # route-before-gather: the routing above used only the LOCAL
+        # router weights, so the expert gather can now be demand-driven.
+        # gather_set excluded this layer's expert bank from the prefetch
+        # pipeline; the fetch happens here, after routing, and combines
+        # inside (the compact bank has its own dispatch remap).
+        assert "moe/experts" not in gathered, (
+            "demand-active layers must not prefetch the expert bank"
+        )
+        y = _moe_demand_apply(x2d, mp["experts"], d, cap, ctx)
     elif moe_split_active(geom, xp):
         # §4.2 split fast path: tokens dispatch in rotated canonical order
         # (resident experts first), the fused kernel consumes the
@@ -880,7 +1119,8 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int):
             yr, ax, split_axis=1, concat_axis=0, tiled=True,
             axis_index_groups=groups,
         )
-    y = moe_lib.combine_tokens(ye, d, t)
+    if y is None:
+        y = moe_lib.combine_tokens(ye, d, t)
     if "shared" in mp:
         y = y + _ffn_apply(x2d, mp["shared"], ctx, gathered.get("moe/shared"))
     return y, aux
@@ -993,7 +1233,7 @@ def _run_unrolled(group, gp, x, ctx: Ctx, gs):
     new_states = {}
     for j, sig in enumerate(group.sigs):
         lp = gp[f"pos{j}"]
-        paths = gather_set(sig, ctx.geom, ctx.xp)
+        paths = gather_set(sig, ctx.geom, ctx.xp, ctx.cfg)
         gathered = gather_layer(_extract(lp, paths), ctx) if paths else {}
         lstate = gs[f"pos{j}"] if gs is not None else None
         x, ns, aux = apply_layer(x, lp, sig, ctx, lstate, gathered)
@@ -1005,7 +1245,7 @@ def _run_unrolled(group, gp, x, ctx: Ctx, gs):
 def _run_scan_group(group, gp, x, ctx: Ctx, gs):
     sigs = group.sigs
     period = len(sigs)
-    paths = [gather_set(s, ctx.geom, ctx.xp) for s in sigs]
+    paths = [gather_set(s, ctx.geom, ctx.xp, ctx.cfg) for s in sigs]
     pipelined = ctx.xp.mode in ("dwdp", "hybrid") and any(paths)
 
     g0 = {}

@@ -46,9 +46,41 @@ for fallbacks and tests; the engine's legacy mode gathers canonically
 via ``gather_shards`` instead so the merged baseline's collectives stay
 byte-identical to the paper's reference point.
 
+A third gather strategy rides the same modes: the **on-demand** gather
+(``ExecutionPlan.expert_fetch == "demand"`` — the paper's "fetching
+missing experts on demand", abstract + §4.3). Where the split gather
+still ships every remote expert, the demand gather ships only the
+experts the *current layer's routing* activated — which is why the
+engine inverts its layer structure from gather-then-route to
+route-then-gather for demand-active layers (execution._moe_apply). Two
+rounds:
+
+1. **index exchange** (:func:`plan_demand_fetch`): each rank scatters
+   its activated-expert set into a tiny ``(num_padded,)`` bitmap and
+   all-gathers it inside the subgroup. Both sides of every transfer
+   then derive the *same* compaction deterministically (ascending
+   expert id, padded to the static per-peer ``budget`` with a validity
+   mask), so no expert ids ever need to cross the wire with the
+   payload.
+2. **payload** (:func:`gather_demand_payload`): each sender
+   ``jnp.take``s exactly the requested rows of its resident shard and
+   ships them point-to-point (``shift_pairs(t)`` permutes). Demand
+   payloads are wanted only by their endpoint, so the chained-ring
+   schedule has no forwarding advantage — "ring" shares the direct
+   schedule with "allgather", and "ring_sliced" applies the §4.3 TDM
+   feature slicing to the payload permutes.
+
+The result is a :class:`DemandBank` — ``(local, fetched, fetched_ids,
+valid)`` — consumed by the demand split kernels via dispatch-index
+remapping (no merge copy, no full remote bank). A requester wanting
+more than ``budget`` experts from one peer raises the (axis-agreed)
+overflow flag and the caller falls back to the full remote gather for
+that layer, so results are always exact.
+
 Gradients flow through every mode (ppermute transposes to the inverse
-permute; all_gather to psum_scatter), which is what makes DWDP usable for
-the train_4k shape (ZeRO-3-style gather-forward / scatter-grad).
+permute; all_gather to psum_scatter; take to scatter-add), which is what
+makes DWDP usable for the train_4k shape (ZeRO-3-style gather-forward /
+scatter-grad).
 """
 from __future__ import annotations
 
@@ -78,6 +110,46 @@ class SplitBank(NamedTuple):
 
     local: PyTree
     remote: PyTree
+
+
+class DemandBank(NamedTuple):
+    """Output of the on-demand expert fetch (route-before-gather path).
+
+    ``local``: the resident shard tree, untouched (leading dim = the
+    per-rank ``local_count`` — never copied, never re-landed).
+    ``fetched``: the demand-fetched tree, leading dim
+    ``(G' - 1) * budget`` — peer-major (distance 1 first), each peer's
+    chunk compacted to ascending expert id and padded to the static
+    per-peer ``budget``.
+    ``fetched_ids``: ``(fetch_rows,)`` int32 padded-canonical expert id
+    of each fetched row (undefined where ``valid`` is False).
+    ``valid``: ``(fetch_rows,)`` bool — False rows are padding (their
+    weights are clamped duplicates; consumers never dispatch to them).
+    """
+
+    local: PyTree
+    fetched: PyTree
+    fetched_ids: jax.Array
+    valid: jax.Array
+
+
+class DemandPlan(NamedTuple):
+    """Index-exchange result shared by both transfer endpoints.
+
+    ``masks``: ``(G', num_padded)`` bool — every subgroup peer's wanted
+    bitmap (subgroup-position-major, canonical expert ids).
+    ``fetched_ids`` / ``valid``: the requester-side view of the compacted
+    fetch schedule (see :class:`DemandBank`).
+    ``overflow``: scalar bool, agreed across ``agree_axes`` — True when
+    ANY rank wants more than ``budget`` experts from one peer, i.e. the
+    demand payload round cannot cover the activated set and the caller
+    must fall back to the full remote gather.
+    """
+
+    masks: jax.Array
+    fetched_ids: jax.Array
+    valid: jax.Array
+    overflow: jax.Array
 
 
 def _subgroup_position(axis: str, placement: Placement) -> jax.Array:
@@ -307,3 +379,185 @@ def gather_bytes(placement: Placement, bytes_per_expert: int) -> int:
     Identical for merged and split gathers — the split path saves HBM
     merge-copy bytes (see roofline_report), not wire bytes."""
     return (placement.subgroup_size - 1) * placement.local_count * bytes_per_expert
+
+
+# --------------------------------------------------------------------------
+# On-demand expert fetch: the two-round route-before-gather primitive.
+# --------------------------------------------------------------------------
+def _compact_requests(mask_slice: jax.Array, budget: int):
+    """Deterministic compaction both transfer endpoints can compute from
+    the same bitmap: wanted indices in ascending order, padded to the
+    static ``budget``. Returns ``(idx (budget,), valid (budget,), count)``
+    — ``idx`` entries past ``count`` are clamped junk covered by
+    ``valid``."""
+    order = jnp.argsort(~mask_slice)  # stable: True (wanted) first, ascending
+    count = jnp.sum(mask_slice.astype(jnp.int32))
+    idx = order[:budget].astype(jnp.int32)
+    valid = jnp.arange(budget) < jnp.minimum(count, budget)
+    return idx, valid, count
+
+
+def plan_demand_fetch(
+    wanted: jax.Array,
+    axis: str,
+    placement: Placement,
+    *,
+    budget: int,
+    agree_axes: tuple[str, ...],
+) -> DemandPlan:
+    """Round 1 — the index exchange. ``wanted`` is this rank's
+    ``(num_padded,)`` bool activated-expert bitmap (from the routing that
+    now runs *before* the gather). All-gathers the bitmaps inside the
+    subgroup (a few hundred bytes — the round the payload savings pay
+    for) and derives the requester-side fetch schedule.
+
+    ``agree_axes`` must name every mesh axis of the enclosing shard_map:
+    the overflow flag gates a ``lax.cond`` whose branches contain
+    *different* collectives, and the runtime rendezvous spans all devices
+    — every rank (not just this subgroup) must take the same branch.
+    """
+    g = placement.subgroup_size
+    local = placement.local_count
+    budget = min(budget, local)
+    p = _subgroup_position(axis, placement)
+    masks = jax.lax.all_gather(
+        wanted, axis, axis_index_groups=placement.axis_index_groups()
+    )  # (G', num_padded), subgroup-position-major
+    ids, valids = [], []
+    overflow = jnp.bool_(False)
+    for t in range(1, g):
+        o = (p + t) % g
+        mslice = jax.lax.dynamic_slice(wanted, (o * local,), (local,))
+        idx, valid_t, cnt = _compact_requests(mslice, budget)
+        ids.append(o * local + idx)
+        valids.append(valid_t)
+        overflow = overflow | (cnt > budget)
+    fetched_ids = jnp.concatenate(ids) if ids else jnp.zeros((0,), jnp.int32)
+    valid = jnp.concatenate(valids) if valids else jnp.zeros((0,), bool)
+    overflow = jax.lax.psum(overflow.astype(jnp.float32), agree_axes) > 0
+    return DemandPlan(
+        masks=masks, fetched_ids=fetched_ids, valid=valid, overflow=overflow
+    )
+
+
+def _demand_send_one(
+    w: jax.Array,
+    idx_by_t: list,
+    axis: str,
+    placement: Placement,
+    mode: str,
+    num_slices: int,
+) -> jax.Array:
+    """Payload permutes for one leaf: for each peer distance t, take the
+    rows requester ``p - t`` asked for and ship them with the one-shot
+    ``shift_pairs(t)`` permute. Demand payloads are point-to-point by
+    nature (only the endpoint wants them), so the chained-ring schedule
+    has no forwarding advantage — "ring" shares the direct schedule with
+    "allgather"; "ring_sliced" applies the §4.3 TDM feature slicing."""
+    g = placement.subgroup_size
+    feat = w.shape[-1]
+    s = num_slices if mode == "ring_sliced" else 1
+    while feat % s:
+        s -= 1
+    chunks = []
+    for t in range(1, g):
+        payload = jnp.take(w, idx_by_t[t - 1], axis=0)
+        pairs = placement.shift_pairs(t)
+        if s > 1:
+            slices = [
+                jax.lax.ppermute(c, axis, pairs)
+                for c in jnp.split(payload, s, axis=-1)
+            ]
+            chunks.append(jnp.concatenate(slices, axis=-1))
+        else:
+            chunks.append(jax.lax.ppermute(payload, axis, pairs))
+    return jnp.concatenate(chunks, axis=0)
+
+
+def gather_demand_payload(
+    tree: PyTree,
+    plan: DemandPlan,
+    axis: str,
+    placement: Placement,
+    *,
+    budget: int,
+    mode: str = "allgather",
+    num_slices: int = 4,
+) -> DemandBank:
+    """Round 2 — the payload. Each rank serves every peer's request out
+    of its resident shard (``jnp.take`` of exactly the requested rows,
+    padded to ``budget``) and receives its own requested rows back,
+    peer-major. Only ``(G'-1) * budget`` expert rows cross the wire —
+    for decode-scale routing a small fraction of the ``(G'-1) * local``
+    the full remote gather ships. Differentiable (take transposes to
+    scatter-add, ppermute to the inverse permute)."""
+    if mode not in ("allgather", "ring", "ring_sliced"):
+        raise ValueError(f"unknown prefetch mode {mode!r}")
+    g = placement.subgroup_size
+    local = placement.local_count
+    budget = min(budget, local)
+    if g == 1:
+        empty = jax.tree.map(lambda x: x[:0], tree)
+        return DemandBank(
+            local=tree,
+            fetched=empty,
+            fetched_ids=jnp.zeros((0,), jnp.int32),
+            valid=jnp.zeros((0,), bool),
+        )
+    p = _subgroup_position(axis, placement)
+    idx_by_t = []
+    for t in range(1, g):
+        q = (p - t) % g  # the requester this rank serves at distance t
+        mslice = jax.lax.dynamic_slice(
+            plan.masks, (q, p * local), (1, local)
+        )[0]
+        idx_send, _, _ = _compact_requests(mslice, budget)
+        idx_by_t.append(idx_send)
+    fetched = jax.tree.map(
+        lambda w: _demand_send_one(
+            w, idx_by_t, axis, placement, mode, num_slices
+        ),
+        tree,
+    )
+    return DemandBank(
+        local=tree,
+        fetched=fetched,
+        fetched_ids=plan.fetched_ids,
+        valid=plan.valid,
+    )
+
+
+def gather_demand_bank(
+    tree: PyTree,
+    wanted: jax.Array,
+    axis: str,
+    placement: Placement,
+    *,
+    budget: int,
+    agree_axes: tuple[str, ...],
+    mode: str = "allgather",
+    num_slices: int = 4,
+) -> tuple[DemandBank, jax.Array]:
+    """Both demand rounds in one call: ``(DemandBank, overflow)``.
+    Callers that gate the payload round behind the overflow fallback
+    (execution._moe_apply) use the two-step API instead so only the
+    taken branch's permutes execute."""
+    plan = plan_demand_fetch(
+        wanted, axis, placement, budget=budget, agree_axes=agree_axes
+    )
+    bank = gather_demand_payload(
+        tree, plan, axis, placement, budget=budget, mode=mode,
+        num_slices=num_slices,
+    )
+    return bank, plan.overflow
+
+
+def demand_fetch_bytes(
+    placement: Placement, budget: int, bytes_per_expert: int
+) -> int:
+    """Wire bytes per rank per layer for the demand gather: the payload
+    round's ``(G'-1) * budget`` padded expert rows plus the index round's
+    bitmap bytes (1 byte/expert from each subgroup peer)."""
+    g = placement.subgroup_size
+    budget = min(budget, placement.local_count)
+    return (g - 1) * (budget * bytes_per_expert + placement.num_padded)

@@ -43,6 +43,66 @@ def op_time(flops: float, bytes_: float, hw: Hardware) -> float:
     return max(flops / hw.flops, bytes_ / hw.hbm_bw)
 
 
+def expected_distinct_experts(n_draws: int, num_experts: int) -> float:
+    """E[distinct experts hit] for ``n_draws`` (= rows * top_k) uniform
+    routing draws over ``num_experts``: ``E * (1 - (1 - 1/E)^n)`` — the
+    closed form the on-demand fetch path's wire bytes follow. At decode
+    scale this is far below ``min(n, E)`` (collisions dominate), which is
+    exactly the headroom demand fetch converts into saved wire bytes."""
+    e = float(num_experts)
+    if e <= 0:
+        return 0.0
+    return e * (1.0 - (1.0 - 1.0 / e) ** n_draws)
+
+
+def demand_budget_rows(n_draws: int, num_experts: int, local: int) -> int:
+    """The auto-budget rule, in closed form: per-peer demand-fetch rows =
+    2x the expected per-peer distinct-expert coverage
+    (``local * (1 - (1 - 1/E)^n)``), rounded up to a lane-friendly
+    multiple of 8, clamped to the per-rank expert count. ONE rule shared
+    by the engine (``execution.resolve_demand_budget``), the roofline /
+    simulator wire models and the micro-bench, so every accounting
+    surface prices the same payload the lowered program actually ships
+    (the budget-PADDED rows, not the raw expectation)."""
+    if local <= 0:
+        return 0
+    e = max(1, num_experts)
+    expected = local * (1.0 - (1.0 - 1.0 / e) ** n_draws)
+    budget = -(-math.ceil(2.0 * expected) // 8) * 8
+    return max(1, min(max(8, budget), local))
+
+
+def demand_prefetch_bytes(
+    tokens: int,
+    top_k: int,
+    num_experts: int,
+    group: int,
+    bytes_per_expert: float,
+    *,
+    redundancy: int = 1,
+    budget: int = 0,
+) -> float:
+    """Per-rank wire bytes of the on-demand expert fetch: the
+    budget-padded payload round — ``(G'-1) * budget`` expert rows, with
+    the per-peer ``budget`` following the engine's auto rule
+    (:func:`demand_budget_rows`) unless given — plus the (tiny)
+    index-exchange round, one bitmap byte per expert per peer. This is
+    what the lowered program ships (padding included), so it matches
+    ``analytic_hbm_bytes`` and the engine's serving counters. Never
+    exceeds the full remote gather (at full budget the two coincide up
+    to the index round, which is then dropped by the cap)."""
+    sub = max(1, group // redundancy)
+    if sub <= 1:
+        return 0.0
+    local = -(-num_experts // sub)
+    full = (sub - 1) * local * bytes_per_expert
+    if budget <= 0:
+        budget = demand_budget_rows(tokens * top_k, num_experts, local)
+    budget = min(budget, local)
+    index_round = (sub - 1) * num_experts  # 1-byte bitmap per peer
+    return min(full, (sub - 1) * budget * bytes_per_expert + index_round)
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerTimes:
     compute: float
@@ -89,6 +149,7 @@ def layer_times(
     redundancy: int = 1,
     weight_layout: Optional[str] = None,
     attn_gathered: bool = False,
+    expert_fetch: str = "all",
     moe_ffn: str = "merged",
 ) -> LayerTimes:
     """Per-layer roofline terms for the context phase (batch of `tokens`).
@@ -111,6 +172,15 @@ def layer_times(
     sharded-attention geometry) — adds the attention projections'
     (group-1)/group wire bytes to the prefetch term and their landing
     write per the layout.
+    expert_fetch: "all" ships the full remote expert bank (the split /
+    merged prefetch); "demand" models the route-before-gather path:
+    the budget-PADDED demand payload (per-peer budget = the engine's
+    shared auto rule ``demand_budget_rows``, 2x the expected-coverage
+    closed form ``expected_distinct_experts``) + the index round cross
+    the wire — exactly what the lowered program ships — engaged when
+    coverage is partial (``tokens * top_k`` below the remote expert
+    count) and never worse than "all". The landing write shrinks with
+    it (demand is split-layout by construction).
     """
     layout = weight_layout if weight_layout is not None else moe_ffn
     d = cfg.d_model
@@ -140,8 +210,19 @@ def layer_times(
         sub = max(1, group // redundancy)
         layer_expert_bytes = e * 3 * d * f * weight_bytes
         prefetch_bytes = layer_expert_bytes * (sub - 1) / sub
+        if (
+            expert_fetch == "demand"
+            and layout == "split"
+            and tokens * k < e * (sub - 1) / sub
+        ):
+            # route-before-gather: expected-coverage wire bytes
+            prefetch_bytes = demand_prefetch_bytes(
+                tokens, k, e, group, 3 * d * f * weight_bytes,
+                redundancy=redundancy,
+            )
         # HBM landing write of the gathered bank: full layer (merged) vs
-        # remote-only (split — the eliminated merge copy shows up here)
+        # remote-only (split — the eliminated merge copy shows up here;
+        # demand lands only what it fetched)
         land_bytes = 0.0
         if sub > 1:
             land_bytes = (
@@ -192,6 +273,7 @@ def figure3_sweep(
     batch: int = 1,
     weight_layout: Optional[str] = None,
     attn_gathered: bool = False,
+    expert_fetch: str = "all",
     moe_ffn: str = "merged",
 ) -> list[dict]:
     """Reproduce Fig. 3: compute/prefetch ratio + DEP/DWDP speedup vs ISL."""
@@ -201,7 +283,8 @@ def figure3_sweep(
     for isl in isls:
         lt = layer_times(cfg, tokens=batch * isl, group=group, hw=hw,
                          layer=moe_layer, weight_layout=layout,
-                         attn_gathered=attn_gathered)
+                         attn_gathered=attn_gathered,
+                         expert_fetch=expert_fetch)
         rows.append(
             {
                 "isl": isl,

@@ -17,6 +17,12 @@
   Shift-Parallelism-style layout design, covering MoE experts, attention
   projections and dense-FFN slices alike) or "merged" (the legacy
   explicit-merge baseline),
+- how MoE expert weights are *selected* for the gather
+  (``expert_fetch``): "all" (every remote expert every layer — the
+  split/merged prefetch) or "demand" (route-before-gather: only the
+  experts the current layer's routing activated cross the wire, padded
+  to a static ``demand_budget`` per peer, with an exact fallback to the
+  full remote gather on budget overflow),
 - and how MoE capacity is derived (``capacity_from``): from the local
   token count ("local") or layout-invariantly per row from the global
   shape ("global" — deterministic drops across batch-sharding reshapes),
@@ -27,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any, Optional
 
 from jax.sharding import PartitionSpec as P
@@ -42,6 +49,7 @@ PREFETCH_MODES = ("allgather", "ring", "ring_sliced")
 WEIGHT_LAYOUTS = ("merged", "split")
 MOE_FFN_MODES = WEIGHT_LAYOUTS  # deprecated alias (PR 1 name)
 CAPACITY_FROM = ("local", "global")
+EXPERT_FETCH = ("all", "demand")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +85,28 @@ class ExecutionPlan:
     #     selectable as the paper's baseline and for families the split
     #     path does not cover (multi-axis ZeRO-wide gathers fall back to
     #     it automatically).
+    expert_fetch: str = "all"
+    # MoE expert-gather selection (only meaningful on the split DWDP
+    # gather path):
+    #   "all" (default): every remote expert crosses the wire every MoE
+    #     layer (the PR 1/2 prefetch — demand-oblivious).
+    #   "demand": route-before-gather. The engine inverts the layer
+    #     structure for eligible MoE layers: routing (local router
+    #     weights, a cheap (T,D)@(D,E) matmul) runs first, then a tiny
+    #     index-exchange round + a payload round fetch exactly the
+    #     activated remote experts, padded to a static ``demand_budget``
+    #     per peer. Auto-eligible only when expected coverage is partial
+    #     (local rows * top_k < remote expert count — decode and small-
+    #     batch prefill); otherwise the layer silently keeps the "all"
+    #     gather, which would be cheaper anyway. Budget overflow falls
+    #     back per-layer to the full remote gather, so results are
+    #     always exact.
+    demand_budget: int = 0
+    # Per-peer demand-fetch row budget (static — sets the payload-round
+    # wire bytes). 0 = auto: twice the expected per-peer distinct-expert
+    # coverage, rounded up to a multiple of 8 (see
+    # execution.resolve_demand_budget); clamped to the per-rank expert
+    # count, at which point overflow is impossible.
     capacity_from: str = "local"
     # MoE capacity derivation:
     #   "local": capacity_for(local token count) — the PR 1 behavior.
@@ -171,20 +201,37 @@ def make_execution_plan(
     decode_attn: str = "gather",
     weight_layout: Optional[str] = None,
     capacity_from: str = "local",
+    expert_fetch: str = "all",
+    demand_budget: int = 0,
     moe_ffn: Optional[str] = None,
 ) -> ExecutionPlan:
     assert mode in MODES and prefetch in PREFETCH_MODES
-    if moe_ffn is not None and weight_layout is not None and moe_ffn != weight_layout:
-        raise ValueError(
-            f"conflicting weight_layout={weight_layout!r} and deprecated "
-            f"moe_ffn={moe_ffn!r} — pass only weight_layout"
+    if moe_ffn is not None:
+        warnings.warn(
+            "moe_ffn= is deprecated (PR 1 spelling); the split layout now "
+            "covers every gathered family — pass weight_layout= instead",
+            DeprecationWarning,
+            stacklevel=2,
         )
+        if weight_layout is not None and moe_ffn != weight_layout:
+            raise ValueError(
+                f"conflicting weight_layout={weight_layout!r} and deprecated "
+                f"moe_ffn={moe_ffn!r} — pass only weight_layout"
+            )
     if weight_layout is None:
         # moe_ffn is the deprecated PR 1 spelling; honor it when the new
         # flag is not given, else default to the split fast path.
         weight_layout = moe_ffn if moe_ffn is not None else "split"
     assert weight_layout in WEIGHT_LAYOUTS
     assert capacity_from in CAPACITY_FROM
+    assert expert_fetch in EXPERT_FETCH
+    if expert_fetch == "demand" and weight_layout != "split":
+        raise ValueError(
+            'expert_fetch="demand" requires the split weight layout (the '
+            "demand bank is a split-bank refinement); got "
+            f"weight_layout={weight_layout!r}"
+        )
+    assert demand_budget >= 0
     batch_axes, seq_axes = plan_activation_sharding(
         model.cfg, shape, mesh_sizes
     )
@@ -202,6 +249,8 @@ def make_execution_plan(
         block_causal=block_causal and not seq_axes,
         decode_attn=decode_attn,
         weight_layout=weight_layout,
+        expert_fetch=expert_fetch,
+        demand_budget=demand_budget,
         capacity_from=capacity_from,
     )
 

@@ -32,7 +32,10 @@ no merge copy anywhere.
 
 Block sizes auto-select per dimension exactly like the grouped kernels
 (largest lane-friendly divisor, single-block fallback), so decode-scale
-token counts stream correctly.
+token counts stream correctly. The fused SwiGLU also shares the grouped
+kernel's down-projection output-dim blocking (``block_o``, auto-selected
+against the 8 MiB fp32 VMEM accumulator budget), so d_model beyond the
+single-pass accumulator envelope lowers on the dense path too.
 """
 from __future__ import annotations
 
@@ -44,7 +47,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import resolve_interpret
-from repro.kernels.split_gemm.split_gemm import _cast, _dummy_banks, _pick_block
+from repro.kernels.split_gemm.split_gemm import (
+    _auto_block_o,
+    _cast,
+    _dummy_banks,
+    _pick_block,
+)
 
 
 # ==========================================================================
@@ -237,12 +245,12 @@ def _dense_swiglu_kernel(
     o_ref,
     acc_g, acc_u, acc_y,
 ):
-    si = pl.program_id(1)
-    fi = pl.program_id(2)
-    di = pl.program_id(3)
-    last_s = si == pl.num_programs(1) - 1
-    last_f = fi == pl.num_programs(2) - 1
-    last_d = di == pl.num_programs(3) - 1
+    si = pl.program_id(2)
+    fi = pl.program_id(3)
+    di = pl.program_id(4)
+    last_s = si == pl.num_programs(2) - 1
+    last_f = fi == pl.num_programs(3) - 1
+    last_d = di == pl.num_programs(4) - 1
     is_local = si < n_local
 
     @pl.when(jnp.logical_and(si == 0, jnp.logical_and(fi == 0, di == 0)))
@@ -295,7 +303,7 @@ def _dense_swiglu_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_c", "block_f", "block_d", "interpret"),
+    static_argnames=("block_c", "block_f", "block_d", "block_o", "interpret"),
 )
 def split_dense_swiglu(
     x: jax.Array,          # (T, D)
@@ -309,15 +317,21 @@ def split_dense_swiglu(
     block_c: int = 128,
     block_f: int = 256,
     block_d: int = 512,
+    block_o: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused stacked-slice SwiGLU over split banks: (T, D) -> (T, D).
 
     Slices [0, S_l) read the local bank, [S_l, S) the remote bank; the
     (T, Fs) hidden activations never round-trip HBM and the slice sum
-    makes bank order irrelevant. The down accumulator is (bc, D) fp32 —
-    full model width per token block, same envelope as the grouped
-    kernel's unblocked mode."""
+    makes bank order irrelevant. ``block_o`` blocks the down
+    projection's *output* dim (ported from the grouped kernel) so
+    d_model beyond the VMEM accumulator budget still lowers: with
+    n_o = D/block_o output blocks the gate/up stages are recomputed once
+    per block (the standard recompute-vs-residency trade), and
+    ``block_o=None`` auto-selects — the full D (the previous single-pass
+    (bc, D) schedule) whenever it fits the shared ``_ACC_BUDGET_BYTES``,
+    the largest fitting divisor otherwise."""
     t, d = x.shape
     s_l = wg_local.shape[0]
     s_r = wg_remote.shape[0]
@@ -332,26 +346,27 @@ def split_dense_swiglu(
     bc = _pick_block(t, block_c)
     bf = _pick_block(f, block_f)
     bd = _pick_block(d, block_d)
+    bo = _auto_block_o(d, bc, bf) if block_o is None else _pick_block(d, block_o)
 
-    grid = (t // bc, s, f // bf, d // bd)
+    grid = (t // bc, d // bo, s, f // bf, d // bd)
 
-    def x_map(ci, si, fi, di):
+    def x_map(ci, oi, si, fi, di):
         return (ci, di)
 
-    def up_l_map(ci, si, fi, di):
+    def up_l_map(ci, oi, si, fi, di):
         return (jnp.clip(si, 0, n_wl - 1), di, fi)
 
-    def up_r_map(ci, si, fi, di):
+    def up_r_map(ci, oi, si, fi, di):
         return (jnp.clip(si - s_l, 0, n_wr - 1), di, fi)
 
-    def down_l_map(ci, si, fi, di):
-        return (jnp.clip(si, 0, n_wl - 1), fi, 0)
+    def down_l_map(ci, oi, si, fi, di):
+        return (jnp.clip(si, 0, n_wl - 1), fi, oi)
 
-    def down_r_map(ci, si, fi, di):
-        return (jnp.clip(si - s_l, 0, n_wr - 1), fi, 0)
+    def down_r_map(ci, oi, si, fi, di):
+        return (jnp.clip(si - s_l, 0, n_wr - 1), fi, oi)
 
-    def o_map(ci, si, fi, di):
-        return (ci, 0)
+    def o_map(ci, oi, si, fi, di):
+        return (ci, oi)
 
     return pl.pallas_call(
         functools.partial(_dense_swiglu_kernel, s_l),
@@ -360,17 +375,17 @@ def split_dense_swiglu(
             pl.BlockSpec((bc, bd), x_map),
             pl.BlockSpec((1, bd, bf), up_l_map),
             pl.BlockSpec((1, bd, bf), up_l_map),
-            pl.BlockSpec((1, bf, d), down_l_map),
+            pl.BlockSpec((1, bf, bo), down_l_map),
             pl.BlockSpec((1, bd, bf), up_r_map),
             pl.BlockSpec((1, bd, bf), up_r_map),
-            pl.BlockSpec((1, bf, d), down_r_map),
+            pl.BlockSpec((1, bf, bo), down_r_map),
         ],
-        out_specs=pl.BlockSpec((bc, d), o_map),
+        out_specs=pl.BlockSpec((bc, bo), o_map),
         out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
         scratch_shapes=[
             pltpu.VMEM((bc, bf), jnp.float32),
             pltpu.VMEM((bc, bf), jnp.float32),
-            pltpu.VMEM((bc, d), jnp.float32),
+            pltpu.VMEM((bc, bo), jnp.float32),
         ],
         interpret=resolve_interpret(interpret),
     )(x, wg_local, wu_local, wd_local, wg_remote, wu_remote, wd_remote)

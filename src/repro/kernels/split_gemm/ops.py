@@ -45,10 +45,12 @@ from repro.kernels.split_gemm.split_gemm import (
     _cast,
     split_grouped_gemm,
     split_grouped_swiglu,
+    split_grouped_swiglu_demand,
 )
 from repro.kernels.split_gemm.ref import (
     split_dense_swiglu_ref,
     split_grouped_gemm_ref,
+    split_grouped_swiglu_demand_ref,
     split_grouped_swiglu_ref,
     split_reduce_gemm_ref,
     split_stack_gemm_ref,
@@ -92,6 +94,38 @@ def split_swiglu(x, wg_l, wu_l, wd_l, wg_r, wu_r, wd_r, *, impl=None, **kw):
     if impl == "jnp":
         return split_swiglu_jnp(x, wg_l, wu_l, wd_l, wg_r, wu_r, wd_r)
     raise ValueError(f"unknown split_swiglu impl {impl!r}")
+
+
+def split_swiglu_demand_jnp(x, wg_l, wu_l, wd_l, wg_f, wu_f, wd_f, valid):
+    """Differentiable demand SwiGLU without a bank merge: per-bank
+    grouped FFN over the matching slice of the compact dispatch, fetched
+    outputs zeroed where the budget padding's validity mask is False
+    (their weights are clamped junk by contract). Gradients flow to both
+    banks — and through the demand gather's take/ppermute — which is
+    what lets the route-before-gather path ride the train shapes."""
+    e_l = wg_l.shape[0]
+    y_l = grouped_ffn(x[:e_l], wg_l, wu_l, wd_l)
+    y_f = grouped_ffn(x[e_l:], wg_f, wu_f, wd_f)
+    y_f = y_f * valid[:, None, None].astype(y_f.dtype)
+    return jnp.concatenate([y_l, y_f], axis=0)
+
+
+def split_swiglu_demand(
+    x, wg_l, wu_l, wd_l, wg_f, wu_f, wd_f, valid, *, impl=None, **kw
+):
+    """Fused demand-fetched grouped SwiGLU. x: (E_l + E_f, C, D) compact
+    dispatch; local banks (E_l, D, F)/(E_l, F, D); fetched banks
+    (E_f, D, F)/(E_f, F, D) budget-padded with ``valid`` (E_f,) marking
+    real rows -> (E_l + E_f, C, D)."""
+    if impl in (None, "pallas"):
+        return split_grouped_swiglu_demand(
+            x, wg_l, wu_l, wd_l, wg_f, wu_f, wd_f, valid, **kw
+        )
+    if impl == "jnp":
+        return split_swiglu_demand_jnp(
+            x, wg_l, wu_l, wd_l, wg_f, wu_f, wd_f, valid
+        )
+    raise ValueError(f"unknown split_swiglu_demand impl {impl!r}")
 
 
 # --------------------------------------------------------------------------
@@ -166,7 +200,11 @@ __all__ = [
     "split_grouped_gemm_ref",
     "split_swiglu",
     "split_swiglu_jnp",
+    "split_swiglu_demand",
+    "split_swiglu_demand_jnp",
     "split_grouped_swiglu",
+    "split_grouped_swiglu_demand",
+    "split_grouped_swiglu_demand_ref",
     "split_grouped_swiglu_ref",
     "split_stack_gemm",
     "split_stack_gemm_ref",

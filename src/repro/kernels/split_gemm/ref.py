@@ -98,3 +98,27 @@ def split_grouped_swiglu_ref(
         merge_banks(wu_local, wu_remote),
         merge_banks(wd_local, wd_remote),
     )
+
+
+def split_grouped_swiglu_demand_ref(
+    x: jnp.ndarray,           # (E_l + E_f, C, D)
+    wg_local: jnp.ndarray,    # (E_l, D, F)
+    wu_local: jnp.ndarray,
+    wd_local: jnp.ndarray,    # (E_l, F, D)
+    wg_fetched: jnp.ndarray,  # (E_f, D, F) demand-fetched, budget-padded
+    wu_fetched: jnp.ndarray,
+    wd_fetched: jnp.ndarray,  # (E_f, F, D)
+    valid: jnp.ndarray,       # (E_f,)
+) -> jnp.ndarray:
+    """Oracle for the demand variant: merged grouped FFN over the compact
+    (resident + fetched) bank, invalid (budget-padding) rows zeroed —
+    their weights are clamped junk by contract, so the kernel flushes
+    zeros for them."""
+    e_l = wg_local.shape[0]
+    y = split_grouped_swiglu_ref(
+        x, wg_local, wu_local, wd_local, wg_fetched, wu_fetched, wd_fetched
+    )
+    mask = jnp.concatenate(
+        [jnp.ones((e_l,), bool), valid.astype(bool)]
+    )
+    return y * mask[:, None, None].astype(y.dtype)

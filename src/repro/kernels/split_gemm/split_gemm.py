@@ -10,7 +10,7 @@ and the kernel body selects the correct tile with ``pl.when`` on the
 expert coordinate — so only the selected bank's tile participates in the
 MXU matmul and no merged contiguous buffer ever exists in HBM.
 
-Two kernels:
+Three kernels:
 
 - ``split_grouped_gemm``: one GEMM stage (kept as the minimal §4.2 unit).
 - ``split_grouped_swiglu``: the full MoE FFN fused into one kernel —
@@ -18,6 +18,13 @@ Two kernels:
   fp32 VMEM accumulators between stages, and the down GEMM accumulates
   straight into a per-(expert, token-block) fp32 output accumulator. The
   intermediate (E, C, F) hidden activation never round-trips HBM.
+- ``split_grouped_swiglu_demand``: the on-demand variant. The remote
+  operand is the *compacted* demand-fetched bank — ``(budget, D, F)``
+  rows of exactly the routing-activated experts, padded to the static
+  budget — plus a per-row validity mask streamed through SMEM. Invalid
+  (padding) rows hold clamped junk weights; the mask predicates every
+  MXU stage for them, so their output blocks flush the zero-initialized
+  accumulator and the padding costs no FLOPs.
 
 Grid: (E, C/bc, F/bf, D/bd) for the single GEMM and
 (E, C/bc, D/bo, F/bf, D/bd) for the fused SwiGLU, with fp32 VMEM
@@ -333,3 +340,168 @@ def split_grouped_swiglu(
         ],
         interpret=resolve_interpret(interpret),
     )(x, wg_local, wu_local, wd_local, wg_remote, wu_remote, wd_remote)
+
+
+# ==========================================================================
+# Demand-fetched split SwiGLU: compacted fetched bank, validity-predicated.
+# ==========================================================================
+def _swiglu_demand_kernel(
+    n_local: int,
+    x_ref, v_ref, gl_ref, ul_ref, dl_ref, gf_ref, uf_ref, df_ref,
+    o_ref,
+    acc_g, acc_u, acc_y,
+):
+    e = pl.program_id(0)
+    fi = pl.program_id(3)
+    di = pl.program_id(4)
+    last_f = fi == pl.num_programs(3) - 1
+    last_d = di == pl.num_programs(4) - 1
+    is_local = e < n_local
+    # fetched rows past the requester's valid count are clamped junk: the
+    # mask keeps them off the MXU entirely, so the budget padding costs
+    # no FLOPs and their output blocks flush the zeroed accumulator.
+    is_fetched = jnp.logical_and(
+        jnp.logical_not(is_local), v_ref[0, 0] != 0
+    )
+
+    @pl.when(jnp.logical_and(fi == 0, di == 0))
+    def _init_y():
+        acc_y[...] = jnp.zeros_like(acc_y)
+
+    @pl.when(di == 0)
+    def _init_gu():
+        acc_g[...] = jnp.zeros_like(acc_g)
+        acc_u[...] = jnp.zeros_like(acc_u)
+
+    x = x_ref[0]  # (bc, bd)
+
+    @pl.when(is_local)
+    def _first_local():
+        acc_g[...] += jnp.dot(
+            x, _cast(gl_ref[0], x), preferred_element_type=jnp.float32
+        )
+        acc_u[...] += jnp.dot(
+            x, _cast(ul_ref[0], x), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(is_fetched)
+    def _first_fetched():
+        acc_g[...] += jnp.dot(
+            x, _cast(gf_ref[0], x), preferred_element_type=jnp.float32
+        )
+        acc_u[...] += jnp.dot(
+            x, _cast(uf_ref[0], x), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(jnp.logical_and(last_d, is_local))
+    def _down_local():
+        h = (jax.nn.silu(acc_g[...]) * acc_u[...]).astype(x.dtype)
+        acc_y[...] += jnp.dot(
+            h, _cast(dl_ref[0], x), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(jnp.logical_and(last_d, is_fetched))
+    def _down_fetched():
+        h = (jax.nn.silu(acc_g[...]) * acc_u[...]).astype(x.dtype)
+        acc_y[...] += jnp.dot(
+            h, _cast(df_ref[0], x), preferred_element_type=jnp.float32
+        )
+
+    @pl.when(jnp.logical_and(last_f, last_d))
+    def _flush():
+        o_ref[0] = acc_y[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_c", "block_f", "block_d", "block_o", "interpret"),
+)
+def split_grouped_swiglu_demand(
+    x: jax.Array,           # (E_l + E_f, C, D) compact dispatch batches
+    wg_local: jax.Array,    # (E_l, D, F) resident bank
+    wu_local: jax.Array,
+    wd_local: jax.Array,    # (E_l, F, D)
+    wg_fetched: jax.Array,  # (E_f, D, F) demand-fetched (budget-padded)
+    wu_fetched: jax.Array,
+    wd_fetched: jax.Array,  # (E_f, F, D)
+    valid: jax.Array,       # (E_f,) bool/int — False rows are padding
+    *,
+    block_c: int = 128,
+    block_f: int = 256,
+    block_d: int = 512,
+    block_o: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused SwiGLU over the (resident, demand-fetched) bank pair:
+    (E_l + E_f, C, D) -> (E_l + E_f, C, D).
+
+    Identical streaming structure to :func:`split_grouped_swiglu` —
+    same grid, same accumulators, same auto block selection, so a
+    routed expert's (C, D) block computes bit-identically to the
+    all-fetch split path — plus the per-row validity scalar (SMEM)
+    predicating every MXU stage of the fetched bank. No buffer wider
+    than ``E_l + E_f`` experts exists anywhere."""
+    e, c, d = x.shape
+    e_l, _, f = wg_local.shape
+    e_f = wg_fetched.shape[0]
+    assert e_l + e_f == e, (e_l, e_f, e)
+    assert valid.shape == (e_f,), (valid.shape, e_f)
+    wg_local, wg_fetched = _dummy_banks(e_l, e_f, wg_local, wg_fetched, (1, d, f))
+    wu_local, wu_fetched = _dummy_banks(e_l, e_f, wu_local, wu_fetched, (1, d, f))
+    wd_local, wd_fetched = _dummy_banks(e_l, e_f, wd_local, wd_fetched, (1, f, d))
+    n_wl = wg_local.shape[0]
+    n_wf = wg_fetched.shape[0]
+    v = valid.astype(jnp.int32).reshape(-1, 1)
+    if e_f == 0:
+        v = jnp.zeros((1, 1), jnp.int32)
+
+    bc = _pick_block(c, block_c)
+    bf = _pick_block(f, block_f)
+    bd = _pick_block(d, block_d)
+    bo = _auto_block_o(d, bc, bf) if block_o is None else _pick_block(d, block_o)
+
+    grid = (e, c // bc, d // bo, f // bf, d // bd)
+
+    def x_map(ei, ci, oi, fi, di):
+        return (ei, ci, di)
+
+    def v_map(ei, ci, oi, fi, di):
+        return (jnp.clip(ei - e_l, 0, n_wf - 1), 0)
+
+    def up_l_map(ei, ci, oi, fi, di):
+        return (jnp.clip(ei, 0, n_wl - 1), di, fi)
+
+    def up_f_map(ei, ci, oi, fi, di):
+        return (jnp.clip(ei - e_l, 0, n_wf - 1), di, fi)
+
+    def down_l_map(ei, ci, oi, fi, di):
+        return (jnp.clip(ei, 0, n_wl - 1), fi, oi)
+
+    def down_f_map(ei, ci, oi, fi, di):
+        return (jnp.clip(ei - e_l, 0, n_wf - 1), fi, oi)
+
+    def o_map(ei, ci, oi, fi, di):
+        return (ei, ci, oi)
+
+    return pl.pallas_call(
+        functools.partial(_swiglu_demand_kernel, e_l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), x_map),
+            pl.BlockSpec((1, 1), v_map, memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bd, bf), up_l_map),
+            pl.BlockSpec((1, bd, bf), up_l_map),
+            pl.BlockSpec((1, bf, bo), down_l_map),
+            pl.BlockSpec((1, bd, bf), up_f_map),
+            pl.BlockSpec((1, bd, bf), up_f_map),
+            pl.BlockSpec((1, bf, bo), down_f_map),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bo), o_map),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bc, bf), jnp.float32),
+            pltpu.VMEM((bc, bf), jnp.float32),
+            pltpu.VMEM((bc, bo), jnp.float32),
+        ],
+        interpret=resolve_interpret(interpret),
+    )(x, v, wg_local, wu_local, wd_local, wg_fetched, wu_fetched, wd_fetched)

@@ -30,9 +30,12 @@ def build_engine(
     cache_len: int = 128,
     max_batch: int = 4,
     ctx_mode: str = "dwdp",
+    gen_mode: str = "dep",
     prefetch: str = "allgather",
     weight_layout: str | None = None,
     capacity_from: str = "local",
+    expert_fetch: str = "all",
+    demand_budget: int = 0,
     dtype=jnp.float32,
     seed: int = 0,
 ):
@@ -45,11 +48,13 @@ def build_engine(
         model, mesh, sizes, mode=ctx_mode, prefill_len=prefill_len,
         cache_len=cache_len, prefetch=prefetch,
         weight_layout=weight_layout, capacity_from=capacity_from,
+        expert_fetch=expert_fetch, demand_budget=demand_budget,
     )
     gen = GenerationServer(
-        model, mesh, sizes, mode="dep", max_batch=max_batch,
+        model, mesh, sizes, mode=gen_mode, max_batch=max_batch,
         cache_len=cache_len,
         weight_layout=weight_layout, capacity_from=capacity_from,
+        expert_fetch=expert_fetch, demand_budget=demand_budget,
     )
     return DisaggregatedEngine(params, ctx, gen), model
 
@@ -70,6 +75,19 @@ def main(argv=None):
                     choices=["local", "global"],
                     help="MoE capacity derivation: local shard count or "
                          "layout-invariant per-row global shape")
+    ap.add_argument("--gen-mode", default="dep", choices=["dep", "dwdp"],
+                    help="generation-server strategy (dwdp shards the "
+                         "weights and gathers per layer — the mode the "
+                         "on-demand expert fetch accelerates)")
+    ap.add_argument("--expert-fetch", default="all",
+                    choices=["all", "demand"],
+                    help="MoE expert-gather selection: every remote "
+                         "expert, or route-before-gather demand fetch of "
+                         "only the activated ones (exact fallback on "
+                         "budget overflow)")
+    ap.add_argument("--demand-budget", type=int, default=0,
+                    help="per-peer demand-fetch row budget (0 = auto: 2x "
+                         "the expected distinct-expert coverage)")
     ap.add_argument("--full", action="store_true",
                     help="use the full config (default: reduced smoke)")
     args = ap.parse_args(argv)
@@ -82,8 +100,11 @@ def main(argv=None):
         cache_len=args.prefill_len + args.output_len,
         max_batch=args.max_batch,
         ctx_mode=args.ctx_mode,
+        gen_mode=args.gen_mode,
         weight_layout=args.weight_layout,
         capacity_from=args.capacity_from,
+        expert_fetch=args.expert_fetch,
+        demand_budget=args.demand_budget,
     )
     rng = np.random.default_rng(0)
     for i in range(args.requests):

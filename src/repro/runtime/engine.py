@@ -43,16 +43,24 @@ class ContextServer:
     def __init__(self, model: Model, mesh, mesh_sizes, *, mode="dwdp",
                  prefill_len: int, cache_len: int, prefetch="allgather",
                  weight_layout: Optional[str] = None,
-                 capacity_from: str = "local"):
+                 capacity_from: str = "local",
+                 expert_fetch: str = "all", demand_budget: int = 0):
         self.model = model
         self.prefill_len = prefill_len
         shape = InputShape("ctx", prefill_len, 1, "prefill")
         self.xp = make_execution_plan(
             model, shape, mesh_sizes, mode=mode, prefetch=prefetch,
             weight_layout=weight_layout, capacity_from=capacity_from,
+            expert_fetch=expert_fetch, demand_budget=demand_budget,
         )
         self.step = execution.make_step_fn(
             model, self.xp, mesh, capture_len=cache_len
+        )
+        # static gathered-weight wire bytes of one prefill call (fetched =
+        # what the lowered program ships, full = the expert_fetch="all"
+        # counterfactual) — attributed per request by the engine
+        self.gather_bytes = execution.gathered_wire_bytes_per_step(
+            model, self.xp
         )
 
     def prefill(self, params, tokens: np.ndarray):
@@ -75,7 +83,8 @@ class GenerationServer:
     def __init__(self, model: Model, mesh, mesh_sizes, *, mode="dep",
                  max_batch: int, cache_len: int,
                  weight_layout: Optional[str] = None,
-                 capacity_from: str = "local"):
+                 capacity_from: str = "local",
+                 expert_fetch: str = "all", demand_budget: int = 0):
         self.model = model
         self.max_batch = max_batch
         self.cache_len = cache_len
@@ -83,8 +92,14 @@ class GenerationServer:
         self.xp = make_execution_plan(
             model, shape, mesh_sizes, mode=mode,
             weight_layout=weight_layout, capacity_from=capacity_from,
+            expert_fetch=expert_fetch, demand_budget=demand_budget,
         )
         self.step = execution.make_step_fn(model, self.xp, mesh)
+        # static gathered-weight wire bytes per decode step (see
+        # ContextServer.gather_bytes) — shared by the step's active slots
+        self.gather_bytes = execution.gathered_wire_bytes_per_step(
+            model, self.xp
+        )
         self.state = init_decode_state(model, max_batch, cache_len)
         # inactive slots: pos points at an empty cache; emitted tokens junk
         self.slot_req: list[Optional[int]] = [None] * max_batch
@@ -164,15 +179,26 @@ class DisaggregatedEngine:
                 rec = self.records[req.req_id]
                 rec.first_token_time = self.t
                 rec.tokens_out = 1
+                rec.gathered_fetch_bytes += self.ctx.gather_bytes["fetched"]
+                rec.gathered_full_bytes += self.ctx.gather_bytes["full"]
                 self.outputs[req.req_id].append(first)
                 self.gen.admit(slot, req.req_id, first, state)
                 self.gen.slot_remaining[slot] = req.target_len - 1
             toks = self.gen.decode_step(self.params)
             self.t += 1.0
+            active = [r for r in self.gen.slot_req if r is not None]
             for slot, rid in enumerate(self.gen.slot_req):
                 if rid is None:
                     continue
                 rec = self.records[rid]
+                # the decode step's gather traffic is shared by its
+                # active slots: attribute each request its share
+                rec.gathered_fetch_bytes += (
+                    self.gen.gather_bytes["fetched"] / len(active)
+                )
+                rec.gathered_full_bytes += (
+                    self.gen.gather_bytes["full"] / len(active)
+                )
                 self.outputs[rid].append(int(toks[slot]))
                 rec.tokens_out += 1
                 self.gen.slot_remaining[slot] -= 1

@@ -1,4 +1,6 @@
-"""Serving metrics: TPS/user, TPS/GPU, TTFT (median, incl. queueing)."""
+"""Serving metrics: TPS/user, TPS/GPU, TTFT (median, incl. queueing),
+and per-request gathered-weight wire-byte counters (full vs demand) so
+engine runs report the on-demand fetch savings directly."""
 from __future__ import annotations
 
 import dataclasses
@@ -15,6 +17,11 @@ class RequestRecord:
     first_token_time: Optional[float] = None
     done_time: Optional[float] = None
     tokens_out: int = 0
+    # gathered-weight wire bytes attributed to this request (its share of
+    # every prefill/decode step it participated in): what the program
+    # actually shipped vs the expert_fetch="all" counterfactual
+    gathered_fetch_bytes: float = 0.0
+    gathered_full_bytes: float = 0.0
 
     @property
     def ttft(self) -> Optional[float]:
@@ -42,7 +49,9 @@ class ServingMetrics:
         ttfts = [r.ttft for r in done if r.ttft is not None]
         tps_users = [t for t in (r.tps_user for r in done) if t]
         total_tokens = sum(r.tokens_out for r in done)
-        return {
+        fetch_b = sum(r.gathered_fetch_bytes for r in done)
+        full_b = sum(r.gathered_full_bytes for r in done)
+        out = {
             "completed": len(done),
             "median_ttft_s": statistics.median(ttfts) if ttfts else None,
             "mean_tps_user": (
@@ -51,3 +60,10 @@ class ServingMetrics:
             "tps_per_gpu": total_tokens / horizon / self.num_gpus,
             "total_output_tokens": total_tokens,
         }
+        if full_b:
+            out["gathered_mb_fetched"] = round(fetch_b / 1e6, 3)
+            out["gathered_mb_full"] = round(full_b / 1e6, 3)
+            # < 1.0 exactly when demand fetch shipped less than the
+            # every-remote-expert gather would have
+            out["gather_fetch_ratio"] = round(fetch_b / full_b, 4)
+        return out

@@ -35,6 +35,20 @@ class SimConfig:
                                         # §4.2 merge-copy HBM write
     attn_gathered: bool = False         # model DWDP-gathered attention
                                         # (escalated sharding) land-bytes
+    expert_fetch: str = "all"           # "all" | "demand": expert-gather
+                                        # selection for every DWDP phase.
+                                        # "demand" models route-before-
+                                        # gather via the expected-coverage
+                                        # closed form — the decode win the
+                                        # Pareto sweep shows
+    gen_mode: str = "local"             # generation-server weight place-
+                                        # ment: "local" = fully resident
+                                        # per GPU group (the legacy
+                                        # model), "dwdp" = sharded over
+                                        # the gen group with a per-layer
+                                        # expert gather on the decode
+                                        # critical path (where
+                                        # expert_fetch="demand" pays off)
     gen_batch: int = 64
     isl_max: int = 8192
     isl_ratio: float = 0.8              # lengths U[ratio*max, max]
@@ -61,7 +75,7 @@ class ClusterSimulator:
         lt = roofline.layer_times(
             sc.cfg, tokens=tokens, group=sc.ctx_gpus, hw=sc.hw,
             layer=moe_layer, weight_layout=sc.weight_layout,
-            attn_gathered=sc.attn_gathered,
+            attn_gathered=sc.attn_gathered, expert_fetch=sc.expert_fetch,
         )
         n_layers = sc.cfg.num_layers
         if sc.ctx_mode == "dwdp":
@@ -77,13 +91,43 @@ class ClusterSimulator:
             per_layer = lt.t_dep + sync
         return per_layer * n_layers
 
+    def decode_wire_bytes(self, batch: int) -> float:
+        """Per-GPU wire bytes of one DWDP decode step on the generation
+        server (``gen_mode="dwdp"``): the per-layer expert gather summed
+        over MoE layers. ``expert_fetch="all"`` ships the full remote
+        bank; ``"demand"`` ships the budget-PADDED demand payload
+        (``roofline.demand_prefetch_bytes`` with the engine's shared
+        auto-budget rule — exactly what the lowered program moves, not
+        the raw coverage expectation) — the dominant decode
+        communication term the route-before-gather path shrinks. Dense
+        models gather nothing at decode scale worth modeling here
+        (experts dominate)."""
+        sc = self.sc
+        cfg = sc.cfg
+        if cfg.moe is None or sc.gen_gpus <= 1:
+            return 0.0
+        moe = cfg.moe
+        per_expert = 3 * cfg.d_model * moe.d_ff * 1.0  # NVFP4-ish
+        n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
+        g = sc.gen_gpus
+        if sc.expert_fetch == "demand":
+            per_layer = roofline.demand_prefetch_bytes(
+                batch, moe.top_k, moe.num_experts, g, per_expert
+            )
+        else:
+            per_layer = moe.num_experts * per_expert * (g - 1) / g
+        return n_moe * per_layer
+
     def gen_step_time(self, batch: int) -> float:
         """One decode iteration on a generation server (memory-bound).
 
         Weight traffic counts every *routed* expert: with batch B and
         top-k routing the expected fraction of experts touched per layer
         is 1-(1-k/E)^B, which approaches 1 well before B=64 — decode
-        streams nearly the full model each step."""
+        streams nearly the full model each step. Under
+        ``gen_mode="dwdp"`` the per-layer expert gather's wire time
+        joins the max (DWDP overlaps prefetch with compute), which is
+        where ``expert_fetch="demand"`` moves the decode frontier."""
         sc = self.sc
         cfg = sc.cfg
         w_params = cfg.active_param_count()
@@ -103,7 +147,10 @@ class ClusterSimulator:
         t_flops = 2 * cfg.active_param_count() * batch / (
             sc.hw.flops * sc.gen_gpus
         )
-        return max(t_mem, t_flops) + 2e-4  # + fixed step overhead
+        t = max(t_mem, t_flops)
+        if sc.gen_mode == "dwdp":
+            t = max(t, self.decode_wire_bytes(batch) / sc.hw.link_bw)
+        return t + 2e-4  # + fixed step overhead
 
     # ---- simulation --------------------------------------------------------
     def run(self) -> dict:

@@ -217,7 +217,10 @@ def test_route_topk_rows_dispatch_combine_identity():
 
 def test_weight_layout_flag_and_moe_ffn_alias():
     """weight_layout defaults to "split"; the deprecated moe_ffn spelling
-    still selects the layout and reads back through the alias."""
+    still selects the layout (now with a DeprecationWarning) and reads
+    back through the alias."""
+    import warnings as _warnings
+
     import jax.numpy as jnp
 
     from repro.configs import reduced_variant
@@ -231,17 +234,111 @@ def test_weight_layout_flag_and_moe_ffn_alias():
     shape = InputShape("p", 32, 2, "prefill")
     xp = make_execution_plan(m, shape, ms)
     assert xp.weight_layout == "split" and xp.moe_ffn == "split"
-    xp2 = make_execution_plan(m, shape, ms, moe_ffn="merged")
+    with pytest.warns(DeprecationWarning, match="moe_ffn"):
+        xp2 = make_execution_plan(m, shape, ms, moe_ffn="merged")
     assert xp2.weight_layout == "merged" and xp2.moe_ffn == "merged"
     xp3 = make_execution_plan(m, shape, ms, weight_layout="merged")
     assert xp3.weight_layout == "merged"
+    # the new spelling must NOT warn
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", DeprecationWarning)
+        make_execution_plan(m, shape, ms, weight_layout="merged")
     assert xp.capacity_from == "local"
     xp4 = make_execution_plan(m, shape, ms, capacity_from="global")
     assert xp4.capacity_from == "global"
-    with pytest.raises(ValueError, match="conflicting"):
+    with pytest.warns(DeprecationWarning, match="moe_ffn"):
+        with pytest.raises(ValueError, match="conflicting"):
+            make_execution_plan(
+                m, shape, ms, weight_layout="split", moe_ffn="merged"
+            )
+
+
+def test_expert_fetch_flag_validation():
+    """expert_fetch defaults to "all"; "demand" requires the split layout
+    (the demand bank is a split-bank refinement)."""
+    import jax.numpy as jnp
+
+    from repro.configs import reduced_variant
+    from repro.configs.base import InputShape
+    from repro.core.strategy import make_execution_plan
+    from repro.models.transformer import build_model
+
+    cfg = reduced_variant(get_arch("yi-9b"))
+    ms = {"data": 1, "model": 1}
+    m = build_model(cfg, ms, dtype=jnp.float32)
+    shape = InputShape("p", 32, 2, "prefill")
+    xp = make_execution_plan(m, shape, ms)
+    assert xp.expert_fetch == "all" and xp.demand_budget == 0
+    xp2 = make_execution_plan(
+        m, shape, ms, expert_fetch="demand", demand_budget=16
+    )
+    assert xp2.expert_fetch == "demand" and xp2.demand_budget == 16
+    with pytest.raises(ValueError, match="demand"):
         make_execution_plan(
-            m, shape, ms, weight_layout="split", moe_ffn="merged"
+            m, shape, ms, weight_layout="merged", expert_fetch="demand"
         )
+
+
+# --------------------------------------------------------------------------
+# on-demand expert fetch: expected-coverage closed form + roofline wiring
+# --------------------------------------------------------------------------
+def test_expected_distinct_experts_closed_form():
+    """E[distinct] = E(1 - (1 - 1/E)^n): zero draws hit nothing, the curve
+    is monotone in n, bounded by min(n, E), and saturates toward E."""
+    f = roofline.expected_distinct_experts
+    assert f(0, 256) == 0.0
+    prev = 0.0
+    for n in (1, 8, 64, 512, 4096):
+        cur = f(n, 256)
+        assert prev < cur <= min(n, 256) + 1e-9
+        prev = cur
+    assert f(1, 256) == pytest.approx(1.0)
+    assert f(100_000, 256) == pytest.approx(256.0, rel=1e-3)
+
+
+def test_demand_prefetch_bytes_below_full_and_capped():
+    """Decode-scale routing (gen_batch=8, topk=8, E=256, DWDP4 — the
+    acceptance shape) must model strictly fewer wire bytes than the full
+    remote gather; at prefill-scale coverage the model caps at the full
+    gather, never above. The priced payload is the budget-PADDED one
+    (the engine's shared auto rule), so it matches what the lowered
+    program ships — budget 32 of 64 local rows at this shape."""
+    e, k, group = 256, 8, 4
+    local = e // group
+    pe = 3 * 7168 * 2048 * 1  # R1-ish expert bytes (NVFP4)
+    full = e * pe * (group - 1) / group
+    assert roofline.demand_budget_rows(8 * k, e, local) == 32
+    demand = roofline.demand_prefetch_bytes(8, k, e, group, pe)
+    assert demand == pytest.approx(full * 0.5, rel=1e-3), (demand, full)
+    assert demand < full
+    # engine parity: an explicit budget prices (G'-1) * budget rows
+    explicit = roofline.demand_prefetch_bytes(8, k, e, group, pe, budget=8)
+    assert explicit == pytest.approx(
+        (group - 1) * (8 * pe + e), rel=1e-9
+    )
+    # near-full coverage: capped at the full remote gather
+    capped = roofline.demand_prefetch_bytes(100_000, k, e, group, pe)
+    assert capped == pytest.approx(full)
+
+
+def test_layer_times_demand_shrinks_decode_prefetch():
+    """layer_times(expert_fetch="demand") shrinks the decode prefetch
+    term (the dominant decode communication term) and leaves compute
+    untouched; at context-phase token counts the term is unchanged
+    (coverage is full, demand auto-falls-back)."""
+    cfg = get_arch("deepseek-r1")
+    moe_layer = cfg.moe.first_dense
+    kw = dict(group=4, layer=moe_layer, weight_layout="split")
+    dec_all = roofline.layer_times(cfg, tokens=8, **kw)
+    dec_dem = roofline.layer_times(cfg, tokens=8, expert_fetch="demand", **kw)
+    assert dec_dem.prefetch < dec_all.prefetch
+    assert dec_dem.land_bytes < dec_all.land_bytes
+    assert dec_dem.compute == dec_all.compute
+    ctx_all = roofline.layer_times(cfg, tokens=16384, **kw)
+    ctx_dem = roofline.layer_times(
+        cfg, tokens=16384, expert_fetch="demand", **kw
+    )
+    assert ctx_dem.prefetch == ctx_all.prefetch
 
 
 def test_moe_capacity_drops_tokens():

@@ -13,12 +13,15 @@ from repro.kernels.split_gemm.ops import (
     split_dense_swiglu_ref,
     split_gemm,
     split_grouped_gemm_ref,
+    split_grouped_swiglu_demand_ref,
     split_grouped_swiglu_ref,
     split_reduce_gemm_ref,
     split_reduce_matmul,
     split_stack_gemm_ref,
     split_stack_matmul,
     split_swiglu,
+    split_swiglu_demand,
+    split_swiglu_demand_jnp,
     split_swiglu_jnp,
 )
 
@@ -198,6 +201,103 @@ def test_split_swiglu_down_proj_output_blocking():
 
 
 # --------------------------------------------------------------------------
+# demand-fetched split SwiGLU (on-demand expert fetch, route-before-gather)
+# --------------------------------------------------------------------------
+def _demand_valid(e_f, pattern, key=0):
+    if pattern == "all":
+        return jnp.ones((e_f,), bool)
+    if pattern == "none":
+        return jnp.zeros((e_f,), bool)
+    return jax.random.bernoulli(jax.random.key(key), 0.6, (e_f,))
+
+
+@pytest.mark.parametrize(
+    "e_l,e_f,c,d,f,pattern",
+    [
+        (4, 4, 128, 256, 128, "all"),    # budget fully used
+        (3, 5, 64, 128, 256, "mixed"),   # partial validity (budget slack)
+        (2, 6, 24, 96, 160, "none"),     # nothing fetched was needed
+        (4, 1, 7, 64, 128, "all"),       # decode-scale capacity
+        (6, 0, 64, 128, 128, "all"),     # empty fetched bank
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_split_swiglu_demand_shapes(e_l, e_f, c, d, f, pattern, dtype):
+    """The demand kernel over (resident, budget-padded fetched) banks
+    matches the masked oracle; invalid rows (clamped junk weights by
+    contract) flush exact zeros."""
+    ops = _swiglu_operands(e_l + e_f, e_l, c, d, f, dtype)
+    valid = _demand_valid(e_f, pattern, key=e_l + e_f)
+    got = split_swiglu_demand(
+        *ops, valid, block_c=64, block_f=128, block_d=128
+    )
+    ref = split_grouped_swiglu_demand_ref(*ops, valid)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+    if not np.asarray(valid).all():
+        invalid = ~np.asarray(valid)
+        np.testing.assert_array_equal(
+            np.asarray(got, np.float32)[e_l:][invalid], 0.0
+        )
+    jnp_got = split_swiglu_demand(*ops, valid, impl="jnp")
+    np.testing.assert_allclose(
+        np.asarray(jnp_got, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_split_swiglu_demand_matches_split_on_routed_experts():
+    """The bitwise contract the engine's demand path relies on: a routed
+    expert's (C, D) block computes identically whether its weights arrive
+    via the all-fetch split bank or the compacted demand bank (same
+    streaming structure, same accumulation order)."""
+    e, e_l, c, d, f = 8, 4, 24, 64, 96
+    ops = _swiglu_operands(e, e_l, c, d, f, jnp.float32)
+    full = split_swiglu(*ops, block_c=8, block_f=32, block_d=32)
+    # demand-compact the remote bank: fetch remote experts [1, 3] only
+    x = ops[0]
+    take = jnp.array([1, 3])
+    xd = jnp.concatenate([x[:e_l], x[e_l:][take]], 0)
+    banks = [w[take] for w in ops[4:]]
+    got = split_swiglu_demand(
+        xd, *ops[1:4], *banks, jnp.ones((2,), bool),
+        block_c=8, block_f=32, block_d=32,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got[:e_l]), np.asarray(full[:e_l])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got[e_l:]), np.asarray(full[e_l:][take])
+    )
+
+
+def test_split_swiglu_demand_grad_matches_masked_merged():
+    """Grad of the differentiable demand formulation w.r.t. both banks
+    and the tokens equals the masked merged baseline's — what lets the
+    route-before-gather path ride the ZeRO-style train gathers."""
+    ops = _swiglu_operands(6, 2, 32, 64, 96, jnp.float32)
+    valid = jnp.array([1, 0, 1, 1], bool)
+
+    def loss_demand(args):
+        return jnp.sum(jnp.sin(split_swiglu_demand_jnp(*args, valid)))
+
+    def loss_merged(args):
+        return jnp.sum(
+            jnp.sin(split_grouped_swiglu_demand_ref(*args, valid))
+        )
+
+    g_demand = jax.grad(loss_demand)(ops)
+    g_merged = jax.grad(loss_merged)(ops)
+    for gd, gm in zip(g_demand, g_merged):
+        np.testing.assert_allclose(
+            np.asarray(gd), np.asarray(gm), atol=2e-5, rtol=2e-5
+        )
+
+
+# --------------------------------------------------------------------------
 # split dense matmul family (attention QKV/O, dense FFN slices)
 # --------------------------------------------------------------------------
 @pytest.mark.parametrize(
@@ -331,6 +431,24 @@ def test_split_dense_swiglu_property(s, split, t):
         wg[perm][s_l:], wu[perm][s_l:], wd[perm][s_l:]
     )
     np.testing.assert_allclose(np.asarray(got_p), np.asarray(ref), atol=2e-5)
+
+
+def test_split_dense_swiglu_down_proj_output_blocking():
+    """block_o ported from the grouped kernel to the dense fused SwiGLU
+    (ROADMAP's last open split-bank item): every blocking choice —
+    including a non-dividing one that falls back — matches the unblocked
+    result and the merged oracle."""
+    ops = _dense_swiglu_operands(4, 2, 64, 256, 32, jnp.float32)
+    ref = split_dense_swiglu_ref(*ops)
+    for bo in (None, 64, 128, 100, 256):
+        got = split_dense_ffn(
+            *ops, block_c=32, block_f=16, block_d=64, block_o=bo,
+            impl="pallas",
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref), atol=2e-5,
+            err_msg=f"block_o={bo}",
+        )
 
 
 def test_split_dense_ffn_grad_matches_merged():

@@ -619,3 +619,258 @@ def test_split_attn_hlo_has_no_merged_stack(prefetch):
     assert r["merged_full"] > 0, r
     assert r["split_full"] == 0, r
     assert r["split_remote"] > 0, r
+
+
+# --------------------------------------------------------------------------
+# On-demand expert fetch (route-before-gather): demand vs split
+# equivalence, overflow fallback exactness, and the lowering claim.
+# --------------------------------------------------------------------------
+DEMAND_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import warnings; warnings.filterwarnings("ignore")
+import json, sys
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import ArchConfig, MoEConfig, InputShape
+from repro.models.transformer import build_model
+from repro.models.cache import init_decode_state
+from repro.core.strategy import make_execution_plan
+from repro.core import execution
+from repro.launch.mesh import _mesh
+from repro.analysis import tensor_shape_count
+
+# E=20 over a 4-wide model axis: G'=4, local 5, remote 15. Prefill B=2
+# S=8 seq-shards over "model" -> 2 routed tokens/rank * k=2 = 4 < 15, so
+# the demand path is coverage-eligible; decode B=4 likewise (2 rows).
+# All weight dims (20, 32, 48, 15, and the budget-derived fetched count)
+# are distinct from activation dims so HLO shape matching is unambiguous.
+CFG = ArchConfig(
+    name="demand-split-test", family="moe", num_layers=4, d_model=32,
+    num_heads=2, num_kv_heads=2, head_dim=16, d_ff=0, vocab_size=128,
+    moe=MoEConfig(num_experts=20, top_k=2, d_ff=48),
+)
+
+def setup(mesh_shape):
+    ms = {"data": mesh_shape[0], "model": mesh_shape[1]}
+    mesh = _mesh(mesh_shape, ("data", "model"))
+    m = build_model(CFG, ms, dtype=jnp.float32)
+    return ms, mesh, m
+
+def prefill_logits(expert_fetch, prefetch, mesh_shape, budget=0):
+    ms, mesh, m = setup(mesh_shape)
+    params = m.init_params(jax.random.key(42))
+    # capacity_factor high enough that no token drops on either mesh:
+    # 2 routed tokens/rank need capacity >= 2, i.e. cf >= 5 at E=20, k=2
+    xp = make_execution_plan(m, InputShape("t", 8, 2, "prefill"), ms,
+                             mode="dwdp", prefetch=prefetch,
+                             expert_fetch=expert_fetch,
+                             demand_budget=budget, capacity_factor=12.0)
+    if expert_fetch == "demand":
+        assert execution.demand_fetch_active(CFG, m.geom, xp), "not eligible"
+    step = execution.make_step_fn(m, xp, mesh)
+    batch = {"tokens": jax.random.randint(
+        jax.random.key(1), (2, 8), 0, CFG.vocab_size)}
+    with mesh:
+        out = step(params, batch)
+    return np.asarray(out["last_logits"], np.float64)
+
+def decode_tokens(expert_fetch, mesh_shape, budget=0, steps=3):
+    ms, mesh, m = setup(mesh_shape)
+    params = m.init_params(jax.random.key(42))
+    xp = make_execution_plan(m, InputShape("d", 64, 4, "decode"), ms,
+                             mode="dwdp", expert_fetch=expert_fetch,
+                             demand_budget=budget)
+    if expert_fetch == "demand":
+        assert execution.demand_fetch_active(CFG, m.geom, xp), "not eligible"
+    step = execution.make_step_fn(m, xp, mesh)
+    state = init_decode_state(m, 4, 64)
+    tok = jnp.full((4, 1), 7, jnp.int32)
+    toks = []
+    with mesh:
+        for _ in range(steps):
+            o = step(params, {"token": tok}, state)
+            tok, state = o["next_token"], o["state"]
+            toks += np.asarray(tok).ravel().tolist()
+    return toks
+
+def lowered_text(expert_fetch, prefetch, budget=0):
+    ms, mesh, m = setup((2, 4))
+    params = jax.eval_shape(m.init_params, jax.random.key(0))
+    xp = make_execution_plan(m, InputShape("t", 8, 2, "prefill"), ms,
+                             mode="dwdp", prefetch=prefetch,
+                             expert_fetch=expert_fetch, demand_budget=budget)
+    step = execution.make_step_fn(m, xp, mesh)
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 8), jnp.int32)}
+    with mesh:
+        return step.lower(params, batch).as_text()
+
+def demand_primitive(want_per_peer, budget, experts=16):
+    # primitive-level: crafted request masks -> deterministic overflow
+    # flag + exact fetched rows/ids against the canonical gather.
+    # experts=16 -> R=1, G'=8, local 2; experts=4 -> R=2 redundant
+    # subgroups of G'=4, local 1 (the index round must stay subgroup-
+    # scoped there).
+    from repro.compat import shard_map
+    from repro.core import prefetch as pf
+    from repro.core.placement import make_placement
+    from jax.sharding import PartitionSpec as P
+
+    mesh = _mesh((8,), ("model",))
+    pl = make_placement(experts, 8)
+    g, local = pl.subgroup_size, pl.local_count
+    npad = pl.num_padded
+    x = jnp.arange(pl.storage_size * 3, dtype=jnp.float32).reshape(-1, 3)
+
+    def body(xs):
+        p = jax.lax.axis_index("model") % g
+        owner = (p + 1) % g
+        # want the first `want_per_peer` experts of the NEXT peer only
+        wanted = jnp.zeros((npad,), bool)
+        ids = owner * local + jnp.arange(local)
+        wanted = wanted.at[ids].set(jnp.arange(local) < want_per_peer)
+        plan = pf.plan_demand_fetch(wanted, "model", pl, budget=budget,
+                                    agree_axes=("model",))
+        bank = pf.gather_demand_payload(xs, plan, "model", pl,
+                                        budget=budget)
+        canon = pf.gather_shards(xs, "model", pl)
+        got = bank.fetched
+        want_rows = canon[plan.fetched_ids]
+        err = jnp.where(
+            plan.valid[:, None], jnp.abs(got - want_rows), 0.0
+        ).max()
+        n_valid = jnp.sum(plan.valid.astype(jnp.int32))
+        return jnp.stack([
+            err, plan.overflow.astype(jnp.float32),
+            n_valid.astype(jnp.float32)])[None]
+
+    f = shard_map(body, mesh=mesh, in_specs=P("model"),
+                  out_specs=P("model"), check_vma=False)
+    with mesh:
+        out = np.asarray(f(x))
+    return {"err": float(out[:, 0].max()),
+            "overflow": bool(out[:, 1].max() > 0),
+            "n_valid": out[:, 2].tolist()}
+
+case = json.loads(sys.argv[1])
+kind = case.pop("kind")
+results = {}
+if kind == "prefill":
+    prefetch = case.get("prefetch", "allgather")
+    budget = case.get("budget", 100)   # >= local: budget covers, no overflow
+    ref = prefill_logits("all", "allgather", (1, 1))
+    split = prefill_logits("all", prefetch, (2, 4))
+    demand = prefill_logits("demand", prefetch, (2, 4), budget=budget)
+    scale = np.abs(ref).max() + 1e-9
+    results = {
+        "demand_vs_split_bitwise": bool((demand == split).all()),
+        "demand_vs_split": float(np.abs(demand - split).max() / scale),
+        "demand_vs_ref": float(np.abs(demand - ref).max() / scale),
+    }
+elif kind == "decode":
+    budget = case.get("budget", 100)
+    split = decode_tokens("all", (2, 4))
+    demand = decode_tokens("demand", (2, 4), budget=budget)
+    results = {"match": demand == split, "split": split, "demand": demand}
+elif kind == "prim":
+    results = demand_primitive(case["want"], case["budget"],
+                               experts=case.get("experts", 16))
+elif kind == "hlo":
+    d, fe = CFG.d_model, CFG.moe.d_ff
+    budget = 4                       # n_fetch = 3 * 4 = 12 rows
+    full = [(20, d, fe), (20, fe, d)]
+    fetched = [(12, d, fe), (12, fe, d)]
+    txt_all = lowered_text("all", case["prefetch"])
+    txt_dem = lowered_text("demand", case["prefetch"], budget=budget)
+    results = {
+        "all_full": sum(tensor_shape_count(txt_all, s) for s in full),
+        "demand_full": sum(tensor_shape_count(txt_dem, s) for s in full),
+        "demand_fetched": sum(tensor_shape_count(txt_dem, s) for s in fetched),
+    }
+print("RESULT::" + json.dumps(results))
+"""
+
+
+def run_demand_case(case: dict) -> dict:
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", DEMAND_SCRIPT, json.dumps(case)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT::")][-1]
+    return json.loads(line[len("RESULT::"):])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("prefetch", ["allgather", "ring", "ring_sliced"])
+def test_demand_prefill_matches_split_bitwise(prefetch):
+    """When the budget covers the activated set, expert_fetch="demand"
+    must produce BITWISE-identical prefill outputs to the all-fetch split
+    path (same per-expert streaming, same accumulation order — only the
+    weights' transport differs), in every prefetch mode; both track the
+    1-device reference."""
+    r = run_demand_case({"kind": "prefill", "prefetch": prefetch})
+    assert r["demand_vs_split_bitwise"], r
+    assert r["demand_vs_ref"] < 2e-3, r
+
+
+@pytest.mark.slow
+def test_demand_decode_matches_split():
+    """Greedy decode through the route-before-gather path (per-row KV
+    positions downstream of demand-fetched experts) matches the all-fetch
+    split path exactly."""
+    r = run_demand_case({"kind": "decode"})
+    assert r["match"], r
+
+
+@pytest.mark.slow
+def test_demand_overflow_falls_back_exactly():
+    """budget=1 per peer cannot cover 8 ranks' activated sets: the
+    axis-agreed overflow flag engages the full-remote-gather fallback and
+    results stay exactly equal to the all-fetch path (exactness is never
+    a function of the budget)."""
+    r = run_demand_case({"kind": "prefill", "budget": 1})
+    assert r["demand_vs_split_bitwise"], r
+    r = run_demand_case({"kind": "decode", "budget": 1})
+    assert r["match"], r
+
+
+@pytest.mark.slow
+def test_demand_primitive_plan_and_payload():
+    """Primitive-level contract of the two-round demand gather with
+    crafted request masks: fetched rows equal the canonical gather's rows
+    at fetched_ids, per-peer valid counts are exact, and the overflow
+    flag fires exactly when a peer's request exceeds the budget."""
+    ok = run_demand_case({"kind": "prim", "want": 1, "budget": 1})
+    assert ok["err"] == 0.0, ok
+    assert not ok["overflow"], ok
+    assert all(v == 1.0 for v in ok["n_valid"]), ok  # 1 row from 1 peer
+    over = run_demand_case({"kind": "prim", "want": 2, "budget": 1})
+    assert over["overflow"], over
+    full = run_demand_case({"kind": "prim", "want": 2, "budget": 2})
+    assert full["err"] == 0.0, full
+    assert not full["overflow"], full
+    assert all(v == 2.0 for v in full["n_valid"]), full
+    # redundant placement (R=2 subgroups of G'=4): the index round stays
+    # subgroup-scoped and payloads come from the right copy
+    red = run_demand_case(
+        {"kind": "prim", "want": 1, "budget": 1, "experts": 4}
+    )
+    assert red["err"] == 0.0, red
+    assert not red["overflow"], red
+    assert all(v == 1.0 for v in red["n_valid"]), red
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("prefetch", ["allgather", "ring"])
+def test_demand_hlo_has_no_full_expert_bank(prefetch):
+    """The lowering claim for route-before-gather: the demand module
+    contains NO tensor of the full canonical expert-bank shape
+    (num_padded, D, Fe)/(num_padded, Fe, D) — the compacted
+    budget-padded fetched bank exists instead — while even the all-fetch
+    split module never materializes the full bank either (its remote bank
+    is the biggest buffer)."""
+    r = run_demand_case({"kind": "hlo", "prefetch": prefetch})
+    assert r["all_full"] == 0, r      # split path already merge-free
+    assert r["demand_full"] == 0, r   # demand adds no full bank
+    assert r["demand_fetched"] > 0, r  # compacted fetched bank exists
