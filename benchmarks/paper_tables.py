@@ -248,6 +248,57 @@ def bench_table6_ttft() -> list[dict]:
     return rows
 
 
+BENCH_POLICY_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..", "BENCH_policy_auto.json"
+)
+
+
+def bench_policy_auto(out_path: str = BENCH_POLICY_JSON) -> list[dict]:
+    """policy="auto" vs every uniform policy at the DeepSeek-R1 decode
+    acceptance shape (gen_batch=8, topk=8, E=256, DWDP4 gather geometry):
+    one row per uniform (layout, fetch) table plus the resolver's pick,
+    scored by ``roofline.modeled_step_time`` (per-layer ``max(compute +
+    landing, prefetch)`` summed over the stack). Rewrites
+    BENCH_policy_auto.json; ``auto_vs_best_uniform`` <= 1.0 is the
+    acceptance bar (auto must match or beat the best uniform table)."""
+    import jax.numpy as jnp
+
+    from repro.configs.base import InputShape
+    from repro.core.strategy import PolicyTable, resolve_policies
+    from repro.models.transformer import build_model
+
+    cfg = get_arch(R1)
+    ms = {"data": 2, "model": 4}
+    model = build_model(cfg, ms, dtype=jnp.bfloat16, moe_exec="gather",
+                        expert_axes=("model",))
+    shape = InputShape("gen", 2048, 8, "decode")
+    kw = dict(tokens=shape.global_batch, group=4, kv_len=shape.seq_len,
+              attn_gathered=bool(model.geom.attn_axes))
+    rows = []
+    uniform_ts = []
+    for layout in ("merged", "split"):
+        for fetch in ("all", "demand") if layout == "split" else ("all",):
+            tab = PolicyTable.uniform(layout=layout, fetch=fetch)
+            t = roofline.modeled_step_time(cfg, policies=tab, **kw)
+            uniform_ts.append(t)
+            rows.append({
+                "policy": f"uniform {layout}/{fetch}",
+                "modeled_decode_step_ms": round(t * 1e3, 4),
+            })
+    auto = resolve_policies(model, shape, ms, policy="auto")
+    t_auto = roofline.modeled_step_time(cfg, policies=auto, **kw)
+    rows.append({
+        "policy": "auto",
+        "modeled_decode_step_ms": round(t_auto * 1e3, 4),
+        "auto_vs_best_uniform": round(t_auto / min(uniform_ts), 4),
+        "resolved": auto.describe(),
+    })
+    with open(out_path, "w") as f:
+        json.dump({"shape": "r1 decode gen_batch=8 topk=8 E=256 group=4",
+                   "rows": rows}, f, indent=1)
+    return rows
+
+
 def bench_placement() -> list[dict]:
     """DWDP flexible-placement table: remote prefetch fraction per
     (experts x group) including non-divisible groups (paper §2)."""

@@ -22,6 +22,7 @@ def _all_benchmarks():
         "table5_e2e": paper_tables.bench_table5_e2e,
         "table6_ttft": paper_tables.bench_table6_ttft,
         "placement": paper_tables.bench_placement,
+        "policy_auto": paper_tables.bench_policy_auto,
         "kernels": kernels_bench.bench_kernels,
         "split_moe": kernels_bench.bench_split_moe,
         "split_attn": kernels_bench.bench_split_attn,

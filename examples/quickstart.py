@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from repro.configs import get_arch, reduced_variant
 from repro.configs.base import InputShape
 from repro.core import execution
-from repro.core.strategy import make_execution_plan
+from repro.core.strategy import PolicyTable, make_execution_plan
 from repro.launch.mesh import make_smoke_mesh, mesh_sizes
 from repro.models.cache import init_decode_state
 from repro.models.transformer import build_model
@@ -46,7 +46,7 @@ def main():
                                 cfg.vocab_size)
     xp = make_execution_plan(
         model, InputShape("p", prompt_len, 1, "prefill"), sizes,
-        mode=args.mode, prefetch=args.prefetch,
+        mode=args.mode, policy=PolicyTable.uniform(transport=args.prefetch),
     )
     prefill = execution.make_step_fn(model, xp, mesh, capture_len=cache_len)
     out = prefill(params, {"tokens": prompt})

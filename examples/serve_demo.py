@@ -10,6 +10,11 @@ gathered-weight counters):
     PYTHONPATH=src python examples/serve_demo.py --arch glm4-9b \
         --fake-devices 8 --mesh 2,4 --gen-mode dwdp --expert-fetch demand
 
+Per-family mixed policies (the GatherPolicy API) ride the same flags:
+
+    ... --gen-mode dwdp --policy moe_experts=split:demand:ring_sliced \
+        --policy attn_qkv=merged --policy dense_ffn=split:all:ring
+
 Note the reduced CPU variants clamp MoE to 4 experts, so decode coverage
 is full and the demand ratio reads 1.0 (the eligibility gate correctly
 keeps the all-fetch gather); the savings appear at real expert counts —
@@ -51,15 +56,23 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--ctx-mode", default="dwdp", choices=["dwdp", "dep"])
     ap.add_argument("--gen-mode", default="dep", choices=["dep", "dwdp"])
-    ap.add_argument("--weight-layout", default="split",
+    ap.add_argument("--policy", action="append", default=None,
+                    metavar="FAMILY=SPEC",
+                    help="per-family gather policy (repeatable; see "
+                         "launch/serve.py) — family=layout[:fetch"
+                         "[:transport[:num_slices[:budget]]]], or 'auto' "
+                         "for the roofline-guided resolver")
+    ap.add_argument("--policy-file", default=None,
+                    help="JSON PolicyTable (PolicyTable.to_dict shape)")
+    ap.add_argument("--weight-layout", default=None,
                     choices=["merged", "split"],
-                    help="gathered-weight representation (split = the "
-                         "§4.2 fast path, the engine default)")
-    ap.add_argument("--expert-fetch", default="all",
+                    help="uniform gathered-weight representation (the "
+                         "pre-PolicyTable spelling)")
+    ap.add_argument("--expert-fetch", default=None,
                     choices=["all", "demand"],
                     help="route-before-gather demand fetch of only the "
                          "activated experts (vs every remote expert)")
-    ap.add_argument("--demand-budget", type=int, default=0,
+    ap.add_argument("--demand-budget", type=int, default=None,
                     help="per-peer demand-fetch row budget (0 = auto)")
     ap.add_argument("--mesh", default="1,1",
                     help="data,model mesh shape (e.g. 2,4)")
@@ -67,6 +80,12 @@ def main():
                     help="force N fake host devices (CPU multi-rank demo)")
     args = ap.parse_args()
     mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+
+    from repro.launch.serve import resolve_cli_policy
+    try:
+        policy = resolve_cli_policy(args)
+    except ValueError as e:
+        ap.error(str(e))
 
     cfg = reduced_variant(get_arch(args.arch))
     engine, model = build_engine(
@@ -78,9 +97,11 @@ def main():
         ctx_mode=args.ctx_mode,
         gen_mode=args.gen_mode,
         weight_layout=args.weight_layout,
-        expert_fetch=args.expert_fetch,
-        demand_budget=args.demand_budget,
+        expert_fetch=args.expert_fetch or "all",
+        demand_budget=args.demand_budget or 0,
+        policy=policy,
     )
+    print("gen policies:", engine.gen.xp.policies.describe())
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         engine.submit(Request(
@@ -98,9 +119,11 @@ def main():
         print(
             f"gathered weights: {summary['gathered_mb_fetched']} MB shipped"
             f" vs {summary['gathered_mb_full']} MB full-remote"
-            f" ({100 * saved:.1f}% saved by expert_fetch="
-            f"{args.expert_fetch!r})"
+            f" ({100 * saved:.1f}% saved by the expert-fetch policy)"
         )
+        for fam, mb in summary.get("gathered_mb_by_family", {}).items():
+            print(f"  {fam:>12}: {mb['fetched']} MB shipped"
+                  f" / {mb['full']} MB full")
     for rid in sorted(engine.outputs)[:4]:
         toks = engine.outputs[rid]
         print(f"req {rid}: {toks}")

@@ -87,7 +87,12 @@ def analytic_residency_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2,
     (+grads+adam fp32 for train) at their sharded layout, KV cache, double
     buffered gather window, activation checkpoints. The CPU backend's
     memory_analysis over-reports (f32 conversion, conservative liveness),
-    so the fit claim uses this analytic number; both are recorded."""
+    so the fit claim uses this analytic number; both are recorded.
+
+    Prices the plan's FAMILY-level policies (like analytic_hbm_bytes
+    below): per-layer-group PolicyTable overrides are honored by the
+    engine but not resolved here — the report has no layer-group
+    dimension."""
     import math as _m
 
     chips = _m.prod(xp.mesh_sizes.values())
@@ -147,12 +152,18 @@ def analytic_residency_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2,
         layer_sets.append(ffn_set)
     if geom.attn_axes and not _qgather_ok(geom, xp):
         # qgather decode keeps attention weights sharded (no gather
-        # window at all) — mirror gather_set, like the moe gate above
-        attn_set = (
-            cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * cfg.d_model
-        ) * dtype_bytes
-        if split_bank_active(geom, xp, "attn"):
-            attn_set *= 1 - 1 / max(1, geom.attn_shards)
+        # window at all) — mirror gather_set, like the moe gate above.
+        # qkv and out are separate policy families: each part's window
+        # shrinks only when ITS policy runs split.
+        attn_set = 0.0
+        for fam, part in (
+            ("attn_qkv",
+             cfg.d_model * (cfg.q_dim + 2 * cfg.kv_dim) * dtype_bytes),
+            ("attn_out", cfg.q_dim * cfg.d_model * dtype_bytes),
+        ):
+            if split_bank_active(geom, xp, fam):
+                part *= 1 - 1 / max(1, geom.attn_shards)
+            attn_set += part
         layer_sets.append(attn_set)
     gather_buf = 2 * max(layer_sets)
     # KV cache (decode) / activations
@@ -244,11 +255,18 @@ def analytic_hbm_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2) -> float:
         ) * dtype_bytes
         if geom.attn_axes and not _qgather_ok(geom, xp):
             # qgather decode never gathers attention weights (it moves
-            # q/k/v activations instead) — mirror gather_set
-            gathered_extra += _land(
-                attn_w, axsize(geom.attn_axes),
-                split_bank_active(geom, xp, "attn"),
-            )
+            # q/k/v activations instead) — mirror gather_set. The mixer
+            # bytes split between the attn_qkv / attn_out families in
+            # projection-size proportion, each landing per ITS layout.
+            qkv_dims = cfg.q_dim + 2 * cfg.kv_dim
+            qkv_frac = qkv_dims / (qkv_dims + cfg.q_dim)
+            for fam, frac in (
+                ("attn_qkv", qkv_frac), ("attn_out", 1.0 - qkv_frac)
+            ):
+                gathered_extra += _land(
+                    attn_w * frac, axsize(geom.attn_axes),
+                    split_bank_active(geom, xp, fam),
+                )
         if geom.cell_axes:
             gathered_extra += _land(cell_w, axsize(geom.cell_axes), False)
         # dense FFN slices (+ always-on shared experts)

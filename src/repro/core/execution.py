@@ -9,25 +9,32 @@ in *what moves*:
   the ``lax.scan`` carry (the paper's double buffering) — or ring-rotated
   through ranks when a full layer set cannot fit HBM. Activations never
   cross ranks for the FFN path; each rank serves its own tokens end to
-  end. With ``ExecutionPlan.weight_layout == "split"`` (the default) the
-  gather is remote-only for EVERY prefetched family (§4.2 generalized):
-  the prefetch pipeline emits a ``prefetch.SplitBank`` per family — MoE
-  expert banks, attention QKV/O, dense-FFN slices — the resident shard
-  never re-lands, the prefetched payload is the ``(G'-1)/G'`` remote
-  bank, and the fused split kernels consume both banks directly. No
-  merged gathered-weight buffer (``(num_padded, D, F)`` expert bank,
-  ``(A, D, qd/A)`` attention stack, ``(S, D, F/S)`` FFN stack) is ever
-  materialized. ``weight_layout == "merged"`` keeps the legacy explicit
-  merge (one canonical contiguous landing per family) as the baseline;
-  multi-axis (ZeRO-wide) gathers fall back to it automatically.
+  end. HOW each family is gathered is a per-family decision now: the
+  plan carries a ``strategy.PolicyTable`` (``ExecutionPlan.policies``)
+  and every consumer here reads ``xp.policy(family, group)`` —
+  ``moe_experts``, ``attn_qkv``, ``attn_out``, ``dense_ffn`` — for its
+  ``(layout, fetch, transport, num_slices, budget)``. With
+  ``layout == "split"`` (the default) the gather is remote-only (§4.2
+  generalized): the prefetch pipeline emits a ``prefetch.SplitBank`` for
+  that family, the resident shard never re-lands, the prefetched payload
+  is the ``(G'-1)/G'`` remote bank, and the fused split kernels consume
+  both banks directly — no merged gathered-weight buffer (``(num_padded,
+  D, F)`` expert bank, ``(A, D, qd/A)`` attention stack, ``(S, D, F/S)``
+  FFN stack) is ever materialized. ``layout == "merged"`` keeps the
+  legacy explicit merge (one canonical contiguous landing) per family;
+  multi-axis (ZeRO-wide) gathers fall back to it automatically. Because
+  the table is per-family, heterogeneous plans lower into ONE forward:
+  e.g. demand-fetched split MoE experts + merged-allgather attention +
+  split-ring dense FFN (the mixed plan the tests assert bitwise against
+  its uniform-transport reference).
 - **dep**: activations move. MoE uses all-to-all dispatch/combine; dense
   layers use gather + reduce-scatter TP (the synchronizing layer-boundary
   collectives of paper Fig. 1).
 - **replicated**: nothing moves (pure DP reference; only meaningful when
   the weights fit replicated).
 
-On-demand expert fetch (``ExecutionPlan.expert_fetch == "demand"`` — the
-paper's "fetching missing experts on demand") inverts the engine's layer
+On-demand expert fetch (``xp.policy("moe_experts").fetch == "demand"`` —
+the paper's "fetching missing experts on demand") inverts the engine's layer
 structure for eligible MoE layers: **route-before-gather**. The
 layer-ahead double buffering assumes the gather operand is known before
 the layer runs — true for whole weight families, false for the
@@ -110,6 +117,7 @@ class Ctx:
     pos: Any = None          # decode: (B,) per-row positions (traced)
     q_offset: Any = 0        # prefill/train: global offset of local seq slice
     capture_len: int = 0     # prefill: also emit a decode state of this len
+    group: Optional[str] = None  # current layer-group name (policy overrides)
 
     @property
     def cfg(self):
@@ -140,11 +148,13 @@ def _dep_tp_ok(geom: Geometry, xp: ExecutionPlan, what: str) -> bool:
     return False
 
 
-def moe_split_active(geom: Geometry, xp: ExecutionPlan) -> bool:
+def moe_split_active(
+    geom: Geometry, xp: ExecutionPlan, group: Optional[str] = None
+) -> bool:
     """Does the DWDP-gather MoE path run the §4.2 split fast path?"""
     pl = geom.moe_placement
     return (
-        getattr(xp, "weight_layout", "merged") == "split"
+        xp.policy("moe_experts", group).layout == "split"
         and xp.mode == "dwdp"
         and geom.moe_exec == "gather"
         and pl is not None
@@ -152,32 +162,40 @@ def moe_split_active(geom: Geometry, xp: ExecutionPlan) -> bool:
     )
 
 
-def dense_split_active(geom: Geometry, xp: ExecutionPlan, axes: tuple[str, ...]) -> bool:
-    """Does a leading-stacked dense family (attention, dense FFN) gathered
-    over ``axes`` use the split-bank representation?
+def dense_split_active(
+    geom: Geometry,
+    xp: ExecutionPlan,
+    axes: tuple[str, ...],
+    family: str = "dense_ffn",
+    group: Optional[str] = None,
+) -> bool:
+    """Does a leading-stacked dense family (attn_qkv / attn_out /
+    dense_ffn) gathered over ``axes`` use the split-bank representation?
 
     Split covers the weights-move modes over a single mesh axis (the
     remote-only permutes are single-axis primitives); multi-axis ZeRO-wide
     train gathers and the DEP fallback gathers keep the legacy merged
     landing."""
     return (
-        getattr(xp, "weight_layout", "merged") == "split"
+        xp.policy(family, group).layout == "split"
         and xp.mode in ("dwdp", "hybrid")
         and len(axes) == 1
         and _axsize(xp, axes) > 1
     )
 
 
-def split_bank_active(geom: Geometry, xp: ExecutionPlan, key: str) -> bool:
+def split_bank_active(
+    geom: Geometry, xp: ExecutionPlan, key: str, group: Optional[str] = None
+) -> bool:
     """Unified per-family predicate: does gather_layer emit a SplitBank
-    for this gather-set key? (The one switch the roofline/residency
-    accounting mirrors.)"""
+    for this gather-set key / attention sub-family? (The one switch the
+    roofline/residency accounting mirrors.)"""
     if key == "moe/experts":
-        return moe_split_active(geom, xp)
-    if key == "attn":
-        return dense_split_active(geom, xp, geom.attn_axes)
+        return moe_split_active(geom, xp, group)
+    if key in ("attn_qkv", "attn_out"):
+        return dense_split_active(geom, xp, geom.attn_axes, key, group)
     if key in ("ffn", "moe/shared"):
-        return dense_split_active(geom, xp, geom.ffn_axes)
+        return dense_split_active(geom, xp, geom.ffn_axes, "dense_ffn", group)
     return False
 
 
@@ -189,7 +207,9 @@ def _routed_tokens(xp: ExecutionPlan) -> int:
     return max(1, xp.local_batch) * max(1, xp.local_seq)
 
 
-def demand_fetch_active(cfg, geom: Geometry, xp: ExecutionPlan) -> bool:
+def demand_fetch_active(
+    cfg, geom: Geometry, xp: ExecutionPlan, group: Optional[str] = None
+) -> bool:
     """Does the MoE gather run the on-demand route-before-gather path?
 
     Requires the split fast path (the demand bank is a split-bank
@@ -198,9 +218,9 @@ def demand_fetch_active(cfg, geom: Geometry, xp: ExecutionPlan) -> bool:
     i.e. when the activated set *can* be a strict subset of the remote
     bank (decode, small-batch prefill). At full coverage the "all"
     gather is never worse, so the plan silently keeps it."""
-    if getattr(xp, "expert_fetch", "all") != "demand":
+    if xp.policy("moe_experts", group).fetch != "demand":
         return False
-    if cfg.moe is None or not moe_split_active(geom, xp):
+    if cfg.moe is None or not moe_split_active(geom, xp, group):
         return False
     if len(geom.expert_axes) != 1:
         return False
@@ -209,14 +229,16 @@ def demand_fetch_active(cfg, geom: Geometry, xp: ExecutionPlan) -> bool:
     return _routed_tokens(xp) * cfg.moe.top_k < num_remote
 
 
-def resolve_demand_budget(cfg, geom: Geometry, xp: ExecutionPlan) -> int:
+def resolve_demand_budget(
+    cfg, geom: Geometry, xp: ExecutionPlan, group: Optional[str] = None
+) -> int:
     """Static per-peer demand-fetch row budget.
 
-    ``xp.demand_budget`` > 0 is honored (clamped to the per-rank expert
-    count, at which point overflow is impossible). Auto (0) applies
-    ``roofline.demand_budget_rows`` — 2x the expected per-peer
-    distinct-expert coverage, 8-aligned — the ONE closed form the
-    roofline/simulator wire models price, so the analytics and the
+    A ``moe_experts`` policy ``budget`` > 0 is honored (clamped to the
+    per-rank expert count, at which point overflow is impossible). Auto
+    (0) applies ``roofline.demand_budget_rows`` — 2x the expected
+    per-peer distinct-expert coverage, 8-aligned — the ONE closed form
+    the roofline/simulator wire models price, so the analytics and the
     lowered program always ship the same payload. Overflow beyond the
     budget is handled exactly by the per-layer fallback, so the estimate
     only tunes wire bytes, never correctness."""
@@ -225,7 +247,7 @@ def resolve_demand_budget(cfg, geom: Geometry, xp: ExecutionPlan) -> int:
     pl = geom.moe_placement
     assert pl is not None and cfg.moe is not None
     local = pl.local_count
-    user = getattr(xp, "demand_budget", 0)
+    user = xp.policy("moe_experts", group).budget
     if user > 0:
         return min(user, local)
     return demand_budget_rows(
@@ -234,7 +256,11 @@ def resolve_demand_budget(cfg, geom: Geometry, xp: ExecutionPlan) -> int:
 
 
 def gather_set(
-    sig: LayerSig, geom: Geometry, xp: ExecutionPlan, cfg=None
+    sig: LayerSig,
+    geom: Geometry,
+    xp: ExecutionPlan,
+    cfg=None,
+    group: Optional[str] = None,
 ) -> tuple[tuple[str, ...], ...]:
     """Key paths within a layer param dict that the prefetch pipeline
     gathers before the layer executes.
@@ -243,7 +269,8 @@ def gather_set(
     bank: their gather depends on the current layer's routing, so it
     runs *inside* ``_moe_apply`` instead of the layer-ahead pipeline.
     ``cfg`` is needed for that eligibility check only; callers that pass
-    none get the demand-oblivious set."""
+    none get the demand-oblivious set. ``group`` scopes per-layer-group
+    policy overrides."""
     if xp.mode == "replicated":
         return ()
     out: list[tuple[str, ...]] = []
@@ -263,7 +290,10 @@ def gather_set(
             xp.mode == "dwdp"
             and geom.moe_exec == "gather"
             and pl.subgroup_size > 1
-            and not (cfg is not None and demand_fetch_active(cfg, geom, xp))
+            and not (
+                cfg is not None
+                and demand_fetch_active(cfg, geom, xp, group)
+            )
         ):
             out.append(("moe", "experts"))
         if sig.shared_d_ff and geom.ffn_axes:
@@ -277,58 +307,68 @@ def gather_set(
 
 def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
     """Static per-rank gathered-weight wire bytes for one forward step:
-    ``{"full": ..., "fetched": ...}``.
+    ``{"full": ..., "fetched": ..., "families": {family: {"full": ...,
+    "fetched": ...}}}``.
 
     ``fetched`` is what the lowered program actually ships (demand-active
     expert layers pay the budget-padded payload + the index round);
-    ``full`` is the same step under ``expert_fetch="all"`` — the
-    counterfactual the serving metrics report savings against. Families
-    other than the expert bank contribute equally to both. Counts the
-    stacked transformer families (attention, dense FFN, shared experts,
-    MoE experts); the rare flat cell/rec gathers are not modeled here.
+    ``full`` is the same step under an all-fetch ``moe_experts`` policy —
+    the counterfactual the serving metrics report savings against.
+    ``families`` breaks both down per gathered-weight family
+    (``moe_experts``, ``attn_qkv``, ``attn_out``, ``dense_ffn``) so the
+    serving metrics can report per-family traffic, not just the MoE
+    total. Counts the stacked transformer families; the rare flat
+    cell/rec gathers are not modeled here.
     """
     cfg, geom = model.cfg, model.geom
     ws = jnp.dtype(model.dtype).itemsize
     d = cfg.d_model
-    full = 0.0
-    fetched = 0.0
+    fams = {
+        f: {"full": 0.0, "fetched": 0.0}
+        for f in ("moe_experts", "attn_qkv", "attn_out", "dense_ffn")
+    }
+
+    def add(fam: str, n_cycles: int, full_b: float, fetched_b=None):
+        fams[fam]["full"] += full_b * n_cycles
+        fams[fam]["fetched"] += (
+            full_b if fetched_b is None else fetched_b
+        ) * n_cycles
+
     for group in model.plan:
         for sig in group.sigs:
-            paths = gather_set(sig, geom, xp, cfg)
-            per_layer_full = 0.0
-            per_layer_fetched = 0.0
+            paths = gather_set(sig, geom, xp, cfg, group.name)
             for path in paths:
                 key = "/".join(path)
                 if key == "moe/experts":
                     pl = geom.moe_placement
                     pe = 3 * d * cfg.moe.d_ff * ws
-                    b = prefetch.gather_bytes(pl, pe)
-                    per_layer_full += b
-                    per_layer_fetched += b
+                    add("moe_experts", group.n_cycles,
+                        prefetch.gather_bytes(pl, pe))
                 elif key == "attn":
                     a = _axsize(xp, geom.attn_axes)
-                    w = (d * (cfg.q_dim + 2 * cfg.kv_dim) + cfg.q_dim * d) * ws
-                    per_layer_full += w * (a - 1) / max(1, a)
-                    per_layer_fetched += w * (a - 1) / max(1, a)
+                    qkv = d * (cfg.q_dim + 2 * cfg.kv_dim) * ws
+                    out = cfg.q_dim * d * ws
+                    add("attn_qkv", group.n_cycles, qkv * (a - 1) / max(1, a))
+                    add("attn_out", group.n_cycles, out * (a - 1) / max(1, a))
                 elif key in ("ffn", "moe/shared"):
                     s = _axsize(xp, geom.ffn_axes)
                     f = sig.shared_d_ff if key == "moe/shared" else sig.ffn_dim
                     w = 3 * d * (f or 0) * ws
-                    per_layer_full += w * (s - 1) / max(1, s)
-                    per_layer_fetched += w * (s - 1) / max(1, s)
-            if sig.is_moe and demand_fetch_active(cfg, geom, xp):
+                    add("dense_ffn", group.n_cycles, w * (s - 1) / max(1, s))
+            if sig.is_moe and demand_fetch_active(cfg, geom, xp, group.name):
                 # route-before-gather layers: gather_set excluded the
                 # expert bank; the demand fetch happens inside the layer
                 pl = geom.moe_placement
                 pe = 3 * d * cfg.moe.d_ff * ws
-                budget = resolve_demand_budget(cfg, geom, xp)
-                per_layer_full += prefetch.gather_bytes(pl, pe)
-                per_layer_fetched += prefetch.demand_fetch_bytes(
-                    pl, budget, pe
-                )
-            full += per_layer_full * group.n_cycles
-            fetched += per_layer_fetched * group.n_cycles
-    return {"full": full, "fetched": fetched}
+                budget = resolve_demand_budget(cfg, geom, xp, group.name)
+                add("moe_experts", group.n_cycles,
+                    prefetch.gather_bytes(pl, pe),
+                    prefetch.demand_fetch_bytes(pl, budget, pe))
+    return {
+        "full": sum(v["full"] for v in fams.values()),
+        "fetched": sum(v["fetched"] for v in fams.values()),
+        "families": fams,
+    }
 
 
 def _extract(lp: dict, paths) -> dict:
@@ -355,22 +395,23 @@ def _merge(lp: dict, gathered: dict) -> dict:
     return lp
 
 
-def _gather_leading(tree, axes: tuple[str, ...], xp: ExecutionPlan):
+def _gather_leading(tree, axes: tuple[str, ...], xp: ExecutionPlan, pol):
     """Legacy merged gather of stacked-storage weights (leading shard
     axis) to full — the *explicit merge step*: every shard, resident
-    included, lands once in the canonical contiguous buffer. Split mode
-    never calls this for a split-active family."""
+    included, lands once in the canonical contiguous buffer, over the
+    family policy's transport. Split mode never calls this for a
+    split-active family."""
     size = _axsize(xp, axes)
     if size == 1:
         return tree
-    if len(axes) > 1 or xp.prefetch == "allgather":
+    if len(axes) > 1 or pol.transport == "allgather":
         ax = _axes_arg(axes)
         return jax.tree.map(
             lambda w: lax.all_gather(w, ax, axis=0, tiled=True), tree
         )
     pl = make_placement(size, size)
     return prefetch.gather_shards(
-        tree, axes[0], pl, mode=xp.prefetch, num_slices=xp.num_slices
+        tree, axes[0], pl, mode=pol.transport, num_slices=pol.num_slices
     )
 
 
@@ -401,14 +442,45 @@ def _gather_flat(tree, axes: tuple[str, ...], xp: ExecutionPlan):
     }
 
 
+_ATTN_PARTS = (("attn_qkv", ("wq", "wk", "wv")), ("attn_out", ("wo",)))
+
+
+def _gather_attn(tree: dict, ctx: Ctx):
+    """Gather the attention projections as TWO policy families —
+    ``attn_qkv`` (wq/wk/wv) and ``attn_out`` (wo) — each under its own
+    (layout, transport). Returns a plain merged dict when both parts are
+    merged (byte-identical to the legacy whole-family gather) or a
+    ``prefetch.AttnBank`` carrying each part's representation when at
+    least one is split — which is how a mixed plan runs split QKV next
+    to a merged output projection (or vice versa) in one forward."""
+    geom, xp = ctx.geom, ctx.xp
+    axes = geom.attn_axes
+    parts = {}
+    for fam, keys in _ATTN_PARTS:
+        sub = {k: tree[k] for k in keys}
+        pol = xp.policy(fam, ctx.group)
+        if dense_split_active(geom, xp, axes, fam, ctx.group):
+            parts[fam] = prefetch.gather_split_bank(
+                sub, axes[0], _leading_placement(axes, xp),
+                mode=pol.transport, num_slices=pol.num_slices,
+            )
+        else:
+            parts[fam] = _gather_leading(sub, axes, xp, pol)
+    if not any(isinstance(p, prefetch.SplitBank) for p in parts.values()):
+        return {**parts["attn_qkv"], **parts["attn_out"]}
+    return prefetch.AttnBank(qkv=parts["attn_qkv"], out=parts["attn_out"])
+
+
 def gather_layer(gsub: dict, ctx: Ctx) -> dict:
-    """One gather routine for every prefetched family.
+    """One gather routine for every prefetched family, each under ITS OWN
+    policy (``xp.policy(family, group)`` — layout, transport, slicing).
 
     Split-active families come back as a ``prefetch.SplitBank`` — THE
     canonical gathered representation (remote-only wire traffic, resident
-    shard untouched, rotated canonical order). Everything else takes the
-    legacy path through the explicit merge (``_gather_leading`` /
-    ``gather_shards``), which is the only place a full canonical weight
+    shard untouched, rotated canonical order); the attention tree splits
+    into its qkv/out sub-families (see ``_gather_attn``). Everything else
+    takes the legacy path through the explicit merge (``_gather_leading``
+    / ``gather_shards``), which is the only place a full canonical weight
     buffer is ever created."""
     geom, xp = ctx.geom, ctx.xp
     out = {}
@@ -419,28 +491,31 @@ def gather_layer(gsub: dict, ctx: Ctx) -> dict:
             out[key] = _gather_flat(tree, geom.cell_axes, xp)
             continue
         if key == "attn":
-            axes, pl = geom.attn_axes, None
-        elif key in ("ffn", "moe/shared"):
-            axes, pl = geom.ffn_axes, None
+            out[key] = _gather_attn(tree, ctx)
+            continue
+        if key in ("ffn", "moe/shared"):
+            axes, pl, fam = geom.ffn_axes, None, "dense_ffn"
         elif key == "moe/experts":
-            axes, pl = geom.expert_axes, geom.moe_placement
+            axes, pl, fam = geom.expert_axes, geom.moe_placement, "moe_experts"
             assert pl is not None and len(axes) == 1
         else:
             raise KeyError(key)
-        if split_bank_active(geom, xp, key):
+        pol = xp.policy(fam, ctx.group)
+        if split_bank_active(geom, xp, key, ctx.group):
             out[key] = prefetch.gather_split_bank(
                 tree,
                 axes[0],
                 pl if pl is not None else _leading_placement(axes, xp),
-                mode=xp.prefetch,
-                num_slices=xp.num_slices,
+                mode=pol.transport,
+                num_slices=pol.num_slices,
             )
         elif pl is not None:
             out[key] = prefetch.gather_shards(
-                tree, axes[0], pl, mode=xp.prefetch, num_slices=xp.num_slices
+                tree, axes[0], pl, mode=pol.transport,
+                num_slices=pol.num_slices,
             )
         else:
-            out[key] = _gather_leading(tree, axes, xp)
+            out[key] = _gather_leading(tree, axes, xp, pol)
     return out
 
 
@@ -578,18 +653,29 @@ def _attn_split_out(out, bank, ctx: Ctx):
 
 
 def _attn_full(h, aw, sig: LayerSig, ctx: Ctx, lstate):
-    """Full-weight attention: replicated, DWDP-gathered merged, or — when
-    ``aw`` is a ``prefetch.SplitBank`` — the §4.2 split fast path."""
+    """Full-weight attention: replicated, DWDP-gathered merged, the §4.2
+    split fast path, or any per-family mix of the two.
+
+    ``aw`` is a flat weight dict (replicated / fully merged), a whole
+    ``prefetch.SplitBank`` (both attention families split), or a
+    ``prefetch.AttnBank`` whose qkv/out parts carry each family's own
+    representation — so ``attn_qkv`` and ``attn_out`` policies compose
+    freely (split QKV feeding a merged output projection and vice
+    versa). The split QKV path rolls its outputs back to canonical head
+    order, which is exactly the order the merged out path consumes."""
     cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
     b, s, _ = h.shape
     hd = cfg.head_dim
-    split = isinstance(aw, prefetch.SplitBank)
-    if split:
-        q, k, v = _attn_split_qkv(h, aw, ctx)
+    if isinstance(aw, prefetch.AttnBank):
+        qkv_w, out_w = aw.qkv, aw.out
     else:
-        q = _project_heads(h, aw["wq"], cfg.num_heads, hd)
-        wk = _dedupe_kv(aw["wk"], geom)
-        wv = _dedupe_kv(aw["wv"], geom)
+        qkv_w = out_w = aw
+    if isinstance(qkv_w, prefetch.SplitBank):
+        q, k, v = _attn_split_qkv(h, qkv_w, ctx)
+    else:
+        q = _project_heads(h, qkv_w["wq"], cfg.num_heads, hd)
+        wk = _dedupe_kv(qkv_w["wk"], geom)
+        wv = _dedupe_kv(qkv_w["wv"], geom)
         k = _project_heads(h, wk, cfg.num_kv_heads, hd)
         v = _project_heads(h, wv, cfg.num_kv_heads, hd)
 
@@ -615,11 +701,11 @@ def _attn_full(h, aw, sig: LayerSig, ctx: Ctx, lstate):
             new_state = _capture_kv_state(k, v, sig, ctx)
         else:
             new_state = lstate
-    if split:
-        return _attn_split_out(out, aw, ctx), new_state
-    a = aw["wo"].shape[0]
+    if isinstance(out_w, prefetch.SplitBank):
+        return _attn_split_out(out, out_w, ctx), new_state
+    a = out_w["wo"].shape[0]
     out = out.reshape(b, out.shape[1], a, -1)
-    y = jnp.einsum("bsag,agd->bsd", out, _w(aw["wo"], out))
+    y = jnp.einsum("bsag,agd->bsd", out, _w(out_w["wo"], out))
     return y, new_state
 
 
@@ -956,7 +1042,8 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx):
     g, local = pl.subgroup_size, pl.local_count
     e_pad = pl.num_padded
     t = x2d.shape[0]
-    budget = resolve_demand_budget(cfg, geom, xp)
+    pol = xp.policy("moe_experts", ctx.group)
+    budget = resolve_demand_budget(cfg, geom, xp, ctx.group)
     n_fetch = (g - 1) * min(budget, local)
     p = lax.axis_index(axis) % g
     # pallas_call has no VJP; the jnp formulation (still merge-free)
@@ -975,8 +1062,8 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx):
 
     def demand_branch(experts, d):
         bank = prefetch.gather_demand_payload(
-            experts, plan, axis, pl, budget=budget, mode=xp.prefetch,
-            num_slices=xp.num_slices,
+            experts, plan, axis, pl, budget=budget, mode=pol.transport,
+            num_slices=pol.num_slices,
         )
         # expert-id -> compact-bank position. Experts neither resident
         # nor fetched receive only zero-weight traffic (every kept
@@ -1005,7 +1092,7 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx):
 
     def full_branch(experts, d):
         lo, re = prefetch.gather_remote_shards(
-            experts, axis, pl, mode=xp.prefetch, num_slices=xp.num_slices
+            experts, axis, pl, mode=pol.transport, num_slices=pol.num_slices
         )
         d2 = _rolled_dispatch(d, p * local, e_pad, cap)
         xe = moe_lib.dispatch_tokens(x2d, d2, e_pad, cap)
@@ -1027,7 +1114,7 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int):
     assert moe is not None and pl is not None
     t = x2d.shape[0]
     e_pad = pl.num_padded
-    if getattr(xp, "capacity_from", "local") == "global":
+    if xp.capacity_from == "global":
         # Layout-invariant capacity (ROADMAP decision): derive the slot
         # budget per ROW from the *global* per-row token count and
         # restrict capacity competition to the row. Rows never split
@@ -1063,7 +1150,7 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int):
             xe, mp["experts"]["w_gate"], mp["experts"]["w_up"],
             mp["experts"]["w_down"],
         )
-    elif demand_fetch_active(cfg, geom, xp):
+    elif demand_fetch_active(cfg, geom, xp, ctx.group):
         # route-before-gather: the routing above used only the LOCAL
         # router weights, so the expert gather can now be demand-driven.
         # gather_set excluded this layer's expert bank from the prefetch
@@ -1073,7 +1160,7 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int):
             "demand-active layers must not prefetch the expert bank"
         )
         y = _moe_demand_apply(x2d, mp["experts"], d, cap, ctx)
-    elif moe_split_active(geom, xp):
+    elif moe_split_active(geom, xp, ctx.group):
         # §4.2 split fast path: tokens dispatch in rotated canonical order
         # (resident experts first), the fused kernel consumes the
         # SplitBank's (resident, remote) trees as two operands — the
@@ -1219,6 +1306,7 @@ def _run_stack(params, x, ctx: Ctx, states):
     for group in model.plan:
         gp = params["layers"][group.name]
         gs = states["layers"][group.name] if states is not None else None
+        ctx.group = group.name  # scope per-layer-group policy overrides
         if group.scan and group.n_cycles > 1:
             x, ns, aux = _run_scan_group(group, gp, x, ctx, gs)
         else:
@@ -1233,7 +1321,7 @@ def _run_unrolled(group, gp, x, ctx: Ctx, gs):
     new_states = {}
     for j, sig in enumerate(group.sigs):
         lp = gp[f"pos{j}"]
-        paths = gather_set(sig, ctx.geom, ctx.xp, ctx.cfg)
+        paths = gather_set(sig, ctx.geom, ctx.xp, ctx.cfg, group.name)
         gathered = gather_layer(_extract(lp, paths), ctx) if paths else {}
         lstate = gs[f"pos{j}"] if gs is not None else None
         x, ns, aux = apply_layer(x, lp, sig, ctx, lstate, gathered)
@@ -1245,7 +1333,9 @@ def _run_unrolled(group, gp, x, ctx: Ctx, gs):
 def _run_scan_group(group, gp, x, ctx: Ctx, gs):
     sigs = group.sigs
     period = len(sigs)
-    paths = [gather_set(s, ctx.geom, ctx.xp, ctx.cfg) for s in sigs]
+    paths = [
+        gather_set(s, ctx.geom, ctx.xp, ctx.cfg, group.name) for s in sigs
+    ]
     pipelined = ctx.xp.mode in ("dwdp", "hybrid") and any(paths)
 
     g0 = {}

@@ -46,8 +46,14 @@ for fallbacks and tests; the engine's legacy mode gathers canonically
 via ``gather_shards`` instead so the merged baseline's collectives stay
 byte-identical to the paper's reference point.
 
+Which mode a family uses is per-family now: the plan's ``PolicyTable``
+names a ``transport`` (and ``num_slices``) per gathered family, so e.g.
+the GB-scale expert bank can ride ``ring_sliced`` while the small
+attention banks allgather — the call sites in ``core/execution`` pass
+each family's own ``policy.transport`` into these primitives.
+
 A third gather strategy rides the same modes: the **on-demand** gather
-(``ExecutionPlan.expert_fetch == "demand"`` — the paper's "fetching
+(``xp.policy("moe_experts").fetch == "demand"`` — the paper's "fetching
 missing experts on demand", abstract + §4.3). Where the split gather
 still ships every remote expert, the demand gather ships only the
 experts the *current layer's routing* activated — which is why the
@@ -110,6 +116,23 @@ class SplitBank(NamedTuple):
 
     local: PyTree
     remote: PyTree
+
+
+class AttnBank(NamedTuple):
+    """Gathered attention projections as TWO policy families.
+
+    ``qkv``: the wq/wk/wv tree — a :class:`SplitBank` (split layout) or a
+    plain merged dict, per the plan's ``attn_qkv`` policy.
+    ``out``: the wo tree likewise, per the ``attn_out`` policy.
+
+    Exists only when at least one part is split (both-merged gathers
+    collapse back into one flat dict so the legacy merged path is
+    byte-identical). A NamedTuple, so it rides the layer-stack scan carry
+    like any other gathered representation.
+    """
+
+    qkv: PyTree
+    out: PyTree
 
 
 class DemandBank(NamedTuple):

@@ -151,6 +151,7 @@ def layer_times(
     attn_gathered: bool = False,
     expert_fetch: str = "all",
     moe_ffn: str = "merged",
+    policies=None,
 ) -> LayerTimes:
     """Per-layer roofline terms for the context phase (batch of `tokens`).
 
@@ -181,8 +182,27 @@ def layer_times(
     coverage is partial (``tokens * top_k`` below the remote expert
     count) and never worse than "all". The landing write shrinks with
     it (demand is split-layout by construction).
+    policies: a ``strategy.PolicyTable`` — the per-family replacement for
+    the flat knobs above. When given, each family prices its OWN layout
+    (moe_experts / attn_qkv / attn_out / dense_ffn), the expert fetch
+    mode and demand budget come from the ``moe_experts`` entry, and the
+    flat ``weight_layout`` / ``expert_fetch`` / ``moe_ffn`` arguments
+    are ignored. This is what lets the model score heterogeneous
+    mixed-policy plans (the ``policy="auto"`` resolver's objective).
     """
-    layout = weight_layout if weight_layout is not None else moe_ffn
+    budget = 0
+    if policies is not None:
+        moe_pol = policies.family("moe_experts")
+        moe_layout = moe_pol.layout
+        expert_fetch = moe_pol.fetch
+        budget = moe_pol.budget
+        dense_layout = policies.family("dense_ffn").layout
+        qkv_layout = policies.family("attn_qkv").layout
+        out_layout = policies.family("attn_out").layout
+    else:
+        flat = weight_layout if weight_layout is not None else moe_ffn
+        moe_layout = dense_layout = qkv_layout = out_layout = flat
+    layout = moe_layout
     d = cfg.d_model
     kv_len = kv_len or tokens
     # --- attention ---------------------------------------------------------
@@ -218,7 +238,7 @@ def layer_times(
             # route-before-gather: expected-coverage wire bytes
             prefetch_bytes = demand_prefetch_bytes(
                 tokens, k, e, group, 3 * d * f * weight_bytes,
-                redundancy=redundancy,
+                redundancy=redundancy, budget=budget,
             )
         # HBM landing write of the gathered bank: full layer (merged) vs
         # remote-only (split — the eliminated merge copy shows up here;
@@ -238,18 +258,24 @@ def layer_times(
         # dense-FFN slices land like any other gathered family
         land_bytes = 0.0
         if group > 1:
-            land_bytes = layer_bytes if layout == "merged" else prefetch_bytes
+            land_bytes = (
+                layer_bytes if dense_layout == "merged" else prefetch_bytes
+            )
         # dense DEP analogue: gather + reduce-scatter of activations
         a2a_bytes = 2 * tokens * d * act_bytes * (group - 1) / group
     t_ffn = op_time(ffn_flops, w_bytes + 2 * tokens * d * act_bytes, hw)
 
     # attention projections: replicated in the paper-faithful layout
     # (no traffic); when DWDP gathers them (escalated sharding), they pay
-    # the same per-mode wire + landing accounting as every other family.
+    # the same per-mode wire + landing accounting as every other family —
+    # the qkv and out projections each under their OWN family's layout.
     if attn_gathered and group > 1:
-        attn_prefetch = attn_w_bytes * (group - 1) / group
-        prefetch_bytes += attn_prefetch
-        land_bytes += attn_w_bytes if layout == "merged" else attn_prefetch
+        qkv_w = d * (cfg.q_dim + 2 * cfg.kv_dim) * weight_bytes
+        out_w = cfg.q_dim * d * weight_bytes
+        for w, fam_layout in ((qkv_w, qkv_layout), (out_w, out_layout)):
+            fam_prefetch = w * (group - 1) / group
+            prefetch_bytes += fam_prefetch
+            land_bytes += w if fam_layout == "merged" else fam_prefetch
 
     compute = t_attn + t_ffn
     prefetch = prefetch_bytes / hw.link_bw
@@ -261,6 +287,40 @@ def layer_times(
         land_bytes=land_bytes,
         land_time=land_bytes / hw.hbm_bw,
     )
+
+
+def modeled_step_time(
+    cfg: ArchConfig,
+    *,
+    tokens: int,
+    group: int,
+    hw: Hardware = GB200,
+    policies=None,
+    weight_layout: Optional[str] = None,
+    expert_fetch: str = "all",
+    attn_gathered: bool = False,
+    kv_len: Optional[int] = None,
+    redundancy: int = 1,
+    weight_bytes: int = 1,
+    act_bytes: int = 2,
+) -> float:
+    """Modeled one-step wall time of a full DWDP forward under a policy
+    table: per layer ``max(compute + landing, prefetch)`` (the §3
+    critical path — the gathered-bank landing write is HBM work only
+    DWDP pays), summed over every layer. The ``policy="auto"`` resolver's
+    objective and the surface the acceptance criterion compares uniform
+    vs mixed tables on."""
+    total = 0.0
+    for layer in range(cfg.num_layers):
+        lt = layer_times(
+            cfg, tokens=tokens, group=group, hw=hw, layer=layer,
+            policies=policies, weight_layout=weight_layout,
+            expert_fetch=expert_fetch, attn_gathered=attn_gathered,
+            kv_len=kv_len, redundancy=redundancy,
+            weight_bytes=weight_bytes, act_bytes=act_bytes,
+        )
+        total += max(lt.compute + lt.land_time, lt.prefetch)
+    return total
 
 
 def figure3_sweep(

@@ -12,29 +12,77 @@
                        reduce-scatter for dense TP). The paper's baseline.
     * ``replicated`` — weights fully replicated, pure DP (reference).
 
-- how gathered weights are *represented* (``weight_layout``): "split"
-  (the default §4.2 split-bank fast path — one engine-wide switch, per
-  Shift-Parallelism-style layout design, covering MoE experts, attention
-  projections and dense-FFN slices alike) or "merged" (the legacy
-  explicit-merge baseline),
-- how MoE expert weights are *selected* for the gather
-  (``expert_fetch``): "all" (every remote expert every layer — the
-  split/merged prefetch) or "demand" (route-before-gather: only the
-  experts the current layer's routing activated cross the wire, padded
-  to a static ``demand_budget`` per peer, with an exact fallback to the
-  full remote gather on budget overflow),
-- and how MoE capacity is derived (``capacity_from``): from the local
-  token count ("local") or layout-invariantly per row from the global
-  shape ("global" — deterministic drops across batch-sharding reshapes),
+- and, per **gathered-weight family**, HOW that family's weights are
+  obtained: the :class:`GatherPolicy` / :class:`PolicyTable` surface.
 
-and derives the PartitionSpecs for params, inputs, decode state, outputs.
+Strategy selection (the ``GatherPolicy`` API)
+---------------------------------------------
+
+DWDP's core claim is that each rank can pick the cheapest way to obtain
+each weight family independently.  The plan therefore carries a
+:class:`PolicyTable` — ``ExecutionPlan.policies`` — mapping each gathered
+family to a :class:`GatherPolicy` ``(layout, fetch, transport,
+num_slices, budget)``:
+
+- families: ``moe_experts`` (the routed expert bank), ``attn_qkv`` (the
+  q/k/v projections), ``attn_out`` (the attention output projection),
+  ``dense_ffn`` (dense-FFN slices and always-on shared experts), plus a
+  ``default`` entry that backs any family without its own row. Optional
+  per-layer-group overrides (``(group, family) -> policy``) refine the
+  table for a named scan group of the model plan.
+- ``layout``: ``"split"`` (the §4.2 remote-only SplitBank fast path, the
+  default) or ``"merged"`` (the explicit-merge baseline).
+- ``fetch``: ``"all"`` (every remote slice every layer) or ``"demand"``
+  (route-before-gather; ``moe_experts`` only, requires the split layout).
+- ``transport``: ``"allgather"`` | ``"ring"`` | ``"ring_sliced"`` — the
+  prefetch collective schedule, now chosen *per family* instead of one
+  engine-wide mode.
+- ``num_slices`` (ring_sliced TDM slicing) and ``budget`` (per-peer
+  demand-fetch rows, 0 = auto) ride along per family.
+
+A heterogeneous table expresses plans the old flat knobs could not, e.g.
+**demand-fetch MoE experts over ring_sliced while the small attention
+banks allgather merged and the dense-FFN slices ride the split ring**::
+
+    policy = {
+        "moe_experts": "split:demand:ring_sliced",
+        "attn_qkv":    "merged:all:allgather",
+        "attn_out":    "merged:all:allgather",
+        "dense_ffn":   "split:all:ring",
+    }
+    xp = make_execution_plan(model, shape, sizes, policy=policy)
+
+``policy="auto"`` runs :func:`resolve_policies`' roofline-guided
+resolver: per family x phase it consults ``roofline.layer_times`` /
+``roofline.modeled_step_time`` and picks the policy combination with the
+smallest modeled step time.  Its decision rules:
+
+- ``layout="split"`` wherever the engine's split path can engage (single
+  gather axis, >1 shards) — the merged merge-copy landing is never
+  modeled faster; ``merged`` elsewhere (multi-axis fallback).
+- ``fetch="demand"`` only where expected coverage is partial —
+  ``rows * top_k < remote experts`` (decode, small-batch prefill) — and
+  only when the modeled prefetch term actually shrinks; ``"all"``
+  otherwise.
+- ``transport="ring_sliced"`` only above a per-layer remote-bank-size
+  threshold (:data:`RING_SLICED_MIN_BYTES`, the §4.3 TDM regime);
+  ``"allgather"`` for small banks where slicing buys nothing.
+
+The legacy flat kwargs (``prefetch=``, ``num_slices=``,
+``weight_layout=``, ``expert_fetch=``, ``demand_budget=``, ``moe_ffn=``)
+survive as deprecated aliases that build a *uniform* table (every family
+the same policy) with a ``DeprecationWarning``; combining them with
+``policy=`` is a conflict error.  ``capacity_from`` ("local" | "global"
+MoE capacity derivation) and ``decode_attn`` ("gather" | "qgather") are
+plan-level execution knobs, not gather policies, and stay flat.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 import warnings
-from typing import Any, Optional
+from typing import Any, Mapping, Optional, Union
 
 from jax.sharding import PartitionSpec as P
 
@@ -51,62 +99,265 @@ MOE_FFN_MODES = WEIGHT_LAYOUTS  # deprecated alias (PR 1 name)
 CAPACITY_FROM = ("local", "global")
 EXPERT_FETCH = ("all", "demand")
 
+#: The gathered-weight families a PolicyTable addresses. ``default``
+#: additionally backs any family without its own entry.
+GATHER_FAMILIES = ("moe_experts", "attn_qkv", "attn_out", "dense_ffn")
+
+#: Auto-resolver rule: ring_sliced transport only when a family's
+#: per-layer remote bank exceeds this many bytes (the §4.3 TDM regime —
+#: below it the transfer is too small for slice-interleaving to help).
+RING_SLICED_MIN_BYTES = 32 << 20
+
+
+# --------------------------------------------------------------------------
+# GatherPolicy + PolicyTable: the per-family configuration surface.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GatherPolicy:
+    """How one gathered-weight family is obtained.
+
+    ``layout``: gathered representation — "split" (remote-only SplitBank)
+    or "merged" (explicit-merge canonical buffer).
+    ``fetch``: expert-gather selection — "all" or "demand"
+    (route-before-gather; meaningful for ``moe_experts`` only and
+    requires the split layout).
+    ``transport``: the prefetch collective schedule for this family.
+    ``num_slices``: ring_sliced TDM slice count.
+    ``budget``: per-peer demand-fetch row budget (0 = auto — 2x the
+    expected distinct-expert coverage; see roofline.demand_budget_rows).
+    """
+
+    layout: str = "split"
+    fetch: str = "all"
+    transport: str = "allgather"
+    num_slices: int = 4
+    budget: int = 0
+
+    def __post_init__(self):
+        if self.layout not in WEIGHT_LAYOUTS:
+            raise ValueError(
+                f"unknown layout {self.layout!r}; expected one of "
+                f"{WEIGHT_LAYOUTS}"
+            )
+        if self.fetch not in EXPERT_FETCH:
+            raise ValueError(
+                f"unknown fetch {self.fetch!r}; expected one of "
+                f"{EXPERT_FETCH}"
+            )
+        if self.transport not in PREFETCH_MODES:
+            raise ValueError(
+                f"unknown transport {self.transport!r}; expected one of "
+                f"{PREFETCH_MODES}"
+            )
+        if self.fetch == "demand" and self.layout != "split":
+            raise ValueError(
+                'fetch="demand" requires the split layout (the demand '
+                f"bank is a split-bank refinement); got layout="
+                f"{self.layout!r}"
+            )
+        if self.num_slices < 1:
+            raise ValueError(f"num_slices must be >= 1, got {self.num_slices}")
+        if self.budget < 0:
+            raise ValueError(f"budget must be >= 0, got {self.budget}")
+
+    @classmethod
+    def parse(cls, spec: Union[str, "GatherPolicy", Mapping]) -> "GatherPolicy":
+        """Parse ``"layout[:fetch[:transport[:num_slices[:budget]]]]"``
+        (the ``--policy`` CLI spec), a kwargs mapping, or pass a policy
+        through. Unknown values raise ``ValueError``."""
+        if isinstance(spec, GatherPolicy):
+            return spec
+        if isinstance(spec, Mapping):
+            extra = set(spec) - {f.name for f in dataclasses.fields(cls)}
+            if extra:
+                raise ValueError(
+                    f"unknown GatherPolicy fields {sorted(extra)}"
+                )
+            return cls(**spec)
+        parts = [p for p in str(spec).split(":")]
+        if not 1 <= len(parts) <= 5 or not all(parts):
+            raise ValueError(
+                f"bad policy spec {spec!r}; expected "
+                "layout[:fetch[:transport[:num_slices[:budget]]]]"
+            )
+        kw: dict = {"layout": parts[0]}
+        if len(parts) > 1:
+            kw["fetch"] = parts[1]
+        if len(parts) > 2:
+            kw["transport"] = parts[2]
+        try:
+            if len(parts) > 3:
+                kw["num_slices"] = int(parts[3])
+            if len(parts) > 4:
+                kw["budget"] = int(parts[4])
+        except ValueError:
+            raise ValueError(
+                f"bad policy spec {spec!r}: num_slices/budget must be ints"
+            ) from None
+        return cls(**kw)
+
+    def spec(self) -> str:
+        """The canonical ``layout:fetch:transport[:num_slices][:budget]``
+        round-trip form of this policy (parse(spec()) == self)."""
+        s = f"{self.layout}:{self.fetch}:{self.transport}"
+        if self.num_slices != 4 or self.budget != 0:
+            s += f":{self.num_slices}"
+        if self.budget != 0:
+            s += f":{self.budget}"
+        return s
+
+
+def _check_family(name: str, *, allow_default: bool = True) -> None:
+    ok = GATHER_FAMILIES + (("default",) if allow_default else ())
+    if name not in ok:
+        raise ValueError(
+            f"unknown gather family {name!r}; expected one of {ok}"
+        )
+
+
+def _check_fetch_applies(family: str, pol: GatherPolicy) -> None:
+    if pol.fetch == "demand" and family not in ("moe_experts", "default"):
+        raise ValueError(
+            f'fetch="demand" only applies to the moe_experts family '
+            f"(route-before-gather is an expert-bank feature); got it for "
+            f"{family!r}"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyTable:
+    """Per-family (optionally per-layer-group) gather policies.
+
+    Lookup order for ``family(name, group)``: the ``(group, name)``
+    override, then the ``name`` entry, then ``default``.
+    """
+
+    default: GatherPolicy = GatherPolicy()
+    families: tuple[tuple[str, GatherPolicy], ...] = ()
+    overrides: tuple[tuple[str, str, GatherPolicy], ...] = ()
+
+    def __post_init__(self):
+        seen: set = set()
+        for name, pol in self.families:
+            _check_family(name, allow_default=False)
+            _check_fetch_applies(name, pol)
+            if name in seen:
+                raise ValueError(f"duplicate family entry {name!r}")
+            seen.add(name)
+        _check_fetch_applies("default", self.default)
+        oseen: set = set()
+        for group, name, pol in self.overrides:
+            _check_family(name, allow_default=False)
+            _check_fetch_applies(name, pol)
+            if (group, name) in oseen:
+                raise ValueError(f"duplicate override {(group, name)!r}")
+            oseen.add((group, name))
+
+    def family(self, name: str, group: Optional[str] = None) -> GatherPolicy:
+        """The resolved policy for ``name`` (optionally within layer
+        group ``group``)."""
+        _check_family(name)
+        if group is not None:
+            for g, n, pol in self.overrides:
+                if g == group and n == name:
+                    return pol
+        for n, pol in self.families:
+            if n == name:
+                return pol
+        return self.default
+
+    @classmethod
+    def uniform(cls, *, layout: str = "split", fetch: str = "all",
+                transport: str = "allgather", num_slices: int = 4,
+                budget: int = 0) -> "PolicyTable":
+        """One policy for every family — exactly what the deprecated flat
+        ExecutionPlan knobs used to express."""
+        pol = GatherPolicy(layout=layout, fetch=fetch, transport=transport,
+                           num_slices=num_slices, budget=budget)
+        if pol.fetch == "demand":
+            # demand only ever applied to the expert bank; a uniform
+            # "demand" table means demand experts + all for the rest
+            return cls(
+                default=dataclasses.replace(pol, fetch="all", budget=0),
+                families=(("moe_experts", pol),),
+            )
+        return cls(default=pol)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "PolicyTable":
+        """Build a table from ``{family_or_"default"_or_"group/family":
+        spec}`` where each spec is a string (``GatherPolicy.parse``), a
+        kwargs mapping, or a GatherPolicy — the ``--policy-file`` JSON
+        shape."""
+        default = GatherPolicy()
+        fams: list[tuple[str, GatherPolicy]] = []
+        overrides: list[tuple[str, str, GatherPolicy]] = []
+        for key, spec in d.items():
+            pol = GatherPolicy.parse(spec)
+            if key == "default":
+                default = pol
+            elif "/" in key:
+                group, name = key.split("/", 1)
+                overrides.append((group, name, pol))
+            else:
+                fams.append((key, pol))
+        return cls(default=default, families=tuple(fams),
+                   overrides=tuple(overrides))
+
+    def to_dict(self) -> dict:
+        """JSON-able round-trip form (``from_dict(to_dict()) == self``)."""
+        out = {"default": self.default.spec()}
+        for name, pol in self.families:
+            out[name] = pol.spec()
+        for group, name, pol in self.overrides:
+            out[f"{group}/{name}"] = pol.spec()
+        return out
+
+    def describe(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+
+PolicyLike = Union[None, str, Mapping, GatherPolicy, PolicyTable]
+
+
+def _coerce_policy(policy: PolicyLike) -> Optional[PolicyTable]:
+    """Everything but "auto" (which needs model/shape context)."""
+    if policy is None:
+        return PolicyTable()
+    if isinstance(policy, PolicyTable):
+        return policy
+    if isinstance(policy, GatherPolicy):
+        return PolicyTable(default=policy)
+    if isinstance(policy, Mapping):
+        return PolicyTable.from_dict(policy)
+    if isinstance(policy, str):
+        if policy == "auto":
+            return None
+        return PolicyTable(default=GatherPolicy.parse(policy))
+    raise TypeError(f"cannot build a PolicyTable from {policy!r}")
+
 
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
-    mode: str                        # dwdp | dep | replicated
+    mode: str                        # dwdp | dep | replicated | hybrid
     phase: str                       # train | prefill | decode
-    prefetch: str                    # allgather | ring | ring_sliced
-    num_slices: int                  # for ring_sliced
     batch_axes: tuple[str, ...]
     seq_axes: tuple[str, ...]
     mesh_sizes: dict[str, int]       # ordered as the mesh axes
     capacity_factor: float
     global_batch: int
     seq_len: int
+    policies: PolicyTable = PolicyTable()
+    # Per-family gather policies — THE canonical configuration surface
+    # for how every gathered weight family (moe_experts, attn_qkv,
+    # attn_out, dense_ffn) is obtained. Read via ``plan.policy(family,
+    # group)``; the old flat knobs survive only as deprecated read
+    # properties below.
     block_causal: bool = False   # skip fully-masked KV blocks (needs
                                  # unsharded sequence; see DESIGN.md §9)
     decode_attn: str = "gather"  # "gather" weights per layer, or "qgather":
                                  # keep weights sharded and move the (tiny)
                                  # q/k/v activations instead (beyond-paper)
-    weight_layout: str = "split"
-    # Engine-wide gathered-weight representation, covering every family
-    # the weights-move modes prefetch (MoE experts, attention QKV/O,
-    # dense-FFN slices):
-    #   "split" (default): §4.2 fast path — the prefetch pipeline emits a
-    #     (local_bank, remote_bank) SplitBank; only the remote fraction
-    #     crosses the wire and the fused split kernels consume both banks
-    #     directly. No merged gathered-weight buffer of ANY family is
-    #     ever materialized (asserted structurally on the lowering in
-    #     tests/test_multidevice.py).
-    #   "merged": legacy explicit-merge mode — prefetch lands the full
-    #     canonical (num_padded, ...) / (S, D, F/S) buffer (the §4.2
-    #     merge-copy HBM tax) and the plain merged consumers run. Kept
-    #     selectable as the paper's baseline and for families the split
-    #     path does not cover (multi-axis ZeRO-wide gathers fall back to
-    #     it automatically).
-    expert_fetch: str = "all"
-    # MoE expert-gather selection (only meaningful on the split DWDP
-    # gather path):
-    #   "all" (default): every remote expert crosses the wire every MoE
-    #     layer (the PR 1/2 prefetch — demand-oblivious).
-    #   "demand": route-before-gather. The engine inverts the layer
-    #     structure for eligible MoE layers: routing (local router
-    #     weights, a cheap (T,D)@(D,E) matmul) runs first, then a tiny
-    #     index-exchange round + a payload round fetch exactly the
-    #     activated remote experts, padded to a static ``demand_budget``
-    #     per peer. Auto-eligible only when expected coverage is partial
-    #     (local rows * top_k < remote expert count — decode and small-
-    #     batch prefill); otherwise the layer silently keeps the "all"
-    #     gather, which would be cheaper anyway. Budget overflow falls
-    #     back per-layer to the full remote gather, so results are
-    #     always exact.
-    demand_budget: int = 0
-    # Per-peer demand-fetch row budget (static — sets the payload-round
-    # wire bytes). 0 = auto: twice the expected per-peer distinct-expert
-    # coverage, rounded up to a multiple of 8 (see
-    # execution.resolve_demand_budget); clamped to the per-rank expert
-    # count, at which point overflow is impossible.
     capacity_from: str = "local"
     # MoE capacity derivation:
     #   "local": capacity_for(local token count) — the PR 1 behavior.
@@ -119,11 +370,57 @@ class ExecutionPlan:
     #     drop identical tokens across any batch-sharding mesh reshape
     #     (batch determinism for serving; see execution._moe_apply).
 
+    def policy(self, family: str, group: Optional[str] = None) -> GatherPolicy:
+        """The resolved gather policy for ``family`` (optionally within
+        layer group ``group``) — the one accessor every consumer uses."""
+        return self.policies.family(family, group)
+
+    # -- deprecated flat-knob reads (the pre-PolicyTable surface) ----------
+    def _flat_warn(self, name: str, hint: str):
+        warnings.warn(
+            f"ExecutionPlan.{name} is deprecated — the plan carries a "
+            f"per-family PolicyTable now; read plan.policy(family) "
+            f"({hint})",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+
+    @property
+    def prefetch(self) -> str:
+        self._flat_warn("prefetch", 'e.g. plan.policy("moe_experts").transport')
+        return self.policies.default.transport
+
+    @property
+    def num_slices(self) -> int:
+        self._flat_warn("num_slices", 'plan.policy(family).num_slices')
+        return self.policies.default.num_slices
+
+    @property
+    def weight_layout(self) -> str:
+        self._flat_warn("weight_layout", 'plan.policy(family).layout')
+        return self.policies.default.layout
+
+    @property
+    def expert_fetch(self) -> str:
+        self._flat_warn("expert_fetch", 'plan.policy("moe_experts").fetch')
+        return self.policies.family("moe_experts").fetch
+
+    @property
+    def demand_budget(self) -> int:
+        self._flat_warn("demand_budget", 'plan.policy("moe_experts").budget')
+        return self.policies.family("moe_experts").budget
+
     @property
     def moe_ffn(self) -> str:
-        """Deprecated PR 1 alias for ``weight_layout`` (MoE was the only
-        split family then); reads forward to the generalized flag."""
-        return self.weight_layout
+        """Deprecated PR 1 alias for the expert-bank layout (MoE was the
+        only split family then)."""
+        warnings.warn(
+            "ExecutionPlan.moe_ffn is deprecated (PR 1 spelling) — read "
+            'plan.policy("moe_experts").layout instead',
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self.policies.family("moe_experts").layout
 
     @property
     def batch_shards(self) -> int:
@@ -188,69 +485,251 @@ def plan_activation_sharding(
     return tuple(batch_axes), tuple(seq_axes)
 
 
+# --------------------------------------------------------------------------
+# The roofline-guided "auto" resolver.
+# --------------------------------------------------------------------------
+def _routed_rows(shape: InputShape, batch_shards: int, seq_shards: int) -> int:
+    """Per-rank routed token count (mirrors execution._routed_tokens)."""
+    lb = max(1, shape.global_batch // max(1, batch_shards))
+    if shape.phase == "decode":
+        return lb
+    return lb * max(1, shape.seq_len // max(1, seq_shards))
+
+
+def _family_remote_bank_bytes(
+    cfg: ArchConfig, geom, family: str, fetch: str, budget: int,
+    weight_bytes: int, routed_rows: int = 1,
+) -> float:
+    """Per-layer remote-bank bytes of one family — the transport rule's
+    input (ring_sliced only above RING_SLICED_MIN_BYTES).
+
+    A representative-layer HEURISTIC for the threshold decision only
+    (dense_ffn uses the largest of the model's FFN dims rather than the
+    per-layer mix): the authoritative per-step accounting the serving
+    metrics report is ``execution.gathered_wire_bytes_per_step``, which
+    sums the actual per-layer dims."""
+    d = cfg.d_model
+
+    def frac(shards: int) -> float:
+        return (shards - 1) / shards if shards > 1 else 0.0
+
+    if family == "moe_experts" and cfg.moe is not None and geom.moe_placement:
+        pl = geom.moe_placement
+        pe = 3 * d * cfg.moe.d_ff * weight_bytes
+        rows = (pl.subgroup_size - 1) * pl.local_count
+        if fetch == "demand":
+            from repro.core.roofline import demand_budget_rows
+
+            b = budget or demand_budget_rows(
+                routed_rows * cfg.moe.top_k, cfg.moe.num_experts,
+                pl.local_count,
+            )
+            rows = (pl.subgroup_size - 1) * min(b, pl.local_count)
+        return rows * pe
+    if family == "attn_qkv":
+        return d * (cfg.q_dim + 2 * cfg.kv_dim) * weight_bytes * frac(
+            geom.attn_shards
+        )
+    if family == "attn_out":
+        return cfg.q_dim * d * weight_bytes * frac(geom.attn_shards)
+    if family == "dense_ffn":
+        f = cfg.d_ff or 0
+        if cfg.moe is not None:
+            f = max(f, cfg.moe.shared_d_ff, cfg.moe.dense_d_ff)
+        return 3 * d * f * weight_bytes * frac(geom.ffn_shards)
+    return 0.0
+
+
+def resolve_policies(
+    model: Model,
+    shape: InputShape,
+    mesh_sizes: dict[str, int],
+    policy: PolicyLike = "auto",
+    *,
+    hw=None,
+    weight_bytes: int = 1,
+) -> PolicyTable:
+    """Resolve a ``policy=`` argument into a concrete :class:`PolicyTable`.
+
+    Explicit tables / dicts / specs pass through (validated); ``None``
+    yields the uniform default; ``"auto"`` runs the roofline-guided
+    resolver: per family x phase it enumerates the engine-eligible
+    (layout, fetch) candidates, scores each full combination with
+    ``roofline.modeled_step_time`` (the per-layer DWDP critical path
+    ``max(compute + landing, prefetch)`` summed over layers), and keeps
+    the cheapest — so the resolved table's modeled step time is <= every
+    uniform policy's by construction. Transports are then assigned by
+    the bank-size rule (ring_sliced only above RING_SLICED_MIN_BYTES).
+    """
+    table = _coerce_policy(policy)
+    if table is not None:
+        return table
+
+    from repro.core import roofline
+
+    cfg, geom = model.cfg, model.geom
+    hw = hw or roofline.GB200
+    batch_axes, seq_axes = plan_activation_sharding(cfg, shape, mesh_sizes)
+    bsh = math.prod(mesh_sizes[a] for a in batch_axes) if batch_axes else 1
+    ssh = math.prod(mesh_sizes[a] for a in seq_axes) if seq_axes else 1
+    # Score with the PER-RANK routed token count — the same rows the
+    # engine's demand gate (execution.demand_fetch_active) and budget
+    # rule (demand_budget_rows) see — so the scorer's demand candidates
+    # price exactly the payload the lowered program ships.
+    rows = _routed_rows(shape, bsh, ssh)
+    tokens = rows
+
+    # -- engine eligibility per family (mirror execution's predicates) ----
+    pl = geom.moe_placement
+    moe_gather = (
+        cfg.moe is not None and geom.moe_exec == "gather"
+        and pl is not None and pl.subgroup_size > 1
+    )
+    moe_split_ok = moe_gather and len(geom.expert_axes) == 1
+    demand_ok = (
+        moe_split_ok
+        and rows * cfg.moe.top_k < (pl.subgroup_size - 1) * pl.local_count
+    )
+    attn_split_ok = len(geom.attn_axes) == 1 and geom.attn_shards > 1
+    ffn_split_ok = len(geom.ffn_axes) == 1 and geom.ffn_shards > 1
+    group = pl.subgroup_size if moe_gather else max(
+        geom.attn_shards, geom.ffn_shards, 1
+    )
+
+    # -- enumerate (layout, fetch) candidates; preferred (cheaper wire /
+    # HBM) first so strict-< scoring keeps them on ties ------------------
+    moe_cands = [("split", "demand")] if demand_ok else []
+    if moe_split_ok:
+        moe_cands.append(("split", "all"))
+    moe_cands.append(("merged", "all"))
+
+    def dense_cands(ok: bool) -> list[str]:
+        return (["split"] if ok else []) + ["merged"]
+
+    attn_gathered = bool(geom.attn_axes)
+    best, best_t = None, float("inf")
+    for moe_layout, fetch in moe_cands:
+        for qkv_layout in dense_cands(attn_split_ok):
+            for out_layout in dense_cands(attn_split_ok):
+                for ffn_layout in dense_cands(ffn_split_ok):
+                    cand = PolicyTable(
+                        default=GatherPolicy(layout=ffn_layout),
+                        families=(
+                            ("moe_experts",
+                             GatherPolicy(layout=moe_layout, fetch=fetch)),
+                            ("attn_qkv", GatherPolicy(layout=qkv_layout)),
+                            ("attn_out", GatherPolicy(layout=out_layout)),
+                            ("dense_ffn", GatherPolicy(layout=ffn_layout)),
+                        ),
+                    )
+                    t = roofline.modeled_step_time(
+                        cfg, tokens=tokens, group=group, hw=hw,
+                        policies=cand, kv_len=shape.seq_len,
+                        attn_gathered=attn_gathered,
+                        weight_bytes=weight_bytes,
+                    )
+                    if t < best_t:
+                        best, best_t = cand, t
+
+    # -- transport per family: bank-size rule -----------------------------
+    fams = []
+    for name, pol in best.families:
+        bank = _family_remote_bank_bytes(
+            cfg, geom, name, pol.fetch, pol.budget, weight_bytes,
+            routed_rows=rows,
+        )
+        transport = (
+            "ring_sliced" if bank >= RING_SLICED_MIN_BYTES else "allgather"
+        )
+        fams.append((name, dataclasses.replace(pol, transport=transport)))
+    return dataclasses.replace(best, families=tuple(fams))
+
+
 def make_execution_plan(
     model: Model,
     shape: InputShape,
     mesh_sizes: dict[str, int],
     *,
     mode: str = "dwdp",
-    prefetch: str = "allgather",
-    num_slices: int = 4,
+    policy: PolicyLike = None,
     capacity_factor: float = 1.25,
     block_causal: bool = False,
     decode_attn: str = "gather",
-    weight_layout: Optional[str] = None,
     capacity_from: str = "local",
-    expert_fetch: str = "all",
-    demand_budget: int = 0,
+    hw=None,
+    # -- deprecated flat knobs (build a uniform PolicyTable) --------------
+    prefetch: Optional[str] = None,
+    num_slices: Optional[int] = None,
+    weight_layout: Optional[str] = None,
+    expert_fetch: Optional[str] = None,
+    demand_budget: Optional[int] = None,
     moe_ffn: Optional[str] = None,
 ) -> ExecutionPlan:
-    assert mode in MODES and prefetch in PREFETCH_MODES
-    if moe_ffn is not None:
+    assert mode in MODES
+    legacy = {
+        k: v
+        for k, v in dict(
+            prefetch=prefetch, num_slices=num_slices,
+            weight_layout=weight_layout, expert_fetch=expert_fetch,
+            demand_budget=demand_budget, moe_ffn=moe_ffn,
+        ).items()
+        if v is not None
+    }
+    if legacy:
         warnings.warn(
-            "moe_ffn= is deprecated (PR 1 spelling); the split layout now "
-            "covers every gathered family — pass weight_layout= instead",
+            f"{', '.join(sorted(legacy))}= are deprecated flat knobs "
+            "(pre-GatherPolicy spelling; moe_ffn is the PR 1 name) — pass "
+            "policy= (a PolicyTable / per-family dict / spec string / "
+            '"auto") instead; building a uniform PolicyTable',
             DeprecationWarning,
             stacklevel=2,
         )
-        if weight_layout is not None and moe_ffn != weight_layout:
+        if policy is not None:
             raise ValueError(
-                f"conflicting weight_layout={weight_layout!r} and deprecated "
-                f"moe_ffn={moe_ffn!r} — pass only weight_layout"
+                f"conflicting policy= and deprecated flat knobs "
+                f"{sorted(legacy)} — pass only policy="
             )
-    if weight_layout is None:
-        # moe_ffn is the deprecated PR 1 spelling; honor it when the new
-        # flag is not given, else default to the split fast path.
-        weight_layout = moe_ffn if moe_ffn is not None else "split"
-    assert weight_layout in WEIGHT_LAYOUTS
-    assert capacity_from in CAPACITY_FROM
-    assert expert_fetch in EXPERT_FETCH
-    if expert_fetch == "demand" and weight_layout != "split":
-        raise ValueError(
-            'expert_fetch="demand" requires the split weight layout (the '
-            "demand bank is a split-bank refinement); got "
-            f"weight_layout={weight_layout!r}"
+        if "moe_ffn" in legacy:
+            wl = legacy.get("weight_layout")
+            if wl is not None and wl != legacy["moe_ffn"]:
+                raise ValueError(
+                    f"conflicting weight_layout={wl!r} and deprecated "
+                    f"moe_ffn={legacy['moe_ffn']!r} — pass only "
+                    "weight_layout (or better, policy=)"
+                )
+            legacy.setdefault("weight_layout", legacy["moe_ffn"])
+        policy = PolicyTable.uniform(
+            layout=legacy.get("weight_layout", "split"),
+            fetch=legacy.get("expert_fetch", "all"),
+            transport=legacy.get("prefetch", "allgather"),
+            num_slices=legacy.get("num_slices", 4),
+            budget=legacy.get("demand_budget", 0),
         )
-    assert demand_budget >= 0
+    policies = resolve_policies(model, shape, mesh_sizes, policy, hw=hw)
+    known_groups = {g.name for g in model.plan}
+    for g, fam, _ in policies.overrides:
+        if g not in known_groups:
+            raise ValueError(
+                f"policy override names unknown layer group {g!r} "
+                f"(for family {fam!r}); this model's groups are "
+                f"{sorted(known_groups)}"
+            )
+    assert capacity_from in CAPACITY_FROM
     batch_axes, seq_axes = plan_activation_sharding(
         model.cfg, shape, mesh_sizes
     )
     return ExecutionPlan(
         mode=mode,
         phase=shape.phase,
-        prefetch=prefetch,
-        num_slices=num_slices,
         batch_axes=batch_axes,
         seq_axes=seq_axes,
         mesh_sizes=dict(mesh_sizes),
         capacity_factor=capacity_factor,
         global_batch=shape.global_batch,
         seq_len=shape.seq_len,
+        policies=policies,
         block_causal=block_causal and not seq_axes,
         decode_attn=decode_attn,
-        weight_layout=weight_layout,
-        expert_fetch=expert_fetch,
-        demand_budget=demand_budget,
         capacity_from=capacity_from,
     )
 

@@ -13,8 +13,9 @@ the backend — interpret mode off TPU, Mosaic on TPU) and ``ref.py``
 Split-weight fast path (§4.2, end to end)
 -----------------------------------------
 
-``ExecutionPlan.weight_layout = "split"`` (the engine default; the PR 1
-spelling ``moe_ffn`` survives as a deprecated alias) makes the
+A family's ``GatherPolicy.layout = "split"`` (the engine default; the
+flat ``weight_layout=`` / PR 1 ``moe_ffn=`` spellings survive as
+deprecated uniform-table aliases) makes the
 ``(local_bank, remote_bank)`` SplitBank the canonical gathered-weight
 representation for EVERY DWDP-prefetched family: MoE expert banks route
 through the fused ``split_grouped_swiglu`` kernel, attention QKV/O and

@@ -25,7 +25,7 @@ from repro.analysis.roofline_report import report_from_lowered
 from repro.configs import ASSIGNED_ARCHS, get_arch, get_shape, SHAPES
 from repro.configs.base import ArchConfig, BlockKind, InputShape
 from repro.core import execution
-from repro.core.strategy import make_execution_plan
+from repro.core.strategy import PolicyTable, make_execution_plan
 from repro.launch.mesh import make_production_mesh, mesh_sizes
 from repro.models.cache import init_decode_state
 from repro.models.transformer import build_model
@@ -128,10 +128,19 @@ def dryrun_one(
         long_variant=long_variant,
         **geom_overrides,
     )
-    xp = make_execution_plan(
-        model, shape, sizes, mode=mode, prefetch=prefetch,
-        **(plan_kwargs or {}),
-    )
+    pk = dict(plan_kwargs or {})
+    if "policy" not in pk:
+        # the flat prefetch= convenience arg and any legacy flat knobs in
+        # plan_kwargs (perf.py experiments pass num_slices=) fold into one
+        # uniform table — never forwarded as the deprecated aliases
+        pk["policy"] = PolicyTable.uniform(
+            transport=pk.pop("prefetch", prefetch),
+            num_slices=pk.pop("num_slices", 4),
+            layout=pk.pop("weight_layout", "split"),
+            fetch=pk.pop("expert_fetch", "all"),
+            budget=pk.pop("demand_budget", 0),
+        )
+    xp = make_execution_plan(model, shape, sizes, mode=mode, **pk)
     step = execution.make_step_fn(model, xp, mesh)
 
     params = model.param_struct()

@@ -3,16 +3,31 @@
 ``python -m repro.launch.serve --arch yi-9b --requests 8`` runs the full
 stack at reduced scale: DWDP context server (prefill + KV capture), slot
 based continuous-batching generation server, and reports TPS/TTFT.
+
+Gather policies are configured per weight family (the GatherPolicy API):
+
+    --policy moe_experts=split:demand:ring_sliced \
+    --policy attn_qkv=merged:all:allgather        \
+    --policy dense_ffn=split:all:ring
+
+or ``--policy-file policies.json`` (the ``PolicyTable.to_dict`` JSON
+shape, ``{"family_or_default": "layout[:fetch[:transport...]]"}``), or
+``--policy auto`` for the roofline-guided resolver. The pre-PolicyTable
+flags (``--weight-layout`` / ``--expert-fetch`` / ``--demand-budget``)
+keep working as the uniform-table spelling and may not be combined with
+``--policy``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch, reduced_variant
+from repro.core.strategy import PolicyTable
 from repro.models.transformer import build_model
 from repro.runtime.engine import (
     ContextServer,
@@ -20,6 +35,66 @@ from repro.runtime.engine import (
     GenerationServer,
     Request,
 )
+
+
+def parse_policy_flags(flags, policy_file=None):
+    """``--policy`` / ``--policy-file`` -> a PolicyTable, ``"auto"``, or
+    None (nothing given). Each ``--policy`` value is either the literal
+    ``auto`` (alone) or ``family=layout[:fetch[:transport[:num_slices
+    [:budget]]]]``; the file is the PolicyTable JSON dict. Flags override
+    file entries for the same family. Unknown families or values raise
+    ``ValueError`` (argparse surfaces them as CLI errors)."""
+    flags = list(flags or ())
+    if "auto" in flags:
+        if len(flags) > 1 or policy_file:
+            raise ValueError(
+                "--policy auto stands alone (it resolves every family); "
+                "drop the other --policy/--policy-file arguments"
+            )
+        return "auto"
+    spec: dict = {}
+    if policy_file:
+        with open(policy_file) as f:
+            loaded = json.load(f)
+        if not isinstance(loaded, dict):
+            raise ValueError(
+                f"--policy-file {policy_file!r} must hold a JSON object "
+                "mapping families to policy specs"
+            )
+        spec.update(loaded)
+    for flag in flags:
+        if "=" not in flag:
+            raise ValueError(
+                f"--policy expects family=layout[:fetch[:transport...]] "
+                f"or the literal 'auto'; got {flag!r}"
+            )
+        fam, pol = flag.split("=", 1)
+        spec[fam] = pol
+    if not spec:
+        return None
+    return PolicyTable.from_dict(spec)
+
+
+def resolve_cli_policy(args) -> object:
+    """Shared CLI resolution for serve-style drivers: parse --policy /
+    --policy-file and reject combining them with the explicit uniform
+    flags (--weight-layout / --expert-fetch / --demand-budget). Returns
+    a PolicyTable, "auto", or None; raises ValueError on conflicts or
+    bad specs."""
+    legacy_given = [
+        name for name, v in (
+            ("--weight-layout", args.weight_layout),
+            ("--expert-fetch", args.expert_fetch),
+            ("--demand-budget", args.demand_budget),
+        ) if v is not None
+    ]
+    policy = parse_policy_flags(args.policy, args.policy_file)
+    if policy is not None and legacy_given:
+        raise ValueError(
+            f"conflicting --policy and uniform flags "
+            f"{', '.join(legacy_given)} — pass only --policy"
+        )
+    return policy
 
 
 def build_engine(
@@ -36,6 +111,7 @@ def build_engine(
     capacity_from: str = "local",
     expert_fetch: str = "all",
     demand_budget: int = 0,
+    policy=None,
     dtype=jnp.float32,
     seed: int = 0,
 ):
@@ -49,12 +125,14 @@ def build_engine(
         cache_len=cache_len, prefetch=prefetch,
         weight_layout=weight_layout, capacity_from=capacity_from,
         expert_fetch=expert_fetch, demand_budget=demand_budget,
+        policy=policy,
     )
     gen = GenerationServer(
         model, mesh, sizes, mode=gen_mode, max_batch=max_batch,
         cache_len=cache_len,
         weight_layout=weight_layout, capacity_from=capacity_from,
         expert_fetch=expert_fetch, demand_budget=demand_budget,
+        policy=policy,
     )
     return DisaggregatedEngine(params, ctx, gen), model
 
@@ -67,10 +145,23 @@ def main(argv=None):
     ap.add_argument("--output-len", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--ctx-mode", default="dwdp")
-    ap.add_argument("--weight-layout", default="split",
+    ap.add_argument("--policy", action="append", default=None,
+                    metavar="FAMILY=SPEC",
+                    help="per-family gather policy (repeatable): "
+                         "family=layout[:fetch[:transport[:num_slices"
+                         "[:budget]]]] with families moe_experts, "
+                         "attn_qkv, attn_out, dense_ffn, default — or "
+                         "the literal 'auto' for the roofline-guided "
+                         "resolver")
+    ap.add_argument("--policy-file", default=None,
+                    help="JSON file mapping families to policy specs "
+                         "(PolicyTable.to_dict shape); --policy flags "
+                         "override file entries")
+    ap.add_argument("--weight-layout", default=None,
                     choices=["merged", "split"],
-                    help="gathered-weight representation for every DWDP "
-                         "family (experts, attention, dense FFN)")
+                    help="uniform gathered-weight representation for "
+                         "every DWDP family (the pre-PolicyTable "
+                         "spelling of --policy default=LAYOUT)")
     ap.add_argument("--capacity-from", default="local",
                     choices=["local", "global"],
                     help="MoE capacity derivation: local shard count or "
@@ -79,18 +170,21 @@ def main(argv=None):
                     help="generation-server strategy (dwdp shards the "
                          "weights and gathers per layer — the mode the "
                          "on-demand expert fetch accelerates)")
-    ap.add_argument("--expert-fetch", default="all",
+    ap.add_argument("--expert-fetch", default=None,
                     choices=["all", "demand"],
-                    help="MoE expert-gather selection: every remote "
-                         "expert, or route-before-gather demand fetch of "
-                         "only the activated ones (exact fallback on "
-                         "budget overflow)")
-    ap.add_argument("--demand-budget", type=int, default=0,
+                    help="uniform MoE expert-gather selection (the "
+                         "pre-PolicyTable spelling of --policy "
+                         "moe_experts=split:FETCH)")
+    ap.add_argument("--demand-budget", type=int, default=None,
                     help="per-peer demand-fetch row budget (0 = auto: 2x "
                          "the expected distinct-expert coverage)")
     ap.add_argument("--full", action="store_true",
                     help="use the full config (default: reduced smoke)")
     args = ap.parse_args(argv)
+    try:
+        policy = resolve_cli_policy(args)
+    except ValueError as e:
+        ap.error(str(e))
     cfg = get_arch(args.arch)
     if not args.full:
         cfg = reduced_variant(cfg)
@@ -103,9 +197,12 @@ def main(argv=None):
         gen_mode=args.gen_mode,
         weight_layout=args.weight_layout,
         capacity_from=args.capacity_from,
-        expert_fetch=args.expert_fetch,
-        demand_budget=args.demand_budget,
+        expert_fetch=args.expert_fetch or "all",
+        demand_budget=args.demand_budget or 0,
+        policy=policy,
     )
+    print("ctx policies:", engine.ctx.xp.policies.describe())
+    print("gen policies:", engine.gen.xp.policies.describe())
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         engine.submit(

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.configs import get_arch, reduced_variant
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import execution
-from repro.core.strategy import make_execution_plan
+from repro.core.strategy import PolicyTable, make_execution_plan
 from repro.data import make_train_batches
 from repro.models.transformer import build_model
 from repro.optim import adamw_init, cosine_schedule
@@ -41,7 +41,8 @@ def train_loop(
     sizes = {"data": mesh_shape[0], "model": mesh_shape[1]}
     model = build_model(cfg, sizes, dtype=dtype, train=True)
     shape = InputShape("train", seq_len, global_batch, "train")
-    xp = make_execution_plan(model, shape, sizes, mode=mode, prefetch=prefetch)
+    xp = make_execution_plan(model, shape, sizes, mode=mode,
+                             policy=PolicyTable.uniform(transport=prefetch))
     step_fn = execution.make_step_fn(model, xp, mesh)
 
     params = model.init_params(jax.random.key(seed))

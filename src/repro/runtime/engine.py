@@ -22,11 +22,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import execution
-from repro.core.strategy import make_execution_plan
+from repro.core.strategy import PolicyTable, make_execution_plan
 from repro.configs.base import InputShape
 from repro.models.cache import init_decode_state
 from repro.models.transformer import Model
 from repro.runtime.metrics import RequestRecord, ServingMetrics
+
+
+def _resolve_policy(policy, *, prefetch="allgather", weight_layout=None,
+                    expert_fetch="all", demand_budget=0):
+    """Server-level policy resolution: an explicit ``policy`` (a
+    PolicyTable, per-family dict, spec string, or "auto") wins; otherwise
+    the simple per-knob kwargs spell a uniform table — WITHOUT routing
+    through the deprecated make_execution_plan aliases, so internal
+    callers stay warning-free."""
+    if policy is not None:
+        return policy
+    return PolicyTable.uniform(
+        layout=weight_layout if weight_layout is not None else "split",
+        fetch=expert_fetch,
+        transport=prefetch,
+        budget=demand_budget,
+    )
 
 
 @dataclasses.dataclass
@@ -44,14 +61,18 @@ class ContextServer:
                  prefill_len: int, cache_len: int, prefetch="allgather",
                  weight_layout: Optional[str] = None,
                  capacity_from: str = "local",
-                 expert_fetch: str = "all", demand_budget: int = 0):
+                 expert_fetch: str = "all", demand_budget: int = 0,
+                 policy=None):
         self.model = model
         self.prefill_len = prefill_len
         shape = InputShape("ctx", prefill_len, 1, "prefill")
         self.xp = make_execution_plan(
-            model, shape, mesh_sizes, mode=mode, prefetch=prefetch,
-            weight_layout=weight_layout, capacity_from=capacity_from,
-            expert_fetch=expert_fetch, demand_budget=demand_budget,
+            model, shape, mesh_sizes, mode=mode,
+            policy=_resolve_policy(
+                policy, prefetch=prefetch, weight_layout=weight_layout,
+                expert_fetch=expert_fetch, demand_budget=demand_budget,
+            ),
+            capacity_from=capacity_from,
         )
         self.step = execution.make_step_fn(
             model, self.xp, mesh, capture_len=cache_len
@@ -84,15 +105,19 @@ class GenerationServer:
                  max_batch: int, cache_len: int,
                  weight_layout: Optional[str] = None,
                  capacity_from: str = "local",
-                 expert_fetch: str = "all", demand_budget: int = 0):
+                 expert_fetch: str = "all", demand_budget: int = 0,
+                 policy=None):
         self.model = model
         self.max_batch = max_batch
         self.cache_len = cache_len
         shape = InputShape("gen", cache_len, max_batch, "decode")
         self.xp = make_execution_plan(
             model, shape, mesh_sizes, mode=mode,
-            weight_layout=weight_layout, capacity_from=capacity_from,
-            expert_fetch=expert_fetch, demand_budget=demand_budget,
+            policy=_resolve_policy(
+                policy, weight_layout=weight_layout,
+                expert_fetch=expert_fetch, demand_budget=demand_budget,
+            ),
+            capacity_from=capacity_from,
         )
         self.step = execution.make_step_fn(model, self.xp, mesh)
         # static gathered-weight wire bytes per decode step (see
@@ -179,8 +204,7 @@ class DisaggregatedEngine:
                 rec = self.records[req.req_id]
                 rec.first_token_time = self.t
                 rec.tokens_out = 1
-                rec.gathered_fetch_bytes += self.ctx.gather_bytes["fetched"]
-                rec.gathered_full_bytes += self.ctx.gather_bytes["full"]
+                rec.add_gather_share(self.ctx.gather_bytes)
                 self.outputs[req.req_id].append(first)
                 self.gen.admit(slot, req.req_id, first, state)
                 self.gen.slot_remaining[slot] = req.target_len - 1
@@ -193,11 +217,8 @@ class DisaggregatedEngine:
                 rec = self.records[rid]
                 # the decode step's gather traffic is shared by its
                 # active slots: attribute each request its share
-                rec.gathered_fetch_bytes += (
-                    self.gen.gather_bytes["fetched"] / len(active)
-                )
-                rec.gathered_full_bytes += (
-                    self.gen.gather_bytes["full"] / len(active)
+                rec.add_gather_share(
+                    self.gen.gather_bytes, 1.0 / len(active)
                 )
                 self.outputs[rid].append(int(toks[slot]))
                 rec.tokens_out += 1

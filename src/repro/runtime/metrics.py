@@ -1,6 +1,8 @@
 """Serving metrics: TPS/user, TPS/GPU, TTFT (median, incl. queueing),
-and per-request gathered-weight wire-byte counters (full vs demand) so
-engine runs report the on-demand fetch savings directly."""
+and per-request gathered-weight wire-byte counters — totals (full vs
+demand-fetched) plus a per-family breakdown (moe_experts / attn_qkv /
+attn_out / dense_ffn), so engine runs report both the on-demand fetch
+savings and WHERE the gathered bytes go under a mixed PolicyTable."""
 from __future__ import annotations
 
 import dataclasses
@@ -19,9 +21,27 @@ class RequestRecord:
     tokens_out: int = 0
     # gathered-weight wire bytes attributed to this request (its share of
     # every prefill/decode step it participated in): what the program
-    # actually shipped vs the expert_fetch="all" counterfactual
+    # actually shipped vs the all-fetch counterfactual
     gathered_fetch_bytes: float = 0.0
     gathered_full_bytes: float = 0.0
+    # the same, per gathered-weight family (execution.
+    # gathered_wire_bytes_per_step's "families" breakdown)
+    family_fetch_bytes: dict = dataclasses.field(default_factory=dict)
+    family_full_bytes: dict = dataclasses.field(default_factory=dict)
+
+    def add_gather_share(self, gather_bytes: dict, share: float = 1.0):
+        """Attribute ``share`` of one step's gathered-weight traffic
+        (an ``execution.gathered_wire_bytes_per_step`` dict) to this
+        request — totals and the per-family breakdown together."""
+        self.gathered_fetch_bytes += gather_bytes["fetched"] * share
+        self.gathered_full_bytes += gather_bytes["full"] * share
+        for fam, b in gather_bytes.get("families", {}).items():
+            self.family_fetch_bytes[fam] = (
+                self.family_fetch_bytes.get(fam, 0.0) + b["fetched"] * share
+            )
+            self.family_full_bytes[fam] = (
+                self.family_full_bytes.get(fam, 0.0) + b["full"] * share
+            )
 
     @property
     def ttft(self) -> Optional[float]:
@@ -66,4 +86,19 @@ class ServingMetrics:
             # < 1.0 exactly when demand fetch shipped less than the
             # every-remote-expert gather would have
             out["gather_fetch_ratio"] = round(fetch_b / full_b, 4)
+            by_fam: dict = {}
+            for r in done:
+                for fam, b in r.family_fetch_bytes.items():
+                    by_fam.setdefault(fam, [0.0, 0.0])[0] += b
+                for fam, b in r.family_full_bytes.items():
+                    by_fam.setdefault(fam, [0.0, 0.0])[1] += b
+            if by_fam:
+                out["gathered_mb_by_family"] = {
+                    fam: {
+                        "fetched": round(fb / 1e6, 3),
+                        "full": round(fl / 1e6, 3),
+                    }
+                    for fam, (fb, fl) in sorted(by_fam.items())
+                    if fl > 0
+                }
         return out

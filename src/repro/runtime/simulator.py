@@ -19,6 +19,7 @@ from typing import Optional
 
 from repro.configs.base import ArchConfig
 from repro.core import roofline
+from repro.core.strategy import GatherPolicy, PolicyTable
 from repro.runtime.metrics import RequestRecord, ServingMetrics
 
 
@@ -28,6 +29,13 @@ class SimConfig:
     ctx_gpus: int = 4
     gen_gpus: int = 8
     ctx_mode: str = "dwdp"              # dwdp | dep
+    policies: Optional[PolicyTable] = None
+                                        # per-family gather policies for
+                                        # every DWDP phase (the canonical
+                                        # surface). None = build a uniform
+                                        # table from the flat fields below
+                                        # (kept as the simple spelling for
+                                        # sweeps).
     weight_layout: str = "split"        # gathered-weight representation of
                                         # the DWDP context phase (engine
                                         # default): "split" lands only the
@@ -60,6 +68,25 @@ class SimConfig:
     seed: int = 0
     horizon_s: float = 300.0
 
+    def table(self) -> PolicyTable:
+        """The resolved per-family policy table: ``policies`` verbatim,
+        or the table the flat fields spell. The flat fields were
+        historically independent (``weight_layout`` priced the ctx
+        landing, ``expert_fetch`` the gen wire), so ``merged`` +
+        ``demand`` stays constructible: the expert family goes split
+        (demand implies it in the engine) while every other family keeps
+        the flat layout."""
+        if self.policies is not None:
+            return self.policies
+        fams = ()
+        if self.expert_fetch == "demand":
+            fams = (
+                ("moe_experts", GatherPolicy(layout="split", fetch="demand")),
+            )
+        return PolicyTable(
+            default=GatherPolicy(layout=self.weight_layout), families=fams
+        )
+
 
 class ClusterSimulator:
     def __init__(self, sc: SimConfig):
@@ -74,8 +101,8 @@ class ClusterSimulator:
         moe_layer = sc.cfg.moe.first_dense if sc.cfg.moe else 0
         lt = roofline.layer_times(
             sc.cfg, tokens=tokens, group=sc.ctx_gpus, hw=sc.hw,
-            layer=moe_layer, weight_layout=sc.weight_layout,
-            attn_gathered=sc.attn_gathered, expert_fetch=sc.expert_fetch,
+            layer=moe_layer, policies=sc.table(),
+            attn_gathered=sc.attn_gathered,
         )
         n_layers = sc.cfg.num_layers
         if sc.ctx_mode == "dwdp":
@@ -110,9 +137,11 @@ class ClusterSimulator:
         per_expert = 3 * cfg.d_model * moe.d_ff * 1.0  # NVFP4-ish
         n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
         g = sc.gen_gpus
-        if sc.expert_fetch == "demand":
+        pol = sc.table().family("moe_experts")
+        if pol.fetch == "demand":
             per_layer = roofline.demand_prefetch_bytes(
-                batch, moe.top_k, moe.num_experts, g, per_expert
+                batch, moe.top_k, moe.num_experts, g, per_expert,
+                budget=pol.budget,
             )
         else:
             per_layer = moe.num_experts * per_expert * (g - 1) / g

@@ -215,68 +215,299 @@ def test_route_topk_rows_dispatch_combine_identity():
     )
 
 
-def test_weight_layout_flag_and_moe_ffn_alias():
-    """weight_layout defaults to "split"; the deprecated moe_ffn spelling
-    still selects the layout (now with a DeprecationWarning) and reads
-    back through the alias."""
-    import warnings as _warnings
-
+def _plan_fixture():
     import jax.numpy as jnp
 
     from repro.configs import reduced_variant
     from repro.configs.base import InputShape
-    from repro.core.strategy import make_execution_plan
     from repro.models.transformer import build_model
 
     cfg = reduced_variant(get_arch("yi-9b"))
     ms = {"data": 1, "model": 1}
     m = build_model(cfg, ms, dtype=jnp.float32)
     shape = InputShape("p", 32, 2, "prefill")
+    return m, shape, ms
+
+
+# --------------------------------------------------------------------------
+# GatherPolicy / PolicyTable: the per-family policy surface
+# --------------------------------------------------------------------------
+def test_gather_policy_parse_and_validation():
+    from repro.core.strategy import GatherPolicy
+
+    p = GatherPolicy.parse("split:demand:ring_sliced:8:16")
+    assert p == GatherPolicy("split", "demand", "ring_sliced", 8, 16)
+    assert GatherPolicy.parse(p.spec()) == p  # spec round-trips
+    assert GatherPolicy.parse("merged") == GatherPolicy(layout="merged")
+    assert GatherPolicy.parse({"layout": "merged"}).layout == "merged"
+    for bad in ("bogus", "split:bogus", "split:all:bogus", "split:all::",
+                "split:all:ring:x"):
+        with pytest.raises(ValueError):
+            GatherPolicy.parse(bad)
+    with pytest.raises(ValueError, match="split layout"):
+        GatherPolicy(layout="merged", fetch="demand")
+    with pytest.raises(ValueError):
+        GatherPolicy.parse({"layot": "split"})  # unknown field
+
+
+def test_policy_table_lookup_overrides_and_roundtrip():
+    from repro.core.strategy import GatherPolicy, PolicyTable
+
+    demand = GatherPolicy(layout="split", fetch="demand")
+    merged = GatherPolicy(layout="merged")
+    t = PolicyTable(
+        default=GatherPolicy(),
+        families=(("moe_experts", demand), ("attn_qkv", merged)),
+        overrides=(("blocks", "moe_experts", merged),),
+    )
+    # resolution order: (group, family) override > family > default
+    assert t.family("moe_experts") == demand
+    assert t.family("moe_experts", group="blocks") == merged
+    assert t.family("moe_experts", group="other") == demand
+    assert t.family("attn_qkv") == merged
+    assert t.family("dense_ffn") == t.default
+    assert PolicyTable.from_dict(t.to_dict()) == t  # JSON round-trip
+    with pytest.raises(ValueError, match="unknown gather family"):
+        t.family("bogus")
+    with pytest.raises(ValueError, match="unknown gather family"):
+        PolicyTable(families=(("bogus", merged),))
+    with pytest.raises(ValueError, match="moe_experts"):
+        PolicyTable(families=(("attn_qkv", demand),))
+    with pytest.raises(ValueError, match="duplicate"):
+        PolicyTable(families=(("attn_qkv", merged), ("attn_qkv", merged)))
+    # uniform demand = demand experts + all-fetch everything else
+    u = PolicyTable.uniform(layout="split", fetch="demand", budget=16)
+    assert u.family("moe_experts").fetch == "demand"
+    assert u.family("moe_experts").budget == 16
+    assert u.family("dense_ffn").fetch == "all"
+
+
+def test_make_execution_plan_policy_surface():
+    """policy= is the canonical surface: tables, per-family dicts, and
+    uniform spec strings all resolve; the resolved table is what every
+    consumer reads via plan.policy(family)."""
+    from repro.core.strategy import PolicyTable, make_execution_plan
+
+    m, shape, ms = _plan_fixture()
     xp = make_execution_plan(m, shape, ms)
-    assert xp.weight_layout == "split" and xp.moe_ffn == "split"
-    with pytest.warns(DeprecationWarning, match="moe_ffn"):
-        xp2 = make_execution_plan(m, shape, ms, moe_ffn="merged")
-    assert xp2.weight_layout == "merged" and xp2.moe_ffn == "merged"
-    xp3 = make_execution_plan(m, shape, ms, weight_layout="merged")
-    assert xp3.weight_layout == "merged"
-    # the new spelling must NOT warn
-    with _warnings.catch_warnings():
-        _warnings.simplefilter("error", DeprecationWarning)
-        make_execution_plan(m, shape, ms, weight_layout="merged")
+    assert xp.policy("moe_experts").layout == "split"
+    assert xp.policy("attn_qkv").transport == "allgather"
     assert xp.capacity_from == "local"
+    mixed = make_execution_plan(m, shape, ms, policy={
+        "moe_experts": "split:demand:ring_sliced",
+        "attn_qkv": "merged",
+        "default": "split:all:ring",
+    })
+    assert mixed.policy("moe_experts").fetch == "demand"
+    assert mixed.policy("moe_experts").transport == "ring_sliced"
+    assert mixed.policy("attn_qkv").layout == "merged"
+    assert mixed.policy("dense_ffn").transport == "ring"
+    spec = make_execution_plan(m, shape, ms, policy="merged:all:ring")
+    assert spec.policy("dense_ffn").layout == "merged"
+    assert spec.policy("dense_ffn").transport == "ring"
+    tab = make_execution_plan(
+        m, shape, ms, policy=PolicyTable.uniform(layout="merged")
+    )
+    assert tab.policy("attn_out").layout == "merged"
     xp4 = make_execution_plan(m, shape, ms, capacity_from="global")
     assert xp4.capacity_from == "global"
+    with pytest.raises(ValueError, match="unknown gather family"):
+        make_execution_plan(m, shape, ms, policy={"bogus": "split"})
+    # per-layer-group overrides are validated against the model's plan,
+    # so a typo'd group errors instead of silently never matching
+    gname = m.plan[0].name
+    ok = make_execution_plan(
+        m, shape, ms, policy={f"{gname}/moe_experts": "merged"}
+    )
+    assert ok.policy("moe_experts", gname).layout == "merged"
+    with pytest.raises(ValueError, match="unknown layer group"):
+        make_execution_plan(
+            m, shape, ms, policy={"not-a-group/moe_experts": "merged"}
+        )
+
+
+@pytest.mark.filterwarnings("ignore::DeprecationWarning")
+def test_legacy_flat_kwargs_build_uniform_table():
+    """Every legacy flat kwarg keeps working as a deprecated alias that
+    builds the equivalent uniform PolicyTable — identical resolved
+    behavior, DeprecationWarning included."""
+    from repro.core.strategy import PolicyTable, make_execution_plan
+
+    m, shape, ms = _plan_fixture()
+    with pytest.warns(DeprecationWarning, match="deprecated flat knobs"):
+        legacy = make_execution_plan(
+            m, shape, ms, weight_layout="merged", prefetch="ring",
+            num_slices=8,
+        )
+    assert legacy.policies == PolicyTable.uniform(
+        layout="merged", transport="ring", num_slices=8
+    )
+    with pytest.warns(DeprecationWarning, match="moe_ffn"):
+        xp2 = make_execution_plan(m, shape, ms, moe_ffn="merged")
+    assert xp2.policy("moe_experts").layout == "merged"
+    with pytest.warns(DeprecationWarning):
+        dem = make_execution_plan(
+            m, shape, ms, expert_fetch="demand", demand_budget=16
+        )
+    assert dem.policies == PolicyTable.uniform(
+        layout="split", fetch="demand", budget=16
+    )
+    # deprecated reads on the plan reflect the table (and warn — below)
+    with pytest.warns(DeprecationWarning, match="ExecutionPlan.prefetch"):
+        assert legacy.prefetch == "ring"
+    with pytest.warns(DeprecationWarning, match="weight_layout"):
+        assert legacy.weight_layout == "merged"
+    with pytest.warns(DeprecationWarning, match="expert_fetch"):
+        assert dem.expert_fetch == "demand"
+    with pytest.warns(DeprecationWarning, match="demand_budget"):
+        assert dem.demand_budget == 16
+    # conflicts: moe_ffn vs weight_layout, and legacy vs policy=
     with pytest.warns(DeprecationWarning, match="moe_ffn"):
         with pytest.raises(ValueError, match="conflicting"):
             make_execution_plan(
                 m, shape, ms, weight_layout="split", moe_ffn="merged"
             )
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="conflicting policy="):
+            make_execution_plan(
+                m, shape, ms, policy="split", weight_layout="merged"
+            )
+    # demand still requires the split layout through the legacy spelling
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="demand"):
+            make_execution_plan(
+                m, shape, ms, weight_layout="merged", expert_fetch="demand"
+            )
 
 
-def test_expert_fetch_flag_validation():
-    """expert_fetch defaults to "all"; "demand" requires the split layout
-    (the demand bank is a split-bank refinement)."""
-    import jax.numpy as jnp
-
-    from repro.configs import reduced_variant
-    from repro.configs.base import InputShape
+def test_moe_ffn_property_warns_on_read():
+    """The PR 3 gap, closed: ExecutionPlan.moe_ffn warns on *access* too,
+    not just when passed as a kwarg."""
     from repro.core.strategy import make_execution_plan
+
+    m, shape, ms = _plan_fixture()
+    xp = make_execution_plan(m, shape, ms)
+    with pytest.warns(DeprecationWarning, match="moe_ffn"):
+        assert xp.moe_ffn == "split"
+
+
+def test_new_policy_surface_does_not_warn():
+    import warnings as _warnings
+
+    from repro.core.strategy import make_execution_plan
+
+    m, shape, ms = _plan_fixture()
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", DeprecationWarning)
+        xp = make_execution_plan(
+            m, shape, ms, policy={"moe_experts": "split:demand"}
+        )
+        assert xp.policy("moe_experts").fetch == "demand"
+        assert xp.policies.describe()
+
+
+# --------------------------------------------------------------------------
+# The roofline-guided policy="auto" resolver
+# --------------------------------------------------------------------------
+def _r1_gather_model():
     from repro.models.transformer import build_model
 
-    cfg = reduced_variant(get_arch("yi-9b"))
-    ms = {"data": 1, "model": 1}
-    m = build_model(cfg, ms, dtype=jnp.float32)
-    shape = InputShape("p", 32, 2, "prefill")
-    xp = make_execution_plan(m, shape, ms)
-    assert xp.expert_fetch == "all" and xp.demand_budget == 0
-    xp2 = make_execution_plan(
-        m, shape, ms, expert_fetch="demand", demand_budget=16
-    )
-    assert xp2.expert_fetch == "demand" and xp2.demand_budget == 16
-    with pytest.raises(ValueError, match="demand"):
-        make_execution_plan(
-            m, shape, ms, weight_layout="merged", expert_fetch="demand"
+    cfg = get_arch("deepseek-r1")
+    ms = {"data": 2, "model": 4}
+    # the DWDP4 gather geometry (R1's default on this mesh escalates to
+    # the wide rotate placement; the policy API targets the gather path)
+    return cfg, ms, build_model(cfg, ms, moe_exec="gather",
+                                expert_axes=("model",))
+
+
+def test_auto_resolver_decision_rules():
+    """decode (partial coverage) -> demand experts; long prefill (full
+    coverage) -> all-fetch; ring_sliced only for banks above the size
+    threshold (R1's GB-scale expert banks yes, tiny banks no)."""
+    from repro.configs.base import InputShape
+    from repro.core.strategy import resolve_policies
+
+    cfg, ms, m = _r1_gather_model()
+    dec = resolve_policies(m, InputShape("gen", 2048, 8, "decode"), ms)
+    assert dec.family("moe_experts").fetch == "demand"
+    assert dec.family("moe_experts").layout == "split"
+    assert dec.family("moe_experts").transport == "ring_sliced"
+    ctx = resolve_policies(m, InputShape("ctx", 16384, 1, "prefill"), ms)
+    assert ctx.family("moe_experts").fetch == "all"
+    assert ctx.family("moe_experts").layout == "split"
+    # a tiny MoE's banks fall below the TDM threshold -> allgather
+    from repro.configs import reduced_variant
+    from repro.models.transformer import build_model
+    import jax.numpy as jnp
+
+    small = reduced_variant(get_arch("glm4-9b"))
+    ms2 = {"data": 2, "model": 4}
+    m2 = build_model(small, ms2, dtype=jnp.float32)
+    t2 = resolve_policies(m2, InputShape("gen", 64, 8, "decode"), ms2)
+    assert t2.family("moe_experts").transport == "allgather"
+
+
+def test_auto_beats_every_uniform_policy_r1_decode():
+    """The acceptance criterion: at the DeepSeek-R1 gen_batch=8/topk=8/
+    E=256 decode shape, policy="auto" selects per-family policies whose
+    modeled (roofline.modeled_step_time over layer_times) decode step
+    time is <= EVERY uniform policy's."""
+    from repro.configs.base import InputShape
+    from repro.core import roofline
+    from repro.core.strategy import PolicyTable, resolve_policies
+
+    cfg, ms, m = _r1_gather_model()
+    assert cfg.moe.num_experts == 256 and cfg.moe.top_k == 8
+    shape = InputShape("gen", 2048, 8, "decode")
+    auto = resolve_policies(m, shape, ms)
+    kw = dict(tokens=8, group=4, kv_len=2048,
+              attn_gathered=bool(m.geom.attn_axes))
+    t_auto = roofline.modeled_step_time(cfg, policies=auto, **kw)
+    uniforms = {}
+    for layout in ("merged", "split"):
+        for fetch in ("all", "demand") if layout == "split" else ("all",):
+            for transport in ("allgather", "ring", "ring_sliced"):
+                tab = PolicyTable.uniform(
+                    layout=layout, fetch=fetch, transport=transport
+                )
+                uniforms[f"{layout}/{fetch}/{transport}"] = (
+                    roofline.modeled_step_time(cfg, policies=tab, **kw)
+                )
+    worst = max(uniforms, key=uniforms.get)
+    assert all(t_auto <= t + 1e-15 for t in uniforms.values()), (
+        t_auto, uniforms)
+    # and the win is real, not a tie across the board
+    assert t_auto < uniforms[worst] * 0.75
+
+
+def test_layer_times_policies_match_flat_knobs():
+    """layer_times(policies=uniform_table) reproduces the flat-knob
+    spelling exactly, and a mixed table prices each family's layout
+    independently (merged attention raises only the landing bytes)."""
+    from repro.core.strategy import PolicyTable
+
+    cfg = get_arch("deepseek-r1")
+    moe_layer = cfg.moe.first_dense
+    kw = dict(tokens=8, group=4, layer=moe_layer, attn_gathered=True)
+    for layout in ("merged", "split"):
+        flat = roofline.layer_times(cfg, weight_layout=layout, **kw)
+        tab = roofline.layer_times(
+            cfg, policies=PolicyTable.uniform(layout=layout), **kw
         )
+        assert flat == tab
+    mixed = roofline.layer_times(
+        cfg,
+        policies=PolicyTable.from_dict(
+            {"default": "split", "attn_qkv": "merged", "attn_out": "merged"}
+        ),
+        **kw,
+    )
+    all_split = roofline.layer_times(
+        cfg, policies=PolicyTable.uniform(layout="split"), **kw
+    )
+    assert mixed.prefetch == all_split.prefetch  # wire bytes unchanged
+    assert mixed.land_bytes > all_split.land_bytes  # merged attn re-lands
+    assert mixed.compute == all_split.compute
 
 
 # --------------------------------------------------------------------------

@@ -239,7 +239,9 @@ def test_analytic_hbm_bytes_demand_below_full_r1_decode():
     m = build_model(cfg, ms, moe_exec="gather", expert_axes=("model",))
     shape = InputShape("gen", 2048, 8, "decode")
     xps = {
-        fetch: make_execution_plan(m, shape, ms, expert_fetch=fetch)
+        fetch: make_execution_plan(
+            m, shape, ms, policy={"moe_experts": f"split:{fetch}"}
+        )
         for fetch in ("all", "demand")
     }
     from repro.core.execution import demand_fetch_active
@@ -302,25 +304,127 @@ def test_engine_reports_gather_fetch_savings():
     shape = InputShape("gen", 64, 4, "decode")
     xp_all = make_execution_plan(m, shape, ms, mode="dwdp")
     xp_dem = make_execution_plan(
-        m, shape, ms, mode="dwdp", expert_fetch="demand", demand_budget=2
+        m, shape, ms, mode="dwdp",
+        policy={"moe_experts": "split:demand:allgather:4:2"},
     )
     b_all = gathered_wire_bytes_per_step(m, xp_all)
     b_dem = gathered_wire_bytes_per_step(m, xp_dem)
     assert b_all["fetched"] == b_all["full"] > 0
     assert b_dem["full"] == b_all["full"]
     assert 0 < b_dem["fetched"] < b_dem["full"]
-    # and the metrics surface the ratio
+    # per-family breakdown: the delta is entirely in the expert bank
+    fam = b_dem["families"]["moe_experts"]
+    assert 0 < fam["fetched"] < fam["full"]
+    assert sum(v["fetched"] for v in b_dem["families"].values()) == (
+        b_dem["fetched"]
+    )
+    # and the metrics surface the ratio + the per-family counters
     from repro.runtime.metrics import RequestRecord, ServingMetrics
 
     sm = ServingMetrics()
-    sm.records.append(RequestRecord(
+    rec = RequestRecord(
         req_id=0, arrival=0.0, prompt_len=4, target_len=2,
         first_token_time=1.0, done_time=3.0, tokens_out=3,
-        gathered_fetch_bytes=b_dem["fetched"],
-        gathered_full_bytes=b_dem["full"],
-    ))
+    )
+    rec.add_gather_share(b_dem)
+    sm.records.append(rec)
     s = sm.summary(3.0)
     assert 0 < s["gather_fetch_ratio"] < 1
+    by_fam = s["gathered_mb_by_family"]
+    assert by_fam["moe_experts"]["fetched"] < by_fam["moe_experts"]["full"]
+
+
+# --------------------------------------------------------------------------
+# the CLI policy surface (launch/serve.py --policy / --policy-file)
+# --------------------------------------------------------------------------
+def test_cli_policy_flags_round_trip(tmp_path):
+    """--policy / --policy-file parse into the PolicyTable the engine
+    consumes: repeatable per-family flags, JSON files, flag-over-file
+    precedence, 'auto' pass-through — and unknown families or values are
+    rejected."""
+    import json
+
+    from repro.core.strategy import GatherPolicy, PolicyTable
+    from repro.launch.serve import parse_policy_flags
+
+    t = parse_policy_flags([
+        "moe_experts=split:demand:ring_sliced",
+        "attn_qkv=merged",
+        "default=split:all:ring",
+    ])
+    assert t.family("moe_experts") == GatherPolicy(
+        "split", "demand", "ring_sliced"
+    )
+    assert t.family("attn_qkv").layout == "merged"
+    assert t.family("dense_ffn").transport == "ring"
+    # full round trip through the JSON file format
+    f = tmp_path / "policies.json"
+    f.write_text(json.dumps(t.to_dict()))
+    assert parse_policy_flags([], str(f)) == t
+    # flags override file entries
+    merged = parse_policy_flags(["moe_experts=split:all"], str(f))
+    assert merged.family("moe_experts").fetch == "all"
+    assert merged.family("attn_qkv").layout == "merged"
+    assert parse_policy_flags(["auto"]) == "auto"
+    assert parse_policy_flags([]) is None
+    for bad in (["bogus_family=split"], ["moe_experts=bogus"],
+                ["moe_experts"], ["auto", "attn_qkv=merged"]):
+        with pytest.raises(ValueError):
+            parse_policy_flags(bad)
+    with pytest.raises(ValueError):
+        parse_policy_flags(["auto"], str(f))
+
+
+def test_cli_legacy_flags_equal_uniform_table():
+    """The pre-PolicyTable serve flags resolve to exactly the uniform
+    table the equivalent --policy spelling builds (legacy-flag -> table
+    equivalence, without deprecation warnings on the internal path)."""
+    import warnings
+
+    from repro.core.strategy import PolicyTable
+    from repro.runtime.engine import _resolve_policy
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        legacy = _resolve_policy(
+            None, prefetch="ring", weight_layout="merged",
+            expert_fetch="all", demand_budget=0,
+        )
+        assert legacy == PolicyTable.uniform(
+            layout="merged", transport="ring"
+        )
+        dem = _resolve_policy(None, expert_fetch="demand", demand_budget=4)
+        assert dem.family("moe_experts").fetch == "demand"
+        assert dem.family("moe_experts").budget == 4
+        # an explicit policy wins outright
+        explicit = PolicyTable.uniform(layout="merged")
+        assert _resolve_policy(explicit, weight_layout="split") is explicit
+
+
+def test_simulator_accepts_policy_table():
+    """SimConfig.policies is the canonical per-family surface; the flat
+    fields remain as the uniform spelling and agree with it."""
+    from repro.core.strategy import PolicyTable
+    from repro.runtime.simulator import ClusterSimulator, SimConfig
+
+    cfg = get_arch("deepseek-r1")
+    flat = SimConfig(cfg=cfg, gen_batch=8, gen_mode="dwdp",
+                     expert_fetch="demand")
+    tab = SimConfig(
+        cfg=cfg, gen_batch=8, gen_mode="dwdp",
+        policies=PolicyTable.uniform(layout="split", fetch="demand"),
+    )
+    assert flat.table() == tab.table()
+    assert ClusterSimulator(flat).decode_wire_bytes(8) == (
+        ClusterSimulator(tab).decode_wire_bytes(8)
+    )
+    mixed = SimConfig(
+        cfg=cfg,
+        policies=PolicyTable.from_dict(
+            {"moe_experts": "split:demand", "attn_qkv": "merged"}
+        ),
+    )
+    assert ClusterSimulator(mixed).ctx_time([1024]) > 0
 
 
 # --------------------------------------------------------------------------
