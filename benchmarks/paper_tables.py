@@ -255,30 +255,45 @@ BENCH_POLICY_JSON = os.path.join(
 
 def bench_policy_auto(out_path: str = BENCH_POLICY_JSON) -> list[dict]:
     """policy="auto" vs every uniform policy at the DeepSeek-R1 decode
-    acceptance shape (gen_batch=8, topk=8, E=256, DWDP4 gather geometry):
-    one row per uniform (layout, fetch) table plus the resolver's pick,
-    scored by ``roofline.modeled_step_time`` (per-layer ``max(compute +
-    landing, prefetch)`` summed over the stack). Rewrites
-    BENCH_policy_auto.json; ``auto_vs_best_uniform`` <= 1.0 is the
-    acceptance bar (auto must match or beat the best uniform table)."""
+    acceptance shape (gen_batch=8 PER RANK, topk=8, E=256, DWDP4 gather
+    geometry): one row per uniform (layout, fetch) table plus the
+    resolver's pick, scored by ``roofline.modeled_step_time`` (per-layer
+    ``max(compute + landing, overlapped prefetch) + serial round`` summed
+    over the stack — route-before-gather rounds that wait on routing
+    price serially; the predictive fetch's speculative round overlaps).
+    Uniform tables are priced at their ENGINE-effective resolution
+    (``strategy.effective_policies``) so an unlowerable layout never
+    looks cheaper than it is. Rewrites BENCH_policy_auto.json;
+    ``auto_vs_best_uniform`` <= 1.0 is the acceptance bar (auto must
+    match or beat the best uniform table)."""
     import jax.numpy as jnp
 
+    from benchmarks.kernels_bench import write_bench_json
     from repro.configs.base import InputShape
-    from repro.core.strategy import PolicyTable, resolve_policies
+    from repro.core.strategy import (
+        PolicyTable, effective_policies, resolve_policies,
+    )
     from repro.models.transformer import build_model
 
     cfg = get_arch(R1)
     ms = {"data": 2, "model": 4}
     model = build_model(cfg, ms, dtype=jnp.bfloat16, moe_exec="gather",
                         expert_axes=("model",))
-    shape = InputShape("gen", 2048, 8, "decode")
-    kw = dict(tokens=shape.global_batch, group=4, kv_len=shape.seq_len,
+    # global batch 64 over the 8-rank mesh = 8 decode rows per rank
+    shape = InputShape("gen", 2048, 64, "decode")
+    kw = dict(tokens=8, group=4, kv_len=shape.seq_len,
               attn_gathered=bool(model.geom.attn_axes))
     rows = []
     uniform_ts = []
     for layout in ("merged", "split"):
-        for fetch in ("all", "demand") if layout == "split" else ("all",):
-            tab = PolicyTable.uniform(layout=layout, fetch=fetch)
+        fetches = (
+            ("all", "demand", "predictive") if layout == "split"
+            else ("all",)
+        )
+        for fetch in fetches:
+            tab = effective_policies(model, shape, ms, PolicyTable.uniform(
+                layout=layout, fetch=fetch,
+            ))
             t = roofline.modeled_step_time(cfg, policies=tab, **kw)
             uniform_ts.append(t)
             rows.append({
@@ -293,9 +308,12 @@ def bench_policy_auto(out_path: str = BENCH_POLICY_JSON) -> list[dict]:
         "auto_vs_best_uniform": round(t_auto / min(uniform_ts), 4),
         "resolved": auto.describe(),
     })
-    with open(out_path, "w") as f:
-        json.dump({"shape": "r1 decode gen_batch=8 topk=8 E=256 group=4",
-                   "rows": rows}, f, indent=1)
+    write_bench_json(
+        out_path, "policy_auto",
+        {"shape": "r1 decode 8 rows/rank topk=8 E=256 group=4",
+         "mesh": "2x4", "arch": R1},
+        rows,
+    )
     return rows
 
 

@@ -27,6 +27,7 @@ def _all_benchmarks():
         "split_moe": kernels_bench.bench_split_moe,
         "split_attn": kernels_bench.bench_split_attn,
         "demand_moe": kernels_bench.bench_demand_moe,
+        "demand_predict": kernels_bench.bench_demand_predict,
         "dryrun_roofline": roofline_table.bench_dryrun_roofline,
     }
 

@@ -69,11 +69,16 @@ def main():
                     help="uniform gathered-weight representation (the "
                          "pre-PolicyTable spelling)")
     ap.add_argument("--expert-fetch", default=None,
-                    choices=["all", "demand"],
+                    choices=["all", "demand", "predictive"],
                     help="route-before-gather demand fetch of only the "
-                         "activated experts (vs every remote expert)")
+                         "activated experts (vs every remote expert); "
+                         "'predictive' overlaps a speculative round and "
+                         "caches fetched experts across decode steps")
     ap.add_argument("--demand-budget", type=int, default=None,
                     help="per-peer demand-fetch row budget (0 = auto)")
+    ap.add_argument("--cache-budget", type=int, default=None,
+                    help="predictive residency-cache rows per layer "
+                         "(0 = cache off)")
     ap.add_argument("--mesh", default="1,1",
                     help="data,model mesh shape (e.g. 2,4)")
     ap.add_argument("--fake-devices", type=int, default=0,
@@ -99,6 +104,7 @@ def main():
         weight_layout=args.weight_layout,
         expert_fetch=args.expert_fetch or "all",
         demand_budget=args.demand_budget or 0,
+        cache_budget=args.cache_budget or 0,
         policy=policy,
     )
     print("gen policies:", engine.gen.xp.policies.describe())
@@ -124,6 +130,15 @@ def main():
         for fam, mb in summary.get("gathered_mb_by_family", {}).items():
             print(f"  {fam:>12}: {mb['fetched']} MB shipped"
                   f" / {mb['full']} MB full")
+    if "predict_hit_rate" in summary:
+        print(
+            f"predictive fetch: {summary['predict_mb_hit']} MB served from"
+            f" cache+speculation vs {summary['predict_mb_miss']} MB"
+            f" correction-fetched (hit rate"
+            f" {100 * summary['predict_hit_rate']:.1f}%;"
+            f" {summary['predict_mb_predicted']} MB speculated,"
+            f" {summary['predict_mb_evicted']} MB evicted)"
+        )
     for rid in sorted(engine.outputs)[:4]:
         toks = engine.outputs[rid]
         print(f"req {rid}: {toks}")

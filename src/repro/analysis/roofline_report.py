@@ -115,11 +115,15 @@ def analytic_residency_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2,
     from repro.core.execution import (
         _qgather_ok,
         demand_fetch_active,
+        predictive_fetch_active,
+        resolve_cache_rows,
         resolve_demand_budget,
+        resolve_spec_budget,
         split_bank_active,
     )
 
     layer_sets = [0.0]
+    cache_bytes = 0.0
     if cfg.moe is not None and geom.moe_exec == "gather" and geom.moe_placement:
         pl = geom.moe_placement
         window_experts = pl.num_padded
@@ -130,6 +134,21 @@ def analytic_residency_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2,
             window_experts = (pl.subgroup_size - 1) * min(
                 budget, pl.local_count
             )
+            if predictive_fetch_active(cfg, geom, xp):
+                # speculative + correction rounds both buffer, and the
+                # cross-step residency cache is PERSISTENT per MoE layer
+                # (not double-buffered — priced separately below)
+                spec = resolve_spec_budget(cfg, geom, xp)
+                window_experts += (pl.subgroup_size - 1) * min(
+                    spec, pl.local_count
+                )
+                n_moe = sum(
+                    cfg.is_moe_layer(l) for l in range(cfg.num_layers)
+                )
+                cache_bytes = (
+                    n_moe * resolve_cache_rows(cfg, geom, xp)
+                    * 3 * cfg.d_model * cfg.moe.d_ff * dtype_bytes
+                )
         elif split_bank_active(geom, xp, "moe/experts"):
             # gate on the engine's own predicate (not the knob alone) so
             # the report never claims a saving for plans that fall back
@@ -184,7 +203,7 @@ def analytic_residency_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2,
     if shape.phase == "train":
         # one checkpoint per scan cycle
         acts += (cfg.num_layers + 1) * t_local * cfg.d_model * dtype_bytes
-    return weights + gather_buf + kv + acts
+    return weights + gather_buf + cache_bytes + kv + acts
 
 
 def analytic_hbm_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2) -> float:
@@ -222,7 +241,10 @@ def analytic_hbm_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2) -> float:
         from repro.core.execution import (
             _qgather_ok,
             demand_fetch_active,
+            predictive_fetch_active,
+            resolve_cache_rows,
             resolve_demand_budget,
+            resolve_spec_budget,
             split_bank_active,
         )
 
@@ -301,6 +323,17 @@ def analytic_hbm_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2) -> float:
                     fetch_rows = (pl.subgroup_size - 1) * min(
                         budget, pl.local_count
                     )
+                    if predictive_fetch_active(cfg, geom, xp):
+                        # speculative round lands+reads too; cached rows
+                        # are read in place (one read, no landing)
+                        spec = resolve_spec_budget(cfg, geom, xp)
+                        fetch_rows += (pl.subgroup_size - 1) * min(
+                            spec, pl.local_count
+                        )
+                        gathered_extra += (
+                            n_moe * resolve_cache_rows(cfg, geom, xp)
+                            * per_layer * dtype_bytes
+                        )
                     gathered_extra += (
                         2.0 * n_moe * fetch_rows * per_layer * dtype_bytes
                     )

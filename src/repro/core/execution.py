@@ -211,6 +211,8 @@ def demand_fetch_active(
     cfg, geom: Geometry, xp: ExecutionPlan, group: Optional[str] = None
 ) -> bool:
     """Does the MoE gather run the on-demand route-before-gather path?
+    (Covers both ``fetch="demand"`` and ``fetch="predictive"`` — the
+    predictive engine is a refinement of the demand rounds.)
 
     Requires the split fast path (the demand bank is a split-bank
     refinement) over a single-axis placement, and engages only when
@@ -218,7 +220,7 @@ def demand_fetch_active(
     i.e. when the activated set *can* be a strict subset of the remote
     bank (decode, small-batch prefill). At full coverage the "all"
     gather is never worse, so the plan silently keeps it."""
-    if xp.policy("moe_experts", group).fetch != "demand":
+    if xp.policy("moe_experts", group).fetch not in ("demand", "predictive"):
         return False
     if cfg.moe is None or not moe_split_active(geom, xp, group):
         return False
@@ -229,20 +231,43 @@ def demand_fetch_active(
     return _routed_tokens(xp) * cfg.moe.top_k < num_remote
 
 
+def predictive_fetch_active(
+    cfg, geom: Geometry, xp: ExecutionPlan, group: Optional[str] = None
+) -> bool:
+    """Does the demand path additionally run the predictive engine —
+    layer-ahead speculative round + cross-step residency cache +
+    post-routing correction round?
+
+    Decode only: the predictor and the cache live in a ``PredictState``
+    threaded through the decode-step state, which only the decode loop
+    carries. Everywhere else ``fetch="predictive"`` lowers exactly as
+    ``"demand"`` (same rounds, same bitwise results)."""
+    return (
+        xp.phase == "decode"
+        and xp.policy("moe_experts", group).fetch == "predictive"
+        and demand_fetch_active(cfg, geom, xp, group)
+    )
+
+
 def resolve_demand_budget(
     cfg, geom: Geometry, xp: ExecutionPlan, group: Optional[str] = None
 ) -> int:
-    """Static per-peer demand-fetch row budget.
+    """Static per-peer demand-fetch row budget — for predictive-active
+    layers this is the *correction* round's budget (the miss-set
+    estimate), for plain demand the whole round's.
 
     A ``moe_experts`` policy ``budget`` > 0 is honored (clamped to the
     per-rank expert count, at which point overflow is impossible). Auto
     (0) applies ``roofline.demand_budget_rows`` — 2x the expected
-    per-peer distinct-expert coverage, 8-aligned — the ONE closed form
-    the roofline/simulator wire models price, so the analytics and the
-    lowered program always ship the same payload. Overflow beyond the
-    budget is handled exactly by the per-layer fallback, so the estimate
-    only tunes wire bytes, never correctness."""
-    from repro.core.roofline import demand_budget_rows
+    per-peer distinct-expert coverage, 8-aligned — or, predictive, the
+    correction half of ``roofline.predictive_budget_rows``: the ONE set
+    of closed forms the roofline/simulator wire models price, so the
+    analytics and the lowered program always ship the same payload.
+    Overflow beyond the budget is handled exactly by the per-layer
+    fallback, so the estimate only tunes wire bytes, never correctness
+    (in particular the correction payload is budget-bounded by the miss
+    estimate, never by the expert count)."""
+    from repro.core.roofline import demand_budget_rows, predictive_budget_rows
 
     pl = geom.moe_placement
     assert pl is not None and cfg.moe is not None
@@ -250,9 +275,45 @@ def resolve_demand_budget(
     user = xp.policy("moe_experts", group).budget
     if user > 0:
         return min(user, local)
-    return demand_budget_rows(
+    draws = _routed_tokens(xp) * cfg.moe.top_k
+    if predictive_fetch_active(cfg, geom, xp, group):
+        return predictive_budget_rows(draws, cfg.moe.num_experts, local)[1]
+    return demand_budget_rows(draws, cfg.moe.num_experts, local)
+
+
+def resolve_spec_budget(
+    cfg, geom: Geometry, xp: ExecutionPlan, group: Optional[str] = None
+) -> int:
+    """Static per-peer row budget of the predictive SPECULATIVE round
+    (the layer-ahead prefetch of the predicted hot set). Policy
+    ``budget`` > 0 is honored; auto applies the speculative half of
+    ``roofline.predictive_budget_rows`` (1x expected coverage). The
+    predictor shapes its bitmap to at most this many rows per peer, so
+    the speculative round can never overflow — excess predictions are
+    simply left to the correction round."""
+    from repro.core.roofline import predictive_budget_rows
+
+    pl = geom.moe_placement
+    assert pl is not None and cfg.moe is not None
+    local = pl.local_count
+    user = xp.policy("moe_experts", group).budget
+    if user > 0:
+        return min(user, local)
+    return predictive_budget_rows(
         _routed_tokens(xp) * cfg.moe.top_k, cfg.moe.num_experts, local
-    )
+    )[0]
+
+
+def resolve_cache_rows(
+    cfg, geom: Geometry, xp: ExecutionPlan, group: Optional[str] = None
+) -> int:
+    """Rows of the per-layer cross-step expert residency cache: the
+    ``moe_experts`` policy's ``cache_budget``, capped at the remote bank
+    (caching more than the remote rows buys nothing). 0 = cache off."""
+    pl = geom.moe_placement
+    assert pl is not None
+    remote = (pl.subgroup_size - 1) * pl.local_count
+    return min(xp.policy("moe_experts", group).cache_budget, remote)
 
 
 def gather_set(
@@ -268,9 +329,14 @@ def gather_set(
     Demand-active MoE layers (route-before-gather) exclude the expert
     bank: their gather depends on the current layer's routing, so it
     runs *inside* ``_moe_apply`` instead of the layer-ahead pipeline.
-    ``cfg`` is needed for that eligibility check only; callers that pass
-    none get the demand-oblivious set. ``group`` scopes per-layer-group
-    policy overrides."""
+    PREDICTIVE-active layers (decode) re-join the pipeline: their
+    speculative round depends only on the cross-step ``PredictState``,
+    so it is issued a layer ahead like any other family — that is what
+    puts the payload round back under the previous layer's
+    attention/compute window — and only the small correction round stays
+    inside ``_moe_apply``. ``cfg`` is needed for those eligibility
+    checks only; callers that pass none get the demand-oblivious set.
+    ``group`` scopes per-layer-group policy overrides."""
     if xp.mode == "replicated":
         return ()
     out: list[tuple[str, ...]] = []
@@ -293,6 +359,7 @@ def gather_set(
             and not (
                 cfg is not None
                 and demand_fetch_active(cfg, geom, xp, group)
+                and not predictive_fetch_active(cfg, geom, xp, group)
             )
         ):
             out.append(("moe", "experts"))
@@ -342,8 +409,25 @@ def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
                 if key == "moe/experts":
                     pl = geom.moe_placement
                     pe = 3 * d * cfg.moe.d_ff * ws
-                    add("moe_experts", group.n_cycles,
-                        prefetch.gather_bytes(pl, pe))
+                    full_b = prefetch.gather_bytes(pl, pe)
+                    if predictive_fetch_active(cfg, geom, xp, group.name):
+                        # the predictive rounds replace the full gather:
+                        # budget-padded speculative round (layer-ahead)
+                        # + correction round, each with its index round
+                        spec_b = resolve_spec_budget(
+                            cfg, geom, xp, group.name
+                        )
+                        corr_b = resolve_demand_budget(
+                            cfg, geom, xp, group.name
+                        )
+                        fetched = min(
+                            full_b,
+                            prefetch.demand_fetch_bytes(pl, spec_b, pe)
+                            + prefetch.demand_fetch_bytes(pl, corr_b, pe),
+                        )
+                        add("moe_experts", group.n_cycles, full_b, fetched)
+                    else:
+                        add("moe_experts", group.n_cycles, full_b)
                 elif key == "attn":
                     a = _axsize(xp, geom.attn_axes)
                     qkv = d * (cfg.q_dim + 2 * cfg.kv_dim) * ws
@@ -355,7 +439,11 @@ def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
                     f = sig.shared_d_ff if key == "moe/shared" else sig.ffn_dim
                     w = 3 * d * (f or 0) * ws
                     add("dense_ffn", group.n_cycles, w * (s - 1) / max(1, s))
-            if sig.is_moe and demand_fetch_active(cfg, geom, xp, group.name):
+            if (
+                sig.is_moe
+                and demand_fetch_active(cfg, geom, xp, group.name)
+                and not predictive_fetch_active(cfg, geom, xp, group.name)
+            ):
                 # route-before-gather layers: gather_set excluded the
                 # expert bank; the demand fetch happens inside the layer
                 pl = geom.moe_placement
@@ -471,16 +559,47 @@ def _gather_attn(tree: dict, ctx: Ctx):
     return prefetch.AttnBank(qkv=parts["attn_qkv"], out=parts["attn_out"])
 
 
-def gather_layer(gsub: dict, ctx: Ctx) -> dict:
+def _speculative_expert_gather(tree, ctx: Ctx, pred) -> prefetch.DemandBank:
+    """The predictive fetch's layer-ahead SPECULATIVE round: a demand
+    gather of the predictor's hot set (previous-step routing + EMA, minus
+    cache-resident rows), issued from the prefetch pipeline — i.e. during
+    the previous layer's attention/compute window, with no dependence on
+    this step's routing, so the payload overlaps compute exactly like the
+    all-fetch prefetch. The predictor bitmap is shaped to the speculative
+    budget per peer, so this round never overflows (misses fall to the
+    correction round inside ``_moe_apply``)."""
+    cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
+    pl = geom.moe_placement
+    axis = geom.expert_axes[0]
+    pol = xp.policy("moe_experts", ctx.group)
+    sbudget = resolve_spec_budget(cfg, geom, xp, ctx.group)
+    wanted = prefetch.predict_bitmap(
+        pred.prev[0], pred.ema[0], pl, budget=sbudget,
+        exclude_ids=pred.cache_ids[0], exclude_valid=pred.cache_valid[0],
+    )
+    plan = prefetch.plan_demand_fetch(
+        wanted, axis, pl, budget=sbudget, agree_axes=()
+    )
+    return prefetch.gather_demand_payload(
+        tree, plan, axis, pl, budget=sbudget, mode=pol.transport,
+        num_slices=pol.num_slices,
+    )
+
+
+def gather_layer(gsub: dict, ctx: Ctx, pred=None) -> dict:
     """One gather routine for every prefetched family, each under ITS OWN
     policy (``xp.policy(family, group)`` — layout, transport, slicing).
 
     Split-active families come back as a ``prefetch.SplitBank`` — THE
     canonical gathered representation (remote-only wire traffic, resident
     shard untouched, rotated canonical order); the attention tree splits
-    into its qkv/out sub-families (see ``_gather_attn``). Everything else
-    takes the legacy path through the explicit merge (``_gather_leading``
-    / ``gather_shards``), which is the only place a full canonical weight
+    into its qkv/out sub-families (see ``_gather_attn``). A
+    predictive-active expert bank (decode) comes back as a compact
+    ``prefetch.DemandBank`` instead — the speculative round's fetch of
+    the predicted hot set, driven by the layer's ``pred``
+    :class:`prefetch.PredictState`. Everything else takes the legacy
+    path through the explicit merge (``_gather_leading`` /
+    ``gather_shards``), which is the only place a full canonical weight
     buffer is ever created."""
     geom, xp = ctx.geom, ctx.xp
     out = {}
@@ -498,6 +617,14 @@ def gather_layer(gsub: dict, ctx: Ctx) -> dict:
         elif key == "moe/experts":
             axes, pl, fam = geom.expert_axes, geom.moe_placement, "moe_experts"
             assert pl is not None and len(axes) == 1
+            if predictive_fetch_active(ctx.cfg, geom, xp, ctx.group):
+                assert pred is not None, (
+                    "predictive fetch needs the layer's PredictState in "
+                    'the decode state — attach it with '
+                    "execution.attach_predict_state(state, model, xp)"
+                )
+                out[key] = _speculative_expert_gather(tree, ctx, pred)
+                continue
         else:
             raise KeyError(key)
         pol = xp.policy(fam, ctx.group)
@@ -762,18 +889,34 @@ def _attn_decode_cache(q, k_new, v_new, sig: LayerSig, ctx: Ctx, lstate):
 def _capture_kv_state(k, v, sig: LayerSig, ctx: Ctx):
     """Turn prefill K/V into a ring-buffer decode state (the disaggregated
     ctx->gen KV transfer payload). Ring slot l holds the latest position
-    p < S with p % L == l; slots that never filled stay empty (-1)."""
-    assert not ctx.xp.seq_axes, "KV capture requires unsharded sequence"
+    p < S with p % L == l; slots that never filled stay empty (-1).
+
+    Works under SEQUENCE SHARDING too: the prefill attention path
+    all-gathers K/V over the seq axes before attending (``_attn_full``),
+    so ``k``/``v`` here always carry the full global sequence — each rank
+    simply keeps the ring slots it owns under the decode cache layout
+    (``slot // l_local == mine``, matching ``_attn_decode_cache``)."""
+    xp = ctx.xp
     b, s = k.shape[0], k.shape[1]
     length = min(sig.window, ctx.capture_len) if sig.window else ctx.capture_len
-    l_idx = jnp.arange(length)
+    n_sh = xp.seq_shards if xp.seq_axes else 1
+    assert length % n_sh == 0, (
+        f"KV capture ring length {length} "
+        f"({'window-limited, window=' + str(sig.window) if sig.window and sig.window < ctx.capture_len else 'capture_len'}) "
+        f"must divide over the {n_sh} sequence shards — pick a "
+        "cache_len (and, for local-attention layers, a window) divisible "
+        "by the seq-shard count, or prefill on an unsharded-sequence mesh"
+    )
+    l_local = length // n_sh
+    mine = _shard_index(xp, xp.seq_axes) if xp.seq_axes else jnp.int32(0)
+    l_idx = mine * l_local + jnp.arange(l_local)  # global slots owned here
     pos_l = (s - 1) - ((s - 1 - l_idx) % length)
     valid = pos_l >= 0
     take = jnp.clip(pos_l, 0, s - 1)
     ck = jnp.take(k, take, axis=1) * valid[None, :, None, None].astype(k.dtype)
     cv = jnp.take(v, take, axis=1) * valid[None, :, None, None].astype(v.dtype)
     slot_pos = jnp.broadcast_to(
-        jnp.where(valid, pos_l, -1)[None, :], (b, length)
+        jnp.where(valid, pos_l, -1)[None, :], (b, l_local)
     ).astype(jnp.int32)
     return {"k": ck, "v": cv, "slot_pos": slot_pos}
 
@@ -1015,8 +1158,10 @@ def _rolled_dispatch(d, roll, e_pad: int, capacity: int):
     return d._replace(flat_slot=exp * capacity + slot)
 
 
-def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx):
-    """Route-before-gather MoE execution (``expert_fetch="demand"``).
+def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
+                      spec_bank=None, pred=None):
+    """Route-before-gather MoE execution (``fetch="demand"`` and the
+    ``fetch="predictive"`` decode engine).
 
     The routing decision ``d`` already exists — this is the inverted
     layer order — so the activated-expert bitmap is exact, not a
@@ -1034,6 +1179,22 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx):
     - overflow fallback: the PR 1 split path verbatim (full remote bank,
       rolled dispatch) — exact for any routing, so correctness never
       depends on the budget estimate.
+
+    Predictive decode (``spec_bank``/``pred`` given) refines the demand
+    round into a latency engine: the wanted set is first served from the
+    cross-step residency cache (``pred.cache*`` — rows fetched on
+    earlier steps, bit-identical to re-fetching) and the layer-ahead
+    SPECULATIVE round's bank (``spec_bank``, fetched under the previous
+    layer's compute window); only the miss set rides the post-routing
+    CORRECTION round (``plan_demand_fetch(exclude_ids=...)`` — the same
+    bitmap/ascending-id contract over the already-subtracted bitmap).
+    The kernel consumes the concatenated (cache | speculative |
+    correction) rows as one fetched bank through the same ``fetched_ids``
+    remap, so the compute is bitwise-identical to the plain demand and
+    all-fetch paths for ANY predictor quality and ANY cache budget; a
+    correction overflow falls back to the full gather exactly as demand
+    does. The predictor (prev bitmap + EMA) updates branch-independently;
+    the cache inserts this step's fetched rows, evicting by EMA hotness.
     """
     cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
     pl = geom.moe_placement
@@ -1044,8 +1205,8 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx):
     t = x2d.shape[0]
     pol = xp.policy("moe_experts", ctx.group)
     budget = resolve_demand_budget(cfg, geom, xp, ctx.group)
-    n_fetch = (g - 1) * min(budget, local)
     p = lax.axis_index(axis) % g
+    predictive = pred is not None
     # pallas_call has no VJP; the jnp formulation (still merge-free)
     # carries the ZeRO-style train gathers
     impl = "jnp" if xp.phase == "train" else "pallas"
@@ -1056,41 +1217,66 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx):
     wanted = (
         jnp.zeros((e_pad,), bool).at[d.top_experts.reshape(-1)].max(d.keep)
     )
-    plan = prefetch.plan_demand_fetch(
-        wanted, axis, pl, budget=budget, agree_axes=tuple(xp.mesh_sizes)
-    )
-
-    def demand_branch(experts, d):
-        bank = prefetch.gather_demand_payload(
-            experts, plan, axis, pl, budget=budget, mode=pol.transport,
-            num_slices=pol.num_slices,
+    if predictive:
+        assert spec_bank is not None
+        ema = pred.ema[0]
+        cache_ids, cache_valid = pred.cache_ids[0], pred.cache_valid[0]
+        cache_w = jax.tree.map(lambda w: w[0], pred.cache)
+        n_cache = cache_ids.shape[0]
+        have_ids = jnp.concatenate([cache_ids, spec_bank.fetched_ids])
+        have_valid = jnp.concatenate([cache_valid, spec_bank.valid])
+        plan = prefetch.plan_demand_fetch(
+            wanted, axis, pl, budget=budget,
+            agree_axes=tuple(xp.mesh_sizes),
+            exclude_ids=have_ids, exclude_valid=have_valid,
         )
+        # predictor update — pure index arithmetic, branch-independent
+        new_prev = wanted
+        new_ema = (
+            prefetch.EMA_DECAY * ema
+            + (1.0 - prefetch.EMA_DECAY) * wanted.astype(jnp.float32)
+        )
+        # hit/miss accounting (rows of the wanted REMOTE set)
+        local_mask = jnp.zeros((e_pad,), bool).at[
+            p * local + jnp.arange(local)
+        ].set(True)
+        wanted_remote = wanted & ~local_mask
+        have_map = prefetch.exclude_bitmap(e_pad, have_ids, have_valid)
+        n_want = jnp.sum(wanted_remote).astype(jnp.float32)
+        n_hit = jnp.sum(wanted_remote & have_map).astype(jnp.float32)
+        n_pred = jnp.sum(spec_bank.valid).astype(jnp.float32)
+    else:
+        plan = prefetch.plan_demand_fetch(
+            wanted, axis, pl, budget=budget, agree_axes=tuple(xp.mesh_sizes)
+        )
+
+    def _remap_and_run(d, fetched, ids, valid):
         # expert-id -> compact-bank position. Experts neither resident
         # nor fetched receive only zero-weight traffic (every kept
         # token's expert is in the bitmap), so they may map anywhere
         # in range; position 0 keeps the scatter dense.
+        rows = valid.shape[0]
         pos = jnp.zeros((e_pad,), jnp.int32)
         pos = pos.at[p * local + jnp.arange(local)].set(
             jnp.arange(local, dtype=jnp.int32)
         )
-        pos = pos.at[jnp.where(plan.valid, plan.fetched_ids, e_pad)].set(
-            local + jnp.arange(n_fetch, dtype=jnp.int32), mode="drop"
+        pos = pos.at[jnp.where(valid, ids, e_pad)].set(
+            local + jnp.arange(rows, dtype=jnp.int32), mode="drop"
         )
         exp = d.flat_slot // cap
         slot = d.flat_slot - exp * cap
         d2 = d._replace(flat_slot=pos[exp] * cap + slot)
-        xe = moe_lib.dispatch_tokens(x2d, d2, local + n_fetch, cap)
-        lo, fe = bank.local, bank.fetched
+        xe = moe_lib.dispatch_tokens(x2d, d2, local + rows, cap)
         ye = split_gemm_lib.split_swiglu_demand(
             xe,
-            lo["w_gate"], lo["w_up"], lo["w_down"],
-            fe["w_gate"], fe["w_up"], fe["w_down"],
-            bank.valid,
+            experts["w_gate"], experts["w_up"], experts["w_down"],
+            fetched["w_gate"], fetched["w_up"], fetched["w_down"],
+            valid,
             impl=impl,
         )
         return moe_lib.combine_tokens(ye, d2, t)
 
-    def full_branch(experts, d):
+    def full_path(experts, d):
         lo, re = prefetch.gather_remote_shards(
             experts, axis, pl, mode=pol.transport, num_slices=pol.num_slices
         )
@@ -1104,10 +1290,82 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx):
         )
         return moe_lib.combine_tokens(ye, d2, t)
 
-    return lax.cond(plan.overflow, full_branch, demand_branch, experts, d)
+    if not predictive:
+        # plain demand: both branches of the cond carry their own payload
+        # collectives — only the taken branch's permutes execute.
+        def demand_branch(experts, d):
+            bank = prefetch.gather_demand_payload(
+                experts, plan, axis, pl, budget=budget, mode=pol.transport,
+                num_slices=pol.num_slices,
+            )
+            return _remap_and_run(
+                d, bank.fetched, plan.fetched_ids, plan.valid
+            )
+
+        y = lax.cond(plan.overflow, full_path, demand_branch, experts, d)
+        return y, None
+
+    # Predictive: the correction round + compact kernel run
+    # UNCONDITIONALLY (the modeled cost anyway — and the cache wants the
+    # fetched rows even on fallback); the cond only swaps in the exact
+    # full-gather result when the miss set overflowed the correction
+    # budget. Keeping the compact compute OUT of the cond also sidesteps
+    # a backend miscompile observed when a branch closure feeds the
+    # speculative bank into the kernel (the cond's hoisted-operand
+    # lowering returned wrong values on some ranks).
+    bank = prefetch.gather_demand_payload(
+        experts, plan, axis, pl, budget=budget, mode=pol.transport,
+        num_slices=pol.num_slices,
+    )
+    cat = lambda c, s, b: jnp.concatenate([c, s, b], axis=0)
+    fe_all = jax.tree.map(cat, cache_w, spec_bank.fetched, bank.fetched)
+    ids_all = cat(cache_ids, spec_bank.fetched_ids, bank.fetched_ids)
+    valid_all = cat(cache_valid, spec_bank.valid, bank.valid)
+    y_compact = _remap_and_run(d, fe_all, ids_all, valid_all)
+    y = lax.cond(
+        plan.overflow,
+        full_path,
+        lambda experts, d: y_compact,
+        experts, d,
+    )
+    # ---- residency-cache insert: keep the EMA-hottest rows of (current
+    # cache | this step's fetches); ids stay unique because both fetch
+    # rounds excluded the cache (and each other). Branch-independent:
+    # fetched rows are bit-exact expert copies even on the fallback. ----
+    score = jnp.where(valid_all, new_ema[ids_all], -jnp.inf)
+    order = jnp.argsort(-score)[:n_cache]
+    nc_ids = ids_all[order]
+    nc_valid = valid_all[order]
+    nc_w = jax.tree.map(lambda w: jnp.take(w, order, axis=0), fe_all)
+    n_new = jnp.sum(spec_bank.valid) + jnp.sum(bank.valid)
+    evicted = jnp.maximum(
+        jnp.sum(cache_valid) + n_new - jnp.sum(nc_valid), 0
+    ).astype(jnp.float32)
+    # honest counters on the overflow fallback: the full gather served
+    # EVERY wanted remote row over the wire, so nothing counts as a hit
+    # and the whole wanted set counts as missed (the cache insert still
+    # runs, so evictions report either way)
+    stats = jnp.where(
+        plan.overflow,
+        jnp.stack([n_pred, jnp.float32(0.0), n_want, evicted]),
+        jnp.stack(
+            [n_pred, n_hit, jnp.sum(bank.valid).astype(jnp.float32),
+             evicted]
+        ),
+    )
+    new_pred = prefetch.PredictState(
+        prev=new_prev[None],
+        ema=new_ema[None],
+        cache_ids=nc_ids[None],
+        cache_valid=nc_valid[None],
+        cache=jax.tree.map(lambda w: w[None], nc_w),
+        stats=stats[None],
+    )
+    return y, new_pred
 
 
-def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int):
+def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int,
+               pred=None):
     cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
     moe = cfg.moe
     pl = geom.moe_placement
@@ -1143,6 +1401,7 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int):
         )
     aux = moe_lib.load_balance_loss(d, e_pad)
     y = None
+    new_pred = None
 
     if xp.mode == "replicated" or pl.group_size == 1:
         xe = moe_lib.dispatch_tokens(x2d, d, e_pad, cap)
@@ -1153,13 +1412,26 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int):
     elif demand_fetch_active(cfg, geom, xp, ctx.group):
         # route-before-gather: the routing above used only the LOCAL
         # router weights, so the expert gather can now be demand-driven.
-        # gather_set excluded this layer's expert bank from the prefetch
-        # pipeline; the fetch happens here, after routing, and combines
-        # inside (the compact bank has its own dispatch remap).
-        assert "moe/experts" not in gathered, (
-            "demand-active layers must not prefetch the expert bank"
-        )
-        y = _moe_demand_apply(x2d, mp["experts"], d, cap, ctx)
+        # For plain demand, gather_set excluded this layer's expert bank
+        # from the prefetch pipeline and the whole fetch happens here;
+        # predictive decode layers instead receive the SPECULATIVE round's
+        # compact DemandBank from the pipeline (fetched under the
+        # previous layer's compute) and only the correction fetch happens
+        # here, after routing.
+        if predictive_fetch_active(cfg, geom, xp, ctx.group):
+            spec = gathered.get("moe/experts")
+            assert isinstance(spec, prefetch.DemandBank), (
+                "predictive-active layers must prefetch the speculative "
+                "demand bank"
+            )
+            y, new_pred = _moe_demand_apply(
+                x2d, mp["experts"], d, cap, ctx, spec_bank=spec, pred=pred
+            )
+        else:
+            assert "moe/experts" not in gathered, (
+                "demand-active layers must not prefetch the expert bank"
+            )
+            y, _ = _moe_demand_apply(x2d, mp["experts"], d, cap, ctx)
     elif moe_split_active(geom, xp, ctx.group):
         # §4.2 split fast path: tokens dispatch in rotated canonical order
         # (resident experts first), the fused kernel consumes the
@@ -1210,7 +1482,7 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int):
         y = moe_lib.combine_tokens(ye, d, t)
     if "shared" in mp:
         y = y + _ffn_apply(x2d, mp["shared"], ctx, gathered.get("moe/shared"))
-    return y, aux
+    return y, aux, new_pred
 
 
 # ==========================================================================
@@ -1264,11 +1536,13 @@ def _cell_apply(h, cp, sig: LayerSig, ctx: Ctx, lstate):
 # ==========================================================================
 # One layer.
 # ==========================================================================
-def apply_layer(x, lp, sig: LayerSig, ctx: Ctx, lstate, gathered: dict):
+def apply_layer(x, lp, sig: LayerSig, ctx: Ctx, lstate, gathered: dict,
+                pred=None):
     cfg = ctx.cfg
     eps = cfg.norm_eps
     h = rms_norm(x, lp["norm1"], eps)
     aux = jnp.float32(0.0)
+    new_pred = None
     if sig.kind in (BlockKind.GLOBAL_ATTN, BlockKind.LOCAL_ATTN):
         aw = gathered.get("attn", lp["attn"])
         if "attn" in gathered or not ctx.geom.attn_axes:
@@ -1289,11 +1563,13 @@ def apply_layer(x, lp, sig: LayerSig, ctx: Ctx, lstate, gathered: dict):
         b, s, dm = h2.shape
         h2f = h2.reshape(b * s, dm)
         if sig.is_moe:
-            y, aux = _moe_apply(h2f, lp["moe"], sig, ctx, gathered, rows=b)
+            y, aux, new_pred = _moe_apply(
+                h2f, lp["moe"], sig, ctx, gathered, rows=b, pred=pred
+            )
         else:
             y = _ffn_apply(h2f, lp["ffn"], ctx, gathered.get("ffn"))
         x = x + y.reshape(b, s, dm)
-    return x, lstate, aux
+    return x, lstate, aux, new_pred
 
 
 # ==========================================================================
@@ -1303,40 +1579,67 @@ def _run_stack(params, x, ctx: Ctx, states):
     model = ctx.model
     aux_total = jnp.float32(0.0)
     new_states: dict = {}
+    new_preds: dict = {}
+    preds_all = states.get("pred") if isinstance(states, dict) else None
     for group in model.plan:
         gp = params["layers"][group.name]
         gs = states["layers"][group.name] if states is not None else None
+        ps = preds_all.get(group.name) if preds_all else None
         ctx.group = group.name  # scope per-layer-group policy overrides
         if group.scan and group.n_cycles > 1:
-            x, ns, aux = _run_scan_group(group, gp, x, ctx, gs)
+            x, ns, nps, aux = _run_scan_group(group, gp, x, ctx, gs, ps)
         else:
-            x, ns, aux = _run_unrolled(group, gp, x, ctx, gs)
+            x, ns, nps, aux = _run_unrolled(group, gp, x, ctx, gs, ps)
         new_states[group.name] = ns
+        if nps:
+            new_preds[group.name] = nps
         aux_total = aux_total + aux
-    return x, new_states, aux_total
+    return x, new_states, new_preds, aux_total
 
 
-def _run_unrolled(group, gp, x, ctx: Ctx, gs):
+def _run_unrolled(group, gp, x, ctx: Ctx, gs, ps=None):
     aux_total = jnp.float32(0.0)
     new_states = {}
+    new_preds = {}
     for j, sig in enumerate(group.sigs):
         lp = gp[f"pos{j}"]
+        pred = ps.get(f"pos{j}") if ps else None
         paths = gather_set(sig, ctx.geom, ctx.xp, ctx.cfg, group.name)
-        gathered = gather_layer(_extract(lp, paths), ctx) if paths else {}
+        gathered = (
+            gather_layer(_extract(lp, paths), ctx, pred=pred) if paths else {}
+        )
         lstate = gs[f"pos{j}"] if gs is not None else None
-        x, ns, aux = apply_layer(x, lp, sig, ctx, lstate, gathered)
+        x, ns, aux, npred = apply_layer(
+            x, lp, sig, ctx, lstate, gathered, pred=pred
+        )
         new_states[f"pos{j}"] = ns
+        if npred is not None:
+            new_preds[f"pos{j}"] = npred
         aux_total = aux_total + aux
-    return x, new_states, aux_total
+    return x, new_states, new_preds, aux_total
 
 
-def _run_scan_group(group, gp, x, ctx: Ctx, gs):
+def _run_scan_group(group, gp, x, ctx: Ctx, gs, ps=None):
     sigs = group.sigs
     period = len(sigs)
     paths = [
         gather_set(s, ctx.geom, ctx.xp, ctx.cfg, group.name) for s in sigs
     ]
     pipelined = ctx.xp.mode in ("dwdp", "hybrid") and any(paths)
+    ps = ps or {}
+
+    def _pred_at(name, cyc):
+        """Layer ``name``'s incoming PredictState for cycle ``cyc`` —
+        read from the closure-captured stacked state: within one decode
+        step every layer's input state is the PREVIOUS step's, so the
+        layer-ahead speculative gather may index it before the layer
+        runs."""
+        if name not in ps:
+            return None
+        return jax.tree.map(
+            lambda w: lax.dynamic_index_in_dim(w, cyc, 0, keepdims=False),
+            ps[name],
+        )
 
     g0 = {}
     pos0_g = None
@@ -1344,13 +1647,14 @@ def _run_scan_group(group, gp, x, ctx: Ctx, gs):
     if pipelined and paths[0]:
         pos0_g = _extract(gp["pos0"], paths[0])  # stacked (n_cycles, ...)
         first = jax.tree.map(lambda w: w[0], pos0_g)
-        g0 = gather_layer(first, ctx)
+        g0 = gather_layer(first, ctx, pred=_pred_at("pos0", jnp.int32(0)))
 
     def body(carry, xs):
         x, g = carry
-        lp_all, st_all, cyc = xs
+        lp_all, st_all, pd_all, cyc = xs
         aux_c = jnp.float32(0.0)
         new_sts = {}
+        new_pds = {}
         for j, sig in enumerate(sigs):
             lp = lp_all[f"pos{j}"]
             if pipelined:
@@ -1368,24 +1672,36 @@ def _run_scan_group(group, gp, x, ctx: Ctx, gs):
                         ),
                         pos0_g,
                     )
-                    g_next = gather_layer(nxt_raw, ctx)
+                    g_next = gather_layer(
+                        nxt_raw, ctx,
+                        pred=_pred_at("pos0", (cyc + 1) % n_cycles),
+                    )
                 else:
                     g_next = gather_layer(
-                        _extract(lp_all[f"pos{nj}"], nxt_paths), ctx
+                        _extract(lp_all[f"pos{nj}"], nxt_paths), ctx,
+                        pred=pd_all.get(f"pos{nj}") if pd_all else None,
                     )
             else:
                 g_next = {}
                 g = (
-                    gather_layer(_extract(lp, paths[j]), ctx)
+                    gather_layer(
+                        _extract(lp, paths[j]), ctx,
+                        pred=pd_all.get(f"pos{j}") if pd_all else None,
+                    )
                     if paths[j]
                     else {}
                 )
             lstate = st_all[f"pos{j}"] if st_all is not None else None
-            x, ns, aux = apply_layer(x, lp, sig, ctx, lstate, g)
+            x, ns, aux, npred = apply_layer(
+                x, lp, sig, ctx, lstate, g,
+                pred=pd_all.get(f"pos{j}") if pd_all else None,
+            )
             new_sts[f"pos{j}"] = ns
+            if npred is not None:
+                new_pds[f"pos{j}"] = npred
             g = g_next
             aux_c = aux_c + aux
-        return (x, g), (new_sts, aux_c)
+        return (x, g), (new_sts, new_pds, aux_c)
 
     if ctx.xp.phase == "train":
         # remat the cycle: without this, backward saves every layer's
@@ -1394,10 +1710,10 @@ def _run_scan_group(group, gp, x, ctx: Ctx, gs):
         # O(L x full-layer) HBM.
         body = jax.checkpoint(body)
 
-    (x, _), (new_states, auxs) = lax.scan(
-        body, (x, g0), (gp, gs, jnp.arange(n_cycles))
+    (x, _), (new_states, new_preds, auxs) = lax.scan(
+        body, (x, g0), (gp, gs, ps, jnp.arange(n_cycles))
     )
-    return x, new_states, jnp.sum(auxs)
+    return x, new_states, new_preds, jnp.sum(auxs)
 
 
 # ==========================================================================
@@ -1431,15 +1747,16 @@ def _last_token_hidden(x, ctx: Ctx):
 def forward_prefill(params, batch, ctx: Ctx):
     ctx.q_offset = _positions_offset(ctx)
     x = _input_embed(params, batch, ctx)
-    x, new_states, _ = _run_stack(params, x, ctx, None)
+    x, new_states, _, _ = _run_stack(params, x, ctx, None)
     x = rms_norm(x, params["final_norm"], ctx.cfg.norm_eps)
     xl = _last_token_hidden(x, ctx)
     out_state = None
     if ctx.capture_len:
         b = xl.shape[0]
-        seq = batch["tokens"].shape[1] if "tokens" in batch else batch["embeds"].shape[1]
+        # the GLOBAL prefill depth (batch arrays are seq-sharded inside
+        # shard_map, so their local length is not the decode position)
         out_state = {
-            "pos": jnp.full((b,), seq, jnp.int32),
+            "pos": jnp.full((b,), ctx.xp.seq_len, jnp.int32),
             "layers": new_states,
         }
     if AXIS_MODEL in ctx.xp.batch_axes:
@@ -1468,7 +1785,7 @@ def forward_decode(params, batch, state, ctx: Ctx):
     ctx.pos = state["pos"]
     token = batch["token"]
     x = _embed_decode(params, token, ctx)
-    x, new_layer_states, _ = _run_stack(params, x, ctx, state)
+    x, new_layer_states, new_preds, _ = _run_stack(params, x, ctx, state)
     x = rms_norm(x, params["final_norm"], ctx.cfg.norm_eps)
     logits = (x[:, 0] @ _w(_head_local(params, ctx), x)).astype(jnp.float32)
     logits = softcap(logits, ctx.cfg.logit_softcap)
@@ -1488,7 +1805,20 @@ def forward_decode(params, batch, state, ctx: Ctx):
     new_state = dict(state)
     new_state["layers"] = new_layer_states
     new_state["pos"] = state["pos"] + 1
-    return {"next_token": nxt[:, None], "state": new_state}
+    out = {"next_token": nxt[:, None], "state": new_state}
+    if new_preds:
+        new_state["pred"] = new_preds
+        # per-step predictive counters [predicted, hit, miss, evicted]
+        # rows, summed over layers and (psum) over ranks -> replicated
+        pstates = jax.tree.leaves(
+            new_preds,
+            is_leaf=lambda t: isinstance(t, prefetch.PredictState),
+        )
+        stats = sum(
+            jnp.sum(p.stats.reshape(-1, 4), axis=0) for p in pstates
+        )
+        out["pred_stats"] = lax.psum(stats, tuple(ctx.xp.mesh_sizes))
+    return out
 
 
 def _chunked_xent(x2d, head, labels, ctx: Ctx):
@@ -1536,7 +1866,7 @@ def forward_train(params, batch, ctx: Ctx):
     """
     ctx.q_offset = _positions_offset(ctx)
     x = _input_embed(params, batch, ctx)
-    x, _, aux = _run_stack(params, x, ctx, None)
+    x, _, _, aux = _run_stack(params, x, ctx, None)
     x = rms_norm(x, params["final_norm"], ctx.cfg.norm_eps)
     b, s, dm = x.shape
     if ctx.cfg.tie_embeddings:
@@ -1645,6 +1975,106 @@ def sync_redundant_expert_grads(grads, model: Model, xp: ExecutionPlan):
     return new
 
 
+# ==========================================================================
+# Predictive-fetch state lifecycle (decode only).
+# ==========================================================================
+def init_predict_state(model: Model, xp: ExecutionPlan) -> dict:
+    """Cold :class:`prefetch.PredictState` tree for every
+    predictive-active MoE layer — ``{group: {posJ: PredictState}}``
+    (scan groups stacked over cycles), or ``{}`` when the plan has no
+    predictive decode layers.
+
+    Arrays carry a leading per-RANK dim (``prod(mesh_sizes)``): every
+    rank routes its own tokens and caches its own fetched remote rows,
+    so the state is genuinely per-device — sharded over ALL mesh axes by
+    ``predict_state_pspecs``, never replicated. Cold state = empty
+    predictor + invalid cache: the first step's speculative round
+    fetches nothing and the correction round degenerates to the plain
+    demand round (or its exact overflow fallback), so cold starts are
+    bitwise-safe by construction."""
+    cfg, geom = model.cfg, model.geom
+    n_ranks = math.prod(xp.mesh_sizes.values())
+    out: dict = {}
+    for group in model.plan:
+        gdict = {}
+        for j, sig in enumerate(group.sigs):
+            if not (
+                sig.is_moe
+                and predictive_fetch_active(cfg, geom, xp, group.name)
+            ):
+                continue
+            pl = geom.moe_placement
+            e_pad = pl.num_padded
+            rows = resolve_cache_rows(cfg, geom, xp, group.name)
+            dm, fe = cfg.d_model, cfg.moe.d_ff
+            wdt = model.dtype
+            ps = prefetch.PredictState(
+                prev=jnp.zeros((n_ranks, e_pad), bool),
+                ema=jnp.zeros((n_ranks, e_pad), jnp.float32),
+                cache_ids=jnp.zeros((n_ranks, rows), jnp.int32),
+                cache_valid=jnp.zeros((n_ranks, rows), bool),
+                cache={
+                    "w_gate": jnp.zeros((n_ranks, rows, dm, fe), wdt),
+                    "w_up": jnp.zeros((n_ranks, rows, dm, fe), wdt),
+                    "w_down": jnp.zeros((n_ranks, rows, fe, dm), wdt),
+                },
+                stats=jnp.zeros((n_ranks, 4), jnp.float32),
+            )
+            if group.scan:
+                ps = jax.tree.map(
+                    lambda w: jnp.broadcast_to(
+                        w[None], (group.n_cycles,) + w.shape
+                    ),
+                    ps,
+                )
+            gdict[f"pos{j}"] = ps
+        if gdict:
+            out[group.name] = gdict
+    return out
+
+
+def attach_predict_state(state: dict, model: Model, xp: ExecutionPlan) -> dict:
+    """Return ``state`` with a cold ``state["pred"]`` attached when the
+    plan runs the predictive fetch anywhere (no-op otherwise). The ONE
+    call sites need — the decode step threads and updates it from there."""
+    pred = init_predict_state(model, xp)
+    if not pred:
+        return state
+    state = dict(state)
+    state["pred"] = pred
+    return state
+
+
+def predict_state_pspecs(model: Model, xp: ExecutionPlan) -> dict:
+    """PartitionSpecs mirroring :func:`init_predict_state`: the leading
+    per-rank dim shards over EVERY mesh axis (the state is per-device,
+    not replicated), everything after it is local."""
+    cfg, geom = model.cfg, model.geom
+    ra = tuple(xp.mesh_sizes)
+    out: dict = {}
+    for group in model.plan:
+        gdict = {}
+        for j, sig in enumerate(group.sigs):
+            if not (
+                sig.is_moe
+                and predictive_fetch_active(cfg, geom, xp, group.name)
+            ):
+                continue
+            lead = (None,) if group.scan else ()
+
+            def sp(nd):
+                return P(*lead, ra, *([None] * nd))
+
+            gdict[f"pos{j}"] = prefetch.PredictState(
+                prev=sp(1), ema=sp(1), cache_ids=sp(1), cache_valid=sp(1),
+                cache={"w_gate": sp(3), "w_up": sp(3), "w_down": sp(3)},
+                stats=sp(1),
+            )
+        if gdict:
+            out[group.name] = gdict
+    return out
+
+
 def build_inner_fns(model: Model, xp: ExecutionPlan, capture_len: int = 0):
     """Phase-appropriate function to run inside shard_map."""
     if xp.phase == "train":
@@ -1729,14 +2159,21 @@ def make_step_fn(model: Model, xp: ExecutionPlan, mesh, *, capture_len: int = 0)
         return jax.jit(sharded)
 
     st_specs = state_pspecs(model, xp)
+    pred_specs = predict_state_pspecs(model, xp)
+    if pred_specs:
+        st_specs = dict(st_specs)
+        st_specs["pred"] = pred_specs
+    out_specs = {
+        "next_token": P(xp.batch_spec(), None),
+        "state": st_specs,
+    }
+    if pred_specs:
+        out_specs["pred_stats"] = P()  # psum'd inside -> replicated
     sharded = shard_map(
         inner,
         mesh=mesh,
         in_specs=(pspecs, in_b, st_specs),
-        out_specs={
-            "next_token": P(xp.batch_spec(), None),
-            "state": st_specs,
-        },
+        out_specs=out_specs,
         check_vma=False,
     )
     # donate the KV cache / recurrent state: serving updates it in place

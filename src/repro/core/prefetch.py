@@ -83,6 +83,30 @@ more than ``budget`` experts from one peer raises the (axis-agreed)
 overflow flag and the caller falls back to the full remote gather for
 that layer, so results are always exact.
 
+A fourth fetch mode builds on the demand rounds: **predictive** fetch
+(``fetch == "predictive"``, decode only) takes the demand round off the
+critical path. Per demand-active layer a :class:`PredictState` pytree is
+threaded through the decode-step state carrying
+
+- an expert-hotness predictor: the previous step's activated-expert
+  bitmap (``prev``) plus per-expert EMA activation frequencies
+  (``ema``, decay :data:`EMA_DECAY`) — pure index arithmetic;
+- a fixed-budget **residency cache** of previously fetched expert rows
+  (``cache_ids`` / ``cache_valid`` / ``cache`` weight rows), persisted
+  across decode steps so re-activated experts skip the wire entirely;
+  eviction is clock/LRU by EMA hotness.
+
+The engine issues a *speculative* demand round for the predicted set
+during the previous layer's compute window (it rides the layer-ahead
+prefetch pipeline, so it has no data dependence on the current step's
+routing and overlaps attention), then after routing lands a small
+*correction* round covers only the miss set — ``plan_demand_fetch``'s
+``exclude_ids`` compaction argument subtracts the (cache + speculative)
+rows so the delta round reuses the same bitmap/ascending-id contract.
+The existing budget-overflow ``lax.cond`` fallback is preserved, so
+results stay bitwise-exact for any predictor quality, any cache budget
+(0 included) and any miss pattern.
+
 Gradients flow through every mode (ppermute transposes to the inverse
 permute; all_gather to psum_scatter; take to scatter-add), which is what
 makes DWDP usable for the train_4k shape (ZeRO-3-style gather-forward /
@@ -154,6 +178,40 @@ class DemandBank(NamedTuple):
     fetched: PyTree
     fetched_ids: jax.Array
     valid: jax.Array
+
+
+#: EMA decay for the predictive-fetch hotness tracker: each decode step
+#: folds the new activation bitmap in with weight (1 - EMA_DECAY), so the
+#: score reflects roughly the last ~1/(1-decay) steps of routing.
+EMA_DECAY = 0.875
+
+
+class PredictState(NamedTuple):
+    """Per-layer predictor + residency-cache state for the predictive
+    expert fetch, threaded through the decode loop (one leading per-rank
+    dim — every rank routes its own tokens and caches its own fetches).
+
+    ``prev``: ``(1, num_padded)`` bool — the previous decode step's
+    activated-expert bitmap.
+    ``ema``: ``(1, num_padded)`` f32 — EMA activation frequency per
+    expert (:data:`EMA_DECAY`); scores both the speculative-round
+    predictor and cache eviction.
+    ``cache_ids`` / ``cache_valid``: ``(1, cache_rows)`` int32 / bool —
+    padded-canonical expert id per cache slot (ids are unique among
+    valid slots; local experts never enter — only fetched remote rows).
+    ``cache``: the cached expert weight rows, ``(1, cache_rows, ...)``
+    per leaf — bit-identical copies of previously fetched rows, so
+    consuming them is exactly equivalent to re-fetching.
+    ``stats``: ``(1, 4)`` f32 per-step counters
+    ``[predicted, hit, miss, evicted]`` expert rows (serving metrics).
+    """
+
+    prev: jax.Array
+    ema: jax.Array
+    cache_ids: jax.Array
+    cache_valid: jax.Array
+    cache: PyTree
+    stats: jax.Array
 
 
 class DemandPlan(NamedTuple):
@@ -420,6 +478,17 @@ def _compact_requests(mask_slice: jax.Array, budget: int):
     return idx, valid, count
 
 
+def exclude_bitmap(
+    num_padded: int, exclude_ids: jax.Array, exclude_valid: jax.Array
+) -> jax.Array:
+    """Scatter a (ids, valid) row set into a ``(num_padded,)`` bool
+    bitmap — the form ``plan_demand_fetch``'s ``exclude_ids`` compaction
+    subtracts. Invalid rows are dropped, not scattered."""
+    out = jnp.zeros((num_padded,), bool)
+    safe = jnp.where(exclude_valid, exclude_ids, num_padded)
+    return out.at[safe].set(True, mode="drop")
+
+
 def plan_demand_fetch(
     wanted: jax.Array,
     axis: str,
@@ -427,6 +496,8 @@ def plan_demand_fetch(
     *,
     budget: int,
     agree_axes: tuple[str, ...],
+    exclude_ids: Any = None,
+    exclude_valid: Any = None,
 ) -> DemandPlan:
     """Round 1 — the index exchange. ``wanted`` is this rank's
     ``(num_padded,)`` bool activated-expert bitmap (from the routing that
@@ -438,10 +509,24 @@ def plan_demand_fetch(
     the overflow flag gates a ``lax.cond`` whose branches contain
     *different* collectives, and the runtime rendezvous spans all devices
     — every rank (not just this subgroup) must take the same branch.
+    Pass ``agree_axes=()`` for plans whose overflow flag is ignored (the
+    speculative predictive round clamps instead of falling back), which
+    also skips the agreement psum.
+
+    ``exclude_ids`` / ``exclude_valid`` (optional): expert rows the
+    requester already holds — the residency-cache contents and the
+    speculative round's fetched set — subtracted from ``wanted`` BEFORE
+    the bitmap exchange, so the correction round ships only the miss set
+    while reusing the exact same ascending-id compaction contract (both
+    endpoints see the already-subtracted bitmap).
     """
     g = placement.subgroup_size
     local = placement.local_count
     budget = min(budget, local)
+    if exclude_ids is not None:
+        wanted = wanted & ~exclude_bitmap(
+            placement.num_padded, exclude_ids, exclude_valid
+        )
     p = _subgroup_position(axis, placement)
     masks = jax.lax.all_gather(
         wanted, axis, axis_index_groups=placement.axis_index_groups()
@@ -457,7 +542,8 @@ def plan_demand_fetch(
         overflow = overflow | (cnt > budget)
     fetched_ids = jnp.concatenate(ids) if ids else jnp.zeros((0,), jnp.int32)
     valid = jnp.concatenate(valids) if valids else jnp.zeros((0,), bool)
-    overflow = jax.lax.psum(overflow.astype(jnp.float32), agree_axes) > 0
+    if agree_axes:
+        overflow = jax.lax.psum(overflow.astype(jnp.float32), agree_axes) > 0
     return DemandPlan(
         masks=masks, fetched_ids=fetched_ids, valid=valid, overflow=overflow
     )
@@ -550,6 +636,43 @@ def gather_demand_payload(
     )
 
 
+def predict_bitmap(
+    prev: jax.Array,
+    ema: jax.Array,
+    placement: Placement,
+    *,
+    budget: int,
+    exclude_ids: Any = None,
+    exclude_valid: Any = None,
+) -> jax.Array:
+    """The speculative round's predicted-expert bitmap: per subgroup
+    slice, the top-``budget`` experts by hotness score — previous-step
+    activation first (score +2), EMA frequency as the tie-breaking tail —
+    minus the rows already resident in the cache. Shaping the *bitmap* to
+    at most ``budget`` wanted rows per peer keeps the ascending-id
+    compaction lossless for the hot set (nothing hot is clamped away) and
+    makes speculative overflow impossible by construction. Cold experts
+    (score 0) are never speculated. Pure index arithmetic — no data-
+    dependent shapes, no collectives."""
+    e_pad = placement.num_padded
+    local = placement.local_count
+    budget = min(budget, local)
+    score = prev.astype(jnp.float32) * 2.0 + ema
+    if exclude_ids is not None:
+        score = jnp.where(
+            exclude_bitmap(e_pad, exclude_ids, exclude_valid), 0.0, score
+        )
+    rows = score.reshape(placement.subgroup_size, local)
+    top_vals, top_idx = jax.lax.top_k(rows, budget)  # (G', budget)
+    base = (
+        jnp.arange(placement.subgroup_size, dtype=jnp.int32)[:, None] * local
+    )
+    ids = (base + top_idx).reshape(-1)
+    keep = (top_vals > 0.0).reshape(-1)
+    out = jnp.zeros((e_pad,), bool)
+    return out.at[jnp.where(keep, ids, e_pad)].set(True, mode="drop")
+
+
 def gather_demand_bank(
     tree: PyTree,
     wanted: jax.Array,
@@ -580,7 +703,12 @@ def demand_fetch_bytes(
 ) -> int:
     """Wire bytes per rank per layer for the demand gather: the payload
     round's ``(G'-1) * budget`` padded expert rows plus the index round's
-    bitmap bytes (1 byte/expert from each subgroup peer)."""
+    bitmap bytes (1 byte/expert from each subgroup peer). Capped at the
+    full remote gather — at full budget the two coincide and the index
+    round's bytes are absorbed by the cap (matching the roofline twin,
+    ``roofline.demand_prefetch_bytes``), so the demand counters never
+    report more than the all-fetch counterfactual."""
     g = placement.subgroup_size
     budget = min(budget, placement.local_count)
-    return (g - 1) * (budget * bytes_per_expert + placement.num_padded)
+    full = (g - 1) * placement.local_count * bytes_per_expert
+    return min(full, (g - 1) * (budget * bytes_per_expert + placement.num_padded))

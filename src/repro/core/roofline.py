@@ -72,6 +72,99 @@ def demand_budget_rows(n_draws: int, num_experts: int, local: int) -> int:
     return max(1, min(max(8, budget), local))
 
 
+def predictive_budget_rows(
+    n_draws: int, num_experts: int, local: int
+) -> tuple[int, int]:
+    """The predictive-fetch auto budgets, in closed form: per-peer
+    ``(speculative, correction)`` rows. The speculative round sizes to
+    1x the expected per-peer distinct-expert coverage (the hot set the
+    predictor should cover), the correction round to half of it (the
+    expected miss tail once the predictor + cache absorb the recurring
+    set) — both 8-aligned and clamped to the per-rank expert count.
+    Wherever the coverage expectation clears the 8-row floors (the
+    acceptance decode shape included: 16+8 < 32 at R1's 8 rows/rank)
+    their sum stays below :func:`demand_budget_rows`'s 2x-coverage
+    demand budget, so the predictive path ships less payload than the
+    demand round it replaces; at tiny coverage the floors make the two
+    rounds up to 2x the demand budget — exactly the regime where the
+    auto resolver scores predictive worse and keeps plain demand.
+    Under-estimation is handled exactly by the per-layer overflow
+    fallback (a cold predictor's first step may fall back — correctness
+    never depends on the estimate)."""
+    if local <= 0:
+        return 0, 0
+    e = max(1, num_experts)
+    expected = local * (1.0 - (1.0 - 1.0 / e) ** n_draws)
+    align = lambda v: -(-math.ceil(v) // 8) * 8
+    spec = min(local, max(8, align(expected)))
+    corr = min(local, max(8, align(expected / 2.0)))
+    return spec, corr
+
+
+def predictive_fetch_terms(
+    tokens: int,
+    top_k: int,
+    num_experts: int,
+    group: int,
+    bytes_per_expert: float,
+    *,
+    redundancy: int = 1,
+    budget: int = 0,
+    cache_rows: int = 0,
+    cache_hit: Optional[float] = None,
+    predict_hit: Optional[float] = None,
+) -> tuple[float, float]:
+    """Per-rank wire terms of the predictive expert fetch as
+    ``(total_bytes, serial_bytes)``:
+
+    - ``total``: speculative round + correction round, each a
+      budget-padded payload plus its bitmap index round — what the
+      lowered program ships, capped at the full remote gather.
+    - ``serial``: the part on the decode critical path — the correction
+      round only (the speculative round is issued a layer ahead and
+      overlaps compute, the §4.3 prefetch-hiding the demand path lost).
+
+    ``cache_hit`` scales both rounds (cache-resident experts need
+    neither), ``predict_hit`` scales the correction round only (a
+    predictor hit moves bytes from the serial round into the overlapped
+    one). Defaults (None) derive conservative closed forms: cache hit =
+    cached fraction of the remote bank under uniform routing; predictor
+    hit = the per-expert re-activation probability ``1-(1-1/E)^n``
+    (uniform-routing steady state — real routing has more temporal
+    locality, so measured rates replayed through the simulator can only
+    improve on this).
+    """
+    sub = max(1, group // redundancy)
+    if sub <= 1:
+        return 0.0, 0.0
+    local = -(-num_experts // sub)
+    full = (sub - 1) * local * bytes_per_expert
+    if budget > 0:
+        spec = corr = min(budget, local)
+    else:
+        spec, corr = predictive_budget_rows(tokens * top_k, num_experts, local)
+    if cache_hit is None:
+        # cached fraction of the REMOTE bank ((G'-1) * local rows) —
+        # the rows a cache hit can actually save wire on
+        remote_rows = (sub - 1) * local
+        cache_hit = (
+            min(1.0, cache_rows / max(1, remote_rows)) if cache_rows else 0.0
+        )
+    if predict_hit is None:
+        predict_hit = 1.0 - (1.0 - 1.0 / max(1, num_experts)) ** (
+            tokens * top_k
+        )
+    index_round = (sub - 1) * num_experts
+    spec_b = ((sub - 1) * spec * bytes_per_expert + index_round) * (
+        1.0 - cache_hit
+    )
+    corr_b = ((sub - 1) * corr * bytes_per_expert + index_round) * (
+        1.0 - cache_hit
+    ) * (1.0 - predict_hit)
+    total = min(full, spec_b + corr_b)
+    return total, min(total, corr_b)
+
+
 def demand_prefetch_bytes(
     tokens: int,
     top_k: int,
@@ -118,6 +211,16 @@ class LayerTimes:
                               # reuses `compute`) and shift the paper's
                               # §3 model; consumers that want the landing
                               # cost add it to the DWDP side explicitly.
+    serial_fetch: float = 0.0  # the part of `prefetch` that sits ON the
+                               # critical path instead of overlapping
+                               # compute. 0 for the all-fetch prefetch
+                               # (fully layer-ahead double-buffered); the
+                               # WHOLE round for fetch="demand" (the
+                               # route-before-gather inversion makes the
+                               # exchange+payload wait on routing); the
+                               # correction round only for
+                               # fetch="predictive" (the speculative
+                               # round is issued a layer ahead again).
 
     @property
     def t_dwdp(self) -> float:
@@ -152,6 +255,8 @@ def layer_times(
     expert_fetch: str = "all",
     moe_ffn: str = "merged",
     policies=None,
+    cache_hit: Optional[float] = None,
+    predict_hit: Optional[float] = None,
 ) -> LayerTimes:
     """Per-layer roofline terms for the context phase (batch of `tokens`).
 
@@ -181,7 +286,15 @@ def layer_times(
     the wire — exactly what the lowered program ships — engaged when
     coverage is partial (``tokens * top_k`` below the remote expert
     count) and never worse than "all". The landing write shrinks with
-    it (demand is split-layout by construction).
+    it (demand is split-layout by construction). Demand's round waits
+    on routing, so it is priced ON the critical path
+    (``serial_fetch`` = the whole round); "predictive" splits the
+    round into a layer-ahead speculative fetch (overlapped, like the
+    all-fetch prefetch) plus a small serial correction round, with
+    ``cache_hit`` / ``predict_hit`` replaying measured (or closed-form
+    default) hit rates — see :func:`predictive_fetch_terms`. The
+    ``moe_experts`` policy's ``cache_budget`` sizes the residency
+    cache the hit rates derive from.
     policies: a ``strategy.PolicyTable`` — the per-family replacement for
     the flat knobs above. When given, each family prices its OWN layout
     (moe_experts / attn_qkv / attn_out / dense_ffn), the expert fetch
@@ -191,11 +304,13 @@ def layer_times(
     mixed-policy plans (the ``policy="auto"`` resolver's objective).
     """
     budget = 0
+    cache_rows = 0
     if policies is not None:
         moe_pol = policies.family("moe_experts")
         moe_layout = moe_pol.layout
         expert_fetch = moe_pol.fetch
         budget = moe_pol.budget
+        cache_rows = moe_pol.cache_budget
         dense_layout = policies.family("dense_ffn").layout
         qkv_layout = policies.family("attn_qkv").layout
         out_layout = policies.family("attn_out").layout
@@ -230,15 +345,24 @@ def layer_times(
         sub = max(1, group // redundancy)
         layer_expert_bytes = e * 3 * d * f * weight_bytes
         prefetch_bytes = layer_expert_bytes * (sub - 1) / sub
-        if (
-            expert_fetch == "demand"
-            and layout == "split"
-            and tokens * k < e * (sub - 1) / sub
-        ):
-            # route-before-gather: expected-coverage wire bytes
+        serial_bytes = 0.0
+        partial = tokens * k < e * (sub - 1) / sub
+        if expert_fetch == "demand" and layout == "split" and partial:
+            # route-before-gather: expected-coverage wire bytes — the
+            # WHOLE round waits on routing (on the critical path)
             prefetch_bytes = demand_prefetch_bytes(
                 tokens, k, e, group, 3 * d * f * weight_bytes,
                 redundancy=redundancy, budget=budget,
+            )
+            serial_bytes = prefetch_bytes
+        elif expert_fetch == "predictive" and layout == "split" and partial:
+            # speculative round overlapped a layer ahead + serial
+            # correction round covering only the (hit-rate-scaled) misses
+            prefetch_bytes, serial_bytes = predictive_fetch_terms(
+                tokens, k, e, group, 3 * d * f * weight_bytes,
+                redundancy=redundancy, budget=budget,
+                cache_rows=cache_rows, cache_hit=cache_hit,
+                predict_hit=predict_hit,
             )
         # HBM landing write of the gathered bank: full layer (merged) vs
         # remote-only (split — the eliminated merge copy shows up here;
@@ -255,6 +379,7 @@ def layer_times(
         w_bytes = 3 * d * f * weight_bytes
         layer_bytes = 3 * d * f * weight_bytes
         prefetch_bytes = layer_bytes * (group - 1) / group
+        serial_bytes = 0.0
         # dense-FFN slices land like any other gathered family
         land_bytes = 0.0
         if group > 1:
@@ -286,6 +411,18 @@ def layer_times(
         all2all=all2all,
         land_bytes=land_bytes,
         land_time=land_bytes / hw.hbm_bw,
+        serial_fetch=serial_bytes / hw.link_bw,
+    )
+
+
+def layer_step_time(lt: LayerTimes) -> float:
+    """One layer's modeled DWDP critical-path time under the serial/
+    overlapped fetch split: ``max(compute + landing, overlapped
+    prefetch) + serial fetch``. The ONE per-layer expression
+    :func:`modeled_step_time` sums and the benches report — change it
+    here and every consumer moves together."""
+    return max(lt.compute + lt.land_time, lt.prefetch - lt.serial_fetch) + (
+        lt.serial_fetch
     )
 
 
@@ -303,13 +440,18 @@ def modeled_step_time(
     redundancy: int = 1,
     weight_bytes: int = 1,
     act_bytes: int = 2,
+    cache_hit: Optional[float] = None,
+    predict_hit: Optional[float] = None,
 ) -> float:
     """Modeled one-step wall time of a full DWDP forward under a policy
-    table: per layer ``max(compute + landing, prefetch)`` (the §3
-    critical path — the gathered-bank landing write is HBM work only
-    DWDP pays), summed over every layer. The ``policy="auto"`` resolver's
-    objective and the surface the acceptance criterion compares uniform
-    vs mixed tables on."""
+    table: per layer ``max(compute + landing, overlapped prefetch) +
+    serial fetch`` (the §3 critical path — the gathered-bank landing
+    write is HBM work only DWDP pays; a route-before-gather round that
+    waits on routing cannot be hidden and is added serially, which is
+    exactly the demand-path inversion the predictive fetch takes back
+    off the critical path), summed over every layer. The
+    ``policy="auto"`` resolver's objective and the surface the
+    acceptance criterion compares uniform vs mixed tables on."""
     total = 0.0
     for layer in range(cfg.num_layers):
         lt = layer_times(
@@ -318,8 +460,9 @@ def modeled_step_time(
             expert_fetch=expert_fetch, attn_gathered=attn_gathered,
             kv_len=kv_len, redundancy=redundancy,
             weight_bytes=weight_bytes, act_bytes=act_bytes,
+            cache_hit=cache_hit, predict_hit=predict_hit,
         )
-        total += max(lt.compute + lt.land_time, lt.prefetch)
+        total += layer_step_time(lt)
     return total
 
 

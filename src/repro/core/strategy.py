@@ -32,13 +32,25 @@ num_slices, budget)``:
   table for a named scan group of the model plan.
 - ``layout``: ``"split"`` (the §4.2 remote-only SplitBank fast path, the
   default) or ``"merged"`` (the explicit-merge baseline).
-- ``fetch``: ``"all"`` (every remote slice every layer) or ``"demand"``
-  (route-before-gather; ``moe_experts`` only, requires the split layout).
+- ``fetch``: ``"all"`` (every remote slice every layer), ``"demand"``
+  (route-before-gather; ``moe_experts`` only, requires the split
+  layout), or ``"predictive"`` — the demand-latency engine: an
+  expert-hotness predictor (previous-step routing + EMA frequencies,
+  carried in a ``prefetch.PredictState`` threaded through the decode
+  loop) issues a *speculative* demand round a layer ahead (overlapping
+  the previous layer's attention/compute), a fixed-HBM-budget
+  cross-step **residency cache** serves re-activated experts with no
+  wire at all, and a small post-routing *correction* round covers only
+  the miss set. Decode only; elsewhere it lowers exactly as
+  ``"demand"``. Bitwise-exact for any predictor quality and any cache
+  budget (overflow falls back to the full gather per layer).
 - ``transport``: ``"allgather"`` | ``"ring"`` | ``"ring_sliced"`` — the
   prefetch collective schedule, now chosen *per family* instead of one
   engine-wide mode.
-- ``num_slices`` (ring_sliced TDM slicing) and ``budget`` (per-peer
-  demand-fetch rows, 0 = auto) ride along per family.
+- ``num_slices`` (ring_sliced TDM slicing), ``budget`` (per-peer
+  demand-fetch rows, 0 = auto) and ``cache_budget`` (predictive
+  residency-cache rows per layer, 0 = cache off; auto-resolved against
+  the analytic HBM residency headroom) ride along per family.
 
 A heterogeneous table expresses plans the old flat knobs could not, e.g.
 **demand-fetch MoE experts over ring_sliced while the small attention
@@ -60,10 +72,14 @@ smallest modeled step time.  Its decision rules:
 - ``layout="split"`` wherever the engine's split path can engage (single
   gather axis, >1 shards) — the merged merge-copy landing is never
   modeled faster; ``merged`` elsewhere (multi-axis fallback).
-- ``fetch="demand"`` only where expected coverage is partial —
-  ``rows * top_k < remote experts`` (decode, small-batch prefill) — and
-  only when the modeled prefetch term actually shrinks; ``"all"``
-  otherwise.
+- ``fetch="predictive"`` at decode shapes where the overlapped
+  speculative round + correction beat the serial demand round (several
+  routed rows per rank — at one row the padded speculative payload buys
+  nothing and plain ``"demand"`` wins); ``fetch="demand"`` elsewhere at
+  partial coverage — ``rows * top_k < remote experts`` (decode,
+  small-batch prefill); ``"all"`` otherwise. Predictive picks get a
+  ``cache_budget`` sized from the analytic HBM residency headroom
+  (``CACHE_HEADROOM_FRAC``).
 - ``transport="ring_sliced"`` only above a per-layer remote-bank-size
   threshold (:data:`RING_SLICED_MIN_BYTES`, the §4.3 TDM regime);
   ``"allgather"`` for small banks where slicing buys nothing.
@@ -97,7 +113,7 @@ PREFETCH_MODES = ("allgather", "ring", "ring_sliced")
 WEIGHT_LAYOUTS = ("merged", "split")
 MOE_FFN_MODES = WEIGHT_LAYOUTS  # deprecated alias (PR 1 name)
 CAPACITY_FROM = ("local", "global")
-EXPERT_FETCH = ("all", "demand")
+EXPERT_FETCH = ("all", "demand", "predictive")
 
 #: The gathered-weight families a PolicyTable addresses. ``default``
 #: additionally backs any family without its own entry.
@@ -107,6 +123,11 @@ GATHER_FAMILIES = ("moe_experts", "attn_qkv", "attn_out", "dense_ffn")
 #: per-layer remote bank exceeds this many bytes (the §4.3 TDM regime —
 #: below it the transfer is too small for slice-interleaving to help).
 RING_SLICED_MIN_BYTES = 32 << 20
+
+#: Auto-resolver rule: fraction of the analytic HBM residency headroom
+#: the predictive fetch's cross-step expert residency cache may claim
+#: (the rest stays free for allocator slack / fragmentation).
+CACHE_HEADROOM_FRAC = 0.5
 
 
 # --------------------------------------------------------------------------
@@ -118,13 +139,22 @@ class GatherPolicy:
 
     ``layout``: gathered representation — "split" (remote-only SplitBank)
     or "merged" (explicit-merge canonical buffer).
-    ``fetch``: expert-gather selection — "all" or "demand"
-    (route-before-gather; meaningful for ``moe_experts`` only and
-    requires the split layout).
+    ``fetch``: expert-gather selection — "all", "demand"
+    (route-before-gather) or "predictive" (route-before-gather with a
+    layer-ahead speculative round + cross-step residency cache; decode
+    only, elsewhere it behaves exactly like "demand"). Both non-"all"
+    modes are meaningful for ``moe_experts`` only and require the split
+    layout.
     ``transport``: the prefetch collective schedule for this family.
     ``num_slices``: ring_sliced TDM slice count.
     ``budget``: per-peer demand-fetch row budget (0 = auto — 2x the
-    expected distinct-expert coverage; see roofline.demand_budget_rows).
+    expected distinct-expert coverage for "demand",
+    roofline.demand_budget_rows; the (1x, 0.5x) speculative/correction
+    pair for "predictive", roofline.predictive_budget_rows).
+    ``cache_budget``: expert rows of the cross-step residency cache per
+    predictive layer (0 = cache off; ``policy="auto"`` resolves it
+    against the analytic HBM residency headroom). Cache hits skip the
+    wire entirely; correctness never depends on the value.
     """
 
     layout: str = "split"
@@ -132,6 +162,7 @@ class GatherPolicy:
     transport: str = "allgather"
     num_slices: int = 4
     budget: int = 0
+    cache_budget: int = 0
 
     def __post_init__(self):
         if self.layout not in WEIGHT_LAYOUTS:
@@ -149,22 +180,33 @@ class GatherPolicy:
                 f"unknown transport {self.transport!r}; expected one of "
                 f"{PREFETCH_MODES}"
             )
-        if self.fetch == "demand" and self.layout != "split":
+        if self.fetch in ("demand", "predictive") and self.layout != "split":
             raise ValueError(
-                'fetch="demand" requires the split layout (the demand '
-                f"bank is a split-bank refinement); got layout="
+                f'fetch="{self.fetch}" requires the split layout (the '
+                f"demand bank is a split-bank refinement); got layout="
                 f"{self.layout!r}"
             )
         if self.num_slices < 1:
             raise ValueError(f"num_slices must be >= 1, got {self.num_slices}")
         if self.budget < 0:
             raise ValueError(f"budget must be >= 0, got {self.budget}")
+        if self.cache_budget < 0:
+            raise ValueError(
+                f"cache_budget must be >= 0, got {self.cache_budget}"
+            )
+        if self.cache_budget and self.fetch != "predictive":
+            raise ValueError(
+                "cache_budget only applies to the predictive fetch (the "
+                f'residency cache rides the predictive rounds); got it '
+                f"with fetch={self.fetch!r}"
+            )
 
     @classmethod
     def parse(cls, spec: Union[str, "GatherPolicy", Mapping]) -> "GatherPolicy":
-        """Parse ``"layout[:fetch[:transport[:num_slices[:budget]]]]"``
-        (the ``--policy`` CLI spec), a kwargs mapping, or pass a policy
-        through. Unknown values raise ``ValueError``."""
+        """Parse ``"layout[:fetch[:transport[:num_slices[:budget
+        [:cache_budget]]]]]"`` (the ``--policy`` CLI spec), a kwargs
+        mapping, or pass a policy through. Unknown values raise
+        ``ValueError``."""
         if isinstance(spec, GatherPolicy):
             return spec
         if isinstance(spec, Mapping):
@@ -175,10 +217,11 @@ class GatherPolicy:
                 )
             return cls(**spec)
         parts = [p for p in str(spec).split(":")]
-        if not 1 <= len(parts) <= 5 or not all(parts):
+        if not 1 <= len(parts) <= 6 or not all(parts):
             raise ValueError(
                 f"bad policy spec {spec!r}; expected "
-                "layout[:fetch[:transport[:num_slices[:budget]]]]"
+                "layout[:fetch[:transport[:num_slices[:budget"
+                "[:cache_budget]]]]]"
             )
         kw: dict = {"layout": parts[0]}
         if len(parts) > 1:
@@ -190,20 +233,26 @@ class GatherPolicy:
                 kw["num_slices"] = int(parts[3])
             if len(parts) > 4:
                 kw["budget"] = int(parts[4])
+            if len(parts) > 5:
+                kw["cache_budget"] = int(parts[5])
         except ValueError:
             raise ValueError(
-                f"bad policy spec {spec!r}: num_slices/budget must be ints"
+                f"bad policy spec {spec!r}: num_slices/budget/cache_budget "
+                "must be ints"
             ) from None
         return cls(**kw)
 
     def spec(self) -> str:
-        """The canonical ``layout:fetch:transport[:num_slices][:budget]``
-        round-trip form of this policy (parse(spec()) == self)."""
+        """The canonical ``layout:fetch:transport[:num_slices][:budget]
+        [:cache_budget]`` round-trip form of this policy
+        (parse(spec()) == self)."""
         s = f"{self.layout}:{self.fetch}:{self.transport}"
-        if self.num_slices != 4 or self.budget != 0:
+        if self.num_slices != 4 or self.budget != 0 or self.cache_budget != 0:
             s += f":{self.num_slices}"
-        if self.budget != 0:
+        if self.budget != 0 or self.cache_budget != 0:
             s += f":{self.budget}"
+        if self.cache_budget != 0:
+            s += f":{self.cache_budget}"
         return s
 
 
@@ -216,9 +265,11 @@ def _check_family(name: str, *, allow_default: bool = True) -> None:
 
 
 def _check_fetch_applies(family: str, pol: GatherPolicy) -> None:
-    if pol.fetch == "demand" and family not in ("moe_experts", "default"):
+    if pol.fetch in ("demand", "predictive") and family not in (
+        "moe_experts", "default"
+    ):
         raise ValueError(
-            f'fetch="demand" only applies to the moe_experts family '
+            f'fetch="{pol.fetch}" only applies to the moe_experts family '
             f"(route-before-gather is an expert-bank feature); got it for "
             f"{family!r}"
         )
@@ -269,16 +320,20 @@ class PolicyTable:
     @classmethod
     def uniform(cls, *, layout: str = "split", fetch: str = "all",
                 transport: str = "allgather", num_slices: int = 4,
-                budget: int = 0) -> "PolicyTable":
+                budget: int = 0, cache_budget: int = 0) -> "PolicyTable":
         """One policy for every family — exactly what the deprecated flat
         ExecutionPlan knobs used to express."""
         pol = GatherPolicy(layout=layout, fetch=fetch, transport=transport,
-                           num_slices=num_slices, budget=budget)
-        if pol.fetch == "demand":
-            # demand only ever applied to the expert bank; a uniform
-            # "demand" table means demand experts + all for the rest
+                           num_slices=num_slices, budget=budget,
+                           cache_budget=cache_budget)
+        if pol.fetch in ("demand", "predictive"):
+            # demand/predictive only ever applied to the expert bank; a
+            # uniform table of either means that expert fetch + all-fetch
+            # for the rest
             return cls(
-                default=dataclasses.replace(pol, fetch="all", budget=0),
+                default=dataclasses.replace(
+                    pol, fetch="all", budget=0, cache_budget=0
+                ),
                 families=(("moe_experts", pol),),
             )
         return cls(default=pol)
@@ -525,6 +580,17 @@ def _family_remote_bank_bytes(
                 pl.local_count,
             )
             rows = (pl.subgroup_size - 1) * min(b, pl.local_count)
+        elif fetch == "predictive":
+            from repro.core.roofline import predictive_budget_rows
+
+            if budget > 0:
+                spec = corr = min(budget, pl.local_count)
+            else:
+                spec, corr = predictive_budget_rows(
+                    routed_rows * cfg.moe.top_k, cfg.moe.num_experts,
+                    pl.local_count,
+                )
+            rows = (pl.subgroup_size - 1) * (spec + corr)
         return rows * pe
     if family == "attn_qkv":
         return d * (cfg.q_dim + 2 * cfg.kv_dim) * weight_bytes * frac(
@@ -538,6 +604,90 @@ def _family_remote_bank_bytes(
             f = max(f, cfg.moe.shared_d_ff, cfg.moe.dense_d_ff)
         return 3 * d * f * weight_bytes * frac(geom.ffn_shards)
     return 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class _Eligibility:
+    """Engine-eligibility facts shared by the auto resolver and
+    :func:`effective_policies` — ONE computation of which per-family
+    paths the engine can actually lower on this (model x shape x mesh),
+    mirroring ``execution``'s predicates."""
+
+    rows: int            # per-rank routed tokens (the demand gate input)
+    moe_gather: bool     # gather-mode MoE over a real subgroup
+    moe_split_ok: bool   # + single expert axis (split/demand eligible)
+    demand_ok: bool      # + partial coverage (rows*topk < remote)
+    attn_ok: bool        # attention families split-eligible
+    ffn_ok: bool         # dense-FFN family split-eligible
+
+
+def _engine_eligibility(
+    model: Model, shape: InputShape, mesh_sizes: dict[str, int]
+) -> _Eligibility:
+    cfg, geom = model.cfg, model.geom
+    batch_axes, seq_axes = plan_activation_sharding(cfg, shape, mesh_sizes)
+    bsh = math.prod(mesh_sizes[a] for a in batch_axes) if batch_axes else 1
+    ssh = math.prod(mesh_sizes[a] for a in seq_axes) if seq_axes else 1
+    rows = _routed_rows(shape, bsh, ssh)
+    pl = geom.moe_placement
+    moe_gather = (
+        cfg.moe is not None and geom.moe_exec == "gather"
+        and pl is not None and pl.subgroup_size > 1
+    )
+    moe_split_ok = moe_gather and len(geom.expert_axes) == 1
+    demand_ok = (
+        moe_split_ok
+        and rows * cfg.moe.top_k < (pl.subgroup_size - 1) * pl.local_count
+    )
+    return _Eligibility(
+        rows=rows,
+        moe_gather=moe_gather,
+        moe_split_ok=moe_split_ok,
+        demand_ok=demand_ok,
+        attn_ok=len(geom.attn_axes) == 1 and geom.attn_shards > 1,
+        ffn_ok=len(geom.ffn_axes) == 1 and geom.ffn_shards > 1,
+    )
+
+
+def _auto_cache_rows(
+    model: Model,
+    shape: InputShape,
+    mesh_sizes: dict[str, int],
+    hw,
+    weight_bytes: int,
+) -> int:
+    """Auto ``cache_budget`` for the predictive fetch: size the per-layer
+    expert residency cache against the analytic HBM residency headroom —
+    ``CACHE_HEADROOM_FRAC`` of what ``analytic_residency_bytes`` leaves
+    free on the target, divided over the MoE layers, 8-aligned and capped
+    at the remote bank (caching more than the remote rows buys nothing).
+    Returns 0 (cache off) when the model already fills HBM — correctness
+    never depends on the value, only hit rate does."""
+    from repro.analysis.roofline_report import analytic_residency_bytes
+    from repro.core import roofline
+
+    cfg, geom = model.cfg, model.geom
+    pl = geom.moe_placement
+    if cfg.moe is None or pl is None:
+        return 0
+    hw = hw or roofline.GB200
+    batch_axes, seq_axes = plan_activation_sharding(cfg, shape, mesh_sizes)
+    xp = ExecutionPlan(
+        mode="dwdp", phase=shape.phase, batch_axes=batch_axes,
+        seq_axes=seq_axes, mesh_sizes=dict(mesh_sizes),
+        capacity_factor=1.25, global_batch=shape.global_batch,
+        seq_len=shape.seq_len,
+        policies=PolicyTable.uniform(fetch="predictive"),
+    )
+    resident = analytic_residency_bytes(
+        cfg, geom, xp, shape, dtype_bytes=weight_bytes
+    )
+    headroom = max(0.0, hw.hbm_bytes - resident) * CACHE_HEADROOM_FRAC
+    n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
+    per_expert = 3 * cfg.d_model * cfg.moe.d_ff * weight_bytes
+    rows = int(headroom / max(1, n_moe * per_expert))
+    remote = (pl.subgroup_size - 1) * pl.local_count
+    return min(remote, rows // 8 * 8)
 
 
 def resolve_policies(
@@ -556,10 +706,17 @@ def resolve_policies(
     resolver: per family x phase it enumerates the engine-eligible
     (layout, fetch) candidates, scores each full combination with
     ``roofline.modeled_step_time`` (the per-layer DWDP critical path
-    ``max(compute + landing, prefetch)`` summed over layers), and keeps
-    the cheapest — so the resolved table's modeled step time is <= every
-    uniform policy's by construction. Transports are then assigned by
-    the bank-size rule (ring_sliced only above RING_SLICED_MIN_BYTES).
+    ``max(compute + landing, overlapped prefetch) + serial round``
+    summed over layers — route-before-gather rounds price serially,
+    the predictive speculative round overlaps), and keeps the cheapest
+    — so the resolved table's modeled step time is <= every uniform
+    policy's by construction (uniform tables compared at their
+    engine-effective resolution, :func:`effective_policies`).
+    ``fetch="predictive"`` is enumerated at decode shapes only and its
+    ``cache_budget`` is sized against the analytic HBM residency
+    headroom (:func:`_auto_cache_rows`). Transports are then assigned
+    by the bank-size rule (ring_sliced only above
+    RING_SLICED_MIN_BYTES).
     """
     table = _coerce_policy(policy)
     if table is not None:
@@ -569,39 +726,40 @@ def resolve_policies(
 
     cfg, geom = model.cfg, model.geom
     hw = hw or roofline.GB200
-    batch_axes, seq_axes = plan_activation_sharding(cfg, shape, mesh_sizes)
-    bsh = math.prod(mesh_sizes[a] for a in batch_axes) if batch_axes else 1
-    ssh = math.prod(mesh_sizes[a] for a in seq_axes) if seq_axes else 1
     # Score with the PER-RANK routed token count — the same rows the
     # engine's demand gate (execution.demand_fetch_active) and budget
     # rule (demand_budget_rows) see — so the scorer's demand candidates
-    # price exactly the payload the lowered program ships.
-    rows = _routed_rows(shape, bsh, ssh)
-    tokens = rows
-
-    # -- engine eligibility per family (mirror execution's predicates) ----
+    # price exactly the payload the lowered program ships. Eligibility
+    # facts are shared with effective_policies (ONE mirror of the
+    # engine's predicates).
+    elig = _engine_eligibility(model, shape, mesh_sizes)
+    rows = tokens = elig.rows
     pl = geom.moe_placement
-    moe_gather = (
-        cfg.moe is not None and geom.moe_exec == "gather"
-        and pl is not None and pl.subgroup_size > 1
-    )
-    moe_split_ok = moe_gather and len(geom.expert_axes) == 1
-    demand_ok = (
-        moe_split_ok
-        and rows * cfg.moe.top_k < (pl.subgroup_size - 1) * pl.local_count
-    )
-    attn_split_ok = len(geom.attn_axes) == 1 and geom.attn_shards > 1
-    ffn_split_ok = len(geom.ffn_axes) == 1 and geom.ffn_shards > 1
-    group = pl.subgroup_size if moe_gather else max(
+    moe_split_ok = elig.moe_split_ok
+    demand_ok = elig.demand_ok
+    attn_split_ok = elig.attn_ok
+    ffn_split_ok = elig.ffn_ok
+    group = pl.subgroup_size if elig.moe_gather else max(
         geom.attn_shards, geom.ffn_shards, 1
     )
 
     # -- enumerate (layout, fetch) candidates; preferred (cheaper wire /
     # HBM) first so strict-< scoring keeps them on ties ------------------
-    moe_cands = [("split", "demand")] if demand_ok else []
+    # predictive only at decode shapes: the predictor + residency cache
+    # need the cross-step PredictState the decode loop threads (any other
+    # phase runs it as plain demand, so it could never score better)
+    predictive_ok = demand_ok and shape.phase == "decode"
+    moe_cands = [("split", "predictive")] if predictive_ok else []
+    if demand_ok:
+        moe_cands.append(("split", "demand"))
     if moe_split_ok:
         moe_cands.append(("split", "all"))
     moe_cands.append(("merged", "all"))
+    cache_rows = (
+        _auto_cache_rows(model, shape, mesh_sizes, hw, weight_bytes)
+        if predictive_ok
+        else 0
+    )
 
     def dense_cands(ok: bool) -> list[str]:
         return (["split"] if ok else []) + ["merged"]
@@ -609,14 +767,17 @@ def resolve_policies(
     attn_gathered = bool(geom.attn_axes)
     best, best_t = None, float("inf")
     for moe_layout, fetch in moe_cands:
+        moe_pol = GatherPolicy(
+            layout=moe_layout, fetch=fetch,
+            cache_budget=cache_rows if fetch == "predictive" else 0,
+        )
         for qkv_layout in dense_cands(attn_split_ok):
             for out_layout in dense_cands(attn_split_ok):
                 for ffn_layout in dense_cands(ffn_split_ok):
                     cand = PolicyTable(
                         default=GatherPolicy(layout=ffn_layout),
                         families=(
-                            ("moe_experts",
-                             GatherPolicy(layout=moe_layout, fetch=fetch)),
+                            ("moe_experts", moe_pol),
                             ("attn_qkv", GatherPolicy(layout=qkv_layout)),
                             ("attn_out", GatherPolicy(layout=out_layout)),
                             ("dense_ffn", GatherPolicy(layout=ffn_layout)),
@@ -643,6 +804,48 @@ def resolve_policies(
         )
         fams.append((name, dataclasses.replace(pol, transport=transport)))
     return dataclasses.replace(best, families=tuple(fams))
+
+
+def effective_policies(
+    model: Model,
+    shape: InputShape,
+    mesh_sizes: dict[str, int],
+    table: PolicyTable,
+) -> PolicyTable:
+    """Demote a table's per-family policies to what the ENGINE actually
+    lowers on this (model x shape x mesh): ``split`` falls back to
+    ``merged`` for families whose split path cannot engage (multi-axis
+    gathers, single-shard axes), ``demand``/``predictive`` fall back to
+    ``all`` outside partial coverage, and ``predictive`` runs as
+    ``demand`` outside decode (no cross-step PredictState). Use this to
+    price a user table honestly — the roofline credits a layout's
+    savings only where the engine can realize them."""
+    elig = _engine_eligibility(model, shape, mesh_sizes)
+
+    def demote(name: str, pol: GatherPolicy) -> GatherPolicy:
+        ok = {"moe_experts": elig.moe_split_ok, "attn_qkv": elig.attn_ok,
+              "attn_out": elig.attn_ok, "dense_ffn": elig.ffn_ok}[name]
+        layout = pol.layout if (pol.layout == "merged" or ok) else "merged"
+        fetch = pol.fetch if name == "moe_experts" else "all"
+        if fetch == "predictive" and shape.phase != "decode":
+            fetch = "demand"
+        if fetch in ("demand", "predictive") and not elig.demand_ok:
+            fetch = "all"
+        if fetch == "all":
+            return GatherPolicy(layout=layout, transport=pol.transport,
+                                num_slices=pol.num_slices)
+        return dataclasses.replace(
+            pol, layout=layout, fetch=fetch,
+            # demand carries no residency cache — dropping it here keeps
+            # the demoted policy constructible (validated on replace)
+            cache_budget=pol.cache_budget if fetch == "predictive" else 0,
+        )
+
+    fams = tuple(
+        (name, demote(name, table.family(name))) for name in GATHER_FAMILIES
+    )
+    return PolicyTable(default=table.default, families=fams,
+                       overrides=table.overrides)
 
 
 def make_execution_plan(

@@ -139,6 +139,7 @@ def dryrun_one(
             layout=pk.pop("weight_layout", "split"),
             fetch=pk.pop("expert_fetch", "all"),
             budget=pk.pop("demand_budget", 0),
+            cache_budget=pk.pop("cache_budget", 0),
         )
     xp = make_execution_plan(model, shape, sizes, mode=mode, **pk)
     step = execution.make_step_fn(model, xp, mesh)
@@ -160,7 +161,12 @@ def dryrun_one(
         lowered = step.lower(params, batch)
     else:
         state = jax.eval_shape(
-            lambda: init_decode_state(model, shape.global_batch, shape.seq_len)
+            lambda: execution.attach_predict_state(
+                init_decode_state(
+                    model, shape.global_batch, shape.seq_len
+                ),
+                model, xp,
+            )
         )
         lowered = step.lower(params, batch, state)
     compiled = lowered.compile()

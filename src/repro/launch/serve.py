@@ -12,10 +12,14 @@ Gather policies are configured per weight family (the GatherPolicy API):
 
 or ``--policy-file policies.json`` (the ``PolicyTable.to_dict`` JSON
 shape, ``{"family_or_default": "layout[:fetch[:transport...]]"}``), or
-``--policy auto`` for the roofline-guided resolver. The pre-PolicyTable
-flags (``--weight-layout`` / ``--expert-fetch`` / ``--demand-budget``)
-keep working as the uniform-table spelling and may not be combined with
-``--policy``.
+``--policy auto`` for the roofline-guided resolver. Expert fetch modes:
+``all`` (every remote expert every layer), ``demand``
+(route-before-gather) and ``predictive`` (speculative layer-ahead round
++ cross-step residency cache — ``--cache-budget`` rows per layer; auto
+picks it at decode shapes where the overlap pays). The pre-PolicyTable
+flags (``--weight-layout`` / ``--expert-fetch`` / ``--demand-budget`` /
+``--cache-budget``) keep working as the uniform-table spelling and may
+not be combined with ``--policy``.
 """
 from __future__ import annotations
 
@@ -86,6 +90,7 @@ def resolve_cli_policy(args) -> object:
             ("--weight-layout", args.weight_layout),
             ("--expert-fetch", args.expert_fetch),
             ("--demand-budget", args.demand_budget),
+            ("--cache-budget", getattr(args, "cache_budget", None)),
         ) if v is not None
     ]
     policy = parse_policy_flags(args.policy, args.policy_file)
@@ -111,6 +116,7 @@ def build_engine(
     capacity_from: str = "local",
     expert_fetch: str = "all",
     demand_budget: int = 0,
+    cache_budget: int = 0,
     policy=None,
     dtype=jnp.float32,
     seed: int = 0,
@@ -118,6 +124,10 @@ def build_engine(
     from repro.launch.mesh import _mesh
     mesh = _mesh(mesh_shape, ("data", "model"))
     sizes = {"data": mesh_shape[0], "model": mesh_shape[1]}
+    # seq-sharded KV capture / decode caches split the ring over up to
+    # all mesh ranks: round the cache up so every shard degree divides
+    n_ranks = max(1, mesh_shape[0] * mesh_shape[1])
+    cache_len = -(-cache_len // n_ranks) * n_ranks
     model = build_model(cfg, sizes, dtype=dtype)
     params = model.init_params(jax.random.key(seed))
     ctx = ContextServer(
@@ -125,14 +135,14 @@ def build_engine(
         cache_len=cache_len, prefetch=prefetch,
         weight_layout=weight_layout, capacity_from=capacity_from,
         expert_fetch=expert_fetch, demand_budget=demand_budget,
-        policy=policy,
+        cache_budget=cache_budget, policy=policy,
     )
     gen = GenerationServer(
         model, mesh, sizes, mode=gen_mode, max_batch=max_batch,
         cache_len=cache_len,
         weight_layout=weight_layout, capacity_from=capacity_from,
         expert_fetch=expert_fetch, demand_budget=demand_budget,
-        policy=policy,
+        cache_budget=cache_budget, policy=policy,
     )
     return DisaggregatedEngine(params, ctx, gen), model
 
@@ -171,13 +181,21 @@ def main(argv=None):
                          "weights and gathers per layer — the mode the "
                          "on-demand expert fetch accelerates)")
     ap.add_argument("--expert-fetch", default=None,
-                    choices=["all", "demand"],
+                    choices=["all", "demand", "predictive"],
                     help="uniform MoE expert-gather selection (the "
                          "pre-PolicyTable spelling of --policy "
-                         "moe_experts=split:FETCH)")
+                         "moe_experts=split:FETCH); 'predictive' adds "
+                         "the layer-ahead speculative round + cross-step "
+                         "residency cache at decode")
     ap.add_argument("--demand-budget", type=int, default=None,
                     help="per-peer demand-fetch row budget (0 = auto: 2x "
-                         "the expected distinct-expert coverage)")
+                         "the expected distinct-expert coverage; for "
+                         "predictive, the speculative/correction rounds)")
+    ap.add_argument("--cache-budget", type=int, default=None,
+                    help="expert rows of the predictive fetch's "
+                         "cross-step residency cache per layer (0 = "
+                         "cache off; --policy auto sizes it from HBM "
+                         "headroom)")
     ap.add_argument("--full", action="store_true",
                     help="use the full config (default: reduced smoke)")
     args = ap.parse_args(argv)
@@ -199,6 +217,7 @@ def main(argv=None):
         capacity_from=args.capacity_from,
         expert_fetch=args.expert_fetch or "all",
         demand_budget=args.demand_budget or 0,
+        cache_budget=args.cache_budget or 0,
         policy=policy,
     )
     print("ctx policies:", engine.ctx.xp.policies.describe())

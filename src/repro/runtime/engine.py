@@ -30,7 +30,7 @@ from repro.runtime.metrics import RequestRecord, ServingMetrics
 
 
 def _resolve_policy(policy, *, prefetch="allgather", weight_layout=None,
-                    expert_fetch="all", demand_budget=0):
+                    expert_fetch="all", demand_budget=0, cache_budget=0):
     """Server-level policy resolution: an explicit ``policy`` (a
     PolicyTable, per-family dict, spec string, or "auto") wins; otherwise
     the simple per-knob kwargs spell a uniform table — WITHOUT routing
@@ -43,6 +43,7 @@ def _resolve_policy(policy, *, prefetch="allgather", weight_layout=None,
         fetch=expert_fetch,
         transport=prefetch,
         budget=demand_budget,
+        cache_budget=cache_budget,
     )
 
 
@@ -62,7 +63,7 @@ class ContextServer:
                  weight_layout: Optional[str] = None,
                  capacity_from: str = "local",
                  expert_fetch: str = "all", demand_budget: int = 0,
-                 policy=None):
+                 cache_budget: int = 0, policy=None):
         self.model = model
         self.prefill_len = prefill_len
         shape = InputShape("ctx", prefill_len, 1, "prefill")
@@ -71,6 +72,7 @@ class ContextServer:
             policy=_resolve_policy(
                 policy, prefetch=prefetch, weight_layout=weight_layout,
                 expert_fetch=expert_fetch, demand_budget=demand_budget,
+                cache_budget=cache_budget,
             ),
             capacity_from=capacity_from,
         )
@@ -106,7 +108,7 @@ class GenerationServer:
                  weight_layout: Optional[str] = None,
                  capacity_from: str = "local",
                  expert_fetch: str = "all", demand_budget: int = 0,
-                 policy=None):
+                 cache_budget: int = 0, policy=None):
         self.model = model
         self.max_batch = max_batch
         self.cache_len = cache_len
@@ -116,6 +118,7 @@ class GenerationServer:
             policy=_resolve_policy(
                 policy, weight_layout=weight_layout,
                 expert_fetch=expert_fetch, demand_budget=demand_budget,
+                cache_budget=cache_budget,
             ),
             capacity_from=capacity_from,
         )
@@ -125,7 +128,18 @@ class GenerationServer:
         self.gather_bytes = execution.gathered_wire_bytes_per_step(
             model, self.xp
         )
-        self.state = init_decode_state(model, max_batch, cache_len)
+        self.state = execution.attach_predict_state(
+            init_decode_state(model, max_batch, cache_len), model, self.xp
+        )
+        # bytes of one expert's weight rows — converts the predictive
+        # fetch's per-step row counters into the byte counters the
+        # serving metrics report
+        cfg = model.cfg
+        self.expert_bytes = (
+            3 * cfg.d_model * cfg.moe.d_ff * jnp.dtype(model.dtype).itemsize
+            if cfg.moe is not None else 0
+        )
+        self.last_pred_stats: Optional[np.ndarray] = None
         # inactive slots: pos points at an empty cache; emitted tokens junk
         self.slot_req: list[Optional[int]] = [None] * max_batch
         self.slot_remaining = np.zeros(max_batch, np.int64)
@@ -136,7 +150,10 @@ class GenerationServer:
 
     def admit(self, slot: int, req_id: int, first_token: int, ctx_state):
         """Install a context-server state into one batch slot. Scan groups
-        carry a leading cycle axis, so the batch axis is 1 there."""
+        carry a leading cycle axis, so the batch axis is 1 there. The
+        predictive-fetch state ("pred" — per-RANK predictor + residency
+        cache, shared by every slot) is untouched: admitting a request
+        must not flush the cache the other slots are hitting."""
         new_layers = {}
         for group in self.model.plan:
             stacked = group.scan and group.n_cycles > 1
@@ -152,10 +169,13 @@ class GenerationServer:
                 self.state["layers"][group.name],
                 ctx_state["layers"][group.name],
             )
-        self.state = {
+        new_state = {
             "pos": self.state["pos"].at[slot].set(ctx_state["pos"][0]),
             "layers": new_layers,
         }
+        if "pred" in self.state:
+            new_state["pred"] = self.state["pred"]
+        self.state = new_state
         self.cur_token = self.cur_token.at[slot, 0].set(first_token)
         self.slot_req[slot] = req_id
 
@@ -163,6 +183,10 @@ class GenerationServer:
         out = self.step(params, {"token": self.cur_token}, self.state)
         self.state = out["state"]
         self.cur_token = out["next_token"]
+        if "pred_stats" in out:
+            # [predicted, hit, miss, evicted] expert rows this step,
+            # summed over layers and ranks (psum'd inside the step)
+            self.last_pred_stats = np.asarray(out["pred_stats"])
         return np.asarray(out["next_token"][:, 0])
 
     def release(self, slot: int):
@@ -220,6 +244,13 @@ class DisaggregatedEngine:
                 rec.add_gather_share(
                     self.gen.gather_bytes, 1.0 / len(active)
                 )
+                if self.gen.last_pred_stats is not None and active:
+                    # measured predictive counters (rows -> bytes), the
+                    # step's share split over its active slots
+                    rec.add_predict_share(
+                        self.gen.last_pred_stats, self.gen.expert_bytes,
+                        1.0 / len(active),
+                    )
                 self.outputs[rid].append(int(toks[slot]))
                 rec.tokens_out += 1
                 self.gen.slot_remaining[slot] -= 1

@@ -28,6 +28,15 @@ class RequestRecord:
     # gathered_wire_bytes_per_step's "families" breakdown)
     family_fetch_bytes: dict = dataclasses.field(default_factory=dict)
     family_full_bytes: dict = dataclasses.field(default_factory=dict)
+    # predictive-fetch counters (MEASURED per decode step, not static):
+    # bytes of expert rows speculatively prefetched, served from the
+    # cache/speculative set (hits — these skipped the post-routing wire
+    # round), correction-fetched (misses), and evicted from the
+    # residency cache
+    predicted_bytes: float = 0.0
+    hit_bytes: float = 0.0
+    miss_bytes: float = 0.0
+    evicted_bytes: float = 0.0
 
     def add_gather_share(self, gather_bytes: dict, share: float = 1.0):
         """Attribute ``share`` of one step's gathered-weight traffic
@@ -42,6 +51,17 @@ class RequestRecord:
             self.family_full_bytes[fam] = (
                 self.family_full_bytes.get(fam, 0.0) + b["full"] * share
             )
+
+    def add_predict_share(self, stats, expert_bytes: float,
+                          share: float = 1.0):
+        """Attribute ``share`` of one decode step's measured predictive
+        counters (``[predicted, hit, miss, evicted]`` expert ROWS — the
+        engine's ``pred_stats`` output) to this request, in bytes."""
+        pred, hit, miss, evicted = (float(s) for s in stats)
+        self.predicted_bytes += pred * expert_bytes * share
+        self.hit_bytes += hit * expert_bytes * share
+        self.miss_bytes += miss * expert_bytes * share
+        self.evicted_bytes += evicted * expert_bytes * share
 
     @property
     def ttft(self) -> Optional[float]:
@@ -101,4 +121,18 @@ class ServingMetrics:
                     for fam, (fb, fl) in sorted(by_fam.items())
                     if fl > 0
                 }
+        pred_b = sum(r.predicted_bytes for r in done)
+        hit_b = sum(r.hit_bytes for r in done)
+        miss_b = sum(r.miss_bytes for r in done)
+        evic_b = sum(r.evicted_bytes for r in done)
+        if pred_b or hit_b or miss_b:
+            out["predict_mb_predicted"] = round(pred_b / 1e6, 3)
+            out["predict_mb_hit"] = round(hit_b / 1e6, 3)
+            out["predict_mb_miss"] = round(miss_b / 1e6, 3)
+            out["predict_mb_evicted"] = round(evic_b / 1e6, 3)
+            # fraction of the wanted remote rows served without the
+            # post-routing correction round (cache + speculative hits)
+            out["predict_hit_rate"] = round(
+                hit_b / max(hit_b + miss_b, 1e-9), 4
+            )
         return out

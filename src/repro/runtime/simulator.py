@@ -43,12 +43,27 @@ class SimConfig:
                                         # §4.2 merge-copy HBM write
     attn_gathered: bool = False         # model DWDP-gathered attention
                                         # (escalated sharding) land-bytes
-    expert_fetch: str = "all"           # "all" | "demand": expert-gather
-                                        # selection for every DWDP phase.
-                                        # "demand" models route-before-
-                                        # gather via the expected-coverage
-                                        # closed form — the decode win the
-                                        # Pareto sweep shows
+    expert_fetch: str = "all"           # "all" | "demand" | "predictive":
+                                        # expert-gather selection for
+                                        # every DWDP phase. "demand"
+                                        # models route-before-gather via
+                                        # the expected-coverage closed
+                                        # form (its round sits ON the
+                                        # decode critical path);
+                                        # "predictive" overlaps the
+                                        # speculative round and shrinks
+                                        # the serial correction by the
+                                        # replayed hit rates below
+    cache_budget: int = 0               # predictive residency-cache rows
+                                        # per layer (0 = cache off)
+    cache_hit_rate: Optional[float] = None
+                                        # replay a MEASURED cache hit
+                                        # rate (e.g. an engine run's
+                                        # predict_hit_rate) instead of
+                                        # the closed-form default
+    predict_hit_rate: Optional[float] = None
+                                        # likewise for the speculative
+                                        # round's predictor hit rate
     gen_mode: str = "local"             # generation-server weight place-
                                         # ment: "local" = fully resident
                                         # per GPU group (the legacy
@@ -79,9 +94,15 @@ class SimConfig:
         if self.policies is not None:
             return self.policies
         fams = ()
-        if self.expert_fetch == "demand":
+        if self.expert_fetch in ("demand", "predictive"):
             fams = (
-                ("moe_experts", GatherPolicy(layout="split", fetch="demand")),
+                ("moe_experts", GatherPolicy(
+                    layout="split", fetch=self.expert_fetch,
+                    cache_budget=(
+                        self.cache_budget
+                        if self.expert_fetch == "predictive" else 0
+                    ),
+                )),
             )
         return PolicyTable(
             default=GatherPolicy(layout=self.weight_layout), families=fams
@@ -126,8 +147,10 @@ class ClusterSimulator:
         (``roofline.demand_prefetch_bytes`` with the engine's shared
         auto-budget rule — exactly what the lowered program moves, not
         the raw coverage expectation) — the dominant decode
-        communication term the route-before-gather path shrinks. Dense
-        models gather nothing at decode scale worth modeling here
+        communication term the route-before-gather path shrinks;
+        ``"predictive"`` ships the speculative + correction rounds with
+        cache hits (replayed or closed-form) skipping the wire entirely.
+        Dense models gather nothing at decode scale worth modeling here
         (experts dominate)."""
         sc = self.sc
         cfg = sc.cfg
@@ -138,7 +161,14 @@ class ClusterSimulator:
         n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
         g = sc.gen_gpus
         pol = sc.table().family("moe_experts")
-        if pol.fetch == "demand":
+        if pol.fetch == "predictive":
+            per_layer, _ = roofline.predictive_fetch_terms(
+                batch, moe.top_k, moe.num_experts, g, per_expert,
+                budget=pol.budget, cache_rows=pol.cache_budget,
+                cache_hit=sc.cache_hit_rate,
+                predict_hit=sc.predict_hit_rate,
+            )
+        elif pol.fetch == "demand":
             per_layer = roofline.demand_prefetch_bytes(
                 batch, moe.top_k, moe.num_experts, g, per_expert,
                 budget=pol.budget,
@@ -146,6 +176,32 @@ class ClusterSimulator:
         else:
             per_layer = moe.num_experts * per_expert * (g - 1) / g
         return n_moe * per_layer
+
+    def decode_serial_wire_bytes(self, batch: int) -> float:
+        """The part of :meth:`decode_wire_bytes` that sits ON the decode
+        critical path (cannot overlap compute): the whole round for
+        ``"demand"`` (it waits on routing), the correction round only for
+        ``"predictive"`` (the speculative round is issued a layer ahead),
+        zero for the layer-ahead ``"all"`` prefetch."""
+        sc = self.sc
+        cfg = sc.cfg
+        if cfg.moe is None or sc.gen_gpus <= 1:
+            return 0.0
+        moe = cfg.moe
+        per_expert = 3 * cfg.d_model * moe.d_ff * 1.0
+        n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
+        pol = sc.table().family("moe_experts")
+        if pol.fetch == "predictive":
+            _, serial = roofline.predictive_fetch_terms(
+                batch, moe.top_k, moe.num_experts, sc.gen_gpus, per_expert,
+                budget=pol.budget, cache_rows=pol.cache_budget,
+                cache_hit=sc.cache_hit_rate,
+                predict_hit=sc.predict_hit_rate,
+            )
+            return n_moe * serial
+        if pol.fetch == "demand":
+            return self.decode_wire_bytes(batch)
+        return 0.0
 
     def gen_step_time(self, batch: int) -> float:
         """One decode iteration on a generation server (memory-bound).
@@ -178,7 +234,13 @@ class ClusterSimulator:
         )
         t = max(t_mem, t_flops)
         if sc.gen_mode == "dwdp":
-            t = max(t, self.decode_wire_bytes(batch) / sc.hw.link_bw)
+            wire = self.decode_wire_bytes(batch) / sc.hw.link_bw
+            serial = self.decode_serial_wire_bytes(batch) / sc.hw.link_bw
+            # overlappable prefetch joins the max (the DWDP critical
+            # path); a round that waits on routing adds serially — which
+            # is exactly what the predictive fetch takes back off the
+            # critical path
+            t = max(t, wire - serial) + serial
         return t + 2e-4  # + fixed step overhead
 
     # ---- simulation --------------------------------------------------------

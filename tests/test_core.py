@@ -421,17 +421,26 @@ def _r1_gather_model():
 
 
 def test_auto_resolver_decision_rules():
-    """decode (partial coverage) -> demand experts; long prefill (full
+    """decode at per-rank rows where the overlap pays -> predictive
+    experts (with a residency-cache budget bounded by HBM headroom);
+    single-row decode -> plain demand (the speculative round's padded
+    wire would double the payload for nothing); long prefill (full
     coverage) -> all-fetch; ring_sliced only for banks above the size
     threshold (R1's GB-scale expert banks yes, tiny banks no)."""
     from repro.configs.base import InputShape
     from repro.core.strategy import resolve_policies
 
     cfg, ms, m = _r1_gather_model()
-    dec = resolve_policies(m, InputShape("gen", 2048, 8, "decode"), ms)
-    assert dec.family("moe_experts").fetch == "demand"
+    # gen_batch=8 PER RANK (global 64 over the 8-rank mesh): the
+    # acceptance decode shape — predictive wins on the overlapped round
+    dec = resolve_policies(m, InputShape("gen", 2048, 64, "decode"), ms)
+    assert dec.family("moe_experts").fetch == "predictive"
     assert dec.family("moe_experts").layout == "split"
     assert dec.family("moe_experts").transport == "ring_sliced"
+    # single routed row per rank: the speculative round cannot pay for
+    # its padding, the resolver honestly keeps the plain demand round
+    dec1 = resolve_policies(m, InputShape("gen", 2048, 8, "decode"), ms)
+    assert dec1.family("moe_experts").fetch == "demand"
     ctx = resolve_policies(m, InputShape("ctx", 16384, 1, "prefill"), ms)
     assert ctx.family("moe_experts").fetch == "all"
     assert ctx.family("moe_experts").layout == "split"
@@ -448,28 +457,38 @@ def test_auto_resolver_decision_rules():
 
 
 def test_auto_beats_every_uniform_policy_r1_decode():
-    """The acceptance criterion: at the DeepSeek-R1 gen_batch=8/topk=8/
-    E=256 decode shape, policy="auto" selects per-family policies whose
-    modeled (roofline.modeled_step_time over layer_times) decode step
-    time is <= EVERY uniform policy's."""
+    """The acceptance criterion: at the DeepSeek-R1 gen_batch=8 (per
+    rank) / topk=8 / E=256 decode shape, policy="auto" selects
+    per-family policies whose modeled (roofline.modeled_step_time over
+    layer_times) decode step time is <= EVERY uniform policy's —
+    "predictive" included — with each uniform table priced at its
+    ENGINE-effective resolution (strategy.effective_policies: split
+    demotes to merged where the split path cannot engage, so the
+    comparison never credits an unlowerable saving)."""
     from repro.configs.base import InputShape
     from repro.core import roofline
-    from repro.core.strategy import PolicyTable, resolve_policies
+    from repro.core.strategy import (
+        PolicyTable, effective_policies, resolve_policies,
+    )
 
     cfg, ms, m = _r1_gather_model()
     assert cfg.moe.num_experts == 256 and cfg.moe.top_k == 8
-    shape = InputShape("gen", 2048, 8, "decode")
+    shape = InputShape("gen", 2048, 64, "decode")  # 8 rows/rank on 8 ranks
     auto = resolve_policies(m, shape, ms)
+    assert auto.family("moe_experts").fetch == "predictive"
     kw = dict(tokens=8, group=4, kv_len=2048,
               attn_gathered=bool(m.geom.attn_axes))
     t_auto = roofline.modeled_step_time(cfg, policies=auto, **kw)
     uniforms = {}
     for layout in ("merged", "split"):
-        for fetch in ("all", "demand") if layout == "split" else ("all",):
+        fetches = (
+            ("all", "demand", "predictive") if layout == "split" else ("all",)
+        )
+        for fetch in fetches:
             for transport in ("allgather", "ring", "ring_sliced"):
-                tab = PolicyTable.uniform(
+                tab = effective_policies(m, shape, ms, PolicyTable.uniform(
                     layout=layout, fetch=fetch, transport=transport
-                )
+                ))
                 uniforms[f"{layout}/{fetch}/{transport}"] = (
                     roofline.modeled_step_time(cfg, policies=tab, **kw)
                 )
@@ -527,6 +546,50 @@ def test_expected_distinct_experts_closed_form():
     assert f(100_000, 256) == pytest.approx(256.0, rel=1e-3)
 
 
+@settings(deadline=None, max_examples=24)
+@given(
+    e=st.sampled_from([4, 16, 64, 256]),
+    n=st.sampled_from([1, 8, 64, 512]),
+)
+def test_expected_coverage_matches_empirical_multinomial(e, n):
+    """The satellite guard: the ``E(1-(1-1/E)^n)`` closed form — which
+    now sizes BOTH the demand auto-budget and the predictive
+    speculative/correction budgets — must match the empirical mean
+    distinct-expert count of seeded multinomial (uniform) routing draws
+    within sampling tolerance."""
+    rng = np.random.default_rng(e * 1009 + n)
+    trials = 256
+    draws = rng.integers(0, e, size=(trials, n))
+    distinct = np.array([len(np.unique(row)) for row in draws])
+    closed = roofline.expected_distinct_experts(n, e)
+    se = distinct.std() / math.sqrt(trials)
+    assert abs(distinct.mean() - closed) <= max(4.0 * se, 0.02 * closed + 0.05), (
+        distinct.mean(), closed, se,
+    )
+    # and the budgets the closed form sizes bracket it correctly
+    local = max(1, e // 4)
+    b = roofline.demand_budget_rows(n, e, local)
+    spec, corr = roofline.predictive_budget_rows(n, e, local)
+    per_peer = closed / e * local  # expected per-peer coverage
+    assert b >= min(local, per_peer)            # demand budget covers 2x
+    assert 1 <= spec <= local and 1 <= corr <= local
+    assert spec + corr <= 2 * b  # predictive never pads past 2x demand
+
+
+def test_predictive_budget_rows_below_demand_budget():
+    """At the R1 acceptance shape the predictive speculative+correction
+    budgets together ship FEWER payload rows than the plain demand
+    budget (the wire-bytes <= demand acceptance), while each stays
+    8-aligned and positive."""
+    e, local = 256, 64
+    draws = 8 * 8  # gen_batch=8 rows * top_k=8
+    b = roofline.demand_budget_rows(draws, e, local)
+    spec, corr = roofline.predictive_budget_rows(draws, e, local)
+    assert (spec, corr) == (16, 8) and b == 32
+    assert spec + corr < b
+    assert spec % 8 == 0 and corr % 8 == 0
+
+
 def test_demand_prefetch_bytes_below_full_and_capped():
     """Decode-scale routing (gen_batch=8, topk=8, E=256, DWDP4 — the
     acceptance shape) must model strictly fewer wire bytes than the full
@@ -570,6 +633,54 @@ def test_layer_times_demand_shrinks_decode_prefetch():
         cfg, tokens=16384, expert_fetch="demand", **kw
     )
     assert ctx_dem.prefetch == ctx_all.prefetch
+
+
+def test_predictive_modeled_below_demand_r1_decode():
+    """The modeled-perf acceptance: at the R1 decode shape (8 rows/rank,
+    topk=8, E=256, DWDP4) ``fetch="predictive"`` models a strictly
+    smaller step time than ``fetch="demand"`` — the speculative round
+    overlaps compute (``max(compute, spec) + correction`` instead of
+    ``compute + whole round``) — and its wire bytes never exceed the
+    plain demand round's. A residency cache pushes both further down."""
+    from repro.core.strategy import PolicyTable
+
+    cfg = get_arch("deepseek-r1")
+    kw = dict(tokens=8, group=4, kv_len=2048, attn_gathered=True)
+    t = {
+        fetch: roofline.modeled_step_time(
+            cfg, policies=PolicyTable.uniform(layout="split", fetch=fetch),
+            **kw,
+        )
+        for fetch in ("all", "demand", "predictive")
+    }
+    assert t["predictive"] < t["demand"] < t["all"], t
+    # per-layer wire: predictive total <= demand total; serial strictly <
+    moe_layer = cfg.moe.first_dense
+    lt_d = roofline.layer_times(
+        cfg, tokens=8, group=4, layer=moe_layer,
+        policies=PolicyTable.uniform(layout="split", fetch="demand"),
+    )
+    lt_p = roofline.layer_times(
+        cfg, tokens=8, group=4, layer=moe_layer,
+        policies=PolicyTable.uniform(layout="split", fetch="predictive"),
+    )
+    assert lt_p.prefetch <= lt_d.prefetch
+    assert lt_p.serial_fetch < lt_d.serial_fetch
+    assert lt_d.serial_fetch == lt_d.prefetch  # demand: whole round serial
+    # cache hits shrink the wire further (replayed hit rate)
+    lt_c = roofline.layer_times(
+        cfg, tokens=8, group=4, layer=moe_layer,
+        policies=PolicyTable.uniform(layout="split", fetch="predictive"),
+        cache_hit=0.5,
+    )
+    assert lt_c.prefetch < lt_p.prefetch
+    # at context-phase coverage the predictive path falls back to the
+    # full prefetch exactly like demand (nothing to predict away)
+    lt_ctx = roofline.layer_times(
+        cfg, tokens=16384, group=4, layer=moe_layer,
+        policies=PolicyTable.uniform(layout="split", fetch="predictive"),
+    )
+    assert lt_ctx.serial_fetch == 0.0
 
 
 def test_moe_capacity_drops_tokens():
