@@ -1,0 +1,141 @@
+"""Fault-degradation benchmark: what validation costs when nothing is
+broken, and what each HealthMonitor demotion / fault scenario costs when
+something is (docs/robustness.md).
+
+Three row groups in BENCH_fault_degradation.json, all at the R1 decode
+acceptance shape (deepseek-r1, G'=4, gen_batch=8 tokens/rank):
+
+- ``ladder``: the modeled GB200 step time of every degradation-ladder
+  rung (predictive -> demand -> all-gather) with checksum validation
+  priced in, plus a fault-storm scenario replay per rung (detected
+  faults force the axis-agreed full-gather fallback on ``fault_rate`` of
+  steps; stragglers stretch every fetch round) — the cost curve the
+  HealthMonitor walks.
+- ``checksum_overhead``: the healthy-path price of turning validation
+  on — the modeled step-time ratio and the wire-byte ratio (the f32
+  checksum table rides the index round: +4 bytes/expert, payload
+  unchanged). The acceptance bar is < 2% step-time overhead.
+- ``measured``: CPU wall time of the actual checksum kernels
+  (``row_checksums`` over an R1-shaped fetched bank + ``verify_rows``)
+  against the compact demand dispatch they guard — the interpret-mode
+  twin of the modeled overhead, informational.
+
+Rewrites BENCH_fault_degradation.json; committed per PR so the
+robustness cost trajectory lives in git history.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.kernels_bench import _time, write_bench_json
+from repro.core import prefetch, roofline
+from repro.kernels.split_gemm.ops import split_swiglu_demand_jnp
+
+BENCH_FAULTS_JSON = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "..",
+    "BENCH_fault_degradation.json",
+)
+
+
+def bench_fault_degradation(out_path: str = BENCH_FAULTS_JSON) -> list[dict]:
+    from repro.configs import get_arch
+    from repro.core.strategy import PolicyTable
+    from repro.runtime.simulator import ClusterSimulator, SimConfig
+
+    cfg = get_arch("deepseek-r1")
+    e, g, b, k = cfg.moe.num_experts, 4, 8, cfg.moe.top_k
+    local = e // g
+    spec_b, _ = roofline.predictive_budget_rows(b * k, e, local)
+    policies = PolicyTable.uniform(
+        layout="split", fetch="predictive", cache_budget=2 * spec_b,
+    )
+    kw = dict(tokens=b, group=g, kv_len=2048)
+    rows = []
+
+    # ---- ladder: modeled step time per rung + fault-scenario replay ----
+    sim_base = dict(
+        cfg=cfg, gen_mode="dwdp", gen_gpus=g, gen_batch=b,
+        policies=policies, validate_fetch=True,
+    )
+    storm = ClusterSimulator(SimConfig(
+        **sim_base, fault_rate=0.1, straggler_ranks=1,
+        straggler_slowdown=3.0,
+    ))
+    scenario = {r["fetch"]: r for r in storm.degraded_table()}
+    for r in roofline.degraded_step_times(cfg, policies, **kw):
+        rows.append({
+            "group": "ladder",
+            "level": r["level"],
+            "fetch": r["fetch"],
+            "t_step_us": round(r["t_step_us"], 2),
+            "vs_healthy": round(r["vs_healthy"], 4),
+            "t_storm_us": scenario[r["fetch"]]["t_scenario_us"],
+        })
+
+    # ---- checksum overhead (the healthy-path validation price) ---------
+    t_plain = roofline.modeled_step_time(cfg, policies=policies, **kw)
+    t_val = roofline.modeled_step_time(
+        cfg, policies=policies, validate=True, **kw
+    )
+    per_expert = 3 * cfg.d_model * cfg.moe.d_ff * 1
+    dem_budget = roofline.demand_budget_rows(b * k, e, local)
+    wire_plain = roofline.demand_prefetch_bytes(
+        b, k, e, g, per_expert, budget=dem_budget
+    )
+    wire_val = roofline.demand_prefetch_bytes(
+        b, k, e, g, per_expert, budget=dem_budget, validate=True
+    )
+    step_overhead = t_val / t_plain - 1.0
+    rows.append({
+        "group": "checksum_overhead",
+        "t_step_plain_us": round(t_plain * 1e6, 2),
+        "t_step_validated_us": round(t_val * 1e6, 2),
+        "step_overhead_frac": round(step_overhead, 6),
+        "wire_overhead_frac": round(wire_val / wire_plain - 1.0, 6),
+        "meets_2pct_bar": bool(step_overhead < 0.02),
+    })
+
+    # ---- measured checksum kernel walls (CPU, informational) -----------
+    d, f = 256, 128  # CPU-benchable dims at the R1 E/G'/k/B ratios
+    n_fetch = (g - 1) * dem_budget
+    ks = jax.random.split(jax.random.key(11), 7)
+    mk = lambda kk, sh: jax.random.normal(kk, sh, jnp.float32) * 0.1
+    lo = (mk(ks[0], (local, d, f)), mk(ks[1], (local, d, f)),
+          mk(ks[2], (local, f, d)))
+    fe = (mk(ks[3], (n_fetch, d, f)), mk(ks[4], (n_fetch, d, f)),
+          mk(ks[5], (n_fetch, f, d)))
+    x = mk(ks[6], (local + n_fetch, 2 * b * k, d))
+    valid = jnp.ones((n_fetch,), bool)
+    bank = {"wi0": fe[0], "wi1": fe[1], "wo": fe[2]}
+    table = jax.jit(prefetch.row_checksums)(bank)
+    ids = jnp.arange(n_fetch)
+
+    dispatch_fn = jax.jit(split_swiglu_demand_jnp)
+    verify_fn = jax.jit(
+        lambda t, i, v, tab: prefetch.verify_rows(t, i, v, tab)
+    )
+    t_dispatch = _time(dispatch_fn, x, *lo, *fe, valid, reps=10) * 1e6
+    t_checksum = _time(
+        jax.jit(prefetch.row_checksums), bank, reps=10
+    ) * 1e6
+    t_verify = _time(verify_fn, bank, ids, valid, table, reps=10) * 1e6
+    rows.append({
+        "group": "measured",
+        "shape": f"E{e} G'{g} k{k} B{b} D{d} F{f} fetched{n_fetch}",
+        "dispatch_us": round(t_dispatch, 1),
+        "row_checksums_us": round(t_checksum, 1),
+        "verify_rows_us": round(t_verify, 1),
+        "verify_vs_dispatch": round(t_verify / t_dispatch, 4),
+    })
+
+    write_bench_json(
+        out_path, "fault_degradation",
+        {"arch": cfg.name, "group_size": g, "gen_batch": b,
+         "fault_rate": 0.1, "straggler_slowdown": 3.0,
+         "policy": "split:predictive", "hw": "GB200"},
+        rows,
+    )
+    return rows

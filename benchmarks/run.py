@@ -10,7 +10,12 @@ import time
 
 
 def _all_benchmarks():
-    from benchmarks import kernels_bench, paper_tables, roofline_table
+    from benchmarks import (
+        faults_bench,
+        kernels_bench,
+        paper_tables,
+        roofline_table,
+    )
 
     return {
         "fig1_sync_overhead": paper_tables.bench_fig1_sync_overhead,
@@ -28,6 +33,7 @@ def _all_benchmarks():
         "split_attn": kernels_bench.bench_split_attn,
         "demand_moe": kernels_bench.bench_demand_moe,
         "demand_predict": kernels_bench.bench_demand_predict,
+        "fault_degradation": faults_bench.bench_fault_degradation,
         "dryrun_roofline": roofline_table.bench_dryrun_roofline,
     }
 

@@ -83,6 +83,14 @@ def main():
                     help="data,model mesh shape (e.g. 2,4)")
     ap.add_argument("--fake-devices", type=int, default=0,
                     help="force N fake host devices (CPU multi-rank demo)")
+    ap.add_argument("--fault-spec", default=None, metavar="SPEC",
+                    help="inject deterministic fetch faults (e.g. "
+                         "'seed=3,drop=0.1,peers=2'); outputs stay "
+                         "bitwise-exact via the checksum repair path and "
+                         "the HealthMonitor walks the policy ladder")
+    ap.add_argument("--validate-fetch", action="store_true",
+                    help="checksum-validate fetched rows without "
+                         "injecting faults")
     args = ap.parse_args()
     mesh_shape = tuple(int(x) for x in args.mesh.split(","))
 
@@ -91,6 +99,11 @@ def main():
         policy = resolve_cli_policy(args)
     except ValueError as e:
         ap.error(str(e))
+
+    health = None
+    if args.fault_spec or args.validate_fetch:
+        from repro.runtime.engine import HealthMonitor
+        health = HealthMonitor()
 
     cfg = reduced_variant(get_arch(args.arch))
     engine, model = build_engine(
@@ -106,6 +119,9 @@ def main():
         demand_budget=args.demand_budget or 0,
         cache_budget=args.cache_budget or 0,
         policy=policy,
+        fault_spec=args.fault_spec,
+        validate_fetch=args.validate_fetch,
+        health=health,
     )
     print("gen policies:", engine.gen.xp.policies.describe())
     rng = np.random.default_rng(0)
@@ -120,7 +136,7 @@ def main():
     metrics = engine.run(steps)
     summary = metrics.summary(horizon=float(steps))
     print("summary:", summary)
-    if "gather_fetch_ratio" in summary:
+    if "gathered_mb_fetched" in summary:
         saved = 1.0 - summary["gather_fetch_ratio"]
         print(
             f"gathered weights: {summary['gathered_mb_fetched']} MB shipped"
@@ -130,7 +146,7 @@ def main():
         for fam, mb in summary.get("gathered_mb_by_family", {}).items():
             print(f"  {fam:>12}: {mb['fetched']} MB shipped"
                   f" / {mb['full']} MB full")
-    if "predict_hit_rate" in summary:
+    if "predict_mb_hit" in summary:
         print(
             f"predictive fetch: {summary['predict_mb_hit']} MB served from"
             f" cache+speculation vs {summary['predict_mb_miss']} MB"
@@ -139,6 +155,22 @@ def main():
             f" {summary['predict_mb_predicted']} MB speculated,"
             f" {summary['predict_mb_evicted']} MB evicted)"
         )
+    if "faults" in summary:
+        f = summary["faults"]
+        inj = sum(v for k, v in f.items() if k.startswith("injected"))
+        print(
+            f"faults: {inj:.0f} rows injected, {f.get('detected', 0):.0f}"
+            f" detected, {f.get('fault_fallbacks', 0):.0f} full-gather"
+            f" fallbacks (outputs stay bitwise-exact); per-peer detected:"
+            f" {summary.get('detected_by_peer')}"
+        )
+    for tr in summary.get("policy_transitions", []):
+        print(
+            f"  step {tr['step']:>4}: {tr['kind']} -> level {tr['level']}"
+            f" (fetch={tr['fetch']})"
+        )
+    if engine.gen.level or summary.get("policy_transitions"):
+        print(f"ladder level: {engine.gen.level} ({engine.gen.fetch_label})")
     for rid in sorted(engine.outputs)[:4]:
         toks = engine.outputs[rid]
         print(f"req {rid}: {toks}")

@@ -72,6 +72,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.configs.base import BlockKind
+from repro.core import faults
 from repro.core import prefetch
 from repro.kernels import split_gemm as split_gemm_lib
 from repro.core.placement import Placement, make_placement
@@ -316,6 +317,64 @@ def resolve_cache_rows(
     return min(xp.policy("moe_experts", group).cache_budget, remote)
 
 
+def fault_stats_active(model: Model, xp: ExecutionPlan) -> bool:
+    """Static twin of the validated fetch path's telemetry output: True
+    iff this plan's decode step emits ``out["fault_stats"]`` — payload
+    validation is on (``xp.validated``: a fault spec to inject, or the
+    production ``validate_fetch`` switch) AND at least one MoE layer
+    runs the demand/predictive route-before-gather path (the validated
+    surface). The vector layout is :data:`faults.FAULT_STAT_BASE` named
+    counters followed by per-source-subgroup-position detected counts
+    (length ``subgroup_size``), psum'd over all ranks."""
+    if not xp.validated or model.cfg.moe is None:
+        return False
+    return any(
+        sig.is_moe and demand_fetch_active(model.cfg, model.geom, xp, g.name)
+        for g in model.plan
+        for sig in g.sigs
+    )
+
+
+def _fault_injector(ctx: Ctx, axis: str) -> Optional[faults.FaultInjector]:
+    if ctx.xp.fault_spec is None:
+        return None
+    return faults.FaultInjector(
+        ctx.xp.fault_spec, axis, ctx.geom.moe_placement, ctx.xp.mesh_sizes
+    )
+
+
+def _fault_step(ctx: Ctx):
+    """Traced decode-step index for fault-key derivation (0 outside
+    decode): faults vary per step but are reproducible per step."""
+    if ctx.pos is None:
+        return jnp.int32(0)
+    return jnp.max(ctx.pos).astype(jnp.int32)
+
+
+def _injected_counts(inj: faults.FaultInjector, key, budget: int, valid):
+    """Requester-side recomputation of one payload round's injected-row
+    counts ``[drop, zero, corrupt]`` — same key, same masks as the
+    tamper site; only rows the plan marked valid count (tampering
+    padding rows consumes nothing)."""
+    drop, zero, corrupt = inj.payload_masks(key, budget)
+
+    def f(m):
+        return jnp.sum((m & valid).astype(jnp.float32))
+
+    return jnp.stack([f(drop), f(zero), f(corrupt)])
+
+
+def _per_src_detected(bad, budget: int, g: int, p):
+    """Attribute each detected payload row to the subgroup position
+    that served it (rows are peer-major: chunk t from position
+    ``(p + t) % g``)."""
+    rows = bad.shape[0]
+    if rows == 0:
+        return jnp.zeros((g,), jnp.float32)
+    src = (p + 1 + jnp.arange(rows, dtype=jnp.int32) // budget) % g
+    return jnp.zeros((g,), jnp.float32).at[src].add(bad.astype(jnp.float32))
+
+
 def gather_set(
     sig: LayerSig,
     geom: Geometry,
@@ -422,8 +481,12 @@ def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
                         )
                         fetched = min(
                             full_b,
-                            prefetch.demand_fetch_bytes(pl, spec_b, pe)
-                            + prefetch.demand_fetch_bytes(pl, corr_b, pe),
+                            prefetch.demand_fetch_bytes(
+                                pl, spec_b, pe, validate=xp.validated
+                            )
+                            + prefetch.demand_fetch_bytes(
+                                pl, corr_b, pe, validate=xp.validated
+                            ),
                         )
                         add("moe_experts", group.n_cycles, full_b, fetched)
                     else:
@@ -451,7 +514,9 @@ def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
                 budget = resolve_demand_budget(cfg, geom, xp, group.name)
                 add("moe_experts", group.n_cycles,
                     prefetch.gather_bytes(pl, pe),
-                    prefetch.demand_fetch_bytes(pl, budget, pe))
+                    prefetch.demand_fetch_bytes(
+                        pl, budget, pe, validate=xp.validated
+                    ))
     return {
         "full": sum(v["full"] for v in fams.values()),
         "fetched": sum(v["fetched"] for v in fams.values()),
@@ -580,9 +645,14 @@ def _speculative_expert_gather(tree, ctx: Ctx, pred) -> prefetch.DemandBank:
     plan = prefetch.plan_demand_fetch(
         wanted, axis, pl, budget=sbudget, agree_axes=()
     )
+    inj = _fault_injector(ctx, axis)
     return prefetch.gather_demand_payload(
         tree, plan, axis, pl, budget=sbudget, mode=pol.transport,
-        num_slices=pol.num_slices,
+        num_slices=pol.num_slices, injector=inj,
+        fault_key=(
+            inj.site_key("spec", _fault_step(ctx)) if inj is not None
+            else None
+        ),
     )
 
 
@@ -1211,6 +1281,18 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
     # carries the ZeRO-style train gathers
     impl = "jnp" if xp.phase == "train" else "pallas"
 
+    # payload validation (fault tolerance): when the plan validates,
+    # the source-rank checksum table rides the (tiny) metadata round and
+    # every arrived/cached row is re-checksummed — mismatches are masked
+    # invalid so they flow into the correction round / axis-agreed
+    # full-gather fallback, keeping outputs bitwise-exact under faults.
+    all_axes = tuple(xp.mesh_sizes)
+    validate = xp.validated
+    inj = _fault_injector(ctx, axis)
+    table = prefetch.checksum_table(experts, axis, pl) if validate else None
+    step_idx = _fault_step(ctx) if validate else None
+    n_ranks = math.prod(xp.mesh_sizes.values())
+
     # activated-expert bitmap from the routing decision. Kept tokens
     # only: dropped tokens carry zero combine weight and dispatch zeroed
     # rows, so their experts need no fetch.
@@ -1223,8 +1305,30 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
         cache_ids, cache_valid = pred.cache_ids[0], pred.cache_valid[0]
         cache_w = jax.tree.map(lambda w: w[0], pred.cache)
         n_cache = cache_ids.shape[0]
+        cache_tamper = jnp.zeros((n_cache,), bool)
+        if inj is not None and n_cache:
+            # residency-cache corruption: rows rot in place between steps
+            cache_tamper = inj.cache_mask(
+                inj.site_key("cache", step_idx), n_cache
+            )
+            cache_w = inj.tamper_rows(
+                cache_w, jnp.zeros((n_cache,), bool), cache_tamper
+            )
+        if validate:
+            # verify cached + speculative rows BEFORE the exclusion set
+            # is built: faulty rows fall out of "have", so the
+            # correction round re-fetches them — the in-band repair.
+            cache_valid_v, bad_cache = prefetch.verify_rows(
+                cache_w, cache_ids, cache_valid, table
+            )
+            spec_valid_v, bad_spec = prefetch.verify_rows(
+                spec_bank.fetched, spec_bank.fetched_ids, spec_bank.valid,
+                table,
+            )
+        else:
+            cache_valid_v, spec_valid_v = cache_valid, spec_bank.valid
         have_ids = jnp.concatenate([cache_ids, spec_bank.fetched_ids])
-        have_valid = jnp.concatenate([cache_valid, spec_bank.valid])
+        have_valid = jnp.concatenate([cache_valid_v, spec_valid_v])
         plan = prefetch.plan_demand_fetch(
             wanted, axis, pl, budget=budget,
             agree_axes=tuple(xp.mesh_sizes),
@@ -1291,19 +1395,63 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
         return moe_lib.combine_tokens(ye, d2, t)
 
     if not predictive:
-        # plain demand: both branches of the cond carry their own payload
-        # collectives — only the taken branch's permutes execute.
-        def demand_branch(experts, d):
-            bank = prefetch.gather_demand_payload(
-                experts, plan, axis, pl, budget=budget, mode=pol.transport,
-                num_slices=pol.num_slices,
-            )
-            return _remap_and_run(
-                d, bank.fetched, plan.fetched_ids, plan.valid
-            )
+        if not validate:
+            # plain demand: both branches of the cond carry their own
+            # payload collectives — only the taken branch's permutes
+            # execute.
+            def demand_branch(experts, d):
+                bank = prefetch.gather_demand_payload(
+                    experts, plan, axis, pl, budget=budget,
+                    mode=pol.transport, num_slices=pol.num_slices,
+                )
+                return _remap_and_run(
+                    d, bank.fetched, plan.fetched_ids, plan.valid
+                )
 
-        y = lax.cond(plan.overflow, full_path, demand_branch, experts, d)
-        return y, None
+            y = lax.cond(
+                plan.overflow, full_path, demand_branch, experts, d
+            )
+            return y, None, None
+        # validated demand: the payload round + compact kernel run
+        # UNCONDITIONALLY and the cond only swaps in the full-gather
+        # result — the hoisted pattern the predictive path below uses
+        # (see its backend-miscompile note: a fetched bank must never
+        # feed the kernel from inside a cond branch). The repair here
+        # IS the fallback: any checksum-failed row raises the
+        # axis-agreed flag and every rank takes the exact full gather.
+        fault_key = (
+            inj.site_key("corr", step_idx) if inj is not None else None
+        )
+        bank = prefetch.gather_demand_payload(
+            experts, plan, axis, pl, budget=budget, mode=pol.transport,
+            num_slices=pol.num_slices, injector=inj, fault_key=fault_key,
+        )
+        bank_valid_v, bad_bank = prefetch.verify_rows(
+            bank.fetched, bank.fetched_ids, bank.valid, table
+        )
+        n_bad = lax.psum(jnp.sum(bad_bank.astype(jnp.float32)), all_axes)
+        fault_fb = n_bad > 0
+        fallback = plan.overflow | fault_fb
+        y_compact = _remap_and_run(
+            d, bank.fetched, bank.fetched_ids, bank_valid_v
+        )
+        y = lax.cond(
+            fallback, full_path, lambda experts, d: y_compact, experts, d
+        )
+        inj3 = (
+            _injected_counts(inj, fault_key, budget, plan.valid)
+            if inj is not None else jnp.zeros((3,), jnp.float32)
+        )
+        fstats = jnp.concatenate([
+            inj3,
+            jnp.zeros((1,), jnp.float32),  # injected_cache (no cache)
+            jnp.sum(bad_bank.astype(jnp.float32))[None],
+            # globally agreed flag: contribute 1/n_ranks so the final
+            # psum over every mesh axis reports it once
+            (fault_fb.astype(jnp.float32) / n_ranks)[None],
+            _per_src_detected(bad_bank, min(budget, local), g, p),
+        ])
+        return y, None, fstats
 
     # Predictive: the correction round + compact kernel run
     # UNCONDITIONALLY (the modeled cost anyway — and the cache wants the
@@ -1313,17 +1461,39 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
     # a backend miscompile observed when a branch closure feeds the
     # speculative bank into the kernel (the cond's hoisted-operand
     # lowering returned wrong values on some ranks).
+    corr_key = inj.site_key("corr", step_idx) if inj is not None else None
     bank = prefetch.gather_demand_payload(
         experts, plan, axis, pl, budget=budget, mode=pol.transport,
-        num_slices=pol.num_slices,
+        num_slices=pol.num_slices, injector=inj, fault_key=corr_key,
     )
+    if validate:
+        # cached/speculative faults were already repaired above (they
+        # fell out of the exclusion set, so the correction round
+        # re-fetched them); a fault in the correction bank itself has no
+        # further round to fall to, so it raises the same axis-agreed
+        # fallback flag the overflow path uses.
+        bank_valid_v, bad_corr = prefetch.verify_rows(
+            bank.fetched, bank.fetched_ids, bank.valid, table
+        )
+        n_bad_corr = lax.psum(
+            jnp.sum(bad_corr.astype(jnp.float32)), all_axes
+        )
+        fault_fb = n_bad_corr > 0
+        fallback = plan.overflow | fault_fb
+    else:
+        bank_valid_v = bank.valid
+        fallback = plan.overflow
     cat = lambda c, s, b: jnp.concatenate([c, s, b], axis=0)
     fe_all = jax.tree.map(cat, cache_w, spec_bank.fetched, bank.fetched)
     ids_all = cat(cache_ids, spec_bank.fetched_ids, bank.fetched_ids)
-    valid_all = cat(cache_valid, spec_bank.valid, bank.valid)
+    # verified validity throughout: checksum-failed rows never map into
+    # the compact bank (a re-fetched duplicate id wins the remap) and
+    # score -inf in the cache insert below (corrupt rows are evicted,
+    # not re-cached)
+    valid_all = cat(cache_valid_v, spec_valid_v, bank_valid_v)
     y_compact = _remap_and_run(d, fe_all, ids_all, valid_all)
     y = lax.cond(
-        plan.overflow,
+        fallback,
         full_path,
         lambda experts, d: y_compact,
         experts, d,
@@ -1346,7 +1516,7 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
     # and the whole wanted set counts as missed (the cache insert still
     # runs, so evictions report either way)
     stats = jnp.where(
-        plan.overflow,
+        fallback,
         jnp.stack([n_pred, jnp.float32(0.0), n_want, evicted]),
         jnp.stack(
             [n_pred, n_hit, jnp.sum(bank.valid).astype(jnp.float32),
@@ -1361,7 +1531,41 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
         cache=jax.tree.map(lambda w: w[None], nc_w),
         stats=stats[None],
     )
-    return y, new_pred
+    if not validate:
+        return y, new_pred, None
+    sbudget = resolve_spec_budget(cfg, geom, xp, ctx.group)
+    if inj is not None:
+        inj3 = _injected_counts(
+            inj, inj.site_key("spec", step_idx), sbudget, spec_bank.valid
+        ) + _injected_counts(inj, corr_key, budget, plan.valid)
+        inj_cache = jnp.sum((cache_tamper & cache_valid).astype(jnp.float32))
+    else:
+        inj3 = jnp.zeros((3,), jnp.float32)
+        inj_cache = jnp.float32(0.0)
+    detected = (
+        jnp.sum(bad_cache.astype(jnp.float32))
+        + jnp.sum(bad_spec.astype(jnp.float32))
+        + jnp.sum(bad_corr.astype(jnp.float32))
+    )
+    # per-subgroup-position attribution: payload rows by the peer-major
+    # bank layout, cache rows by the position owning the expert id
+    per_src = (
+        _per_src_detected(bad_spec, min(sbudget, local), g, p)
+        + _per_src_detected(bad_corr, min(budget, local), g, p)
+        + jnp.zeros((g,), jnp.float32).at[cache_ids // local].add(
+            bad_cache.astype(jnp.float32)
+        )
+    )
+    fstats = jnp.concatenate([
+        inj3,
+        inj_cache[None],
+        detected[None],
+        # globally agreed flag: contribute 1/n_ranks so the final psum
+        # over every mesh axis reports it once
+        (fault_fb.astype(jnp.float32) / n_ranks)[None],
+        per_src,
+    ])
+    return y, new_pred, fstats
 
 
 def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int,
@@ -1402,6 +1606,7 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int,
     aux = moe_lib.load_balance_loss(d, e_pad)
     y = None
     new_pred = None
+    fstats = None
 
     if xp.mode == "replicated" or pl.group_size == 1:
         xe = moe_lib.dispatch_tokens(x2d, d, e_pad, cap)
@@ -1424,14 +1629,14 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int,
                 "predictive-active layers must prefetch the speculative "
                 "demand bank"
             )
-            y, new_pred = _moe_demand_apply(
+            y, new_pred, fstats = _moe_demand_apply(
                 x2d, mp["experts"], d, cap, ctx, spec_bank=spec, pred=pred
             )
         else:
             assert "moe/experts" not in gathered, (
                 "demand-active layers must not prefetch the expert bank"
             )
-            y, _ = _moe_demand_apply(x2d, mp["experts"], d, cap, ctx)
+            y, _, fstats = _moe_demand_apply(x2d, mp["experts"], d, cap, ctx)
     elif moe_split_active(geom, xp, ctx.group):
         # §4.2 split fast path: tokens dispatch in rotated canonical order
         # (resident experts first), the fused kernel consumes the
@@ -1482,7 +1687,7 @@ def _moe_apply(x2d, mp, sig: LayerSig, ctx: Ctx, gathered: dict, rows: int,
         y = moe_lib.combine_tokens(ye, d, t)
     if "shared" in mp:
         y = y + _ffn_apply(x2d, mp["shared"], ctx, gathered.get("moe/shared"))
-    return y, aux, new_pred
+    return y, aux, new_pred, fstats
 
 
 # ==========================================================================
@@ -1543,6 +1748,7 @@ def apply_layer(x, lp, sig: LayerSig, ctx: Ctx, lstate, gathered: dict,
     h = rms_norm(x, lp["norm1"], eps)
     aux = jnp.float32(0.0)
     new_pred = None
+    fstats = None
     if sig.kind in (BlockKind.GLOBAL_ATTN, BlockKind.LOCAL_ATTN):
         aw = gathered.get("attn", lp["attn"])
         if "attn" in gathered or not ctx.geom.attn_axes:
@@ -1563,23 +1769,31 @@ def apply_layer(x, lp, sig: LayerSig, ctx: Ctx, lstate, gathered: dict,
         b, s, dm = h2.shape
         h2f = h2.reshape(b * s, dm)
         if sig.is_moe:
-            y, aux, new_pred = _moe_apply(
+            y, aux, new_pred, fstats = _moe_apply(
                 h2f, lp["moe"], sig, ctx, gathered, rows=b, pred=pred
             )
         else:
             y = _ffn_apply(h2f, lp["ffn"], ctx, gathered.get("ffn"))
         x = x + y.reshape(b, s, dm)
-    return x, lstate, aux, new_pred
+    return x, lstate, aux, new_pred, fstats
 
 
 # ==========================================================================
 # The layer stack with prefetch double-buffering.
 # ==========================================================================
+def _fs_add(a, b):
+    """None-safe fault-stats accumulation (None = layer not validated)."""
+    if b is None:
+        return a
+    return b if a is None else a + b
+
+
 def _run_stack(params, x, ctx: Ctx, states):
     model = ctx.model
     aux_total = jnp.float32(0.0)
     new_states: dict = {}
     new_preds: dict = {}
+    fs_total = None
     preds_all = states.get("pred") if isinstance(states, dict) else None
     for group in model.plan:
         gp = params["layers"][group.name]
@@ -1587,20 +1801,22 @@ def _run_stack(params, x, ctx: Ctx, states):
         ps = preds_all.get(group.name) if preds_all else None
         ctx.group = group.name  # scope per-layer-group policy overrides
         if group.scan and group.n_cycles > 1:
-            x, ns, nps, aux = _run_scan_group(group, gp, x, ctx, gs, ps)
+            x, ns, nps, aux, fs = _run_scan_group(group, gp, x, ctx, gs, ps)
         else:
-            x, ns, nps, aux = _run_unrolled(group, gp, x, ctx, gs, ps)
+            x, ns, nps, aux, fs = _run_unrolled(group, gp, x, ctx, gs, ps)
         new_states[group.name] = ns
         if nps:
             new_preds[group.name] = nps
         aux_total = aux_total + aux
-    return x, new_states, new_preds, aux_total
+        fs_total = _fs_add(fs_total, fs)
+    return x, new_states, new_preds, aux_total, fs_total
 
 
 def _run_unrolled(group, gp, x, ctx: Ctx, gs, ps=None):
     aux_total = jnp.float32(0.0)
     new_states = {}
     new_preds = {}
+    fs_total = None
     for j, sig in enumerate(group.sigs):
         lp = gp[f"pos{j}"]
         pred = ps.get(f"pos{j}") if ps else None
@@ -1609,14 +1825,15 @@ def _run_unrolled(group, gp, x, ctx: Ctx, gs, ps=None):
             gather_layer(_extract(lp, paths), ctx, pred=pred) if paths else {}
         )
         lstate = gs[f"pos{j}"] if gs is not None else None
-        x, ns, aux, npred = apply_layer(
+        x, ns, aux, npred, fs = apply_layer(
             x, lp, sig, ctx, lstate, gathered, pred=pred
         )
         new_states[f"pos{j}"] = ns
         if npred is not None:
             new_preds[f"pos{j}"] = npred
         aux_total = aux_total + aux
-    return x, new_states, new_preds, aux_total
+        fs_total = _fs_add(fs_total, fs)
+    return x, new_states, new_preds, aux_total, fs_total
 
 
 def _run_scan_group(group, gp, x, ctx: Ctx, gs, ps=None):
@@ -1655,6 +1872,7 @@ def _run_scan_group(group, gp, x, ctx: Ctx, gs, ps=None):
         aux_c = jnp.float32(0.0)
         new_sts = {}
         new_pds = {}
+        fs_c = None
         for j, sig in enumerate(sigs):
             lp = lp_all[f"pos{j}"]
             if pipelined:
@@ -1692,7 +1910,7 @@ def _run_scan_group(group, gp, x, ctx: Ctx, gs, ps=None):
                     else {}
                 )
             lstate = st_all[f"pos{j}"] if st_all is not None else None
-            x, ns, aux, npred = apply_layer(
+            x, ns, aux, npred, fs = apply_layer(
                 x, lp, sig, ctx, lstate, g,
                 pred=pd_all.get(f"pos{j}") if pd_all else None,
             )
@@ -1701,7 +1919,8 @@ def _run_scan_group(group, gp, x, ctx: Ctx, gs, ps=None):
                 new_pds[f"pos{j}"] = npred
             g = g_next
             aux_c = aux_c + aux
-        return (x, g), (new_sts, new_pds, aux_c)
+            fs_c = _fs_add(fs_c, fs)
+        return (x, g), (new_sts, new_pds, aux_c, fs_c)
 
     if ctx.xp.phase == "train":
         # remat the cycle: without this, backward saves every layer's
@@ -1710,10 +1929,11 @@ def _run_scan_group(group, gp, x, ctx: Ctx, gs, ps=None):
         # O(L x full-layer) HBM.
         body = jax.checkpoint(body)
 
-    (x, _), (new_states, new_preds, auxs) = lax.scan(
+    (x, _), (new_states, new_preds, auxs, fss) = lax.scan(
         body, (x, g0), (gp, gs, ps, jnp.arange(n_cycles))
     )
-    return x, new_states, new_preds, jnp.sum(auxs)
+    fs_total = jnp.sum(fss, axis=0) if fss is not None else None
+    return x, new_states, new_preds, jnp.sum(auxs), fs_total
 
 
 # ==========================================================================
@@ -1747,7 +1967,7 @@ def _last_token_hidden(x, ctx: Ctx):
 def forward_prefill(params, batch, ctx: Ctx):
     ctx.q_offset = _positions_offset(ctx)
     x = _input_embed(params, batch, ctx)
-    x, new_states, _, _ = _run_stack(params, x, ctx, None)
+    x, new_states, _, _, _ = _run_stack(params, x, ctx, None)
     x = rms_norm(x, params["final_norm"], ctx.cfg.norm_eps)
     xl = _last_token_hidden(x, ctx)
     out_state = None
@@ -1785,7 +2005,9 @@ def forward_decode(params, batch, state, ctx: Ctx):
     ctx.pos = state["pos"]
     token = batch["token"]
     x = _embed_decode(params, token, ctx)
-    x, new_layer_states, new_preds, _ = _run_stack(params, x, ctx, state)
+    x, new_layer_states, new_preds, _, fstats = _run_stack(
+        params, x, ctx, state
+    )
     x = rms_norm(x, params["final_norm"], ctx.cfg.norm_eps)
     logits = (x[:, 0] @ _w(_head_local(params, ctx), x)).astype(jnp.float32)
     logits = softcap(logits, ctx.cfg.logit_softcap)
@@ -1818,6 +2040,10 @@ def forward_decode(params, batch, state, ctx: Ctx):
             jnp.sum(p.stats.reshape(-1, 4), axis=0) for p in pstates
         )
         out["pred_stats"] = lax.psum(stats, tuple(ctx.xp.mesh_sizes))
+    if fstats is not None:
+        # per-step fault counters (see faults.FAULT_STAT_NAMES + per-src
+        # tail), summed over layers and (psum) over ranks -> replicated
+        out["fault_stats"] = lax.psum(fstats, tuple(ctx.xp.mesh_sizes))
     return out
 
 
@@ -1866,7 +2092,7 @@ def forward_train(params, batch, ctx: Ctx):
     """
     ctx.q_offset = _positions_offset(ctx)
     x = _input_embed(params, batch, ctx)
-    x, _, _, aux = _run_stack(params, x, ctx, None)
+    x, _, _, aux, _ = _run_stack(params, x, ctx, None)
     x = rms_norm(x, params["final_norm"], ctx.cfg.norm_eps)
     b, s, dm = x.shape
     if ctx.cfg.tie_embeddings:
@@ -2169,6 +2395,8 @@ def make_step_fn(model: Model, xp: ExecutionPlan, mesh, *, capture_len: int = 0)
     }
     if pred_specs:
         out_specs["pred_stats"] = P()  # psum'd inside -> replicated
+    if fault_stats_active(model, xp):
+        out_specs["fault_stats"] = P()  # psum'd inside -> replicated
     sharded = shard_map(
         inner,
         mesh=mesh,

@@ -1,0 +1,224 @@
+"""Deterministic fault injection for the remote-weight fetch stack.
+
+The DWDP fetch paths (demand payload round, predictive speculative
+round, cross-step residency cache) assume every peer is healthy and
+every fetched expert row arrives intact. This module provides the
+*adversary* for that assumption — a seeded, mesh-axis-aware
+:class:`FaultInjector` that tampers fetched payload rows in ways a
+misbehaving peer or flaky interconnect would:
+
+- ``drop``: the row never arrives (zero-filled buffer) — also the model
+  for a peer too slow to meet the transfer window;
+- ``zero``: the row arrives zeroed (a lost DMA);
+- ``corrupt``: the row arrives with wrong content (bit corruption in
+  flight — modeled as ``w -> 1 - w`` so every element changes and the
+  checksum delta is large by construction);
+- ``cache_corrupt``: a residency-cache row rots in place (HBM
+  corruption between steps);
+- ``bad_peers``: subgroup positions whose payload rows ALWAYS drop — a
+  persistent straggler/failed peer, the storm that drives the engine's
+  :class:`~repro.runtime.engine.HealthMonitor` down the policy ladder.
+
+Everything is pure JAX: the injector traces into the jitted forward,
+draws its per-row Bernoulli masks from a key chain
+``seed -> site salt -> flat mesh rank -> decode step`` (so runs are
+reproducible, per-rank decorrelated, and per-step varying), and both
+the tamper site (``prefetch.gather_demand_payload``) and the counting
+site (``execution._moe_demand_apply``) recompute identical masks from
+the same key — injected-row counts never ride the payload.
+
+The detection/repair side lives in ``prefetch.verify_rows`` /
+``execution._moe_demand_apply``; see docs/robustness.md for the failure
+model and what is out of scope (SPMD rank death, adversarial
+corruption below the checksum tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.placement import Placement
+
+#: Layout of the per-step fault-stats vector emitted by the validated
+#: fetch path (length ``FAULT_STAT_BASE + subgroup_size``):
+#: ``[injected_drop, injected_zero, injected_corrupt, injected_cache,
+#: detected, fault_fallbacks, detected_by_src_position...]``. The
+#: per-source tail attributes every detected row to the subgroup
+#: position that served it (cache rows to the position owning the
+#: expert id) — the per-peer signal the HealthMonitor consumes.
+FAULT_STAT_BASE = 6
+FAULT_STAT_NAMES = (
+    "injected_drop", "injected_zero", "injected_corrupt",
+    "injected_cache", "detected", "fault_fallbacks",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """Static description of the fault environment to inject.
+
+    Rates are per-fetched-row Bernoulli probabilities in [0, 1];
+    ``bad_peers`` lists subgroup positions whose served rows always
+    drop. All zero / empty = a healthy run (but the validation
+    machinery still traces, which is how the checksum-overhead
+    benchmark isolates the detection cost)."""
+
+    seed: int = 0
+    drop_rate: float = 0.0
+    zero_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    cache_corrupt_rate: float = 0.0
+    bad_peers: tuple = ()
+
+    def __post_init__(self):
+        for name in ("drop_rate", "zero_rate", "corrupt_rate",
+                     "cache_corrupt_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FaultSpec.{name} must be in [0, 1], got {v}")
+        object.__setattr__(self, "bad_peers",
+                           tuple(int(p) for p in self.bad_peers))
+        if any(p < 0 for p in self.bad_peers):
+            raise ValueError(
+                f"FaultSpec.bad_peers must be non-negative subgroup "
+                f"positions, got {self.bad_peers}"
+            )
+
+    @property
+    def any_faults(self) -> bool:
+        return bool(
+            self.drop_rate or self.zero_rate or self.corrupt_rate
+            or self.cache_corrupt_rate or self.bad_peers
+        )
+
+    @classmethod
+    def parse(cls, text: str) -> "FaultSpec":
+        """Parse the ``--fault-spec`` flag syntax: comma-separated
+        ``key=value`` pairs, e.g. ``"seed=3,drop=0.1,corrupt=0.05,
+        peers=2|5"``. Keys: seed, drop, zero, corrupt, cache, peers
+        (``|``-separated subgroup positions)."""
+        kw: dict = {}
+        names = {
+            "seed": "seed", "drop": "drop_rate", "zero": "zero_rate",
+            "corrupt": "corrupt_rate", "cache": "cache_corrupt_rate",
+        }
+        for part in text.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise ValueError(
+                    f"fault-spec entry {part!r} is not key=value"
+                )
+            k, v = (s.strip() for s in part.split("=", 1))
+            if k == "peers":
+                kw["bad_peers"] = tuple(
+                    int(p) for p in v.split("|") if p != ""
+                )
+            elif k == "seed":
+                kw["seed"] = int(v)
+            elif k in names:
+                kw[names[k]] = float(v)
+            else:
+                raise ValueError(
+                    f"unknown fault-spec key {k!r} "
+                    f"(expected seed/drop/zero/corrupt/cache/peers)"
+                )
+        return cls(**kw)
+
+    def describe(self) -> str:
+        parts = [f"seed={self.seed}"]
+        for key, name in (("drop", "drop_rate"), ("zero", "zero_rate"),
+                          ("corrupt", "corrupt_rate"),
+                          ("cache", "cache_corrupt_rate")):
+            v = getattr(self, name)
+            if v:
+                parts.append(f"{key}={v}")
+        if self.bad_peers:
+            parts.append("peers=" + "|".join(str(p) for p in self.bad_peers))
+        return ",".join(parts)
+
+
+def _salt(tag: str) -> int:
+    # stable across processes (unlike hash()), positive for fold_in
+    return zlib.crc32(tag.encode()) & 0x7FFFFFFF
+
+
+class FaultInjector:
+    """Traced fault-mask generator + row tamperer for one fetch site.
+
+    Constructed per validated layer application from the plan's
+    :class:`FaultSpec`; all methods are pure JAX so they trace into
+    the jitted forward (including under ``lax.scan``)."""
+
+    def __init__(self, spec: FaultSpec, axis: str, placement: Placement,
+                 mesh_sizes: dict):
+        self.spec = spec
+        self.axis = axis
+        self.pl = placement
+        self.mesh_sizes = mesh_sizes
+
+    def site_key(self, tag: str, step) -> jax.Array:
+        """Key chain ``seed -> site salt -> flat mesh rank -> step``.
+        Both the tamper site and the counting site call this with the
+        same (tag, step) and recover identical draws."""
+        k = jax.random.key(self.spec.seed)
+        k = jax.random.fold_in(k, _salt(tag))
+        r = jnp.int32(0)
+        for a, s in self.mesh_sizes.items():
+            r = r * s + lax.axis_index(a)
+        k = jax.random.fold_in(k, r)
+        return jax.random.fold_in(k, jnp.asarray(step, jnp.int32))
+
+    def payload_masks(self, key, budget: int):
+        """Per-row (drop, zero, corrupt) masks for one demand payload
+        bank of ``(subgroup_size - 1) * budget`` peer-major rows.
+        Mutually exclusive by construction; rows served by a
+        ``bad_peers`` position always drop."""
+        g, local = self.pl.subgroup_size, self.pl.local_count
+        budget = min(budget, local)
+        rows = (g - 1) * budget
+        if rows == 0:
+            empty = jnp.zeros((0,), bool)
+            return empty, empty, empty
+        u = jax.random.uniform(key, (rows, 3))
+        drop = u[:, 0] < self.spec.drop_rate
+        if self.spec.bad_peers:
+            p = lax.axis_index(self.axis) % g
+            src = (p + 1 + jnp.arange(rows, dtype=jnp.int32) // budget) % g
+            bad = jnp.zeros((rows,), bool)
+            for bp in self.spec.bad_peers:
+                bad = bad | (src == bp % g)
+            drop = drop | bad
+        zero = (u[:, 1] < self.spec.zero_rate) & ~drop
+        corrupt = (u[:, 2] < self.spec.corrupt_rate) & ~drop & ~zero
+        return drop, zero, corrupt
+
+    def cache_mask(self, key, rows: int):
+        """Per-slot corruption mask for the residency cache."""
+        if rows == 0:
+            return jnp.zeros((0,), bool)
+        u = jax.random.uniform(key, (rows,))
+        return u < self.spec.cache_corrupt_rate
+
+    @staticmethod
+    def tamper_rows(tree, drop, corrupt):
+        """Apply row faults to a pytree of ``(rows, ...)`` leaves:
+        dropped/zeroed rows are zero-filled, corrupted rows map
+        ``w -> 1 - w`` (every element changes; the squared-weight
+        checksum delta is ~sum(cw) per leaf, far above tolerance)."""
+
+        def f(w):
+            shape = (-1,) + (1,) * (w.ndim - 1)
+            dm = drop.reshape(shape)
+            cm = corrupt.reshape(shape)
+            w = jnp.where(dm, jnp.zeros_like(w), w)
+            return jnp.where(
+                cm, (1.0 - w.astype(jnp.float32)).astype(w.dtype), w
+            )
+
+        return jax.tree.map(f, tree)

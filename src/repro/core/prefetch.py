@@ -592,6 +592,8 @@ def gather_demand_payload(
     budget: int,
     mode: str = "allgather",
     num_slices: int = 4,
+    injector: Any = None,
+    fault_key: Any = None,
 ) -> DemandBank:
     """Round 2 — the payload. Each rank serves every peer's request out
     of its resident shard (``jnp.take`` of exactly the requested rows,
@@ -599,7 +601,15 @@ def gather_demand_payload(
     peer-major. Only ``(G'-1) * budget`` expert rows cross the wire —
     for decode-scale routing a small fraction of the ``(G'-1) * local``
     the full remote gather ships. Differentiable (take transposes to
-    scatter-add, ppermute to the inverse permute)."""
+    scatter-add, ppermute to the inverse permute).
+
+    ``injector`` / ``fault_key`` (optional): a
+    :class:`~repro.core.faults.FaultInjector` plus a derived site key —
+    the arrived payload rows are tampered per the injector's
+    deterministic drop/zero/corrupt masks, modeling wire faults. The
+    caller recomputes the same masks from the same key to count what
+    was injected; detection/repair is the caller's checksum
+    verification (:func:`verify_rows`)."""
     if mode not in ("allgather", "ring", "ring_sliced"):
         raise ValueError(f"unknown prefetch mode {mode!r}")
     g = placement.subgroup_size
@@ -628,6 +638,9 @@ def gather_demand_payload(
         ),
         tree,
     )
+    if injector is not None:
+        drop, zero, corrupt = injector.payload_masks(fault_key, budget)
+        fetched = injector.tamper_rows(fetched, drop | zero, corrupt)
     return DemandBank(
         local=tree,
         fetched=fetched,
@@ -698,17 +711,96 @@ def gather_demand_bank(
     return bank, plan.overflow
 
 
+# --------------------------------------------------------------------------
+# Payload validation: per-row checksums riding the tiny metadata round.
+# --------------------------------------------------------------------------
+#: Relative / absolute tolerance of the checksum compare. The checksum
+#: is a positionally-weighted sum of SQUARED elements computed in f32;
+#: source and receiver may reduce in different orders (different leading
+#: dims), so exact equality is wrong — but any modeled fault (zeroed /
+#: dropped / ``w -> 1 - w`` corrupted row) moves the checksum by orders
+#: of magnitude more than f32 accumulation noise, so a loose tolerance
+#: is both safe against false positives and sound against the injected
+#: fault classes. Sub-tolerance corruption is out of scope (documented
+#: in docs/robustness.md), like hash collisions for real checksums.
+CHECKSUM_RTOL = 1e-2
+CHECKSUM_ATOL = 1e-6
+
+
+def _cs_weights(n: int) -> jax.Array:
+    # small coprime-period positional weights: permuting unequal
+    # elements within a row moves the checksum too
+    return (jnp.arange(n, dtype=jnp.float32) % 61.0) + 1.0
+
+
+def row_checksums(tree: PyTree) -> jax.Array:
+    """``(rows,)`` f32 checksum per leading-dim row of a weight tree:
+    sum over leaves of the positionally-weighted squared elements.
+    Squaring makes the checksum strictly positive for any nonzero row,
+    so zeroed/dropped rows can never collide with the source value.
+    Deterministic given the tree's key set (``jax.tree.leaves`` order);
+    both transfer endpoints hold the same keys."""
+    total = None
+    for w in jax.tree.leaves(tree):
+        flat = w.reshape(w.shape[0], -1).astype(jnp.float32)
+        s = jnp.sum(flat * flat * _cs_weights(flat.shape[1]), axis=1)
+        total = s if total is None else total + s
+    assert total is not None, "row_checksums of an empty tree"
+    return total
+
+
+def checksum_table(tree: PyTree, axis: str, placement: Placement) -> jax.Array:
+    """The checksum wire format: every rank computes ``(local,)`` f32
+    checksums of its RESIDENT rows and all-gathers them inside the
+    subgroup into the canonical ``(num_padded,)`` table (position ``o``
+    owns ids ``[o * local, (o+1) * local)``). 4 bytes/expert — the same
+    order of magnitude as the demand bitmap round, riding alongside it;
+    ``demand_fetch_bytes`` absorbs it in the per-expert metadata term."""
+    local = row_checksums(tree)
+    if placement.subgroup_size == 1:
+        return local
+    out = jax.lax.all_gather(
+        local, axis, axis_index_groups=placement.axis_index_groups()
+    )  # (G', local)
+    return out.reshape(-1)[: placement.num_padded]
+
+
+def verify_rows(
+    tree: PyTree,
+    ids: jax.Array,
+    valid: jax.Array,
+    table: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Re-checksum arrived/cached rows against the source table.
+    Returns ``(verified_valid, bad)``: ``verified_valid`` is ``valid``
+    with checksum-mismatched rows masked out (they flow into the
+    correction round / full-gather fallback — the repair path), ``bad``
+    flags exactly the valid-but-mismatched rows (the detection
+    counters). Padding rows (``valid`` False) are never flagged."""
+    if valid.shape[0] == 0:
+        return valid, valid
+    got = row_checksums(tree)
+    want = table[ids]
+    ok = jnp.abs(got - want) <= CHECKSUM_RTOL * jnp.abs(want) + CHECKSUM_ATOL
+    bad = valid & ~ok
+    return valid & ok, bad
+
+
 def demand_fetch_bytes(
-    placement: Placement, budget: int, bytes_per_expert: int
+    placement: Placement, budget: int, bytes_per_expert: int,
+    *, validate: bool = False,
 ) -> int:
     """Wire bytes per rank per layer for the demand gather: the payload
     round's ``(G'-1) * budget`` padded expert rows plus the index round's
-    bitmap bytes (1 byte/expert from each subgroup peer). Capped at the
-    full remote gather — at full budget the two coincide and the index
-    round's bytes are absorbed by the cap (matching the roofline twin,
+    bitmap bytes (1 byte/expert from each subgroup peer; +4 bytes/expert
+    for the f32 checksum table when ``validate`` — see
+    :func:`checksum_table`). Capped at the full remote gather — at full
+    budget the two coincide and the index round's bytes are absorbed by
+    the cap (matching the roofline twin,
     ``roofline.demand_prefetch_bytes``), so the demand counters never
     report more than the all-fetch counterfactual."""
     g = placement.subgroup_size
     budget = min(budget, placement.local_count)
+    meta = placement.num_padded * (5 if validate else 1)
     full = (g - 1) * placement.local_count * bytes_per_expert
-    return min(full, (g - 1) * (budget * bytes_per_expert + placement.num_padded))
+    return min(full, (g - 1) * (budget * bytes_per_expert + meta))

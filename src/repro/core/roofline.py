@@ -113,6 +113,7 @@ def predictive_fetch_terms(
     cache_rows: int = 0,
     cache_hit: Optional[float] = None,
     predict_hit: Optional[float] = None,
+    validate: bool = False,
 ) -> tuple[float, float]:
     """Per-rank wire terms of the predictive expert fetch as
     ``(total_bytes, serial_bytes)``:
@@ -132,7 +133,9 @@ def predictive_fetch_terms(
     hit = the per-expert re-activation probability ``1-(1-1/E)^n``
     (uniform-routing steady state — real routing has more temporal
     locality, so measured rates replayed through the simulator can only
-    improve on this).
+    improve on this). ``validate`` prices the fault-tolerant fetch's
+    per-row checksum table riding each index round (f32 per expert per
+    peer — ``prefetch.demand_fetch_bytes``'s wire format).
     """
     sub = max(1, group // redundancy)
     if sub <= 1:
@@ -154,7 +157,7 @@ def predictive_fetch_terms(
         predict_hit = 1.0 - (1.0 - 1.0 / max(1, num_experts)) ** (
             tokens * top_k
         )
-    index_round = (sub - 1) * num_experts
+    index_round = (sub - 1) * num_experts * (5 if validate else 1)
     spec_b = ((sub - 1) * spec * bytes_per_expert + index_round) * (
         1.0 - cache_hit
     )
@@ -174,6 +177,7 @@ def demand_prefetch_bytes(
     *,
     redundancy: int = 1,
     budget: int = 0,
+    validate: bool = False,
 ) -> float:
     """Per-rank wire bytes of the on-demand expert fetch: the
     budget-padded payload round — ``(G'-1) * budget`` expert rows, with
@@ -183,7 +187,9 @@ def demand_prefetch_bytes(
     what the lowered program ships (padding included), so it matches
     ``analytic_hbm_bytes`` and the engine's serving counters. Never
     exceeds the full remote gather (at full budget the two coincide up
-    to the index round, which is then dropped by the cap)."""
+    to the index round, which is then dropped by the cap). ``validate``
+    adds the fault-tolerant fetch's f32 per-row checksum table to the
+    index round (4 more bytes per expert per peer)."""
     sub = max(1, group // redundancy)
     if sub <= 1:
         return 0.0
@@ -192,7 +198,8 @@ def demand_prefetch_bytes(
     if budget <= 0:
         budget = demand_budget_rows(tokens * top_k, num_experts, local)
     budget = min(budget, local)
-    index_round = (sub - 1) * num_experts  # 1-byte bitmap per peer
+    # 1-byte bitmap per peer (+ f32 checksums when validating)
+    index_round = (sub - 1) * num_experts * (5 if validate else 1)
     return min(full, (sub - 1) * budget * bytes_per_expert + index_round)
 
 
@@ -257,6 +264,7 @@ def layer_times(
     policies=None,
     cache_hit: Optional[float] = None,
     predict_hit: Optional[float] = None,
+    validate: bool = False,
 ) -> LayerTimes:
     """Per-layer roofline terms for the context phase (batch of `tokens`).
 
@@ -352,7 +360,7 @@ def layer_times(
             # WHOLE round waits on routing (on the critical path)
             prefetch_bytes = demand_prefetch_bytes(
                 tokens, k, e, group, 3 * d * f * weight_bytes,
-                redundancy=redundancy, budget=budget,
+                redundancy=redundancy, budget=budget, validate=validate,
             )
             serial_bytes = prefetch_bytes
         elif expert_fetch == "predictive" and layout == "split" and partial:
@@ -362,7 +370,7 @@ def layer_times(
                 tokens, k, e, group, 3 * d * f * weight_bytes,
                 redundancy=redundancy, budget=budget,
                 cache_rows=cache_rows, cache_hit=cache_hit,
-                predict_hit=predict_hit,
+                predict_hit=predict_hit, validate=validate,
             )
         # HBM landing write of the gathered bank: full layer (merged) vs
         # remote-only (split — the eliminated merge copy shows up here;
@@ -442,6 +450,7 @@ def modeled_step_time(
     act_bytes: int = 2,
     cache_hit: Optional[float] = None,
     predict_hit: Optional[float] = None,
+    validate: bool = False,
 ) -> float:
     """Modeled one-step wall time of a full DWDP forward under a policy
     table: per layer ``max(compute + landing, overlapped prefetch) +
@@ -461,9 +470,48 @@ def modeled_step_time(
             kv_len=kv_len, redundancy=redundancy,
             weight_bytes=weight_bytes, act_bytes=act_bytes,
             cache_hit=cache_hit, predict_hit=predict_hit,
+            validate=validate,
         )
         total += layer_step_time(lt)
     return total
+
+
+def degraded_step_times(
+    cfg: ArchConfig,
+    policies,
+    *,
+    tokens: int,
+    group: int,
+    hw: Hardware = GB200,
+    validate: bool = True,
+    **kw,
+) -> list[dict]:
+    """Price every level of the graceful-degradation ladder the
+    HealthMonitor can walk (``strategy.degradation_ladder``): per level,
+    the modeled step time under that level's policy table with payload
+    validation priced in (the checksum table on each index round), plus
+    the healthy (non-validated) baseline of the TOP level — so the
+    engine / bench can report both the validation overhead and the cost
+    of each demotion before any fault ever fires."""
+    from repro.core.strategy import degradation_ladder
+
+    rows = []
+    base = modeled_step_time(
+        cfg, tokens=tokens, group=group, hw=hw, policies=policies,
+        validate=False, **kw,
+    )
+    for level, (fetch, table) in enumerate(degradation_ladder(policies)):
+        t = modeled_step_time(
+            cfg, tokens=tokens, group=group, hw=hw, policies=table,
+            validate=validate, **kw,
+        )
+        rows.append({
+            "level": level,
+            "fetch": fetch,
+            "t_step_us": t * 1e6,
+            "vs_healthy": t / max(base, 1e-30),
+        })
+    return rows
 
 
 def figure3_sweep(

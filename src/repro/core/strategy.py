@@ -424,6 +424,23 @@ class ExecutionPlan:
     #     drop set becomes a function of the row alone, so DWDP ranks
     #     drop identical tokens across any batch-sharding mesh reshape
     #     (batch determinism for serving; see execution._moe_apply).
+    fault_spec: Optional[Any] = None
+    # A core.faults.FaultSpec to inject into the demand/predictive fetch
+    # rounds (None = no injection). Setting it implies validate_fetch:
+    # the checksum verification + repair path traces into the forward.
+    validate_fetch: bool = False
+    # Checksum-validate fetched expert rows even without an injector —
+    # the production hardening switch (and what the checksum-overhead
+    # benchmark measures). Faulty rows are masked invalid and repaired
+    # through the correction round / axis-agreed full-gather fallback,
+    # so outputs stay bitwise-exact; per-step fault counters ride the
+    # decode output ("fault_stats").
+
+    @property
+    def validated(self) -> bool:
+        """Does the demand/predictive fetch path run payload validation
+        (checksum ride-along, verification, repair, fault counters)?"""
+        return self.fault_spec is not None or self.validate_fetch
 
     def policy(self, family: str, group: Optional[str] = None) -> GatherPolicy:
         """The resolved gather policy for ``family`` (optionally within
@@ -848,6 +865,61 @@ def effective_policies(
                        overrides=table.overrides)
 
 
+# --------------------------------------------------------------------------
+# Health-degradation ladder (fault tolerance).
+# --------------------------------------------------------------------------
+#: Aggressiveness rank of the expert-fetch modes: lower = more wire
+#: savings, more exposure to peer faults. The HealthMonitor demotes a
+#: serving policy DOWN this ladder (predictive -> demand -> all) when a
+#: peer turns persistently bad — each step removes one dependency on
+#: per-peer cooperation (the residency cache / speculative round first,
+#: then the demand rounds entirely) — and promotes back on recovery.
+_FETCH_RANK = {"predictive": 0, "demand": 1, "all": 2}
+
+
+def degrade_policy_table(table: PolicyTable, fetch: str) -> PolicyTable:
+    """Rewrite every entry of ``table`` whose expert fetch is MORE
+    aggressive than ``fetch`` down to ``fetch`` (entries already at or
+    below it are untouched). Demotion to ``"demand"`` drops the
+    residency cache (it rides the predictive rounds); demotion to
+    ``"all"`` drops the demand budget too, keeping layout/transport."""
+    if fetch not in _FETCH_RANK:
+        raise ValueError(
+            f"unknown fetch {fetch!r}; expected one of "
+            f"{tuple(_FETCH_RANK)}"
+        )
+
+    def demote(pol: GatherPolicy) -> GatherPolicy:
+        if _FETCH_RANK[pol.fetch] >= _FETCH_RANK[fetch]:
+            return pol
+        if fetch == "all":
+            return GatherPolicy(layout=pol.layout, transport=pol.transport,
+                                num_slices=pol.num_slices)
+        return dataclasses.replace(pol, fetch=fetch, cache_budget=0)
+
+    return PolicyTable(
+        default=demote(table.default),
+        families=tuple((n, demote(p)) for n, p in table.families),
+        overrides=tuple((g, n, demote(p)) for g, n, p in table.overrides),
+    )
+
+
+def degradation_ladder(
+    table: PolicyTable,
+) -> tuple[tuple[str, PolicyTable], ...]:
+    """The engine's fault-degradation ladder for a RESOLVED policy
+    table: ``((label, table), ...)`` from level 0 (as configured) down
+    to the all-gather floor, with no-op levels collapsed — a table
+    already at ``fetch="all"`` has a one-level ladder. Labels are the
+    expert-fetch mode each level runs."""
+    out = [(table.family("moe_experts").fetch, table)]
+    for fetch in ("demand", "all"):
+        t = degrade_policy_table(table, fetch)
+        if t != out[-1][1]:
+            out.append((fetch, t))
+    return tuple(out)
+
+
 def make_execution_plan(
     model: Model,
     shape: InputShape,
@@ -860,6 +932,8 @@ def make_execution_plan(
     decode_attn: str = "gather",
     capacity_from: str = "local",
     hw=None,
+    fault_spec=None,
+    validate_fetch: bool = False,
     # -- deprecated flat knobs (build a uniform PolicyTable) --------------
     prefetch: Optional[str] = None,
     num_slices: Optional[int] = None,
@@ -918,6 +992,10 @@ def make_execution_plan(
                 f"{sorted(known_groups)}"
             )
     assert capacity_from in CAPACITY_FROM
+    if isinstance(fault_spec, str):
+        from repro.core.faults import FaultSpec
+
+        fault_spec = FaultSpec.parse(fault_spec)
     batch_axes, seq_axes = plan_activation_sharding(
         model.cfg, shape, mesh_sizes
     )
@@ -934,6 +1012,8 @@ def make_execution_plan(
         block_causal=block_causal and not seq_axes,
         decode_attn=decode_attn,
         capacity_from=capacity_from,
+        fault_spec=fault_spec,
+        validate_fetch=validate_fetch,
     )
 
 

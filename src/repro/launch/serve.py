@@ -20,6 +20,14 @@ picks it at decode shapes where the overlap pays). The pre-PolicyTable
 flags (``--weight-layout`` / ``--expert-fetch`` / ``--demand-budget`` /
 ``--cache-budget``) keep working as the uniform-table spelling and may
 not be combined with ``--policy``.
+
+Fault tolerance (docs/robustness.md): ``--fault-spec`` injects
+deterministic peer faults into the fetch rounds (outputs stay
+bitwise-exact through the checksum-repair path), ``--validate-fetch``
+turns on validation without injection, and the ``--health-*`` knobs
+tune the HealthMonitor that walks the gather policy down the
+predictive -> demand -> all-gather ladder under persistent peer
+badness (and back up on recovery).
 """
 from __future__ import annotations
 
@@ -37,6 +45,7 @@ from repro.runtime.engine import (
     ContextServer,
     DisaggregatedEngine,
     GenerationServer,
+    HealthMonitor,
     Request,
 )
 
@@ -120,6 +129,9 @@ def build_engine(
     policy=None,
     dtype=jnp.float32,
     seed: int = 0,
+    fault_spec=None,
+    validate_fetch: bool = False,
+    health: "HealthMonitor | None" = None,
 ):
     from repro.launch.mesh import _mesh
     mesh = _mesh(mesh_shape, ("data", "model"))
@@ -136,6 +148,7 @@ def build_engine(
         weight_layout=weight_layout, capacity_from=capacity_from,
         expert_fetch=expert_fetch, demand_budget=demand_budget,
         cache_budget=cache_budget, policy=policy,
+        fault_spec=fault_spec, validate_fetch=validate_fetch,
     )
     gen = GenerationServer(
         model, mesh, sizes, mode=gen_mode, max_batch=max_batch,
@@ -143,8 +156,9 @@ def build_engine(
         weight_layout=weight_layout, capacity_from=capacity_from,
         expert_fetch=expert_fetch, demand_budget=demand_budget,
         cache_budget=cache_budget, policy=policy,
+        fault_spec=fault_spec, validate_fetch=validate_fetch,
     )
-    return DisaggregatedEngine(params, ctx, gen), model
+    return DisaggregatedEngine(params, ctx, gen, health=health), model
 
 
 def main(argv=None):
@@ -196,6 +210,28 @@ def main(argv=None):
                          "cross-step residency cache per layer (0 = "
                          "cache off; --policy auto sizes it from HBM "
                          "headroom)")
+    ap.add_argument("--fault-spec", default=None,
+                    metavar="SPEC",
+                    help="inject deterministic fetch faults, e.g. "
+                         "'seed=3,drop=0.1,corrupt=0.05,peers=2|5' "
+                         "(keys: seed/drop/zero/corrupt/cache/peers). "
+                         "Implies payload validation; outputs stay "
+                         "bitwise-exact via the repair path")
+    ap.add_argument("--validate-fetch", action="store_true",
+                    help="checksum-validate fetched expert rows without "
+                         "injecting faults (the production hardening "
+                         "switch; implied by --fault-spec)")
+    ap.add_argument("--health-decay", type=float, default=0.7,
+                    help="HealthMonitor per-peer fault-event EMA decay")
+    ap.add_argument("--health-demote", type=float, default=0.5,
+                    help="per-peer EMA above which the policy ladder "
+                         "demotes (predictive -> demand -> all)")
+    ap.add_argument("--health-promote", type=float, default=0.1,
+                    help="all-peer EMA below which the ladder re-promotes")
+    ap.add_argument("--health-dwell", type=int, default=2,
+                    help="min decode steps between ladder transitions")
+    ap.add_argument("--no-health", action="store_true",
+                    help="disable the HealthMonitor even when validating")
     ap.add_argument("--full", action="store_true",
                     help="use the full config (default: reduced smoke)")
     args = ap.parse_args(argv)
@@ -206,6 +242,14 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if not args.full:
         cfg = reduced_variant(cfg)
+    health = None
+    if (args.fault_spec or args.validate_fetch) and not args.no_health:
+        health = HealthMonitor(
+            decay=args.health_decay,
+            demote_threshold=args.health_demote,
+            promote_threshold=args.health_promote,
+            min_dwell=args.health_dwell,
+        )
     engine, model = build_engine(
         cfg,
         prefill_len=args.prefill_len,
@@ -219,6 +263,9 @@ def main(argv=None):
         demand_budget=args.demand_budget or 0,
         cache_budget=args.cache_budget or 0,
         policy=policy,
+        fault_spec=args.fault_spec,
+        validate_fetch=args.validate_fetch,
+        health=health,
     )
     print("ctx policies:", engine.ctx.xp.policies.describe())
     print("gen policies:", engine.gen.xp.policies.describe())
@@ -236,6 +283,10 @@ def main(argv=None):
     steps = args.output_len * (args.requests // args.max_batch + 2)
     metrics = engine.run(steps)
     print("summary:", metrics.summary(horizon=float(steps)))
+    if engine.gen.level or metrics.policy_transitions:
+        print(
+            f"ladder level: {engine.gen.level} ({engine.gen.fetch_label})"
+        )
     for rid, toks in list(engine.outputs.items())[:4]:
         print(f"req {rid}: {toks[:10]}{'...' if len(toks) > 10 else ''}")
 

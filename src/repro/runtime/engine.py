@@ -22,7 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import execution
-from repro.core.strategy import PolicyTable, make_execution_plan
+from repro.core.strategy import (
+    PolicyTable, degradation_ladder, make_execution_plan,
+)
 from repro.configs.base import InputShape
 from repro.models.cache import init_decode_state
 from repro.models.transformer import Model
@@ -54,6 +56,67 @@ class Request:
     target_len: int           # output tokens to generate
     arrival: float = 0.0
 
+    def __post_init__(self):
+        # fail at construction, not as downstream shape garbage
+        self.tokens = np.asarray(self.tokens)
+        if self.tokens.ndim != 1 or self.tokens.size == 0:
+            raise ValueError(
+                f"Request {self.req_id}: tokens must be a non-empty 1-d "
+                f"prompt, got shape {self.tokens.shape}"
+            )
+        if int(self.target_len) < 1:
+            raise ValueError(
+                f"Request {self.req_id}: target_len must be >= 1 "
+                f"(the prefill emits the first token), got {self.target_len}"
+            )
+
+
+class HealthMonitor:
+    """Per-peer fault-pressure tracker with hysteresis.
+
+    Consumes the per-source-position detected tail of each decode
+    step's fault-stats vector; keeps an EMA of the "this peer served a
+    bad row this step" event per peer. A peer whose EMA crosses
+    ``demote_threshold`` requests a ladder demotion (predictive ->
+    demand -> all-gather: each level leans less on per-peer payload
+    rounds); once EVERY peer's EMA falls below ``promote_threshold``
+    the monitor requests re-promotion. ``min_dwell`` steps must pass
+    between transitions so one bad step cannot flap the policy."""
+
+    def __init__(self, *, decay: float = 0.7, demote_threshold: float = 0.5,
+                 promote_threshold: float = 0.1, min_dwell: int = 2):
+        if not 0.0 < decay < 1.0:
+            raise ValueError(f"decay must be in (0, 1), got {decay}")
+        if promote_threshold >= demote_threshold:
+            raise ValueError(
+                "promote_threshold must sit below demote_threshold "
+                f"(hysteresis), got {promote_threshold} >= {demote_threshold}"
+            )
+        self.decay = decay
+        self.demote_threshold = demote_threshold
+        self.promote_threshold = promote_threshold
+        self.min_dwell = min_dwell
+        self.ema = np.zeros(0)
+        self._since_move = min_dwell  # free to act immediately
+
+    def observe(self, detected_by_peer) -> Optional[str]:
+        """Feed one step's per-peer detected counts; returns "demote",
+        "promote", or None."""
+        ev = (np.asarray(detected_by_peer, np.float64) > 0).astype(np.float64)
+        if self.ema.shape != ev.shape:
+            self.ema = np.zeros_like(ev)
+        self.ema = self.decay * self.ema + (1.0 - self.decay) * ev
+        self._since_move += 1
+        if self._since_move <= self.min_dwell or self.ema.size == 0:
+            return None
+        if np.max(self.ema) > self.demote_threshold:
+            self._since_move = 0
+            return "demote"
+        if np.max(self.ema) < self.promote_threshold:
+            self._since_move = 0
+            return "promote"
+        return None
+
 
 class ContextServer:
     """Prefill worker: returns (first_token, captured decode state)."""
@@ -63,7 +126,8 @@ class ContextServer:
                  weight_layout: Optional[str] = None,
                  capacity_from: str = "local",
                  expert_fetch: str = "all", demand_budget: int = 0,
-                 cache_budget: int = 0, policy=None):
+                 cache_budget: int = 0, policy=None,
+                 fault_spec=None, validate_fetch: bool = False):
         self.model = model
         self.prefill_len = prefill_len
         shape = InputShape("ctx", prefill_len, 1, "prefill")
@@ -75,6 +139,7 @@ class ContextServer:
                 cache_budget=cache_budget,
             ),
             capacity_from=capacity_from,
+            fault_spec=fault_spec, validate_fetch=validate_fetch,
         )
         self.step = execution.make_step_fn(
             model, self.xp, mesh, capture_len=cache_len
@@ -108,11 +173,19 @@ class GenerationServer:
                  weight_layout: Optional[str] = None,
                  capacity_from: str = "local",
                  expert_fetch: str = "all", demand_budget: int = 0,
-                 cache_budget: int = 0, policy=None):
+                 cache_budget: int = 0, policy=None,
+                 fault_spec=None, validate_fetch: bool = False):
         self.model = model
         self.max_batch = max_batch
         self.cache_len = cache_len
         shape = InputShape("gen", cache_len, max_batch, "decode")
+        self._mesh = mesh
+        self._mesh_sizes = mesh_sizes
+        self._mode = mode
+        self._shape = shape
+        self._capacity_from = capacity_from
+        self.fault_spec = fault_spec
+        self.validate_fetch = validate_fetch
         self.xp = make_execution_plan(
             model, shape, mesh_sizes, mode=mode,
             policy=_resolve_policy(
@@ -121,6 +194,7 @@ class GenerationServer:
                 cache_budget=cache_budget,
             ),
             capacity_from=capacity_from,
+            fault_spec=fault_spec, validate_fetch=validate_fetch,
         )
         self.step = execution.make_step_fn(model, self.xp, mesh)
         # static gathered-weight wire bytes per decode step (see
@@ -128,6 +202,14 @@ class GenerationServer:
         self.gather_bytes = execution.gathered_wire_bytes_per_step(
             model, self.xp
         )
+        # graceful-degradation ladder over the resolved policy table:
+        # level 0 is the configured table; each further level leans one
+        # notch less on per-peer payload rounds (predictive -> demand ->
+        # all-gather). Plans/steps are built lazily per level and cached;
+        # see set_level for the predictive-state handoff.
+        self.ladder = degradation_ladder(self.xp.policies)
+        self.level = 0
+        self._level_cache = {0: (self.xp, self.step, self.gather_bytes)}
         self.state = execution.attach_predict_state(
             init_decode_state(model, max_batch, cache_len), model, self.xp
         )
@@ -140,10 +222,51 @@ class GenerationServer:
             if cfg.moe is not None else 0
         )
         self.last_pred_stats: Optional[np.ndarray] = None
+        self.last_fault_stats: Optional[np.ndarray] = None
         # inactive slots: pos points at an empty cache; emitted tokens junk
         self.slot_req: list[Optional[int]] = [None] * max_batch
         self.slot_remaining = np.zeros(max_batch, np.int64)
         self.cur_token = jnp.zeros((max_batch, 1), jnp.int32)
+
+    @property
+    def fetch_label(self) -> str:
+        """The current ladder level's moe fetch mode ("predictive" /
+        "demand" / "all")."""
+        return self.ladder[self.level][0]
+
+    def set_level(self, level: int) -> bool:
+        """Move to a degradation-ladder level (clamped); returns whether
+        the level changed. Swaps in that level's (plan, step fn, wire
+        model) — built lazily on first use — and re-attaches a COLD
+        predictive state shaped for the new plan: the residency cache /
+        predictor do not survive a policy change (their budgets differ),
+        which is exactly the safe behaviour when a peer went bad. KV /
+        recurrent slot state carries over untouched."""
+        level = max(0, min(int(level), len(self.ladder) - 1))
+        if level == self.level:
+            return False
+        if level not in self._level_cache:
+            _, table = self.ladder[level]
+            xp = make_execution_plan(
+                self.model, self._shape, self._mesh_sizes, mode=self._mode,
+                policy=table, capacity_from=self._capacity_from,
+                fault_spec=self.fault_spec,
+                validate_fetch=self.validate_fetch,
+            )
+            self._level_cache[level] = (
+                xp,
+                execution.make_step_fn(self.model, xp, self._mesh),
+                execution.gathered_wire_bytes_per_step(self.model, xp),
+            )
+        self.xp, self.step, self.gather_bytes = self._level_cache[level]
+        bare = {k: v for k, v in self.state.items() if k != "pred"}
+        self.state = execution.attach_predict_state(
+            bare, self.model, self.xp
+        )
+        self.level = level
+        self.last_pred_stats = None
+        self.last_fault_stats = None
+        return True
 
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -187,6 +310,11 @@ class GenerationServer:
             # [predicted, hit, miss, evicted] expert rows this step,
             # summed over layers and ranks (psum'd inside the step)
             self.last_pred_stats = np.asarray(out["pred_stats"])
+        # per-kind fault counters + per-peer detected tail (only emitted
+        # by validated plans whose layers run the demand/predictive path)
+        self.last_fault_stats = (
+            np.asarray(out["fault_stats"]) if "fault_stats" in out else None
+        )
         return np.asarray(out["next_token"][:, 0])
 
     def release(self, slot: int):
@@ -196,10 +324,12 @@ class GenerationServer:
 class DisaggregatedEngine:
     """Queues + rate matching between context and generation servers."""
 
-    def __init__(self, params, ctx: ContextServer, gen: GenerationServer):
+    def __init__(self, params, ctx: ContextServer, gen: GenerationServer,
+                 health: Optional[HealthMonitor] = None):
         self.params = params
         self.ctx = ctx
         self.gen = gen
+        self.health = health
         self.queue: list[Request] = []
         self.records: dict[int, RequestRecord] = {}
         self.outputs: dict[int, list[int]] = {}
@@ -207,6 +337,19 @@ class DisaggregatedEngine:
         self.t = 0.0
 
     def submit(self, req: Request):
+        # engine-shape validation (the Request itself checked basic
+        # well-formedness at construction)
+        if len(req.tokens) != self.ctx.prefill_len:
+            raise ValueError(
+                f"Request {req.req_id}: prompt length {len(req.tokens)} != "
+                f"context server prefill_len {self.ctx.prefill_len}"
+            )
+        if self.ctx.prefill_len + req.target_len - 1 > self.gen.cache_len:
+            raise ValueError(
+                f"Request {req.req_id}: prompt ({self.ctx.prefill_len}) + "
+                f"output ({req.target_len}) tokens exceed the decode ring "
+                f"capacity cache_len={self.gen.cache_len}"
+            )
         self.queue.append(req)
         self.records[req.req_id] = RequestRecord(
             req_id=req.req_id,
@@ -234,6 +377,37 @@ class DisaggregatedEngine:
                 self.gen.slot_remaining[slot] = req.target_len - 1
             toks = self.gen.decode_step(self.params)
             self.t += 1.0
+            from repro.core.faults import FAULT_STAT_BASE
+
+            fs = self.gen.last_fault_stats
+            if fs is not None:
+                self.metrics.record_fault_stats(fs)
+            if self.health is not None:
+                if fs is not None:
+                    tail = fs[FAULT_STAT_BASE:]
+                elif self.health.ema.size:
+                    # bottom-of-ladder ("all") plans run no per-peer
+                    # payload rounds, so there is no fault signal — feed
+                    # a clean observation so the EMAs decay and recovery
+                    # can re-promote
+                    tail = np.zeros_like(self.health.ema)
+                else:
+                    tail = None
+                move = (
+                    self.health.observe(tail) if tail is not None else None
+                )
+                if move == "demote":
+                    if self.gen.set_level(self.gen.level + 1):
+                        self.metrics.record_transition(
+                            int(self.t), "demote", self.gen.level,
+                            self.gen.fetch_label,
+                        )
+                elif move == "promote" and self.gen.level > 0:
+                    if self.gen.set_level(self.gen.level - 1):
+                        self.metrics.record_transition(
+                            int(self.t), "promote", self.gen.level,
+                            self.gen.fetch_label,
+                        )
             active = [r for r in self.gen.slot_req if r is not None]
             for slot, rid in enumerate(self.gen.slot_req):
                 if rid is None:

@@ -83,6 +83,35 @@ class RequestRecord:
 class ServingMetrics:
     records: list = dataclasses.field(default_factory=list)
     num_gpus: int = 1
+    # cumulative per-kind fault counters from the validated fetch path
+    # (faults.FAULT_STAT_NAMES) + per-subgroup-position detected counts
+    fault_counts: dict = dataclasses.field(default_factory=dict)
+    detected_by_peer: list = dataclasses.field(default_factory=list)
+    # HealthMonitor ladder moves: {"step", "kind", "level", "fetch"}
+    policy_transitions: list = dataclasses.field(default_factory=list)
+
+    def record_fault_stats(self, vec):
+        """Accumulate one decode step's psum'd fault-stats vector
+        (``out["fault_stats"]``: the named counters followed by the
+        per-source-position detected tail)."""
+        from repro.core.faults import FAULT_STAT_BASE, FAULT_STAT_NAMES
+
+        vec = [float(v) for v in vec]
+        for name, v in zip(FAULT_STAT_NAMES, vec[:FAULT_STAT_BASE]):
+            self.fault_counts[name] = self.fault_counts.get(name, 0.0) + v
+        tail = vec[FAULT_STAT_BASE:]
+        if len(self.detected_by_peer) < len(tail):
+            self.detected_by_peer += [0.0] * (
+                len(tail) - len(self.detected_by_peer)
+            )
+        for i, v in enumerate(tail):
+            self.detected_by_peer[i] += v
+
+    def record_transition(self, step: int, kind: str, level: int,
+                          fetch: str):
+        self.policy_transitions.append(
+            {"step": step, "kind": kind, "level": level, "fetch": fetch}
+        )
 
     def summary(self, horizon: float) -> dict:
         done = [r for r in self.records if r.done_time is not None]
@@ -100,12 +129,15 @@ class ServingMetrics:
             "tps_per_gpu": total_tokens / horizon / self.num_gpus,
             "total_output_tokens": total_tokens,
         }
+        # ratio fields are ALWAYS present and 0.0 on a zero denominator
+        # (empty or fault-aborted runs must not divide by zero or make
+        # downstream consumers branch on key presence)
+        out["gather_fetch_ratio"] = (
+            round(fetch_b / full_b, 4) if full_b else 0.0
+        )
         if full_b:
             out["gathered_mb_fetched"] = round(fetch_b / 1e6, 3)
             out["gathered_mb_full"] = round(full_b / 1e6, 3)
-            # < 1.0 exactly when demand fetch shipped less than the
-            # every-remote-expert gather would have
-            out["gather_fetch_ratio"] = round(fetch_b / full_b, 4)
             by_fam: dict = {}
             for r in done:
                 for fam, b in r.family_fetch_bytes.items():
@@ -125,14 +157,25 @@ class ServingMetrics:
         hit_b = sum(r.hit_bytes for r in done)
         miss_b = sum(r.miss_bytes for r in done)
         evic_b = sum(r.evicted_bytes for r in done)
+        # fraction of the wanted remote rows served without the
+        # post-routing correction round (cache + speculative hits);
+        # 0.0 — not a KeyError or a ZeroDivisionError — when nothing
+        # decoded predictively
+        out["predict_hit_rate"] = (
+            round(hit_b / (hit_b + miss_b), 4) if (hit_b + miss_b) else 0.0
+        )
         if pred_b or hit_b or miss_b:
             out["predict_mb_predicted"] = round(pred_b / 1e6, 3)
             out["predict_mb_hit"] = round(hit_b / 1e6, 3)
             out["predict_mb_miss"] = round(miss_b / 1e6, 3)
             out["predict_mb_evicted"] = round(evic_b / 1e6, 3)
-            # fraction of the wanted remote rows served without the
-            # post-routing correction round (cache + speculative hits)
-            out["predict_hit_rate"] = round(
-                hit_b / max(hit_b + miss_b, 1e-9), 4
-            )
+        if self.fault_counts and any(self.fault_counts.values()):
+            out["faults"] = {
+                k: round(v, 1) for k, v in sorted(self.fault_counts.items())
+            }
+            out["detected_by_peer"] = [
+                round(v, 1) for v in self.detected_by_peer
+            ]
+        if self.policy_transitions:
+            out["policy_transitions"] = list(self.policy_transitions)
         return out

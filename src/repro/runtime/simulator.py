@@ -73,6 +73,31 @@ class SimConfig:
                                         # critical path (where
                                         # expert_fetch="demand" pays off)
     gen_batch: int = 64
+    validate_fetch: bool = False        # price the checksum-validated
+                                        # fetch protocol (docs/
+                                        # robustness.md): the metadata
+                                        # round carries a per-row f32
+                                        # checksum table alongside the
+                                        # index bitmap
+    fault_rate: float = 0.0             # scenario replay: fraction of
+                                        # decode steps on which a
+                                        # detected payload fault forces
+                                        # the axis-agreed full-gather
+                                        # fallback (replay a MEASURED
+                                        # engine run's fault_fallbacks /
+                                        # steps here to price what the
+                                        # HealthMonitor saw)
+    straggler_ranks: int = 0            # scenario replay: persistently
+                                        # slow peers in the gen group —
+                                        # peer-parallel gather rounds
+                                        # complete at the slowest
+                                        # contributor, so any straggler
+                                        # stretches every fetch round by
+                                        # ``straggler_slowdown``
+    straggler_slowdown: float = 1.0     # link-bandwidth degradation
+                                        # factor of a straggler peer
+                                        # (>= 1; 3.0 = a third of the
+                                        # healthy link)
     isl_max: int = 8192
     isl_ratio: float = 0.8              # lengths U[ratio*max, max]
     osl: int = 1024
@@ -82,6 +107,21 @@ class SimConfig:
     imbalance_sync_frac: float = 0.12   # Fig. 1b: DEP sync overhead at cv~20%
     seed: int = 0
     horizon_s: float = 300.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.fault_rate <= 1.0:
+            raise ValueError(
+                f"fault_rate must lie in [0, 1]; got {self.fault_rate}"
+            )
+        if self.straggler_slowdown < 1.0:
+            raise ValueError(
+                "straggler_slowdown is a degradation factor (>= 1); "
+                f"got {self.straggler_slowdown}"
+            )
+        if self.straggler_ranks < 0:
+            raise ValueError(
+                f"straggler_ranks must be >= 0; got {self.straggler_ranks}"
+            )
 
     def table(self) -> PolicyTable:
         """The resolved per-family policy table: ``policies`` verbatim,
@@ -123,7 +163,7 @@ class ClusterSimulator:
         lt = roofline.layer_times(
             sc.cfg, tokens=tokens, group=sc.ctx_gpus, hw=sc.hw,
             layer=moe_layer, policies=sc.table(),
-            attn_gathered=sc.attn_gathered,
+            attn_gathered=sc.attn_gathered, validate=sc.validate_fetch,
         )
         n_layers = sc.cfg.num_layers
         if sc.ctx_mode == "dwdp":
@@ -167,11 +207,12 @@ class ClusterSimulator:
                 budget=pol.budget, cache_rows=pol.cache_budget,
                 cache_hit=sc.cache_hit_rate,
                 predict_hit=sc.predict_hit_rate,
+                validate=sc.validate_fetch,
             )
         elif pol.fetch == "demand":
             per_layer = roofline.demand_prefetch_bytes(
                 batch, moe.top_k, moe.num_experts, g, per_expert,
-                budget=pol.budget,
+                budget=pol.budget, validate=sc.validate_fetch,
             )
         else:
             per_layer = moe.num_experts * per_expert * (g - 1) / g
@@ -197,6 +238,7 @@ class ClusterSimulator:
                 budget=pol.budget, cache_rows=pol.cache_budget,
                 cache_hit=sc.cache_hit_rate,
                 predict_hit=sc.predict_hit_rate,
+                validate=sc.validate_fetch,
             )
             return n_moe * serial
         if pol.fetch == "demand":
@@ -236,12 +278,67 @@ class ClusterSimulator:
         if sc.gen_mode == "dwdp":
             wire = self.decode_wire_bytes(batch) / sc.hw.link_bw
             serial = self.decode_serial_wire_bytes(batch) / sc.hw.link_bw
+            # scenario replay: peer-parallel gather rounds complete at
+            # the slowest contributor, so ANY straggler in the group
+            # stretches every fetch round by its link-degradation
+            # factor (straggler_ranks > g-1 peers is clamped — you
+            # cannot have more slow peers than peers)
+            if min(sc.straggler_ranks, sc.gen_gpus - 1) > 0:
+                wire *= sc.straggler_slowdown
+                serial *= sc.straggler_slowdown
             # overlappable prefetch joins the max (the DWDP critical
             # path); a round that waits on routing adds serially — which
             # is exactly what the predictive fetch takes back off the
             # critical path
             t = max(t, wire - serial) + serial
+            # scenario replay: a detected payload fault forces the
+            # axis-agreed full-gather fallback for that step — the whole
+            # remote bank ships and it all sits serially behind routing
+            # (the fallback is taken post-validation). Blend by the
+            # replayed per-step fallback probability.
+            if sc.fault_rate > 0.0 and cfg.moe is not None:
+                moe = cfg.moe
+                per_expert = 3 * cfg.d_model * moe.d_ff * 1.0
+                n_moe = sum(
+                    cfg.is_moe_layer(l) for l in range(cfg.num_layers)
+                )
+                full_wire = (
+                    n_moe * moe.num_experts * per_expert
+                    * (sc.gen_gpus - 1) / sc.gen_gpus / sc.hw.link_bw
+                )
+                if min(sc.straggler_ranks, sc.gen_gpus - 1) > 0:
+                    full_wire *= sc.straggler_slowdown
+                t_fault = max(t_mem, t_flops) + full_wire
+                t = (1.0 - sc.fault_rate) * t + sc.fault_rate * t_fault
         return t + 2e-4  # + fixed step overhead
+
+    def degraded_table(self) -> list[dict]:
+        """Price every rung of the policy degradation ladder the
+        HealthMonitor can walk (predictive -> demand -> all-gather) at
+        this deployment's decode shape — ``roofline.degraded_step_times``
+        over the resolved policy table, with this scenario's
+        validation/straggler/fault-rate replay applied on top of each
+        rung via :meth:`gen_step_time` semantics. Returns one row per
+        rung: {"level", "fetch", "t_step_us", "vs_healthy",
+        "t_scenario_us"}."""
+        sc = self.sc
+        rows = roofline.degraded_step_times(
+            sc.cfg, sc.table(), tokens=sc.gen_batch, group=sc.gen_gpus,
+            hw=sc.hw, validate=sc.validate_fetch or sc.fault_rate > 0,
+        )
+        from repro.core.strategy import degrade_policy_table
+
+        for row in rows:
+            # replay the scenario at this rung: swap the rung's table in
+            # and re-price the full gen step (memory/compute + wire +
+            # straggler stretch + fault-fallback blend)
+            sub = dataclasses.replace(
+                sc, policies=degrade_policy_table(sc.table(), row["fetch"]),
+            )
+            row["t_scenario_us"] = round(
+                ClusterSimulator(sub).gen_step_time(sc.gen_batch) * 1e6, 3
+            )
+        return rows
 
     # ---- simulation --------------------------------------------------------
     def run(self) -> dict:
