@@ -15,6 +15,7 @@ def _all_benchmarks():
         kernels_bench,
         paper_tables,
         roofline_table,
+        syncfree_bench,
     )
 
     return {
@@ -34,6 +35,7 @@ def _all_benchmarks():
         "demand_moe": kernels_bench.bench_demand_moe,
         "demand_predict": kernels_bench.bench_demand_predict,
         "fault_degradation": faults_bench.bench_fault_degradation,
+        "syncfree": syncfree_bench.bench_syncfree_decode,
         "dryrun_roofline": roofline_table.bench_dryrun_roofline,
     }
 

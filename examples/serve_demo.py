@@ -69,11 +69,15 @@ def main():
                     help="uniform gathered-weight representation (the "
                          "pre-PolicyTable spelling)")
     ap.add_argument("--expert-fetch", default=None,
-                    choices=["all", "demand", "predictive"],
+                    choices=["all", "demand", "predictive", "sync_free"],
                     help="route-before-gather demand fetch of only the "
                          "activated experts (vs every remote expert); "
                          "'predictive' overlaps a speculative round and "
-                         "caches fetched experts across decode steps")
+                         "caches fetched experts across decode steps; "
+                         "'sync_free' derives the speculative schedule "
+                         "from mirrored predictors on both endpoints — "
+                         "zero index metadata on the spec round "
+                         "(docs/syncfree.md)")
     ap.add_argument("--demand-budget", type=int, default=None,
                     help="per-peer demand-fetch row budget (0 = auto)")
     ap.add_argument("--cache-budget", type=int, default=None,

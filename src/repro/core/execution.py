@@ -212,8 +212,8 @@ def demand_fetch_active(
     cfg, geom: Geometry, xp: ExecutionPlan, group: Optional[str] = None
 ) -> bool:
     """Does the MoE gather run the on-demand route-before-gather path?
-    (Covers both ``fetch="demand"`` and ``fetch="predictive"`` — the
-    predictive engine is a refinement of the demand rounds.)
+    (Covers ``fetch="demand"``, ``"predictive"`` and ``"sync_free"`` —
+    the predictive engines are refinements of the demand rounds.)
 
     Requires the split fast path (the demand bank is a split-bank
     refinement) over a single-axis placement, and engages only when
@@ -221,7 +221,8 @@ def demand_fetch_active(
     i.e. when the activated set *can* be a strict subset of the remote
     bank (decode, small-batch prefill). At full coverage the "all"
     gather is never worse, so the plan silently keeps it."""
-    if xp.policy("moe_experts", group).fetch not in ("demand", "predictive"):
+    fetch = xp.policy("moe_experts", group).fetch
+    if fetch not in ("demand", "predictive", "sync_free"):
         return False
     if cfg.moe is None or not moe_split_active(geom, xp, group):
         return False
@@ -241,12 +242,31 @@ def predictive_fetch_active(
 
     Decode only: the predictor and the cache live in a ``PredictState``
     threaded through the decode-step state, which only the decode loop
-    carries. Everywhere else ``fetch="predictive"`` lowers exactly as
-    ``"demand"`` (same rounds, same bitwise results)."""
+    carries. Everywhere else ``fetch="predictive"`` / ``"sync_free"``
+    lowers exactly as ``"demand"`` (same rounds, same bitwise
+    results)."""
     return (
         xp.phase == "decode"
-        and xp.policy("moe_experts", group).fetch == "predictive"
+        and xp.policy("moe_experts", group).fetch
+        in ("predictive", "sync_free")
         and demand_fetch_active(cfg, geom, xp, group)
+    )
+
+
+def sync_free_active(
+    cfg, geom: Geometry, xp: ExecutionPlan, group: Optional[str] = None
+) -> bool:
+    """Does the predictive decode engine run the SYNC-FREE variant —
+    mirrored global ``PredictState`` on every rank, so the speculative
+    round's compaction is derived identically on both transfer
+    endpoints and ships ZERO index metadata, with all per-layer index
+    traffic (residual bitmaps + predictor signals + checksum table)
+    packed into the one correction-round all-gather? Implies
+    :func:`predictive_fetch_active`; everywhere that predicate is
+    false, ``fetch="sync_free"`` lowers exactly as ``"demand"``."""
+    return (
+        xp.policy("moe_experts", group).fetch == "sync_free"
+        and predictive_fetch_active(cfg, geom, xp, group)
     )
 
 
@@ -325,10 +345,23 @@ def fault_stats_active(model: Model, xp: ExecutionPlan) -> bool:
     runs the demand/predictive route-before-gather path (the validated
     surface). The vector layout is :data:`faults.FAULT_STAT_BASE` named
     counters followed by per-source-subgroup-position detected counts
-    (length ``subgroup_size``), psum'd over all ranks."""
-    if not xp.validated or model.cfg.moe is None:
+    (length ``subgroup_size``), psum'd over all ranks.
+
+    Exception: a sync-free decode layer emits the vector even
+    UNVALIDATED — its mirrored-schedule divergence digest always runs
+    (it is the mode's consistency contract, not a fault-injection
+    feature), so the ``mirror_divergence`` counter must reach the
+    HealthMonitor regardless; the other counters are zero then."""
+    if model.cfg.moe is None:
         return False
-    return any(
+    sync_free = any(
+        sig.is_moe and sync_free_active(model.cfg, model.geom, xp, g.name)
+        for g in model.plan
+        for sig in g.sigs
+    )
+    if not xp.validated and not sync_free:
+        return False
+    return sync_free or any(
         sig.is_moe and demand_fetch_active(model.cfg, model.geom, xp, g.name)
         for g in model.plan
         for sig in g.sigs
@@ -443,8 +476,12 @@ def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
     ``families`` breaks both down per gathered-weight family
     (``moe_experts``, ``attn_qkv``, ``attn_out``, ``dense_ffn``) so the
     serving metrics can report per-family traffic, not just the MoE
-    total. Counts the stacked transformer families; the rare flat
-    cell/rec gathers are not modeled here.
+    total. Predictive/sync-free layers additionally report a ``rounds``
+    split — ``{"spec": ..., "corr": ...}`` — separating the layer-ahead
+    (overlappable) speculative round from the post-routing
+    (critical-path) correction round; plain demand's one post-routing
+    round counts under ``corr``. Counts the stacked transformer
+    families; the rare flat cell/rec gathers are not modeled here.
     """
     cfg, geom = model.cfg, model.geom
     ws = jnp.dtype(model.dtype).itemsize
@@ -453,6 +490,8 @@ def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
         f: {"full": 0.0, "fetched": 0.0}
         for f in ("moe_experts", "attn_qkv", "attn_out", "dense_ffn")
     }
+    rounds = {"spec": 0.0, "corr": 0.0}
+    any_rounds = False
 
     def add(fam: str, n_cycles: int, full_b: float, fetched_b=None):
         fams[fam]["full"] += full_b * n_cycles
@@ -472,21 +511,35 @@ def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
                     if predictive_fetch_active(cfg, geom, xp, group.name):
                         # the predictive rounds replace the full gather:
                         # budget-padded speculative round (layer-ahead)
-                        # + correction round, each with its index round
+                        # + correction round. Plain predictive pays an
+                        # index round on each; sync-free ships a pure-
+                        # payload speculative round and packs ALL index
+                        # metadata into the correction all-gather.
                         spec_b = resolve_spec_budget(
                             cfg, geom, xp, group.name
                         )
                         corr_b = resolve_demand_budget(
                             cfg, geom, xp, group.name
                         )
-                        fetched = min(
-                            full_b,
-                            prefetch.demand_fetch_bytes(
-                                pl, spec_b, pe, validate=xp.validated
+                        if sync_free_active(cfg, geom, xp, group.name):
+                            by_round = prefetch.sync_free_fetch_bytes(
+                                pl, spec_b, corr_b, _routed_tokens(xp),
+                                pe, validate=xp.validated,
                             )
-                            + prefetch.demand_fetch_bytes(
-                                pl, corr_b, pe, validate=xp.validated
-                            ),
+                        else:
+                            by_round = {
+                                "spec": prefetch.demand_fetch_bytes(
+                                    pl, spec_b, pe, validate=xp.validated
+                                ),
+                                "corr": prefetch.demand_fetch_bytes(
+                                    pl, corr_b, pe, validate=xp.validated
+                                ),
+                            }
+                        any_rounds = True
+                        for rnd in ("spec", "corr"):
+                            rounds[rnd] += by_round[rnd] * group.n_cycles
+                        fetched = min(
+                            full_b, by_round["spec"] + by_round["corr"]
                         )
                         add("moe_experts", group.n_cycles, full_b, fetched)
                     else:
@@ -512,16 +565,21 @@ def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
                 pl = geom.moe_placement
                 pe = 3 * d * cfg.moe.d_ff * ws
                 budget = resolve_demand_budget(cfg, geom, xp, group.name)
+                fetched = prefetch.demand_fetch_bytes(
+                    pl, budget, pe, validate=xp.validated
+                )
+                any_rounds = True
+                rounds["corr"] += fetched * group.n_cycles
                 add("moe_experts", group.n_cycles,
-                    prefetch.gather_bytes(pl, pe),
-                    prefetch.demand_fetch_bytes(
-                        pl, budget, pe, validate=xp.validated
-                    ))
-    return {
+                    prefetch.gather_bytes(pl, pe), fetched)
+    out = {
         "full": sum(v["full"] for v in fams.values()),
         "fetched": sum(v["fetched"] for v in fams.values()),
         "families": fams,
     }
+    if any_rounds:
+        out["rounds"] = rounds
+    return out
 
 
 def _extract(lp: dict, paths) -> dict:
@@ -624,6 +682,44 @@ def _gather_attn(tree: dict, ctx: Ctx):
     return prefetch.AttnBank(qkv=parts["attn_qkv"], out=parts["attn_out"])
 
 
+def _mirror_spec_masks(ctx: Ctx, pred, pl, sbudget: int) -> jax.Array:
+    """Sync-free speculative schedule: the ``(G', num_padded)`` predicted
+    bitmaps of EVERY subgroup position, derived from the mirrored
+    ``PredictState`` alone (global prev/EMA/cache views + the richer
+    signals weighted by ``predict_extra_score``). Deterministic in the
+    mirror, so the gather site (pipeline, layer-ahead) and the digest
+    site (``_moe_demand_apply``, same step, same ``pred``) recompute the
+    identical array — that determinism is WHY the speculative round needs
+    no index exchange.
+
+    The ``mirror`` fault perturbs the target rank's view of its own row
+    here — transiently, at both call sites identically (same pred, same
+    step key), never persisted into the state — so the drifted rank
+    genuinely derives a different schedule for the digest to catch."""
+    geom, xp = ctx.geom, ctx.xp
+    prev, ema = pred.prev[0], pred.ema[0]
+    cids, cvalid = pred.cache_ids[0], pred.cache_valid[0]
+    sig, sigw = pred.sig[0], pred.sigw[0]
+    inj = _fault_injector(ctx, geom.expert_axes[0])
+    if inj is not None and inj.spec.mirror_rate:
+        flag = inj.mirror_flag(_fault_step(ctx))
+        p = lax.axis_index(geom.expert_axes[0]) % pl.subgroup_size
+        bump = jnp.where(
+            jnp.arange(pl.num_padded) % 3 == 0, 10.0, 0.0
+        )
+        ema = ema.at[p].add(jnp.where(flag, bump, 0.0))
+    extra = jax.vmap(prefetch.predict_extra_score)(sig, sigw)
+
+    def one(prev_q, ema_q, ids_q, valid_q, extra_q):
+        return prefetch.predict_bitmap(
+            prev_q, ema_q, pl, budget=sbudget,
+            exclude_ids=ids_q, exclude_valid=valid_q,
+            extra_score=extra_q, exclude_peers=xp.exclude_peers,
+        )
+
+    return jax.vmap(one)(prev, ema, cids, cvalid, extra)
+
+
 def _speculative_expert_gather(tree, ctx: Ctx, pred) -> prefetch.DemandBank:
     """The predictive fetch's layer-ahead SPECULATIVE round: a demand
     gather of the predictor's hot set (previous-step routing + EMA, minus
@@ -632,19 +728,41 @@ def _speculative_expert_gather(tree, ctx: Ctx, pred) -> prefetch.DemandBank:
     this step's routing, so the payload overlaps compute exactly like the
     all-fetch prefetch. The predictor bitmap is shaped to the speculative
     budget per peer, so this round never overflows (misses fall to the
-    correction round inside ``_moe_apply``)."""
+    correction round inside ``_moe_apply``).
+
+    Plain predictive exchanges the bitmaps (``plan_demand_fetch``'s
+    all-gather — senders must learn what to serve). SYNC-FREE derives
+    every position's bitmap from the mirrored state instead
+    (:func:`_mirror_spec_masks`), so this round lowers to payload
+    permutes ONLY — zero index metadata on the wire."""
     cfg, geom, xp = ctx.cfg, ctx.geom, ctx.xp
     pl = geom.moe_placement
     axis = geom.expert_axes[0]
+    g, local = pl.subgroup_size, pl.local_count
     pol = xp.policy("moe_experts", ctx.group)
     sbudget = resolve_spec_budget(cfg, geom, xp, ctx.group)
-    wanted = prefetch.predict_bitmap(
-        pred.prev[0], pred.ema[0], pl, budget=sbudget,
-        exclude_ids=pred.cache_ids[0], exclude_valid=pred.cache_valid[0],
-    )
-    plan = prefetch.plan_demand_fetch(
-        wanted, axis, pl, budget=sbudget, agree_axes=()
-    )
+    if sync_free_active(cfg, geom, xp, ctx.group):
+        sbudget = min(sbudget, local)
+        masks = _mirror_spec_masks(ctx, pred, pl, sbudget)
+        p = lax.axis_index(axis) % g
+        own = lax.dynamic_index_in_dim(masks, p, 0, keepdims=False)
+        fetched_ids, valid, _ = prefetch.plan_from_bitmap(
+            own, p, g, local, sbudget
+        )
+        plan = prefetch.DemandPlan(
+            masks=masks, fetched_ids=fetched_ids, valid=valid,
+            overflow=jnp.bool_(False),
+        )
+    else:
+        wanted = prefetch.predict_bitmap(
+            pred.prev[0], pred.ema[0], pl, budget=sbudget,
+            exclude_ids=pred.cache_ids[0],
+            exclude_valid=pred.cache_valid[0],
+            exclude_peers=xp.exclude_peers,
+        )
+        plan = prefetch.plan_demand_fetch(
+            wanted, axis, pl, budget=sbudget, agree_axes=()
+        )
     inj = _fault_injector(ctx, axis)
     return prefetch.gather_demand_payload(
         tree, plan, axis, pl, budget=sbudget, mode=pol.transport,
@@ -1301,8 +1419,25 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
     )
     if predictive:
         assert spec_bank is not None
-        ema = pred.ema[0]
-        cache_ids, cache_valid = pred.cache_ids[0], pred.cache_valid[0]
+        sync_free = sync_free_active(cfg, geom, xp, ctx.group)
+        sbudget = min(resolve_spec_budget(cfg, geom, xp, ctx.group), local)
+        cbudget = min(budget, local)
+        if sync_free:
+            # mirrored views: leading dim = subgroup position. This
+            # rank's own slots are the position-p rows.
+            m_ema = pred.ema[0]
+            m_aff, m_posb = pred.aff[0], pred.posb[0]
+            m_sigw = pred.sigw[0]
+            m_cids, m_cvalid = pred.cache_ids[0], pred.cache_valid[0]
+            cache_ids = lax.dynamic_index_in_dim(
+                m_cids, p, 0, keepdims=False
+            )
+            cache_valid = lax.dynamic_index_in_dim(
+                m_cvalid, p, 0, keepdims=False
+            )
+        else:
+            ema = pred.ema[0]
+            cache_ids, cache_valid = pred.cache_ids[0], pred.cache_valid[0]
         cache_w = jax.tree.map(lambda w: w[0], pred.cache)
         n_cache = cache_ids.shape[0]
         cache_tamper = jnp.zeros((n_cache,), bool)
@@ -1313,6 +1448,25 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
             )
             cache_w = inj.tamper_rows(
                 cache_w, jnp.zeros((n_cache,), bool), cache_tamper
+            )
+        if sync_free:
+            # mirrored-schedule divergence cross-check: every rank
+            # re-derives the speculative schedule the pipeline gather
+            # used (same pred, same step => identical array) and psums a
+            # scalar digest over the subgroup. Any mismatch means some
+            # rank's mirror drifted — its speculative payload rows are
+            # mislabeled — so the spec bank is discarded everywhere and
+            # the step takes the exact full-gather fallback. The digest
+            # runs UNCONDITIONALLY (it is the mode's consistency
+            # contract), validation on or off.
+            masks = _mirror_spec_masks(ctx, pred, pl, sbudget)
+            dg = prefetch.schedule_digest(masks)
+            tot = lax.psum(
+                dg, axis, axis_index_groups=pl.axis_index_groups()
+            )
+            div_local = jnp.abs(g * dg - tot) > 0.5
+            diverged_g = (
+                lax.psum(div_local.astype(jnp.float32), all_axes) > 0
             )
         if validate:
             # verify cached + speculative rows BEFORE the exclusion set
@@ -1327,27 +1481,89 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
             )
         else:
             cache_valid_v, spec_valid_v = cache_valid, spec_bank.valid
+        # under divergence the spec rows are untrusted on every rank
+        # (branch-uniform: diverged_g is psum-agreed)
+        spec_valid_eff = (
+            spec_valid_v & ~diverged_g if sync_free else spec_valid_v
+        )
         have_ids = jnp.concatenate([cache_ids, spec_bank.fetched_ids])
-        have_valid = jnp.concatenate([cache_valid_v, spec_valid_v])
-        plan = prefetch.plan_demand_fetch(
-            wanted, axis, pl, budget=budget,
-            agree_axes=tuple(xp.mesh_sizes),
-            exclude_ids=have_ids, exclude_valid=have_valid,
-        )
-        # predictor update — pure index arithmetic, branch-independent
-        new_prev = wanted
-        new_ema = (
-            prefetch.EMA_DECAY * ema
-            + (1.0 - prefetch.EMA_DECAY) * wanted.astype(jnp.float32)
-        )
-        # hit/miss accounting (rows of the wanted REMOTE set)
+        have_valid = jnp.concatenate([cache_valid_v, spec_valid_eff])
+        if sync_free:
+            # correction round, sync-free form: ONE packed bool
+            # all-gather carries the residual (miss) bitmaps AND the
+            # per-row routing/position signals every mirror folds — the
+            # mode's entire per-layer index traffic. The correction
+            # payload compaction then derives from the exchanged
+            # residuals exactly as the demand contract does.
+            residual = wanted & ~prefetch.exclude_bitmap(
+                e_pad, have_ids, have_valid
+            )
+            k_top = d.top_experts.shape[-1]
+            routed = prefetch.routed_bitmaps(
+                jnp.where(
+                    d.keep.reshape(-1, k_top), d.top_experts, e_pad
+                ),
+                e_pad,
+            )
+            buckets = prefetch.position_buckets(ctx.pos)
+            packed = prefetch.pack_correction_payload(
+                residual, routed, buckets
+            )
+            all_packed = lax.all_gather(
+                packed, axis, axis_index_groups=pl.axis_index_groups()
+            )
+            resid_all, routed_all, buckets_all = (
+                prefetch.unpack_correction_payload(all_packed, e_pad, t)
+            )
+            corr_ids, corr_valid, ovf_raw = prefetch.plan_from_bitmap(
+                residual, p, g, local, cbudget
+            )
+            overflow = (
+                lax.psum(ovf_raw.astype(jnp.float32), all_axes) > 0
+            )
+            plan = prefetch.DemandPlan(
+                masks=resid_all, fetched_ids=corr_ids, valid=corr_valid,
+                overflow=overflow,
+            )
+            # mirrored predictor fold: every rank folds EVERY position's
+            # exchanged routing — deterministic in the payload alone, so
+            # the mirrors stay bit-identical across ranks.
+            (new_prev_all, new_ema_all, new_aff, new_posb, new_sig,
+             new_sigw) = jax.vmap(prefetch.update_predictor)(
+                m_ema, m_aff, m_posb, m_sigw, routed_all, buckets_all
+            )
+            new_ema = lax.dynamic_index_in_dim(
+                new_ema_all, p, 0, keepdims=False
+            )
+        else:
+            plan = prefetch.plan_demand_fetch(
+                wanted, axis, pl, budget=budget,
+                agree_axes=tuple(xp.mesh_sizes),
+                exclude_ids=have_ids, exclude_valid=have_valid,
+            )
+            # predictor update — pure index arithmetic, branch-independent
+            new_prev = wanted
+            new_ema = (
+                prefetch.EMA_DECAY * ema
+                + (1.0 - prefetch.EMA_DECAY) * wanted.astype(jnp.float32)
+            )
+        # hit/miss accounting (rows of the wanted REMOTE set), split by
+        # serving tier: residency cache first, speculative round for the
+        # rest — the tiers are id-disjoint by the exclusion chain, the
+        # bitmap intersection just makes the split robust to overlap
         local_mask = jnp.zeros((e_pad,), bool).at[
             p * local + jnp.arange(local)
         ].set(True)
         wanted_remote = wanted & ~local_mask
-        have_map = prefetch.exclude_bitmap(e_pad, have_ids, have_valid)
+        spec_map = prefetch.exclude_bitmap(
+            e_pad, spec_bank.fetched_ids, spec_valid_eff
+        )
+        cache_map = prefetch.exclude_bitmap(e_pad, cache_ids, cache_valid_v)
         n_want = jnp.sum(wanted_remote).astype(jnp.float32)
-        n_hit = jnp.sum(wanted_remote & have_map).astype(jnp.float32)
+        n_cache_hit = jnp.sum(wanted_remote & cache_map).astype(jnp.float32)
+        n_spec = jnp.sum(
+            wanted_remote & spec_map & ~cache_map
+        ).astype(jnp.float32)
         n_pred = jnp.sum(spec_bank.valid).astype(jnp.float32)
     else:
         plan = prefetch.plan_demand_fetch(
@@ -1449,6 +1665,7 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
             # globally agreed flag: contribute 1/n_ranks so the final
             # psum over every mesh axis reports it once
             (fault_fb.astype(jnp.float32) / n_ranks)[None],
+            jnp.zeros((1,), jnp.float32),  # mirror_divergence (sync_free)
             _per_src_detected(bad_bank, min(budget, local), g, p),
         ])
         return y, None, fstats
@@ -1481,16 +1698,21 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
         fault_fb = n_bad_corr > 0
         fallback = plan.overflow | fault_fb
     else:
+        fault_fb = jnp.bool_(False)
         bank_valid_v = bank.valid
         fallback = plan.overflow
+    if sync_free:
+        # a drifted mirror forces the exact path too (the spec bank was
+        # already masked out above; this swaps in the full gather)
+        fallback = fallback | diverged_g
     cat = lambda c, s, b: jnp.concatenate([c, s, b], axis=0)
     fe_all = jax.tree.map(cat, cache_w, spec_bank.fetched, bank.fetched)
     ids_all = cat(cache_ids, spec_bank.fetched_ids, bank.fetched_ids)
-    # verified validity throughout: checksum-failed rows never map into
-    # the compact bank (a re-fetched duplicate id wins the remap) and
-    # score -inf in the cache insert below (corrupt rows are evicted,
-    # not re-cached)
-    valid_all = cat(cache_valid_v, spec_valid_v, bank_valid_v)
+    # verified validity throughout: checksum-failed (or divergence-
+    # voided) rows never map into the compact bank (a re-fetched
+    # duplicate id wins the remap) and score -inf in the cache insert
+    # below (corrupt rows are evicted, not re-cached)
+    valid_all = cat(cache_valid_v, spec_valid_eff, bank_valid_v)
     y_compact = _remap_and_run(d, fe_all, ids_all, valid_all)
     y = lax.cond(
         fallback,
@@ -1502,10 +1724,46 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
     # cache | this step's fetches); ids stay unique because both fetch
     # rounds excluded the cache (and each other). Branch-independent:
     # fetched rows are bit-exact expert copies even on the fallback. ----
-    score = jnp.where(valid_all, new_ema[ids_all], -jnp.inf)
-    order = jnp.argsort(-score)[:n_cache]
-    nc_ids = ids_all[order]
-    nc_valid = valid_all[order]
+    if sync_free:
+        # mirrored replay: every rank replays EVERY position's cache
+        # bookkeeping from exchanged/mirrored inputs only — the derived
+        # (masks, resid_all) schedules plus the STRUCTURAL (unverified)
+        # carried validity, never the local checksum results, so all
+        # mirrors agree bit-for-bit. A corrupt row that stays cached is
+        # caught again at next step's consume-time verify and re-fetched
+        # through the correction round — still exact, one step later.
+        def replay(q, resid_q, ema_q, cids_q, cvalid_q, mask_q):
+            s_ids, s_valid, _ = prefetch.plan_from_bitmap(
+                mask_q, q, g, local, sbudget
+            )
+            c_ids, c_valid, _ = prefetch.plan_from_bitmap(
+                resid_q, q, g, local, cbudget
+            )
+            ids_q = jnp.concatenate([cids_q, s_ids, c_ids])
+            valid_q = jnp.concatenate(
+                [cvalid_q, s_valid & ~diverged_g, c_valid]
+            )
+            # per-peer exclusion: an excluded peer's rows are never
+            # cached (they would go stale while the peer is distrusted)
+            for peer in xp.exclude_peers:
+                valid_q = valid_q & (ids_q // local != peer % g)
+            score = jnp.where(valid_q, ema_q[ids_q], -jnp.inf)
+            order_q = jnp.argsort(-score)[:n_cache]
+            return ids_q[order_q], valid_q[order_q], order_q
+
+        rep_ids, rep_valid, rep_order = jax.vmap(replay)(
+            jnp.arange(g), resid_all, new_ema_all, m_cids, m_cvalid, masks
+        )
+        nc_ids = lax.dynamic_index_in_dim(rep_ids, p, 0, keepdims=False)
+        nc_valid = lax.dynamic_index_in_dim(
+            rep_valid, p, 0, keepdims=False
+        )
+        order = lax.dynamic_index_in_dim(rep_order, p, 0, keepdims=False)
+    else:
+        score = jnp.where(valid_all, new_ema[ids_all], -jnp.inf)
+        order = jnp.argsort(-score)[:n_cache]
+        nc_ids = ids_all[order]
+        nc_valid = valid_all[order]
     nc_w = jax.tree.map(lambda w: jnp.take(w, order, axis=0), fe_all)
     n_new = jnp.sum(spec_bank.valid) + jnp.sum(bank.valid)
     evicted = jnp.maximum(
@@ -1515,25 +1773,52 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
     # EVERY wanted remote row over the wire, so nothing counts as a hit
     # and the whole wanted set counts as missed (the cache insert still
     # runs, so evictions report either way)
+    zero = jnp.float32(0.0)
     stats = jnp.where(
         fallback,
-        jnp.stack([n_pred, jnp.float32(0.0), n_want, evicted]),
+        jnp.stack([n_pred, zero, zero, n_want, evicted]),
         jnp.stack(
-            [n_pred, n_hit, jnp.sum(bank.valid).astype(jnp.float32),
-             evicted]
+            [n_pred, n_spec, n_cache_hit,
+             jnp.sum(bank.valid).astype(jnp.float32), evicted]
         ),
     )
-    new_pred = prefetch.PredictState(
-        prev=new_prev[None],
-        ema=new_ema[None],
-        cache_ids=nc_ids[None],
-        cache_valid=nc_valid[None],
-        cache=jax.tree.map(lambda w: w[None], nc_w),
-        stats=stats[None],
+    if sync_free:
+        new_pred = prefetch.PredictState(
+            prev=new_prev_all[None],
+            ema=new_ema_all[None],
+            cache_ids=rep_ids[None],
+            cache_valid=rep_valid[None],
+            cache=jax.tree.map(lambda w: w[None], nc_w),
+            stats=stats[None],
+            aff=new_aff[None],
+            posb=new_posb[None],
+            sig=new_sig[None],
+            sigw=new_sigw[None],
+        )
+    else:
+        new_pred = prefetch.PredictState(
+            prev=new_prev[None],
+            ema=new_ema[None],
+            cache_ids=nc_ids[None],
+            cache_valid=nc_valid[None],
+            cache=jax.tree.map(lambda w: w[None], nc_w),
+            stats=stats[None],
+        )
+    div_contrib = (
+        diverged_g.astype(jnp.float32) / n_ranks if sync_free
+        else jnp.float32(0.0)
     )
     if not validate:
+        if sync_free:
+            # unvalidated sync-free still reports: the divergence digest
+            # ran, and the HealthMonitor needs its counter
+            fstats = jnp.concatenate([
+                jnp.zeros((faults.FAULT_STAT_BASE - 1,), jnp.float32),
+                div_contrib[None],
+                jnp.zeros((g,), jnp.float32),
+            ])
+            return y, new_pred, fstats
         return y, new_pred, None
-    sbudget = resolve_spec_budget(cfg, geom, xp, ctx.group)
     if inj is not None:
         inj3 = _injected_counts(
             inj, inj.site_key("spec", step_idx), sbudget, spec_bank.valid
@@ -1550,8 +1835,8 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
     # per-subgroup-position attribution: payload rows by the peer-major
     # bank layout, cache rows by the position owning the expert id
     per_src = (
-        _per_src_detected(bad_spec, min(sbudget, local), g, p)
-        + _per_src_detected(bad_corr, min(budget, local), g, p)
+        _per_src_detected(bad_spec, sbudget, g, p)
+        + _per_src_detected(bad_corr, cbudget, g, p)
         + jnp.zeros((g,), jnp.float32).at[cache_ids // local].add(
             bad_cache.astype(jnp.float32)
         )
@@ -1560,9 +1845,10 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
         inj3,
         inj_cache[None],
         detected[None],
-        # globally agreed flag: contribute 1/n_ranks so the final psum
-        # over every mesh axis reports it once
+        # globally agreed flags: contribute 1/n_ranks so the final psum
+        # over every mesh axis reports each once
         (fault_fb.astype(jnp.float32) / n_ranks)[None],
+        div_contrib[None],
         per_src,
     ])
     return y, new_pred, fstats
@@ -2030,14 +2316,15 @@ def forward_decode(params, batch, state, ctx: Ctx):
     out = {"next_token": nxt[:, None], "state": new_state}
     if new_preds:
         new_state["pred"] = new_preds
-        # per-step predictive counters [predicted, hit, miss, evicted]
-        # rows, summed over layers and (psum) over ranks -> replicated
+        # per-step predictive counters [predicted, spec_hit, cache_hit,
+        # miss, evicted] rows, summed over layers and (psum) over ranks
+        # -> replicated
         pstates = jax.tree.leaves(
             new_preds,
             is_leaf=lambda t: isinstance(t, prefetch.PredictState),
         )
         stats = sum(
-            jnp.sum(p.stats.reshape(-1, 4), axis=0) for p in pstates
+            jnp.sum(p.stats.reshape(-1, 5), axis=0) for p in pstates
         )
         out["pred_stats"] = lax.psum(stats, tuple(ctx.xp.mesh_sizes))
     if fstats is not None:
@@ -2213,11 +2500,15 @@ def init_predict_state(model: Model, xp: ExecutionPlan) -> dict:
     Arrays carry a leading per-RANK dim (``prod(mesh_sizes)``): every
     rank routes its own tokens and caches its own fetched remote rows,
     so the state is genuinely per-device — sharded over ALL mesh axes by
-    ``predict_state_pspecs``, never replicated. Cold state = empty
-    predictor + invalid cache: the first step's speculative round
-    fetches nothing and the correction round degenerates to the plain
-    demand round (or its exact overflow fallback), so cold starts are
-    bitwise-safe by construction."""
+    ``predict_state_pspecs``, never replicated. Sync-free layers
+    additionally carry a per-SUBGROUP-POSITION dim after it (each rank
+    mirrors the predictor + cache *bookkeeping* of every peer in its own
+    subgroup; the cached WEIGHTS stay own-rows-only) plus the richer-
+    predictor slots (aff/posb/sig/sigw). Cold state = empty predictor +
+    invalid cache: the first step's speculative round fetches nothing
+    and the correction round degenerates to the plain demand round (or
+    its exact overflow fallback), so cold starts are bitwise-safe by
+    construction."""
     cfg, geom = model.cfg, model.geom
     n_ranks = math.prod(xp.mesh_sizes.values())
     out: dict = {}
@@ -2234,18 +2525,39 @@ def init_predict_state(model: Model, xp: ExecutionPlan) -> dict:
             rows = resolve_cache_rows(cfg, geom, xp, group.name)
             dm, fe = cfg.d_model, cfg.moe.d_ff
             wdt = model.dtype
-            ps = prefetch.PredictState(
-                prev=jnp.zeros((n_ranks, e_pad), bool),
-                ema=jnp.zeros((n_ranks, e_pad), jnp.float32),
-                cache_ids=jnp.zeros((n_ranks, rows), jnp.int32),
-                cache_valid=jnp.zeros((n_ranks, rows), bool),
-                cache={
-                    "w_gate": jnp.zeros((n_ranks, rows, dm, fe), wdt),
-                    "w_up": jnp.zeros((n_ranks, rows, dm, fe), wdt),
-                    "w_down": jnp.zeros((n_ranks, rows, fe, dm), wdt),
-                },
-                stats=jnp.zeros((n_ranks, 4), jnp.float32),
-            )
+            if sync_free_active(cfg, geom, xp, group.name):
+                gsz = pl.subgroup_size
+                bl = max(1, xp.local_batch)
+                nb = prefetch.N_POS_BUCKETS
+                ps = prefetch.PredictState(
+                    prev=jnp.zeros((n_ranks, gsz, e_pad), bool),
+                    ema=jnp.zeros((n_ranks, gsz, e_pad), jnp.float32),
+                    cache_ids=jnp.zeros((n_ranks, gsz, rows), jnp.int32),
+                    cache_valid=jnp.zeros((n_ranks, gsz, rows), bool),
+                    cache={
+                        "w_gate": jnp.zeros((n_ranks, rows, dm, fe), wdt),
+                        "w_up": jnp.zeros((n_ranks, rows, dm, fe), wdt),
+                        "w_down": jnp.zeros((n_ranks, rows, fe, dm), wdt),
+                    },
+                    stats=jnp.zeros((n_ranks, 5), jnp.float32),
+                    aff=jnp.zeros((n_ranks, gsz, bl, e_pad), jnp.float32),
+                    posb=jnp.zeros((n_ranks, gsz, nb, e_pad), jnp.float32),
+                    sig=jnp.zeros((n_ranks, gsz, 2, e_pad), jnp.float32),
+                    sigw=jnp.zeros((n_ranks, gsz, 2), jnp.float32),
+                )
+            else:
+                ps = prefetch.PredictState(
+                    prev=jnp.zeros((n_ranks, e_pad), bool),
+                    ema=jnp.zeros((n_ranks, e_pad), jnp.float32),
+                    cache_ids=jnp.zeros((n_ranks, rows), jnp.int32),
+                    cache_valid=jnp.zeros((n_ranks, rows), bool),
+                    cache={
+                        "w_gate": jnp.zeros((n_ranks, rows, dm, fe), wdt),
+                        "w_up": jnp.zeros((n_ranks, rows, dm, fe), wdt),
+                        "w_down": jnp.zeros((n_ranks, rows, fe, dm), wdt),
+                    },
+                    stats=jnp.zeros((n_ranks, 5), jnp.float32),
+                )
             if group.scan:
                 ps = jax.tree.map(
                     lambda w: jnp.broadcast_to(
@@ -2291,11 +2603,21 @@ def predict_state_pspecs(model: Model, xp: ExecutionPlan) -> dict:
             def sp(nd):
                 return P(*lead, ra, *([None] * nd))
 
-            gdict[f"pos{j}"] = prefetch.PredictState(
-                prev=sp(1), ema=sp(1), cache_ids=sp(1), cache_valid=sp(1),
-                cache={"w_gate": sp(3), "w_up": sp(3), "w_down": sp(3)},
-                stats=sp(1),
-            )
+            if sync_free_active(cfg, geom, xp, group.name):
+                gdict[f"pos{j}"] = prefetch.PredictState(
+                    prev=sp(2), ema=sp(2), cache_ids=sp(2),
+                    cache_valid=sp(2),
+                    cache={"w_gate": sp(3), "w_up": sp(3), "w_down": sp(3)},
+                    stats=sp(1),
+                    aff=sp(3), posb=sp(3), sig=sp(3), sigw=sp(2),
+                )
+            else:
+                gdict[f"pos{j}"] = prefetch.PredictState(
+                    prev=sp(1), ema=sp(1), cache_ids=sp(1),
+                    cache_valid=sp(1),
+                    cache={"w_gate": sp(3), "w_up": sp(3), "w_down": sp(3)},
+                    stats=sp(1),
+                )
         if gdict:
             out[group.name] = gdict
     return out

@@ -17,7 +17,12 @@ misbehaving peer or flaky interconnect would:
   corruption between steps);
 - ``bad_peers``: subgroup positions whose payload rows ALWAYS drop — a
   persistent straggler/failed peer, the storm that drives the engine's
-  :class:`~repro.runtime.engine.HealthMonitor` down the policy ladder.
+  :class:`~repro.runtime.engine.HealthMonitor` down the policy ladder;
+- ``mirror``: one rank's mirrored ``PredictState`` view drifts for a
+  step (a lost/duplicated correction payload) — the sync-free
+  adversary: the drifted rank derives a DIFFERENT speculative schedule
+  than its peers, which the per-step schedule digest must detect and
+  convert into the (bitwise-exact) full-gather fallback.
 
 Everything is pure JAX: the injector traces into the jitted forward,
 draws its per-row Bernoulli masks from a key chain
@@ -46,14 +51,19 @@ from repro.core.placement import Placement
 #: Layout of the per-step fault-stats vector emitted by the validated
 #: fetch path (length ``FAULT_STAT_BASE + subgroup_size``):
 #: ``[injected_drop, injected_zero, injected_corrupt, injected_cache,
-#: detected, fault_fallbacks, detected_by_src_position...]``. The
-#: per-source tail attributes every detected row to the subgroup
-#: position that served it (cache rows to the position owning the
-#: expert id) — the per-peer signal the HealthMonitor consumes.
-FAULT_STAT_BASE = 6
+#: detected, fault_fallbacks, mirror_divergence,
+#: detected_by_src_position...]``. ``mirror_divergence`` counts decode
+#: steps on which the sync-free mirrored-predictor schedule digest
+#: disagreed across ranks (each divergent step forced the full-gather
+#: fallback); it is 0 on every other fetch mode. The per-source tail
+#: attributes every detected row to the subgroup position that served
+#: it (cache rows to the position owning the expert id) — the per-peer
+#: signal the HealthMonitor consumes.
+FAULT_STAT_BASE = 7
 FAULT_STAT_NAMES = (
     "injected_drop", "injected_zero", "injected_corrupt",
     "injected_cache", "detected", "fault_fallbacks",
+    "mirror_divergence",
 )
 
 
@@ -73,10 +83,16 @@ class FaultSpec:
     corrupt_rate: float = 0.0
     cache_corrupt_rate: float = 0.0
     bad_peers: tuple = ()
+    mirror_rate: float = 0.0
+    # Per-step probability that ONE rank's mirrored PredictState view
+    # drifts (sync_free only): the target rank is drawn rank-
+    # independently so all ranks agree who drifted, but only that rank
+    # perturbs its own mirror row — producing genuinely divergent
+    # speculative schedules for the digest to catch.
 
     def __post_init__(self):
         for name in ("drop_rate", "zero_rate", "corrupt_rate",
-                     "cache_corrupt_rate"):
+                     "cache_corrupt_rate", "mirror_rate"):
             v = getattr(self, name)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"FaultSpec.{name} must be in [0, 1], got {v}")
@@ -93,18 +109,20 @@ class FaultSpec:
         return bool(
             self.drop_rate or self.zero_rate or self.corrupt_rate
             or self.cache_corrupt_rate or self.bad_peers
+            or self.mirror_rate
         )
 
     @classmethod
     def parse(cls, text: str) -> "FaultSpec":
         """Parse the ``--fault-spec`` flag syntax: comma-separated
         ``key=value`` pairs, e.g. ``"seed=3,drop=0.1,corrupt=0.05,
-        peers=2|5"``. Keys: seed, drop, zero, corrupt, cache, peers
-        (``|``-separated subgroup positions)."""
+        peers=2|5"``. Keys: seed, drop, zero, corrupt, cache, mirror,
+        peers (``|``-separated subgroup positions)."""
         kw: dict = {}
         names = {
             "seed": "seed", "drop": "drop_rate", "zero": "zero_rate",
             "corrupt": "corrupt_rate", "cache": "cache_corrupt_rate",
+            "mirror": "mirror_rate",
         }
         for part in text.split(","):
             part = part.strip()
@@ -126,7 +144,7 @@ class FaultSpec:
             else:
                 raise ValueError(
                     f"unknown fault-spec key {k!r} "
-                    f"(expected seed/drop/zero/corrupt/cache/peers)"
+                    f"(expected seed/drop/zero/corrupt/cache/mirror/peers)"
                 )
         return cls(**kw)
 
@@ -134,7 +152,8 @@ class FaultSpec:
         parts = [f"seed={self.seed}"]
         for key, name in (("drop", "drop_rate"), ("zero", "zero_rate"),
                           ("corrupt", "corrupt_rate"),
-                          ("cache", "cache_corrupt_rate")):
+                          ("cache", "cache_corrupt_rate"),
+                          ("mirror", "mirror_rate")):
             v = getattr(self, name)
             if v:
                 parts.append(f"{key}={v}")
@@ -173,6 +192,32 @@ class FaultInjector:
             r = r * s + lax.axis_index(a)
         k = jax.random.fold_in(k, r)
         return jax.random.fold_in(k, jnp.asarray(step, jnp.int32))
+
+    def mirror_flag(self, step) -> jax.Array:
+        """Rank-independent draw for the mirrored-predictor drift fault
+        (sync_free): every rank computes the SAME (fired, target-rank)
+        pair — key chain ``seed -> "mirror" salt -> step`` with NO rank
+        fold — then only the target rank perturbs its own mirror row.
+        That asymmetry is the point: the target genuinely derives a
+        different speculative schedule than its peers, which the
+        psum'd schedule digest must catch. Returns a traced bool:
+        "this rank's mirror drifts this step"."""
+        if not self.spec.mirror_rate:
+            return jnp.asarray(False)
+        k = jax.random.key(self.spec.seed)
+        k = jax.random.fold_in(k, _salt("mirror"))
+        k = jax.random.fold_in(k, jnp.asarray(step, jnp.int32))
+        fired = jax.random.uniform(k) < self.spec.mirror_rate
+        n_ranks = 1
+        for s in self.mesh_sizes.values():
+            n_ranks *= s
+        target = jax.random.randint(
+            jax.random.fold_in(k, 1), (), 0, n_ranks
+        )
+        r = jnp.int32(0)
+        for a, s in self.mesh_sizes.items():
+            r = r * s + lax.axis_index(a)
+        return fired & (r == target)
 
     def payload_masks(self, key, budget: int):
         """Per-row (drop, zero, corrupt) masks for one demand payload

@@ -185,6 +185,19 @@ class DemandBank(NamedTuple):
 #: score reflects roughly the last ~1/(1-decay) steps of routing.
 EMA_DECAY = 0.875
 
+#: Richer-predictor decays (sync-free mode): per-row expert-affinity EMA
+#: (a sequence keeps routing to "its" experts), decode-position bucket
+#: histograms (routing drifts with generation depth), and the per-layer
+#: signal-weight EMA that learns how much each signal helps THIS layer.
+AFF_DECAY = 0.9
+POS_DECAY = 0.96875
+SIGW_DECAY = 0.875
+
+#: Decode positions are histogrammed into ``N_POS_BUCKETS`` buckets of
+#: ``POS_BUCKET_SIZE`` steps each (the last bucket is open-ended).
+N_POS_BUCKETS = 4
+POS_BUCKET_SIZE = 64
+
 
 class PredictState(NamedTuple):
     """Per-layer predictor + residency-cache state for the predictive
@@ -202,8 +215,36 @@ class PredictState(NamedTuple):
     ``cache``: the cached expert weight rows, ``(1, cache_rows, ...)``
     per leaf — bit-identical copies of previously fetched rows, so
     consuming them is exactly equivalent to re-fetching.
-    ``stats``: ``(1, 4)`` f32 per-step counters
-    ``[predicted, hit, miss, evicted]`` expert rows (serving metrics).
+    ``stats``: ``(1, 5)`` f32 per-step counters
+    ``[predicted, spec_hit, cache_hit, corr_rows, evicted]`` expert rows
+    (serving metrics; speculative-round and residency-cache hits are
+    disjoint by construction — the speculative bitmap excludes cached
+    ids).
+
+    **Sync-free (mirrored) mode** (``fetch == "sync_free"``): every rank
+    maintains the GLOBAL per-rank predictor view, so both transfer
+    endpoints derive the identical speculative schedule with zero index
+    exchange. The bookkeeping leaves grow a subgroup dim —
+    ``prev``/``ema`` become ``(1, G', num_padded)``,
+    ``cache_ids``/``cache_valid`` become ``(1, G', cache_rows)`` (mirror
+    bookkeeping of every peer's cache; the cached WEIGHTS stay local-only
+    ``(1, cache_rows, ...)``) — and the richer-predictor fields engage
+    (they are ``None`` in plain predictive mode):
+
+    ``aff``: ``(1, G', rows, num_padded)`` f32 — per-sequence-row
+    expert-affinity EMA (:data:`AFF_DECAY`).
+    ``posb``: ``(1, G', N_POS_BUCKETS, num_padded)`` f32 — decode-
+    position-bucket routing histograms (:data:`POS_DECAY`).
+    ``sig``: ``(1, G', 2, num_padded)`` f32 — the two signals collapsed
+    to per-expert scores at update time (``[affinity, position]``, each
+    normalized to [0, 1]) so predict-time scoring needs no per-row state.
+    ``sigw``: ``(1, G', 2)`` f32 — per-layer signal weights, EMA-learned
+    from each signal's measured alignment with the step's actual routing
+    (:data:`SIGW_DECAY`).
+
+    Every sync-free field is updated ONLY from the packed correction-
+    round payload (:func:`pack_correction_payload`), which all ranks see
+    identically — the mirror never drifts on a healthy step.
     """
 
     prev: jax.Array
@@ -212,6 +253,10 @@ class PredictState(NamedTuple):
     cache_valid: jax.Array
     cache: PyTree
     stats: jax.Array
+    aff: Any = None
+    posb: Any = None
+    sig: Any = None
+    sigw: Any = None
 
 
 class DemandPlan(NamedTuple):
@@ -531,6 +576,27 @@ def plan_demand_fetch(
     masks = jax.lax.all_gather(
         wanted, axis, axis_index_groups=placement.axis_index_groups()
     )  # (G', num_padded), subgroup-position-major
+    fetched_ids, valid, overflow = plan_from_bitmap(
+        wanted, p, g, local, budget
+    )
+    if agree_axes:
+        overflow = jax.lax.psum(overflow.astype(jnp.float32), agree_axes) > 0
+    return DemandPlan(
+        masks=masks, fetched_ids=fetched_ids, valid=valid, overflow=overflow
+    )
+
+
+def plan_from_bitmap(
+    wanted: jax.Array, p: Any, g: int, local: int, budget: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Requester-side fetch schedule of subgroup position ``p`` from one
+    ``(num_padded,)`` wanted bitmap: the per-peer ascending-id
+    compaction, peer-major (distance 1 first), padded to ``budget``.
+    Returns ``(fetched_ids, valid, overflow)`` with a RAW (un-agreed)
+    overflow flag. Pure index arithmetic — both transfer endpoints (and,
+    in sync-free mode, every mirror replaying peer ``p``'s schedule)
+    compute the identical result from the identical bitmap; ``p`` may be
+    traced or a Python int."""
     ids, valids = [], []
     overflow = jnp.bool_(False)
     for t in range(1, g):
@@ -542,11 +608,7 @@ def plan_demand_fetch(
         overflow = overflow | (cnt > budget)
     fetched_ids = jnp.concatenate(ids) if ids else jnp.zeros((0,), jnp.int32)
     valid = jnp.concatenate(valids) if valids else jnp.zeros((0,), bool)
-    if agree_axes:
-        overflow = jax.lax.psum(overflow.astype(jnp.float32), agree_axes) > 0
-    return DemandPlan(
-        masks=masks, fetched_ids=fetched_ids, valid=valid, overflow=overflow
-    )
+    return fetched_ids, valid, overflow
 
 
 def _demand_send_one(
@@ -657,6 +719,8 @@ def predict_bitmap(
     budget: int,
     exclude_ids: Any = None,
     exclude_valid: Any = None,
+    extra_score: Any = None,
+    exclude_peers: tuple = (),
 ) -> jax.Array:
     """The speculative round's predicted-expert bitmap: per subgroup
     slice, the top-``budget`` experts by hotness score — previous-step
@@ -666,16 +730,28 @@ def predict_bitmap(
     compaction lossless for the hot set (nothing hot is clamped away) and
     makes speculative overflow impossible by construction. Cold experts
     (score 0) are never speculated. Pure index arithmetic — no data-
-    dependent shapes, no collectives."""
+    dependent shapes, no collectives.
+
+    ``extra_score`` (optional): a ``(num_padded,)`` f32 additive score
+    term — the sync-free mode's weighted richer-predictor signals
+    (:func:`update_predictor`).
+    ``exclude_peers`` (optional): static subgroup positions whose experts
+    are dropped from the speculative schedule (the per-peer health
+    exclusion rung — a persistently bad peer's rows route through the
+    validated correction round instead)."""
     e_pad = placement.num_padded
     local = placement.local_count
     budget = min(budget, local)
     score = prev.astype(jnp.float32) * 2.0 + ema
+    if extra_score is not None:
+        score = score + extra_score
     if exclude_ids is not None:
         score = jnp.where(
             exclude_bitmap(e_pad, exclude_ids, exclude_valid), 0.0, score
         )
     rows = score.reshape(placement.subgroup_size, local)
+    for peer in exclude_peers:
+        rows = rows.at[int(peer) % placement.subgroup_size].set(0.0)
     top_vals, top_idx = jax.lax.top_k(rows, budget)  # (G', budget)
     base = (
         jnp.arange(placement.subgroup_size, dtype=jnp.int32)[:, None] * local
@@ -684,6 +760,133 @@ def predict_bitmap(
     keep = (top_vals > 0.0).reshape(-1)
     out = jnp.zeros((e_pad,), bool)
     return out.at[jnp.where(keep, ids, e_pad)].set(True, mode="drop")
+
+
+# --------------------------------------------------------------------------
+# Sync-free decode: mirrored-predictor helpers.
+#
+# In ``fetch == "sync_free"`` the speculative round carries ZERO index
+# metadata: every rank derives the (identical) speculative schedule of
+# EVERY subgroup peer from mirrored PredictState, so senders and
+# requesters agree on the payload compaction without exchanging bitmaps.
+# The mirror is kept consistent by construction — its only inputs are the
+# packed correction-round payload below (which every rank receives
+# identically) — and cross-checked each step by a psum'd schedule digest
+# (a scalar, not a bitmap round).
+# --------------------------------------------------------------------------
+def routed_bitmaps(top_experts: jax.Array, num_padded: int) -> jax.Array:
+    """Per-row activated-expert bitmaps ``(rows, num_padded)`` from the
+    router's ``(rows, top_k)`` expert ids — the per-row half of the
+    packed correction payload (the rows-union is the classic ``wanted``
+    bitmap; the per-row split is what feeds the affinity predictor)."""
+    rows = top_experts.shape[0]
+    out = jnp.zeros((rows, num_padded), bool)
+    return out.at[
+        jnp.arange(rows)[:, None], top_experts
+    ].set(True, mode="drop")
+
+
+def position_buckets(pos: jax.Array) -> jax.Array:
+    """``(rows, N_POS_BUCKETS)`` bool one-hot of each row's decode-
+    position bucket (``pos // POS_BUCKET_SIZE``, last bucket
+    open-ended)."""
+    b = jnp.clip(pos // POS_BUCKET_SIZE, 0, N_POS_BUCKETS - 1)
+    return b[..., None] == jnp.arange(N_POS_BUCKETS)
+
+
+def pack_correction_payload(
+    residual: jax.Array, routed: jax.Array, buckets: jax.Array
+) -> jax.Array:
+    """Flatten one rank's correction-round metadata into a single bool
+    vector: ``[residual (num_padded,) | routed (rows * num_padded,) |
+    buckets (rows * N_POS_BUCKETS,)]``. ONE all-gather of this vector is
+    the sync-free mode's whole per-layer index traffic — it both plans
+    the correction fetch (the residual bitmaps) and feeds every mirror's
+    predictor fold (the per-row routing + position signals)."""
+    return jnp.concatenate(
+        [residual, routed.reshape(-1), buckets.reshape(-1)]
+    )
+
+
+def unpack_correction_payload(
+    packed: jax.Array, num_padded: int, rows: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Inverse of :func:`pack_correction_payload` (leading dims pass
+    through, so it unpacks the all-gathered ``(G', total)`` form too)."""
+    resid = packed[..., :num_padded]
+    r_end = num_padded + rows * num_padded
+    routed = packed[..., num_padded:r_end].reshape(
+        packed.shape[:-1] + (rows, num_padded)
+    )
+    buckets = packed[..., r_end:].reshape(
+        packed.shape[:-1] + (rows, N_POS_BUCKETS)
+    )
+    return resid, routed, buckets
+
+
+def predict_extra_score(sig: jax.Array, sigw: jax.Array) -> jax.Array:
+    """The richer predictors' additive score term for
+    :func:`predict_bitmap`: the per-layer-weighted sum of the collapsed
+    signals — ``(2, num_padded)`` x ``(2,)`` -> ``(num_padded,)``. Both
+    factors live in [0, 1], so the term can add at most 2.0 — it fills
+    the speculative budget with warm candidates but never outranks a
+    previous-step activation (score +2) plus any EMA mass."""
+    return jnp.einsum("s,se->e", sigw, sig)
+
+
+def update_predictor(
+    ema: jax.Array,
+    aff: jax.Array,
+    posb: jax.Array,
+    sigw: jax.Array,
+    routed: jax.Array,
+    buckets: jax.Array,
+):
+    """Fold one step of one rank's exchanged routing into its predictor
+    slots. Shared verbatim by the rank itself and by every mirror
+    (vmapped over the subgroup dim in sync-free mode), so the fold is
+    deterministic in the exchanged payload alone — identical inputs on
+    every rank produce bit-identical mirrored state.
+
+    ``routed``: ``(rows, num_padded)`` bool per-row routed bitmaps;
+    ``buckets``: ``(rows, N_POS_BUCKETS)`` bool position one-hots (both
+    straight out of :func:`unpack_correction_payload`).
+    Returns ``(prev, ema, aff, posb, sig, sigw)`` — ``prev`` is the
+    rows-union activation bitmap; ``sig`` holds the two signals
+    collapsed to per-expert scores and normalized to [0, 1]; ``sigw``
+    is EMA-updated from each signal's measured alignment with the
+    experts this step actually routed to (a signal that keeps pointing
+    at the right experts earns weight; a useless one decays)."""
+    union = jnp.any(routed, axis=0)
+    uf = union.astype(jnp.float32)
+    new_ema = EMA_DECAY * ema + (1.0 - EMA_DECAY) * uf
+    rf = routed.astype(jnp.float32)
+    bf = buckets.astype(jnp.float32)
+    new_aff = AFF_DECAY * aff + (1.0 - AFF_DECAY) * rf
+    new_posb = POS_DECAY * posb + (1.0 - POS_DECAY) * jnp.einsum(
+        "bn,be->ne", bf, rf
+    )
+    aff_sig = jnp.max(new_aff, axis=0)
+    pos_sig = jnp.max(bf @ new_posb, axis=0)
+    sig = jnp.stack([aff_sig, pos_sig])
+    sig = sig / jnp.maximum(jnp.max(sig, axis=1, keepdims=True), 1e-6)
+    qual = jnp.sum(sig * uf[None, :], axis=1) / jnp.maximum(jnp.sum(uf), 1.0)
+    new_sigw = jnp.clip(
+        SIGW_DECAY * sigw + (1.0 - SIGW_DECAY) * qual, 0.0, 1.0
+    )
+    return union, new_ema, new_aff, new_posb, sig, new_sigw
+
+
+def schedule_digest(masks: jax.Array) -> jax.Array:
+    """Scalar f32 digest of a derived speculative schedule: the
+    positionally-weighted sum of the mask bits. Integer-valued by
+    construction (small positive integer weights x 0/1 bits), so the
+    cross-rank agreement test ``|G' * own - psum(own)| > 0.5`` is exact
+    arithmetic, not a float tolerance. Distinct schedules collide only
+    on tied weighted sums — the same residual-risk class as the payload
+    checksums (docs/robustness.md)."""
+    flat = masks.reshape(-1).astype(jnp.float32)
+    return jnp.sum(flat * _cs_weights(flat.shape[0]))
 
 
 def gather_demand_bank(
@@ -804,3 +1007,28 @@ def demand_fetch_bytes(
     meta = placement.num_padded * (5 if validate else 1)
     full = (g - 1) * placement.local_count * bytes_per_expert
     return min(full, (g - 1) * (budget * bytes_per_expert + meta))
+
+
+def sync_free_fetch_bytes(
+    placement: Placement, spec_budget: int, corr_budget: int, rows: int,
+    bytes_per_expert: int, *, validate: bool = False,
+) -> dict:
+    """Per-ROUND wire bytes per rank per layer of the sync-free fetch:
+    ``{"spec": ..., "corr": ...}``. The speculative round is PURE
+    payload — zero index metadata, the schedule is derived from the
+    mirrored predictor on both endpoints. The correction round carries
+    its payload plus the one packed bool all-gather
+    (:func:`pack_correction_payload`: residual bitmap + ``rows`` per-row
+    routed bitmaps + position one-hots, 1 byte/bit from each subgroup
+    peer) and, when ``validate``, the f32 checksum table that now rides
+    here instead of the (gone) speculative index round."""
+    g = placement.subgroup_size
+    e = placement.num_padded
+    sb = min(spec_budget, placement.local_count)
+    cb = min(corr_budget, placement.local_count)
+    packed = e * (1 + rows) + rows * N_POS_BUCKETS
+    meta = packed + (4 * e if validate else 0)
+    return {
+        "spec": (g - 1) * sb * bytes_per_expert,
+        "corr": (g - 1) * (cb * bytes_per_expert + meta),
+    }

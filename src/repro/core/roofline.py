@@ -114,6 +114,7 @@ def predictive_fetch_terms(
     cache_hit: Optional[float] = None,
     predict_hit: Optional[float] = None,
     validate: bool = False,
+    sync_free: bool = False,
 ) -> tuple[float, float]:
     """Per-rank wire terms of the predictive expert fetch as
     ``(total_bytes, serial_bytes)``:
@@ -136,6 +137,13 @@ def predictive_fetch_terms(
     improve on this). ``validate`` prices the fault-tolerant fetch's
     per-row checksum table riding each index round (f32 per expert per
     peer — ``prefetch.demand_fetch_bytes``'s wire format).
+
+    ``sync_free`` models the mirrored-predictor mode: the speculative
+    round is PURE payload — both endpoints derive the schedule from
+    mirrored PredictState, so its bitmap index round disappears from
+    the wire entirely. The correction round keeps its index metadata
+    (the packed routing/position payload that feeds every mirror, plus
+    the checksum table when validated rides there too).
     """
     sub = max(1, group // redundancy)
     if sub <= 1:
@@ -158,7 +166,8 @@ def predictive_fetch_terms(
             tokens * top_k
         )
     index_round = (sub - 1) * num_experts * (5 if validate else 1)
-    spec_b = ((sub - 1) * spec * bytes_per_expert + index_round) * (
+    spec_index = 0.0 if sync_free else index_round
+    spec_b = ((sub - 1) * spec * bytes_per_expert + spec_index) * (
         1.0 - cache_hit
     )
     corr_b = ((sub - 1) * corr * bytes_per_expert + index_round) * (
@@ -363,14 +372,20 @@ def layer_times(
                 redundancy=redundancy, budget=budget, validate=validate,
             )
             serial_bytes = prefetch_bytes
-        elif expert_fetch == "predictive" and layout == "split" and partial:
+        elif (
+            expert_fetch in ("predictive", "sync_free")
+            and layout == "split" and partial
+        ):
             # speculative round overlapped a layer ahead + serial
-            # correction round covering only the (hit-rate-scaled) misses
+            # correction round covering only the (hit-rate-scaled)
+            # misses; sync_free additionally drops the speculative
+            # round's bitmap exchange (mirrored predictor)
             prefetch_bytes, serial_bytes = predictive_fetch_terms(
                 tokens, k, e, group, 3 * d * f * weight_bytes,
                 redundancy=redundancy, budget=budget,
                 cache_rows=cache_rows, cache_hit=cache_hit,
                 predict_hit=predict_hit, validate=validate,
+                sync_free=expert_fetch == "sync_free",
             )
         # HBM landing write of the gathered bank: full layer (merged) vs
         # remote-only (split — the eliminated merge copy shows up here;
@@ -500,14 +515,31 @@ def degraded_step_times(
         cfg, tokens=tokens, group=group, hw=hw, policies=policies,
         validate=False, **kw,
     )
-    for level, (fetch, table) in enumerate(degradation_ladder(policies)):
+    for level, (label, table, excl) in enumerate(
+        degradation_ladder(policies)
+    ):
+        sub_kw = dict(kw)
+        if excl is None or excl:
+            # the per-peer exclusion rung: the bad peer's experts leave
+            # the speculative schedule and re-route through the (still
+            # validated) correction round — priced as a predictor
+            # hit-rate haircut of one peer's share of the remote bank
+            ph = sub_kw.get("predict_hit")
+            if ph is None and cfg.moe is not None:
+                ph = 1.0 - (
+                    1.0 - 1.0 / max(1, cfg.moe.num_experts)
+                ) ** (tokens * cfg.moe.top_k)
+            if ph is not None:
+                sub_kw["predict_hit"] = (
+                    ph * max(0, group - 2) / max(1, group - 1)
+                )
         t = modeled_step_time(
             cfg, tokens=tokens, group=group, hw=hw, policies=table,
-            validate=validate, **kw,
+            validate=validate, **sub_kw,
         )
         rows.append({
             "level": level,
-            "fetch": fetch,
+            "fetch": label,
             "t_step_us": t * 1e6,
             "vs_healthy": t / max(base, 1e-30),
         })

@@ -113,7 +113,7 @@ PREFETCH_MODES = ("allgather", "ring", "ring_sliced")
 WEIGHT_LAYOUTS = ("merged", "split")
 MOE_FFN_MODES = WEIGHT_LAYOUTS  # deprecated alias (PR 1 name)
 CAPACITY_FROM = ("local", "global")
-EXPERT_FETCH = ("all", "demand", "predictive")
+EXPERT_FETCH = ("all", "demand", "predictive", "sync_free")
 
 #: The gathered-weight families a PolicyTable addresses. ``default``
 #: additionally backs any family without its own entry.
@@ -140,9 +140,14 @@ class GatherPolicy:
     ``layout``: gathered representation — "split" (remote-only SplitBank)
     or "merged" (explicit-merge canonical buffer).
     ``fetch``: expert-gather selection — "all", "demand"
-    (route-before-gather) or "predictive" (route-before-gather with a
+    (route-before-gather), "predictive" (route-before-gather with a
     layer-ahead speculative round + cross-step residency cache; decode
-    only, elsewhere it behaves exactly like "demand"). Both non-"all"
+    only, elsewhere it behaves exactly like "demand") or "sync_free"
+    (predictive's mirrored-predictor successor: both transfer endpoints
+    derive the speculative schedule from mirrored PredictState, so the
+    speculative round ships pure payload with ZERO index exchange, and
+    richer per-sequence/position predictors starve the correction
+    round; decode only, elsewhere exactly "demand"). All non-"all"
     modes are meaningful for ``moe_experts`` only and require the split
     layout.
     ``transport``: the prefetch collective schedule for this family.
@@ -180,7 +185,7 @@ class GatherPolicy:
                 f"unknown transport {self.transport!r}; expected one of "
                 f"{PREFETCH_MODES}"
             )
-        if self.fetch in ("demand", "predictive") and self.layout != "split":
+        if self.fetch != "all" and self.layout != "split":
             raise ValueError(
                 f'fetch="{self.fetch}" requires the split layout (the '
                 f"demand bank is a split-bank refinement); got layout="
@@ -194,11 +199,13 @@ class GatherPolicy:
             raise ValueError(
                 f"cache_budget must be >= 0, got {self.cache_budget}"
             )
-        if self.cache_budget and self.fetch != "predictive":
+        if self.cache_budget and self.fetch not in (
+            "predictive", "sync_free"
+        ):
             raise ValueError(
-                "cache_budget only applies to the predictive fetch (the "
-                f'residency cache rides the predictive rounds); got it '
-                f"with fetch={self.fetch!r}"
+                "cache_budget only applies to the predictive/sync_free "
+                f"fetch (the residency cache rides the predictive "
+                f"rounds); got it with fetch={self.fetch!r}"
             )
 
     @classmethod
@@ -265,9 +272,7 @@ def _check_family(name: str, *, allow_default: bool = True) -> None:
 
 
 def _check_fetch_applies(family: str, pol: GatherPolicy) -> None:
-    if pol.fetch in ("demand", "predictive") and family not in (
-        "moe_experts", "default"
-    ):
+    if pol.fetch != "all" and family not in ("moe_experts", "default"):
         raise ValueError(
             f'fetch="{pol.fetch}" only applies to the moe_experts family '
             f"(route-before-gather is an expert-bank feature); got it for "
@@ -326,10 +331,10 @@ class PolicyTable:
         pol = GatherPolicy(layout=layout, fetch=fetch, transport=transport,
                            num_slices=num_slices, budget=budget,
                            cache_budget=cache_budget)
-        if pol.fetch in ("demand", "predictive"):
-            # demand/predictive only ever applied to the expert bank; a
-            # uniform table of either means that expert fetch + all-fetch
-            # for the rest
+        if pol.fetch != "all":
+            # demand/predictive/sync_free only ever apply to the expert
+            # bank; a uniform table of any means that expert fetch +
+            # all-fetch for the rest
             return cls(
                 default=dataclasses.replace(
                     pol, fetch="all", budget=0, cache_budget=0
@@ -435,6 +440,15 @@ class ExecutionPlan:
     # through the correction round / axis-agreed full-gather fallback,
     # so outputs stay bitwise-exact; per-step fault counters ride the
     # decode output ("fault_stats").
+    exclude_peers: tuple = ()
+    # Subgroup peer indices whose rows are dropped from the SPECULATIVE
+    # plan and residency-cache bookkeeping (the HealthMonitor's
+    # finer-grained "+excl" degradation rung — avoid a flaky peer
+    # without giving up predictive/sync_free fetch entirely). The
+    # correction round still fetches from every peer (validated +
+    # repaired), so outputs stay bitwise-exact; excluded rows simply
+    # always ride the correction round. Static: changing it rebuilds
+    # the jitted step.
 
     @property
     def validated(self) -> bool:
@@ -597,7 +611,7 @@ def _family_remote_bank_bytes(
                 pl.local_count,
             )
             rows = (pl.subgroup_size - 1) * min(b, pl.local_count)
-        elif fetch == "predictive":
+        elif fetch in ("predictive", "sync_free"):
             from repro.core.roofline import predictive_budget_rows
 
             if budget > 0:
@@ -762,11 +776,16 @@ def resolve_policies(
 
     # -- enumerate (layout, fetch) candidates; preferred (cheaper wire /
     # HBM) first so strict-< scoring keeps them on ties ------------------
-    # predictive only at decode shapes: the predictor + residency cache
-    # need the cross-step PredictState the decode loop threads (any other
-    # phase runs it as plain demand, so it could never score better)
+    # predictive/sync_free only at decode shapes: the predictor +
+    # residency cache need the cross-step PredictState the decode loop
+    # threads (any other phase runs them as plain demand, so they could
+    # never score better). sync_free leads: same payload rounds, minus
+    # the speculative bitmap exchange.
     predictive_ok = demand_ok and shape.phase == "decode"
-    moe_cands = [("split", "predictive")] if predictive_ok else []
+    moe_cands = (
+        [("split", "sync_free"), ("split", "predictive")]
+        if predictive_ok else []
+    )
     if demand_ok:
         moe_cands.append(("split", "demand"))
     if moe_split_ok:
@@ -786,7 +805,9 @@ def resolve_policies(
     for moe_layout, fetch in moe_cands:
         moe_pol = GatherPolicy(
             layout=moe_layout, fetch=fetch,
-            cache_budget=cache_rows if fetch == "predictive" else 0,
+            cache_budget=(
+                cache_rows if fetch in ("predictive", "sync_free") else 0
+            ),
         )
         for qkv_layout in dense_cands(attn_split_ok):
             for out_layout in dense_cands(attn_split_ok):
@@ -844,9 +865,9 @@ def effective_policies(
               "attn_out": elig.attn_ok, "dense_ffn": elig.ffn_ok}[name]
         layout = pol.layout if (pol.layout == "merged" or ok) else "merged"
         fetch = pol.fetch if name == "moe_experts" else "all"
-        if fetch == "predictive" and shape.phase != "decode":
+        if fetch in ("predictive", "sync_free") and shape.phase != "decode":
             fetch = "demand"
-        if fetch in ("demand", "predictive") and not elig.demand_ok:
+        if fetch != "all" and not elig.demand_ok:
             fetch = "all"
         if fetch == "all":
             return GatherPolicy(layout=layout, transport=pol.transport,
@@ -855,7 +876,10 @@ def effective_policies(
             pol, layout=layout, fetch=fetch,
             # demand carries no residency cache — dropping it here keeps
             # the demoted policy constructible (validated on replace)
-            cache_budget=pol.cache_budget if fetch == "predictive" else 0,
+            cache_budget=(
+                pol.cache_budget
+                if fetch in ("predictive", "sync_free") else 0
+            ),
         )
 
     fams = tuple(
@@ -870,11 +894,12 @@ def effective_policies(
 # --------------------------------------------------------------------------
 #: Aggressiveness rank of the expert-fetch modes: lower = more wire
 #: savings, more exposure to peer faults. The HealthMonitor demotes a
-#: serving policy DOWN this ladder (predictive -> demand -> all) when a
-#: peer turns persistently bad — each step removes one dependency on
-#: per-peer cooperation (the residency cache / speculative round first,
-#: then the demand rounds entirely) — and promotes back on recovery.
-_FETCH_RANK = {"predictive": 0, "demand": 1, "all": 2}
+#: serving policy DOWN this ladder (sync_free/predictive -> demand ->
+#: all) when a peer turns persistently bad — each step removes one
+#: dependency on per-peer cooperation (the residency cache / speculative
+#: round first, then the demand rounds entirely) — and promotes back on
+#: recovery.
+_FETCH_RANK = {"sync_free": 0, "predictive": 1, "demand": 2, "all": 3}
 
 
 def degrade_policy_table(table: PolicyTable, fetch: str) -> PolicyTable:
@@ -906,17 +931,29 @@ def degrade_policy_table(table: PolicyTable, fetch: str) -> PolicyTable:
 
 def degradation_ladder(
     table: PolicyTable,
-) -> tuple[tuple[str, PolicyTable], ...]:
+) -> tuple[tuple[str, PolicyTable, Optional[tuple]], ...]:
     """The engine's fault-degradation ladder for a RESOLVED policy
-    table: ``((label, table), ...)`` from level 0 (as configured) down
-    to the all-gather floor, with no-op levels collapsed — a table
-    already at ``fetch="all"`` has a one-level ladder. Labels are the
-    expert-fetch mode each level runs."""
-    out = [(table.family("moe_experts").fetch, table)]
+    table: ``((label, table, exclude_peers), ...)`` from level 0 (as
+    configured) down to the all-gather floor, with no-op levels
+    collapsed — a table already at ``fetch="all"`` has a one-level
+    ladder. Labels are the expert-fetch mode each level runs.
+
+    ``exclude_peers`` is ``()`` for the ordinary rungs. When the root
+    fetch is predictive/sync_free a finer-grained ``"<fetch>+excl"``
+    rung sits between it and the demand demotion: same table, but with
+    the (runtime-chosen) worst peer's rows dropped from the speculative
+    plan and residency cache — ``None`` here means "the engine fills in
+    its HealthMonitor's worst peer when stepping onto the rung"."""
+    root_fetch = table.family("moe_experts").fetch
+    out: list[tuple[str, PolicyTable, Optional[tuple]]] = [
+        (root_fetch, table, ())
+    ]
+    if root_fetch in ("predictive", "sync_free"):
+        out.append((f"{root_fetch}+excl", table, None))
     for fetch in ("demand", "all"):
         t = degrade_policy_table(table, fetch)
         if t != out[-1][1]:
-            out.append((fetch, t))
+            out.append((fetch, t, ()))
     return tuple(out)
 
 
@@ -934,6 +971,7 @@ def make_execution_plan(
     hw=None,
     fault_spec=None,
     validate_fetch: bool = False,
+    exclude_peers: tuple = (),
     # -- deprecated flat knobs (build a uniform PolicyTable) --------------
     prefetch: Optional[str] = None,
     num_slices: Optional[int] = None,
@@ -1014,6 +1052,7 @@ def make_execution_plan(
         capacity_from=capacity_from,
         fault_spec=fault_spec,
         validate_fetch=validate_fetch,
+        exclude_peers=tuple(int(p) for p in exclude_peers),
     )
 
 

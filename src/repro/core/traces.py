@@ -1,0 +1,102 @@
+"""Seeded synthetic routing traces for the predictor test-bench.
+
+Real MoE decode routing is heavily skewed: a small hot set of experts
+takes most of the traffic (Zipf-like popularity), each *sequence* keeps
+re-routing to "its" experts (affinity), and the hot set drifts slowly
+with generation depth (phase changes). The sync-free mode's acceptance
+criterion — speculative hit rate >= 0.9 with a budget far below the
+expert count — is a statement about routing with this structure, not
+about uniform-random draws (which no budget-bounded predictor can beat).
+
+:func:`zipf_routing_trace` generates such traces deterministically from
+a seed: ``(steps, rows, top_k)`` expert ids drawn without replacement
+per row per step from a mixture of
+
+- a global Zipf popularity ranking (exponent ``alpha``) over a seeded
+  expert permutation,
+- a per-row hot set (each row's own permutation of the top experts),
+  mixed in with probability ``affinity``,
+- and slow drift: every ``drift_every`` steps the global ranking
+  rotates by one hot slot, so traces exercise the predictors' decay
+  (EMA / affinity / position-bucket) rather than a frozen distribution.
+
+Pure NumPy (the generator feeds host-side test loops and benchmark
+drivers; nothing here traces into XLA).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def zipf_scores(num_experts: int, alpha: float = 1.2) -> np.ndarray:
+    """Unnormalized Zipf popularity by rank: ``1 / rank^alpha``."""
+    if num_experts < 1:
+        raise ValueError(f"num_experts must be >= 1, got {num_experts}")
+    return 1.0 / np.arange(1, num_experts + 1, dtype=np.float64) ** alpha
+
+
+def zipf_routing_trace(
+    steps: int,
+    rows: int,
+    num_experts: int,
+    top_k: int,
+    *,
+    alpha: float = 1.2,
+    affinity: float = 0.6,
+    drift_every: int = 0,
+    seed: int = 0,
+) -> np.ndarray:
+    """Seeded skewed routing trace ``(steps, rows, top_k)`` int32.
+
+    ``alpha``: Zipf exponent of the global popularity ranking (0 =
+    uniform routing — the adversarial floor for any predictor).
+    ``affinity``: probability mass of each row's personal hot set (its
+    own seeded permutation of the globally-hottest ``4 * top_k``
+    experts), mixed into the global distribution per row.
+    ``drift_every``: if > 0, rotate the global ranking by one position
+    every that many steps (slow hot-set drift).
+
+    Per row and step the ``top_k`` ids are drawn WITHOUT replacement
+    (matching a router's distinct top-k), so every trace slots directly
+    into :func:`repro.core.prefetch.routed_bitmaps`.
+    """
+    if top_k > num_experts:
+        raise ValueError(f"top_k {top_k} > num_experts {num_experts}")
+    if not 0.0 <= affinity <= 1.0:
+        raise ValueError(f"affinity must be in [0, 1], got {affinity}")
+    rng = np.random.default_rng(seed)
+    base = zipf_scores(num_experts, alpha)
+    global_rank = rng.permutation(num_experts)
+    hot_n = min(num_experts, 4 * top_k)
+    # each row's personal hot set: a seeded shuffle of the global hot set
+    row_hot = np.stack(
+        [rng.permutation(hot_n) for _ in range(rows)]
+    )
+    out = np.empty((steps, rows, top_k), np.int32)
+    for s in range(steps):
+        if drift_every and s and s % drift_every == 0:
+            global_rank = np.roll(global_rank, 1)
+        p_global = np.empty(num_experts, np.float64)
+        p_global[global_rank] = base
+        p_global /= p_global.sum()
+        for r in range(rows):
+            p = (1.0 - affinity) * p_global
+            hot_ids = global_rank[row_hot[r]]
+            # the row's hot mass, itself rank-skewed within the hot set
+            p[hot_ids] += affinity * (base[:hot_n] / base[:hot_n].sum())
+            p /= p.sum()
+            out[s, r] = rng.choice(
+                num_experts, size=top_k, replace=False, p=p
+            ).astype(np.int32)
+    return out
+
+
+def trace_skew(trace: np.ndarray, num_experts: int) -> float:
+    """Fraction of all draws landing in the trace's own top-``k`` hottest
+    experts, where ``k = top_k`` of the trace — 1.0 for a frozen hot set,
+    ``top_k / num_experts`` for uniform routing. A quick scalar check
+    that a generated trace is actually skewed."""
+    k = trace.shape[-1]
+    counts = np.bincount(trace.reshape(-1), minlength=num_experts)
+    top = np.sort(counts)[::-1][:k].sum()
+    return float(top) / float(trace.size)

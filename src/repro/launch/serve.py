@@ -14,10 +14,12 @@ or ``--policy-file policies.json`` (the ``PolicyTable.to_dict`` JSON
 shape, ``{"family_or_default": "layout[:fetch[:transport...]]"}``), or
 ``--policy auto`` for the roofline-guided resolver. Expert fetch modes:
 ``all`` (every remote expert every layer), ``demand``
-(route-before-gather) and ``predictive`` (speculative layer-ahead round
+(route-before-gather), ``predictive`` (speculative layer-ahead round
 + cross-step residency cache — ``--cache-budget`` rows per layer; auto
-picks it at decode shapes where the overlap pays). The pre-PolicyTable
-flags (``--weight-layout`` / ``--expert-fetch`` / ``--demand-budget`` /
+picks it at decode shapes where the overlap pays) and ``sync_free``
+(mirrored-predictor decode: the speculative round ships zero index
+metadata; see docs/syncfree.md). The pre-PolicyTable flags
+(``--weight-layout`` / ``--expert-fetch`` / ``--demand-budget`` /
 ``--cache-budget``) keep working as the uniform-table spelling and may
 not be combined with ``--policy``.
 
@@ -26,8 +28,8 @@ deterministic peer faults into the fetch rounds (outputs stay
 bitwise-exact through the checksum-repair path), ``--validate-fetch``
 turns on validation without injection, and the ``--health-*`` knobs
 tune the HealthMonitor that walks the gather policy down the
-predictive -> demand -> all-gather ladder under persistent peer
-badness (and back up on recovery).
+sync_free/predictive -> per-peer exclusion -> demand -> all-gather
+ladder under persistent peer badness (and back up on recovery).
 """
 from __future__ import annotations
 
@@ -195,12 +197,14 @@ def main(argv=None):
                          "weights and gathers per layer — the mode the "
                          "on-demand expert fetch accelerates)")
     ap.add_argument("--expert-fetch", default=None,
-                    choices=["all", "demand", "predictive"],
+                    choices=["all", "demand", "predictive", "sync_free"],
                     help="uniform MoE expert-gather selection (the "
                          "pre-PolicyTable spelling of --policy "
                          "moe_experts=split:FETCH); 'predictive' adds "
                          "the layer-ahead speculative round + cross-step "
-                         "residency cache at decode")
+                         "residency cache at decode; 'sync_free' mirrors "
+                         "the predictor on every rank so the speculative "
+                         "round carries zero index metadata")
     ap.add_argument("--demand-budget", type=int, default=None,
                     help="per-peer demand-fetch row budget (0 = auto: 2x "
                          "the expected distinct-expert coverage; for "

@@ -117,6 +117,14 @@ class HealthMonitor:
             return "promote"
         return None
 
+    def worst_peer(self) -> Optional[int]:
+        """Subgroup position with the highest fault-pressure EMA (None
+        before any observation) — the peer the ladder's per-peer
+        exclusion rung drops from the speculative/cache plans."""
+        if self.ema.size == 0:
+            return None
+        return int(np.argmax(self.ema))
+
 
 class ContextServer:
     """Prefill worker: returns (first_token, captured decode state)."""
@@ -204,12 +212,15 @@ class GenerationServer:
         )
         # graceful-degradation ladder over the resolved policy table:
         # level 0 is the configured table; each further level leans one
-        # notch less on per-peer payload rounds (predictive -> demand ->
-        # all-gather). Plans/steps are built lazily per level and cached;
-        # see set_level for the predictive-state handoff.
+        # notch less on per-peer payload rounds (predictive/sync_free ->
+        # per-peer exclusion -> demand -> all-gather). Plans/steps are
+        # built lazily per (level, excluded peers) and cached; see
+        # set_level for the predictive-state handoff.
         self.ladder = degradation_ladder(self.xp.policies)
         self.level = 0
-        self._level_cache = {0: (self.xp, self.step, self.gather_bytes)}
+        self._level_cache = {
+            (0, ()): (self.xp, self.step, self.gather_bytes)
+        }
         self.state = execution.attach_predict_state(
             init_decode_state(model, max_batch, cache_len), model, self.xp
         )
@@ -230,35 +241,46 @@ class GenerationServer:
 
     @property
     def fetch_label(self) -> str:
-        """The current ladder level's moe fetch mode ("predictive" /
-        "demand" / "all")."""
+        """The current ladder rung's label ("sync_free" / "predictive" /
+        "<root>+excl" / "demand" / "all")."""
         return self.ladder[self.level][0]
 
-    def set_level(self, level: int) -> bool:
+    def set_level(self, level: int,
+                  worst_peer: Optional[int] = None) -> bool:
         """Move to a degradation-ladder level (clamped); returns whether
         the level changed. Swaps in that level's (plan, step fn, wire
         model) — built lazily on first use — and re-attaches a COLD
         predictive state shaped for the new plan: the residency cache /
         predictor do not survive a policy change (their budgets differ),
         which is exactly the safe behaviour when a peer went bad. KV /
-        recurrent slot state carries over untouched."""
+        recurrent slot state carries over untouched.
+
+        A per-peer-exclusion rung (excl ``None`` in the ladder) is
+        instantiated against ``worst_peer`` — the HealthMonitor's
+        hottest subgroup position — and cached per (level, exclusion),
+        so re-entering the rung against a different bad peer rebuilds
+        the plan for that peer."""
         level = max(0, min(int(level), len(self.ladder) - 1))
         if level == self.level:
             return False
-        if level not in self._level_cache:
-            _, table = self.ladder[level]
+        _, table, excl = self.ladder[level]
+        if excl is None:
+            excl = (worst_peer,) if worst_peer is not None else ()
+        key = (level, tuple(int(p) for p in excl))
+        if key not in self._level_cache:
             xp = make_execution_plan(
                 self.model, self._shape, self._mesh_sizes, mode=self._mode,
                 policy=table, capacity_from=self._capacity_from,
                 fault_spec=self.fault_spec,
                 validate_fetch=self.validate_fetch,
+                exclude_peers=excl,
             )
-            self._level_cache[level] = (
+            self._level_cache[key] = (
                 xp,
                 execution.make_step_fn(self.model, xp, self._mesh),
                 execution.gathered_wire_bytes_per_step(self.model, xp),
             )
-        self.xp, self.step, self.gather_bytes = self._level_cache[level]
+        self.xp, self.step, self.gather_bytes = self._level_cache[key]
         bare = {k: v for k, v in self.state.items() if k != "pred"}
         self.state = execution.attach_predict_state(
             bare, self.model, self.xp
@@ -307,8 +329,8 @@ class GenerationServer:
         self.state = out["state"]
         self.cur_token = out["next_token"]
         if "pred_stats" in out:
-            # [predicted, hit, miss, evicted] expert rows this step,
-            # summed over layers and ranks (psum'd inside the step)
+            # [predicted, spec_hit, cache_hit, miss, evicted] expert rows
+            # this step, summed over layers and ranks (psum'd in-step)
             self.last_pred_stats = np.asarray(out["pred_stats"])
         # per-kind fault counters + per-peer detected tail (only emitted
         # by validated plans whose layers run the demand/predictive path)
@@ -397,13 +419,19 @@ class DisaggregatedEngine:
                     self.health.observe(tail) if tail is not None else None
                 )
                 if move == "demote":
-                    if self.gen.set_level(self.gen.level + 1):
+                    if self.gen.set_level(
+                        self.gen.level + 1,
+                        worst_peer=self.health.worst_peer(),
+                    ):
                         self.metrics.record_transition(
                             int(self.t), "demote", self.gen.level,
                             self.gen.fetch_label,
                         )
                 elif move == "promote" and self.gen.level > 0:
-                    if self.gen.set_level(self.gen.level - 1):
+                    if self.gen.set_level(
+                        self.gen.level - 1,
+                        worst_peer=self.health.worst_peer(),
+                    ):
                         self.metrics.record_transition(
                             int(self.t), "promote", self.gen.level,
                             self.gen.fetch_label,

@@ -30,18 +30,31 @@ class RequestRecord:
     family_full_bytes: dict = dataclasses.field(default_factory=dict)
     # predictive-fetch counters (MEASURED per decode step, not static):
     # bytes of expert rows speculatively prefetched, served from the
-    # cache/speculative set (hits — these skipped the post-routing wire
-    # round), correction-fetched (misses), and evicted from the
-    # residency cache
+    # speculative round / residency cache (hits — these skipped the
+    # post-routing wire round, counted separately so the sync-free bench
+    # can attribute the win), correction-fetched (misses), and evicted
+    # from the residency cache
     predicted_bytes: float = 0.0
-    hit_bytes: float = 0.0
+    spec_hit_bytes: float = 0.0
+    cache_hit_bytes: float = 0.0
     miss_bytes: float = 0.0
     evicted_bytes: float = 0.0
+    # per-ROUND wire split of the gathered traffic (the "rounds" entry
+    # of execution.gathered_wire_bytes_per_step): overlappable
+    # speculative round vs on-critical-path correction round
+    round_bytes: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def hit_bytes(self) -> float:
+        """Aggregate hit bytes (speculative + cache) — the pre-split
+        counter, kept as a derived value for compatibility."""
+        return self.spec_hit_bytes + self.cache_hit_bytes
 
     def add_gather_share(self, gather_bytes: dict, share: float = 1.0):
         """Attribute ``share`` of one step's gathered-weight traffic
         (an ``execution.gathered_wire_bytes_per_step`` dict) to this
-        request — totals and the per-family breakdown together."""
+        request — totals, the per-family breakdown, and the per-round
+        split together."""
         self.gathered_fetch_bytes += gather_bytes["fetched"] * share
         self.gathered_full_bytes += gather_bytes["full"] * share
         for fam, b in gather_bytes.get("families", {}).items():
@@ -51,15 +64,23 @@ class RequestRecord:
             self.family_full_bytes[fam] = (
                 self.family_full_bytes.get(fam, 0.0) + b["full"] * share
             )
+        for rnd, b in gather_bytes.get("rounds", {}).items():
+            self.round_bytes[rnd] = (
+                self.round_bytes.get(rnd, 0.0) + b * share
+            )
 
     def add_predict_share(self, stats, expert_bytes: float,
                           share: float = 1.0):
         """Attribute ``share`` of one decode step's measured predictive
-        counters (``[predicted, hit, miss, evicted]`` expert ROWS — the
-        engine's ``pred_stats`` output) to this request, in bytes."""
-        pred, hit, miss, evicted = (float(s) for s in stats)
+        counters (``[predicted, spec_hit, cache_hit, corr, evicted]``
+        expert ROWS — the engine's ``pred_stats`` output) to this
+        request, in bytes."""
+        pred, spec_hit, cache_hit, miss, evicted = (
+            float(s) for s in stats
+        )
         self.predicted_bytes += pred * expert_bytes * share
-        self.hit_bytes += hit * expert_bytes * share
+        self.spec_hit_bytes += spec_hit * expert_bytes * share
+        self.cache_hit_bytes += cache_hit * expert_bytes * share
         self.miss_bytes += miss * expert_bytes * share
         self.evicted_bytes += evicted * expert_bytes * share
 
@@ -154,21 +175,38 @@ class ServingMetrics:
                     if fl > 0
                 }
         pred_b = sum(r.predicted_bytes for r in done)
-        hit_b = sum(r.hit_bytes for r in done)
+        spec_b = sum(r.spec_hit_bytes for r in done)
+        cache_b = sum(r.cache_hit_bytes for r in done)
+        hit_b = spec_b + cache_b
         miss_b = sum(r.miss_bytes for r in done)
         evic_b = sum(r.evicted_bytes for r in done)
         # fraction of the wanted remote rows served without the
         # post-routing correction round (cache + speculative hits);
         # 0.0 — not a KeyError or a ZeroDivisionError — when nothing
-        # decoded predictively
+        # decoded predictively. The aggregate stays for compatibility;
+        # the split rates attribute the win between the speculative
+        # round and the residency cache.
+        denom = hit_b + miss_b
         out["predict_hit_rate"] = (
-            round(hit_b / (hit_b + miss_b), 4) if (hit_b + miss_b) else 0.0
+            round(hit_b / denom, 4) if denom else 0.0
         )
+        out["spec_hit_rate"] = round(spec_b / denom, 4) if denom else 0.0
+        out["cache_hit_rate"] = round(cache_b / denom, 4) if denom else 0.0
         if pred_b or hit_b or miss_b:
             out["predict_mb_predicted"] = round(pred_b / 1e6, 3)
             out["predict_mb_hit"] = round(hit_b / 1e6, 3)
+            out["predict_mb_spec_hit"] = round(spec_b / 1e6, 3)
+            out["predict_mb_cache_hit"] = round(cache_b / 1e6, 3)
             out["predict_mb_miss"] = round(miss_b / 1e6, 3)
             out["predict_mb_evicted"] = round(evic_b / 1e6, 3)
+        rounds: dict = {}
+        for r in done:
+            for rnd, b in r.round_bytes.items():
+                rounds[rnd] = rounds.get(rnd, 0.0) + b
+        if rounds:
+            out["gathered_mb_by_round"] = {
+                rnd: round(b / 1e6, 3) for rnd, b in sorted(rounds.items())
+            }
         if self.fault_counts and any(self.fault_counts.values()):
             out["faults"] = {
                 k: round(v, 1) for k, v in sorted(self.fault_counts.items())

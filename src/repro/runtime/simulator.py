@@ -43,17 +43,22 @@ class SimConfig:
                                         # §4.2 merge-copy HBM write
     attn_gathered: bool = False         # model DWDP-gathered attention
                                         # (escalated sharding) land-bytes
-    expert_fetch: str = "all"           # "all" | "demand" | "predictive":
-                                        # expert-gather selection for
-                                        # every DWDP phase. "demand"
-                                        # models route-before-gather via
-                                        # the expected-coverage closed
-                                        # form (its round sits ON the
-                                        # decode critical path);
-                                        # "predictive" overlaps the
-                                        # speculative round and shrinks
-                                        # the serial correction by the
-                                        # replayed hit rates below
+    expert_fetch: str = "all"           # "all" | "demand" | "predictive"
+                                        # | "sync_free": expert-gather
+                                        # selection for every DWDP
+                                        # phase. "demand" models
+                                        # route-before-gather via the
+                                        # expected-coverage closed form
+                                        # (its round sits ON the decode
+                                        # critical path); "predictive"
+                                        # overlaps the speculative round
+                                        # and shrinks the serial
+                                        # correction by the replayed hit
+                                        # rates below; "sync_free"
+                                        # additionally drops the
+                                        # per-layer index exchange from
+                                        # the speculative round (mirrored
+                                        # predictor)
     cache_budget: int = 0               # predictive residency-cache rows
                                         # per layer (0 = cache off)
     cache_hit_rate: Optional[float] = None
@@ -134,13 +139,14 @@ class SimConfig:
         if self.policies is not None:
             return self.policies
         fams = ()
-        if self.expert_fetch in ("demand", "predictive"):
+        if self.expert_fetch in ("demand", "predictive", "sync_free"):
             fams = (
                 ("moe_experts", GatherPolicy(
                     layout="split", fetch=self.expert_fetch,
                     cache_budget=(
                         self.cache_budget
-                        if self.expert_fetch == "predictive" else 0
+                        if self.expert_fetch in ("predictive", "sync_free")
+                        else 0
                     ),
                 )),
             )
@@ -201,13 +207,14 @@ class ClusterSimulator:
         n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
         g = sc.gen_gpus
         pol = sc.table().family("moe_experts")
-        if pol.fetch == "predictive":
+        if pol.fetch in ("predictive", "sync_free"):
             per_layer, _ = roofline.predictive_fetch_terms(
                 batch, moe.top_k, moe.num_experts, g, per_expert,
                 budget=pol.budget, cache_rows=pol.cache_budget,
                 cache_hit=sc.cache_hit_rate,
                 predict_hit=sc.predict_hit_rate,
                 validate=sc.validate_fetch,
+                sync_free=pol.fetch == "sync_free",
             )
         elif pol.fetch == "demand":
             per_layer = roofline.demand_prefetch_bytes(
@@ -232,13 +239,14 @@ class ClusterSimulator:
         per_expert = 3 * cfg.d_model * moe.d_ff * 1.0
         n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
         pol = sc.table().family("moe_experts")
-        if pol.fetch == "predictive":
+        if pol.fetch in ("predictive", "sync_free"):
             _, serial = roofline.predictive_fetch_terms(
                 batch, moe.top_k, moe.num_experts, sc.gen_gpus, per_expert,
                 budget=pol.budget, cache_rows=pol.cache_budget,
                 cache_hit=sc.cache_hit_rate,
                 predict_hit=sc.predict_hit_rate,
                 validate=sc.validate_fetch,
+                sync_free=pol.fetch == "sync_free",
             )
             return n_moe * serial
         if pol.fetch == "demand":
@@ -326,15 +334,19 @@ class ClusterSimulator:
             sc.cfg, sc.table(), tokens=sc.gen_batch, group=sc.gen_gpus,
             hw=sc.hw, validate=sc.validate_fetch or sc.fault_rate > 0,
         )
-        from repro.core.strategy import degrade_policy_table
+        from repro.core.strategy import degradation_ladder
 
-        for row in rows:
+        # rows come row-for-row from the same ladder; zip the rung
+        # tables back in rather than re-deriving from the label (the
+        # "+excl" rung keeps the root table, only the engine-side
+        # speculative plan shrinks)
+        ladder = degradation_ladder(sc.table())
+        assert len(rows) == len(ladder)
+        for row, (_, rung_table, _) in zip(rows, ladder):
             # replay the scenario at this rung: swap the rung's table in
             # and re-price the full gen step (memory/compute + wire +
             # straggler stretch + fault-fallback blend)
-            sub = dataclasses.replace(
-                sc, policies=degrade_policy_table(sc.table(), row["fetch"]),
-            )
+            sub = dataclasses.replace(sc, policies=rung_table)
             row["t_scenario_us"] = round(
                 ClusterSimulator(sub).gen_step_time(sc.gen_batch) * 1e6, 3
             )

@@ -421,20 +421,23 @@ def _r1_gather_model():
 
 
 def test_auto_resolver_decision_rules():
-    """decode at per-rank rows where the overlap pays -> predictive
-    experts (with a residency-cache budget bounded by HBM headroom);
-    single-row decode -> plain demand (the speculative round's padded
-    wire would double the payload for nothing); long prefill (full
-    coverage) -> all-fetch; ring_sliced only for banks above the size
-    threshold (R1's GB-scale expert banks yes, tiny banks no)."""
+    """decode at per-rank rows where the overlap pays -> sync_free
+    experts (mirrored predictor: the speculative round drops its index
+    exchange, so it prices below plain predictive, with a residency
+    cache budget bounded by HBM headroom); single-row decode -> plain
+    demand (the speculative round's padded wire would double the
+    payload for nothing); long prefill (full coverage) -> all-fetch;
+    ring_sliced only for banks above the size threshold (R1's GB-scale
+    expert banks yes, tiny banks no)."""
     from repro.configs.base import InputShape
     from repro.core.strategy import resolve_policies
 
     cfg, ms, m = _r1_gather_model()
     # gen_batch=8 PER RANK (global 64 over the 8-rank mesh): the
-    # acceptance decode shape — predictive wins on the overlapped round
+    # acceptance decode shape — sync_free wins on the overlapped,
+    # metadata-free round
     dec = resolve_policies(m, InputShape("gen", 2048, 64, "decode"), ms)
-    assert dec.family("moe_experts").fetch == "predictive"
+    assert dec.family("moe_experts").fetch == "sync_free"
     assert dec.family("moe_experts").layout == "split"
     assert dec.family("moe_experts").transport == "ring_sliced"
     # single routed row per rank: the speculative round cannot pay for
@@ -475,14 +478,15 @@ def test_auto_beats_every_uniform_policy_r1_decode():
     assert cfg.moe.num_experts == 256 and cfg.moe.top_k == 8
     shape = InputShape("gen", 2048, 64, "decode")  # 8 rows/rank on 8 ranks
     auto = resolve_policies(m, shape, ms)
-    assert auto.family("moe_experts").fetch == "predictive"
+    assert auto.family("moe_experts").fetch == "sync_free"
     kw = dict(tokens=8, group=4, kv_len=2048,
               attn_gathered=bool(m.geom.attn_axes))
     t_auto = roofline.modeled_step_time(cfg, policies=auto, **kw)
     uniforms = {}
     for layout in ("merged", "split"):
         fetches = (
-            ("all", "demand", "predictive") if layout == "split" else ("all",)
+            ("all", "demand", "predictive", "sync_free")
+            if layout == "split" else ("all",)
         )
         for fetch in fetches:
             for transport in ("allgather", "ring", "ring_sliced"):
@@ -651,9 +655,13 @@ def test_predictive_modeled_below_demand_r1_decode():
             cfg, policies=PolicyTable.uniform(layout="split", fetch=fetch),
             **kw,
         )
-        for fetch in ("all", "demand", "predictive")
+        for fetch in ("all", "demand", "predictive", "sync_free")
     }
     assert t["predictive"] < t["demand"] < t["all"], t
+    # sync_free prices at or below predictive: the speculative round
+    # sheds its per-layer bitmap all-gather (the metadata now rides the
+    # correction round, which already prices its packed payload)
+    assert t["sync_free"] <= t["predictive"], t
     # per-layer wire: predictive total <= demand total; serial strictly <
     moe_layer = cfg.moe.first_dense
     lt_d = roofline.layer_times(

@@ -36,6 +36,7 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 POLICIES = {
     "demand": "split:demand:allgather:4",
     "predictive": "split:predictive:allgather:4:4:8",
+    "sync_free": "split:sync_free:allgather:4:4:8",
     "all": "split:all:allgather",
 }
 
@@ -113,21 +114,24 @@ def run_case(case: dict) -> dict:
 
 
 # per-kind specs: each isolates one injection mechanism; the storm
-# composes all of them plus two persistent bad peers
+# composes all of them plus two persistent bad peers (and, for the
+# sync_free rung, a mirror-desync on top)
 KIND_SPECS = {
     "drop": "seed=5,drop=0.3",
     "zero": "seed=5,zero=0.3",
     "corrupt": "seed=5,corrupt=0.3",
     "cache": "seed=5,cache=0.4",
     "peers": "seed=5,peers=1",
-    "storm": "seed=1,drop=0.25,zero=0.2,corrupt=0.2,cache=0.25,peers=1|2",
+    "mirror": "seed=5,mirror=0.5",
+    "storm": ("seed=1,drop=0.25,zero=0.2,corrupt=0.2,cache=0.25,"
+              "mirror=0.3,peers=1|2"),
 }
 # fstats vector layout (faults.FAULT_STAT_NAMES prefix)
-I_DROP, I_ZERO, I_CORRUPT, I_CACHE, I_DET, I_FB = range(6)
+I_DROP, I_ZERO, I_CORRUPT, I_CACHE, I_DET, I_FB, I_MIRROR = range(7)
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("mode", ["demand", "predictive", "all"])
+@pytest.mark.parametrize("mode", ["demand", "predictive", "sync_free", "all"])
 def test_fault_bitwise_repair(mode):
     """Every injection kind, bitwise-exact decode, detected == injected
     consumed rows. One subprocess per fetch mode; the healthy reference
@@ -151,19 +155,30 @@ def test_fault_bitwise_repair(mode):
         assert run["match"], f"{mode}/{kind}: fault run diverged"
         fs = run["fstats"]
         injected = sum(fs[I_DROP:I_CACHE + 1])
-        if kind == "cache" and mode != "predictive":
+        if kind == "cache" and mode == "demand":
             # no residency cache on the demand rung: nothing to corrupt
             assert fs[I_CACHE] == 0.0
+        elif kind == "mirror":
+            # mirror desync perturbs no payload rows; only the sync_free
+            # rung has mirrored schedules to diverge, and its psum'd
+            # digest cross-check must catch every desynced layer step
+            assert injected == 0.0, fs
+            if mode == "sync_free":
+                assert fs[I_MIRROR] > 0, f"mirror desync undetected: {fs}"
+            else:
+                assert fs[I_MIRROR] == 0.0, fs
         else:
             assert injected > 0, f"{mode}/{kind}: no rows injected ({fs})"
         assert fs[I_DET] >= injected - 1e-6, (
             f"{mode}/{kind}: detected {fs[I_DET]} < injected {injected}"
         )
         # per-peer attribution tail sums to the detected count
-        assert abs(sum(fs[6:]) - fs[I_DET]) < 1e-6, fs
+        assert abs(sum(fs[I_MIRROR + 1:]) - fs[I_DET]) < 1e-6, fs
         if kind == "peers":
             # bad peers force drops on every round they serve
             assert fs[I_DROP] > 0, fs
+        if kind == "storm" and mode == "sync_free":
+            assert fs[I_MIRROR] > 0, fs
 
 
 # healthy-reference memo so each property example only decodes the
@@ -174,7 +189,7 @@ _REF_CACHE: dict = {}
 @pytest.mark.slow
 @settings(max_examples=6, deadline=None)
 @given(
-    mode=st.sampled_from(["demand", "predictive", "all"]),
+    mode=st.sampled_from(["demand", "predictive", "sync_free", "all"]),
     seed=st.integers(min_value=0, max_value=7),
     drop=st.floats(min_value=0.0, max_value=0.3),
     corrupt=st.floats(min_value=0.0, max_value=0.3),
@@ -388,16 +403,18 @@ def test_metrics_fault_accounting():
     from repro.runtime.metrics import ServingMetrics
 
     m = ServingMetrics()
-    vec = [2.0, 1.0, 0.0, 1.0, 4.0, 1.0, 3.0, 1.0]  # 2-peer tail
+    # 7-entry base (…, fault_fallbacks, mirror_divergence) + 2-peer tail
+    vec = [2.0, 1.0, 0.0, 1.0, 4.0, 1.0, 2.0, 3.0, 1.0]
     m.record_fault_stats(vec)
     m.record_fault_stats(vec)
     m.record_transition(3, "demote", 1, "demand")
     s = m.summary(horizon=1.0)
     assert s["faults"]["detected"] == 8.0
     assert s["faults"]["injected_drop"] == 4.0
+    assert s["faults"]["mirror_divergence"] == 4.0
     assert s["detected_by_peer"] == [6.0, 2.0]
     assert s["policy_transitions"][0]["kind"] == "demote"
-    assert len(FAULT_STAT_NAMES) == FAULT_STAT_BASE
+    assert len(FAULT_STAT_NAMES) == FAULT_STAT_BASE == 7
 
 
 def test_degradation_ladder():
@@ -412,14 +429,29 @@ def test_degradation_ladder():
                                      budget=4, cache_budget=8)),
     ))
     ladder = degradation_ladder(t)
-    assert [fetch for fetch, _ in ladder] == ["predictive", "demand", "all"]
-    assert ladder[1][1].family("moe_experts").fetch == "demand"
-    assert ladder[2][1].family("moe_experts").fetch == "all"
-    # a demand-rooted table has no predictive rung
+    assert [label for label, _, _ in ladder] == [
+        "predictive", "predictive+excl", "demand", "all",
+    ]
+    # the +excl rung keeps the root table; its peer set is the engine's
+    # runtime choice (None = "fill in the HealthMonitor's worst peer"),
+    # every other rung excludes nobody
+    assert [excl for _, _, excl in ladder] == [(), None, (), ()]
+    assert ladder[1][1] is ladder[0][1]
+    assert ladder[2][1].family("moe_experts").fetch == "demand"
+    assert ladder[3][1].family("moe_experts").fetch == "all"
+    # sync_free roots walk the same shape
+    ts = PolicyTable(default=GatherPolicy(layout="split"), families=(
+        ("moe_experts", GatherPolicy(layout="split", fetch="sync_free",
+                                     budget=4, cache_budget=8)),
+    ))
+    assert [label for label, _, _ in degradation_ladder(ts)] == [
+        "sync_free", "sync_free+excl", "demand", "all",
+    ]
+    # a demand-rooted table has no predictive or exclusion rung
     t2 = PolicyTable(default=GatherPolicy(layout="split"), families=(
         ("moe_experts", GatherPolicy(layout="split", fetch="demand")),
     ))
-    assert [f for f, _ in degradation_ladder(t2)] == ["demand", "all"]
+    assert [lab for lab, _, _ in degradation_ladder(t2)] == ["demand", "all"]
 
 
 def test_checksum_overhead_under_2pct():
@@ -458,8 +490,19 @@ def test_simulator_scenario_replay():
     assert t1 >= t0          # checksum metadata never makes steps faster
     assert t2 > t1           # fallback + straggler replay costs real time
     rows = storm.degraded_table()
-    assert [r["fetch"] for r in rows] == ["predictive", "demand", "all"]
+    assert [r["fetch"] for r in rows] == [
+        "predictive", "predictive+excl", "demand", "all",
+    ]
     assert all(r["t_scenario_us"] > 0 for r in rows)
+    # sync_free replays through the same ladder, rooted at its own rung
+    sf = ClusterSimulator(SimConfig(
+        **{**base, "expert_fetch": "sync_free"}, validate_fetch=True,
+        fault_rate=0.3,
+    ))
+    sf_rows = sf.degraded_table()
+    assert [r["fetch"] for r in sf_rows] == [
+        "sync_free", "sync_free+excl", "demand", "all",
+    ]
     with pytest.raises(ValueError):
         SimConfig(cfg=cfg, fault_rate=1.5)
     with pytest.raises(ValueError):

@@ -1101,8 +1101,10 @@ def decode_tokens(policy, mesh_shape, steps=6):
     params = m.init_params(jax.random.key(42))
     xp = make_execution_plan(m, InputShape("d", 64, 4, "decode"), ms,
                              mode="dwdp", policy=policy)
-    if policy and "predictive" in str(policy):
+    if policy and ("predictive" in str(policy) or "sync_free" in str(policy)):
         assert execution.predictive_fetch_active(CFG, m.geom, xp)
+    if policy and "sync_free" in str(policy):
+        assert execution.sync_free_active(CFG, m.geom, xp)
     step = execution.make_step_fn(m, xp, mesh)
     state = init_decode_state(m, 4, 64)
     state = execution.attach_predict_state(state, m, xp)
@@ -1161,13 +1163,51 @@ if kind == "decode":
         "stats": stats,
     }
 elif kind == "prefill":
-    # outside decode, fetch="predictive" must lower exactly as "demand"
+    # outside decode, fetch="predictive"/"sync_free" must lower exactly
+    # as "demand" (no PredictState, no mirrors, no packed round)
     dem = prefill_logits({"moe_experts": "split:demand"}, (2, 4))
     pred = prefill_logits({"moe_experts": "split:predictive"}, (2, 4))
+    sync = prefill_logits({"moe_experts": "split:sync_free"}, (2, 4))
     allf = prefill_logits({"moe_experts": "split:all"}, (2, 4))
     results = {
         "pred_vs_demand_bitwise": bool((pred == dem).all()),
         "pred_vs_all_bitwise": bool((pred == allf).all()),
+        "sync_vs_demand_bitwise": bool((sync == dem).all()),
+    }
+elif kind == "hlo_syncfree":
+    import re
+    def count_allgather(txt, dims, dtype):
+        shp = "x".join(str(d) for d in dims)
+        pats = [
+            re.compile(r"all[_-]gather[^\n]*tensor<" + shp + "x"
+                       + dtype + ">"),
+            re.compile({"i1": "pred", "f32": "f32"}[dtype]
+                       + r"\[" + ",".join(str(d) for d in dims)
+                       + r"\][^\n]*all-gather"),
+        ]
+        return sum(len(p.findall(txt)) for p in pats)
+    d, fe = CFG.d_model, CFG.moe.d_ff
+    e = CFG.moe.num_experts
+    # decode B=4 over data=2 -> 2 routed rows/rank; the packed
+    # correction vector is E*(1+rows) + rows*N_POS_BUCKETS = 68 bools
+    rows = 2
+    packed = e * (1 + rows) + rows * 4
+    txt_sf = lowered_decode_text(
+        {"moe_experts": "split:sync_free:allgather:4:4:8"}
+    )
+    txt_pred = lowered_decode_text(
+        {"moe_experts": "split:predictive:allgather:4:4:8"}
+    )
+    results = {
+        # per-layer (G', E) bool bitmap exchanges: the spec round's index
+        # traffic in predictive mode, GONE entirely in sync_free
+        "pred_bitmap_gathers": count_allgather(txt_pred, (4, e), "i1"),
+        "sync_bitmap_gathers": count_allgather(txt_sf, (4, e), "i1"),
+        # the ONE packed correction gather is sync_free's index traffic
+        "sync_packed_gathers": count_allgather(txt_sf, (4, packed), "i1"),
+        # and no full expert bank anywhere (the spec round adds none)
+        "sync_full_bank": tensor_shape_count(txt_sf, (e, d, fe))
+        + tensor_shape_count(txt_sf, (e, fe, d)),
     }
 elif kind == "hlo":
     d, fe = CFG.d_model, CFG.moe.d_ff
@@ -1246,13 +1286,13 @@ def test_predictive_cache_hits_skip_the_wire():
     r = run_predict_case(
         {"kind": "decode", "spec": "split:predictive:allgather:4:0:8"}
     )
-    stats = r["stats"]  # [predicted, hit, miss, evicted] per step
-    assert stats[0][1] == 0.0, stats       # cold start: no hits
-    assert sum(s[1] for s in stats[1:]) > 0, stats   # warm: hits appear
-    assert sum(s[3] for s in stats) > 0, stats       # eviction happened
+    stats = r["stats"]  # [predicted, spec_hit, cache_hit, corr, evicted]
+    assert stats[0][1] == 0.0 and stats[0][2] == 0.0, stats  # cold: no hits
+    assert sum(s[1] + s[2] for s in stats[1:]) > 0, stats  # warm: hits appear
+    assert sum(s[4] for s in stats) > 0, stats             # eviction happened
     # hits replace misses: the warm steps' correction round is smaller
     # than the cold step's
-    assert min(s[2] for s in stats[1:]) < stats[0][2], stats
+    assert min(s[3] for s in stats[1:]) < stats[0][3], stats
 
 
 @pytest.mark.slow
@@ -1277,6 +1317,67 @@ def test_predictive_hlo_budget_bounded_rounds():
     assert r["full_bank"] == 0, r
     assert r["budget_banks"] > 0, r
     assert r["combined_bank"] > 0, r
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("spec", [
+    "split:sync_free",                        # auto budgets
+    "split:sync_free:allgather:4:4:8",        # explicit budgets + cache
+    "split:sync_free:allgather:4:5:0",        # cache budget 0
+    "split:sync_free:allgather:4:1:4",        # budget 1: forced overflow
+                                              # fallback on most steps
+])
+def test_syncfree_decode_bitwise_vs_all_fetch(spec):
+    """The sync-free tentpole acceptance: N decode steps with the
+    mirrored-predictor fetch — zero-index-metadata speculative round,
+    mirrored residency caches, packed correction round — are
+    BITWISE-identical to the all-fetch split path for any predictor
+    state (cold start, warm, shifted routing / forced mispredicts) and
+    any budget (cache 0 and overflow-forcing spec budgets included)."""
+    r = run_predict_case({"kind": "decode", "spec": spec})
+    assert r["demand_vs_all"], r
+    assert r["pred_vs_all"], r
+    assert r["stats"] and len(r["stats"]) == 6, r
+    warm = r["stats"][-1]
+    assert warm[0] > 0 or warm[2] > 0, r  # predicted or cache-hit rows
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("spec", [
+    "split:sync_free:ring:4:4:8",
+    "split:sync_free:ring_sliced:4:4:8",
+])
+def test_syncfree_decode_bitwise_other_transports(spec):
+    """Mirrored speculative + packed correction rounds stay bitwise-exact
+    when the payload permutes ride the ring / ring_sliced (TDM)
+    schedules."""
+    r = run_predict_case({"kind": "decode", "spec": spec})
+    assert r["pred_vs_all"], r
+
+
+@pytest.mark.slow
+def test_syncfree_prefill_lowers_as_demand():
+    """Outside decode there are no mirrors to keep in sync, so
+    fetch="sync_free" must be bitwise-identical to the plain demand
+    path (exactly like predictive)."""
+    r = run_predict_case({"kind": "prefill"})
+    assert r["sync_vs_demand_bitwise"], r
+
+
+@pytest.mark.slow
+def test_syncfree_hlo_no_bitmap_exchange():
+    """The tentpole's structural claim, asserted on the lowering: the
+    sync_free decode module contains ZERO per-layer (G', E) bool bitmap
+    all-gathers — the speculative round's index exchange is gone, not
+    moved — while plain predictive lowers them; sync_free's only index
+    traffic is the single packed correction all-gather
+    (E*(1+rows) + rows*N_POS_BUCKETS bools), and no full (E, D, Fe)
+    expert bank appears anywhere."""
+    r = run_predict_case({"kind": "hlo_syncfree"})
+    assert r["pred_bitmap_gathers"] > 0, r   # detector sanity
+    assert r["sync_bitmap_gathers"] == 0, r  # no index exchange at all
+    assert r["sync_packed_gathers"] > 0, r   # the packed round exists
+    assert r["sync_full_bank"] == 0, r
 
 
 # --------------------------------------------------------------------------

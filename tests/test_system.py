@@ -317,26 +317,31 @@ def test_simulator_predictive_replay_hit_rates():
 def test_engine_predictive_counters_end_to_end():
     """A live (1-device-ineligible-free) multi-rank engine run is covered
     by the multidevice suite; here the metrics layer: measured per-step
-    pred_stats rows attribute to requests as predicted/hit/miss/evicted
-    bytes and the summary reports the hit rate."""
+    pred_stats rows attribute to requests as predicted/spec-hit/cache-hit/
+    miss/evicted bytes and the summary reports the per-round hit split."""
     from repro.runtime.metrics import RequestRecord, ServingMetrics
 
     rec = RequestRecord(
         req_id=0, arrival=0.0, prompt_len=4, target_len=3,
         first_token_time=1.0, done_time=3.0, tokens_out=3,
     )
-    rec.add_predict_share([8.0, 6.0, 2.0, 1.0], expert_bytes=1000.0,
+    rec.add_predict_share([8.0, 4.0, 2.0, 2.0, 1.0], expert_bytes=1000.0,
                           share=0.5)
-    rec.add_predict_share([0.0, 4.0, 0.0, 0.0], expert_bytes=1000.0,
+    rec.add_predict_share([0.0, 2.0, 2.0, 0.0, 0.0], expert_bytes=1000.0,
                           share=0.5)
     sm = ServingMetrics()
     sm.records.append(rec)
     s = sm.summary(3.0)
     assert s["predict_mb_predicted"] == round(8 * 500 / 1e6, 3)
     assert s["predict_mb_hit"] == round(10 * 500 / 1e6, 3)
+    assert s["predict_mb_spec_hit"] == round(6 * 500 / 1e6, 3)
+    assert s["predict_mb_cache_hit"] == round(4 * 500 / 1e6, 3)
     assert s["predict_mb_miss"] == round(2 * 500 / 1e6, 3)
     assert s["predict_mb_evicted"] == round(1 * 500 / 1e6, 3)
+    # the old aggregate key stays derived: spec + cache over served
     assert s["predict_hit_rate"] == pytest.approx(10 / 12, abs=1e-3)
+    assert s["spec_hit_rate"] == pytest.approx(6 / 12, abs=1e-3)
+    assert s["cache_hit_rate"] == pytest.approx(4 / 12, abs=1e-3)
 
 
 def test_engine_reports_gather_fetch_savings():
