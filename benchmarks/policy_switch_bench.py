@@ -1,0 +1,208 @@
+"""Online policy switching benchmark: the auto-online scheduler's
+phase/bucket re-resolution + budget-rung snapping vs every static
+uniform table over MIXED prefill/decode traffic at the R1 DWDP4 shape.
+
+``python -m benchmarks.run policy_switch`` rewrites
+``BENCH_policy_switch.json`` (committed per PR so the perf trajectory is
+machine-diffable across commits).
+
+The model is the same roofline the resolver optimizes
+(``roofline.modeled_step_time``), replayed over a traffic trace of
+batch-shape buckets and prefill bursts:
+
+- every STATIC table is resolved once at the home bucket (the compiled
+  ``max_batch`` shape — its demand/speculative budgets are pinned there,
+  exactly what a no-switching deployment serves every step with);
+- the ONLINE row re-resolves the table per (phase, bucket) with the
+  measured hit-rate drift replayed in, and snaps the speculative budget
+  to the nearest pre-compiled rung
+  (``roofline.predictive_budget_rungs``) — the zero-recompile engine
+  moves (``docs/policy_switching.md``).
+
+Acceptance: modeled TPS/GPU of the online row >= 1.1x EVERY static
+uniform table (``online_vs_best_static`` >= 1.1).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.kernels_bench import write_bench_json
+from repro.core import roofline
+
+BENCH_POLICY_SWITCH_JSON = "BENCH_policy_switch.json"
+
+R1 = "deepseek-r1"
+
+# (phase, global_batch, steps): a serving trace dominated by partially
+# filled decode batches (continuous batching drains and refills slots)
+# with periodic prefill bursts — the regime where one home-bucket table
+# is wrong most of the time.
+TRAFFIC = (
+    ("decode", 8, 48),
+    ("decode", 16, 32),
+    ("decode", 32, 24),
+    ("decode", 64, 16),
+    ("prefill", 8, 8),
+)
+
+# measured predictor/cache split replayed into the online resolution
+# (the syncfree bench's trace-driven speculative hit rate clears 0.9 at
+# the default budget; the residency cache serves about half the wanted
+# remote rows across steps)
+PREDICT_HIT = 0.9
+CACHE_HIT = 0.5
+
+
+def _nearest_rung(budget: int, rungs: tuple) -> int:
+    return min(rungs, key=lambda r: (abs(r - budget), r))
+
+
+def bench_policy_switch(
+    out_path: str = BENCH_POLICY_SWITCH_JSON,
+) -> list[dict]:
+    from repro.configs import get_arch
+    from repro.configs.base import InputShape
+    from repro.core.strategy import (
+        PolicyTable, effective_policies, resolve_policies,
+    )
+    from repro.models.transformer import build_model
+    from repro.runtime.engine import _with_spec_budget
+
+    cfg = get_arch(R1)
+    ms = {"data": 2, "model": 4}
+    n_ranks = ms["data"] * ms["model"]
+    model = build_model(cfg, ms, dtype=jnp.bfloat16, moe_exec="gather",
+                       expert_axes=("model",))
+    group = model.geom.moe_placement.subgroup_size
+    local = model.geom.moe_placement.local_count
+    seq = 2048
+    home_gb = max(gb for ph, gb, _ in TRAFFIC if ph == "decode")
+    kw = dict(group=group, kv_len=seq,
+              attn_gathered=bool(model.geom.attn_axes),
+              cache_hit=CACHE_HIT, predict_hit=PREDICT_HIT)
+
+    def step_time(table, phase, gb):
+        # decode prices the per-rank routed rows; a prefill burst prices
+        # the packed prompt tokens (one step prefills the whole burst)
+        tokens = max(1, gb // n_ranks) if phase == "decode" else gb * seq
+        return roofline.modeled_step_time(
+            cfg, tokens=tokens, policies=table, **kw
+        )
+
+    def replay(table_of):
+        """Total modeled time + decode tokens over the trace, with
+        ``table_of(phase, gb)`` supplying the per-step policy table."""
+        t = tok = 0.0
+        for phase, gb, steps in TRAFFIC:
+            tab = table_of(phase, gb)
+            t += step_time(tab, phase, gb) * steps
+            if phase == "decode":
+                tok += gb * steps
+        return tok / t / n_ranks, t
+
+    home_shape = InputShape("gen", seq, home_gb, "decode")
+    home_draws = max(1, home_gb // n_ranks) * cfg.moe.top_k
+
+    def pin_home_budget(tab):
+        """A static table with its fetch budgets FIXED at the home
+        bucket — what the one compiled variant of a no-switching
+        deployment actually ships at every batch size (budget 0 in a
+        priced table means auto-at-pricing-shape, which would let the
+        static silently right-size per bucket)."""
+        import dataclasses as _dc
+
+        def pin(name, pol):
+            if name != "moe_experts" or pol.fetch == "all" or pol.budget:
+                return pol
+            if pol.fetch == "demand":
+                b = roofline.demand_budget_rows(
+                    home_draws, cfg.moe.num_experts, local
+                )
+            else:
+                b, _ = roofline.predictive_budget_rows(
+                    home_draws, cfg.moe.num_experts, local
+                )
+            return _dc.replace(pol, budget=b)
+
+        return _dc.replace(
+            tab,
+            families=tuple((n, pin(n, p)) for n, p in tab.families),
+            overrides=tuple(
+                (g, n, pin(n, p)) for g, n, p in tab.overrides
+            ),
+        )
+
+    rows, static_tps = [], []
+    for layout, fetch in (("merged", "all"), ("split", "all"),
+                          ("split", "demand"), ("split", "predictive"),
+                          ("split", "sync_free")):
+        tab = pin_home_budget(effective_policies(
+            model, home_shape, ms,
+            PolicyTable.uniform(layout=layout, fetch=fetch),
+        ))
+        tps, t_total = replay(lambda ph, gb, tab=tab: tab)
+        static_tps.append(tps)
+        rows.append({
+            "policy": f"static {layout}/{fetch} @gb{home_gb}",
+            "modeled_tps_per_gpu": round(tps, 2),
+            "modeled_total_ms": round(t_total * 1e3, 3),
+        })
+
+    # the online scheduler: per-(phase, bucket) resolution with the
+    # measured drift replayed in, speculative budget snapped to the
+    # nearest pre-compiled rung (the engine's _with_spec_budget move)
+    hit_rates = {
+        g: {"predict_hit": PREDICT_HIT, "cache_hit": CACHE_HIT}
+        for g in set(roofline.layer_group_names(cfg))
+    }
+    resolved: dict = {}
+
+    def online_table(phase, gb):
+        key = (phase, gb)
+        if key not in resolved:
+            shape = InputShape("gen", seq, gb,
+                               "decode" if phase == "decode" else "prefill")
+            tab = resolve_policies(model, shape, ms, "auto",
+                                   hit_rates=hit_rates)
+            if phase == "decode":
+                rows_rank = max(1, gb // n_ranks)
+                rungs = roofline.predictive_budget_rungs(
+                    rows_rank * cfg.moe.top_k, cfg.moe.num_experts, local
+                )
+                pol = tab.family("moe_experts")
+                if pol.fetch in ("predictive", "sync_free"):
+                    want = pol.budget or roofline.predictive_budget_rows(
+                        rows_rank * cfg.moe.top_k, cfg.moe.num_experts,
+                        local,
+                    )[0]
+                    tab = _with_spec_budget(
+                        tab, _nearest_rung(want, rungs)
+                    )
+            resolved[key] = tab
+        return resolved[key]
+
+    tps_online, t_online = replay(online_table)
+    best_static = max(static_tps)
+    rows.append({
+        "policy": "auto-online (per-bucket resolve + rung snap)",
+        "modeled_tps_per_gpu": round(tps_online, 2),
+        "modeled_total_ms": round(t_online * 1e3, 3),
+        "online_vs_best_static": round(tps_online / best_static, 4),
+        "n_variants": len({t.describe() for t in resolved.values()}),
+    })
+    write_bench_json(
+        out_path, "policy_switch",
+        {
+            "arch": R1, "mesh": "2x4", "seq_len": seq,
+            "traffic": [list(t) for t in TRAFFIC],
+            "predict_hit": PREDICT_HIT, "cache_hit": CACHE_HIT,
+            "home_bucket_gb": home_gb, "hw": "GB200",
+        },
+        rows,
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench_policy_switch():
+        print(r)

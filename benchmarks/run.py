@@ -14,6 +14,7 @@ def _all_benchmarks():
         faults_bench,
         kernels_bench,
         paper_tables,
+        policy_switch_bench,
         roofline_table,
         syncfree_bench,
     )
@@ -36,6 +37,7 @@ def _all_benchmarks():
         "demand_predict": kernels_bench.bench_demand_predict,
         "fault_degradation": faults_bench.bench_fault_degradation,
         "syncfree": syncfree_bench.bench_syncfree_decode,
+        "policy_switch": policy_switch_bench.bench_policy_switch,
         "dryrun_roofline": roofline_table.bench_dryrun_roofline,
     }
 

@@ -67,9 +67,14 @@ def bench_syncfree_decode(out_path: str = BENCH_SYNCFREE_JSON) -> list[dict]:
       serial fetch <= 0.1x plain demand's at h >= 0.9.
     - ``wire_spec_bytes`` / ``wire_corr_bytes``: the engine's own
       per-round accounting (``prefetch.sync_free_fetch_bytes``) with
-      payload scaled by the miss fraction; the correction round's packed
-      bool all-gather is constant (it always runs — it feeds the
-      mirrors).
+      payload scaled by the miss fraction; the correction round's
+      residual bitmap all-gather is constant (it always runs — the
+      senders compact the payload against it).
+    - ``wire_mirror_bytes_step``: the ONE per-step mirror-fold
+      all-gather (``prefetch.sync_free_mirror_bytes``) — the
+      routing/position signals that used to ride every layer's packed
+      correction round now ship once per step, so the per-layer index
+      meta shrank from ``E*(1+B) + B*N_POS_BUCKETS`` to ``E`` bools.
     - ``spec_index_bytes``: index metadata on the speculative round —
       the tentpole's structural claim. Predictive ships the per-layer
       bitmap all-gather ((G'-1) * E bytes); sync-free ships ZERO.
@@ -129,13 +134,12 @@ def bench_syncfree_decode(out_path: str = BENCH_SYNCFREE_JSON) -> list[dict]:
         by_round = prefetch.sync_free_fetch_bytes(
             pl, spec_b, corr_b, b, per_expert
         )
-        packed_meta = (g - 1) * (
-            e * (1 + b) + b * prefetch.N_POS_BUCKETS
-        )
+        resid_meta = (g - 1) * e
         wire_spec = by_round["spec"] * (1.0 - h)
-        # packed bool all-gather always runs (it feeds the mirrors);
-        # only the correction payload shrinks with the hit rate
-        wire_corr = packed_meta + (by_round["corr"] - packed_meta) * (
+        # the residual bitmap all-gather always runs (it plans the
+        # compacted payload); only the correction payload shrinks with
+        # the hit rate
+        wire_corr = resid_meta + (by_round["corr"] - resid_meta) * (
             1.0 - h
         )
         rows.append({
@@ -147,6 +151,9 @@ def bench_syncfree_decode(out_path: str = BENCH_SYNCFREE_JSON) -> list[dict]:
             "syncfree_serial_us": round(lt_s.serial_fetch * 1e6, 2),
             "wire_spec_bytes": int(wire_spec),
             "wire_corr_bytes": int(wire_corr),
+            "wire_mirror_bytes_step": prefetch.sync_free_mirror_bytes(
+                pl, b
+            ),
             "spec_index_bytes": 0,                  # sync-free: by design
             "spec_index_bytes_predictive": (g - 1) * e,
             "serial_ratio_vs_demand": round(

@@ -81,6 +81,21 @@ class RooflineReport:
         }
 
 
+def _moe_layer_groups(cfg) -> list[tuple[str, int]]:
+    """``(layer_group_name, moe_layer_count)`` per execution-plan layer
+    group — the iteration both analytic accountings below use to
+    resolve per-layer-group PolicyTable overrides exactly as the engine
+    lowers them (each group prices ITS OWN resolved moe policy)."""
+    from repro.core.roofline import layer_group_names
+
+    names = layer_group_names(cfg)
+    out: dict[str, int] = {}
+    for layer in range(cfg.num_layers):
+        if cfg.is_moe_layer(layer):
+            out[names[layer]] = out.get(names[layer], 0) + 1
+    return list(out.items())
+
+
 def analytic_residency_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2,
                              opt_bytes_per_param: int = 12) -> float:
     """Per-device steady-state residency on the TARGET (TPU bf16): params
@@ -89,10 +104,11 @@ def analytic_residency_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2,
     memory_analysis over-reports (f32 conversion, conservative liveness),
     so the fit claim uses this analytic number; both are recorded.
 
-    Prices the plan's FAMILY-level policies (like analytic_hbm_bytes
-    below): per-layer-group PolicyTable overrides are honored by the
-    engine but not resolved here — the report has no layer-group
-    dimension."""
+    Per-layer-group PolicyTable overrides resolve exactly (like
+    analytic_hbm_bytes below): the expert gather window and residency
+    cache are priced group by group under each group's own policy, so
+    a mixed table (e.g. ``fetch="demand"`` scoped to one group) reports
+    the bytes the engine actually buffers."""
     import math as _m
 
     chips = _m.prod(xp.mesh_sizes.values())
@@ -126,37 +142,36 @@ def analytic_residency_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2,
     cache_bytes = 0.0
     if cfg.moe is not None and geom.moe_exec == "gather" and geom.moe_placement:
         pl = geom.moe_placement
-        window_experts = pl.num_padded
-        if demand_fetch_active(cfg, geom, xp):
-            # route-before-gather: the layer holds only the budget-padded
-            # fetched rows (the resident shard is consumed in place)
-            budget = resolve_demand_budget(cfg, geom, xp)
-            window_experts = (pl.subgroup_size - 1) * min(
-                budget, pl.local_count
-            )
-            if predictive_fetch_active(cfg, geom, xp):
-                # speculative + correction rounds both buffer, and the
-                # cross-step residency cache is PERSISTENT per MoE layer
-                # (not double-buffered — priced separately below)
-                spec = resolve_spec_budget(cfg, geom, xp)
-                window_experts += (pl.subgroup_size - 1) * min(
-                    spec, pl.local_count
+        expert_row = 3 * cfg.d_model * cfg.moe.d_ff * dtype_bytes
+        for gname, n_moe_g in _moe_layer_groups(cfg):
+            window_experts = pl.num_padded
+            if demand_fetch_active(cfg, geom, xp, gname):
+                # route-before-gather: the layer holds only the
+                # budget-padded fetched rows (the resident shard is
+                # consumed in place)
+                budget = resolve_demand_budget(cfg, geom, xp, gname)
+                window_experts = (pl.subgroup_size - 1) * min(
+                    budget, pl.local_count
                 )
-                n_moe = sum(
-                    cfg.is_moe_layer(l) for l in range(cfg.num_layers)
-                )
-                cache_bytes = (
-                    n_moe * resolve_cache_rows(cfg, geom, xp)
-                    * 3 * cfg.d_model * cfg.moe.d_ff * dtype_bytes
-                )
-        elif split_bank_active(geom, xp, "moe/experts"):
-            # gate on the engine's own predicate (not the knob alone) so
-            # the report never claims a saving for plans that fall back
-            # to the merged path
-            window_experts = pl.num_padded - pl.local_count
-        layer_sets.append(
-            window_experts * 3 * cfg.d_model * cfg.moe.d_ff * dtype_bytes
-        )
+                if predictive_fetch_active(cfg, geom, xp, gname):
+                    # speculative + correction rounds both buffer, and
+                    # the cross-step residency cache is PERSISTENT per
+                    # MoE layer (not double-buffered — priced
+                    # separately below)
+                    spec = resolve_spec_budget(cfg, geom, xp, gname)
+                    window_experts += (pl.subgroup_size - 1) * min(
+                        spec, pl.local_count
+                    )
+                    cache_bytes += (
+                        n_moe_g * resolve_cache_rows(cfg, geom, xp, gname)
+                        * expert_row
+                    )
+            elif split_bank_active(geom, xp, "moe/experts", gname):
+                # gate on the engine's own predicate (not the knob
+                # alone) so the report never claims a saving for plans
+                # that fall back to the merged path
+                window_experts = pl.num_padded - pl.local_count
+            layer_sets.append(window_experts * expert_row)
     if cfg.moe is not None and geom.moe_exec == "rotate" and geom.moe_placement:
         # rotate holds the resident shard + the in-flight one (the 2x
         # double-buffer is applied uniformly below)
@@ -308,41 +323,59 @@ def analytic_hbm_bytes(cfg, geom, xp, shape, dtype_bytes: int = 2) -> float:
             )
         # expert bank, exactly: the padded canonical bank lands (merged)
         # or only the (G'-1)/G' remote fraction (split); subgroup 1 =
-        # fully resident, no expert gather at all (gather_set skips it)
+        # fully resident, no expert gather at all (gather_set skips it).
+        # Priced PER LAYER GROUP so per-layer-group PolicyTable
+        # overrides land exactly the rows the engine fetches for those
+        # layers.
         if cfg.moe is not None and geom.moe_placement:
             pl = geom.moe_placement
             n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
             per_layer = 3 * cfg.d_model * cfg.moe.d_ff
             bank_landed = n_moe * pl.num_padded * per_layer
             if geom.moe_exec == "gather" and pl.subgroup_size > 1:
-                if demand_fetch_active(cfg, geom, xp):
-                    # demand lands + reads back only the budget-padded
-                    # fetched rows — strictly below the full remote bank
-                    # whenever the budget is (rows * top_k under-full)
-                    budget = resolve_demand_budget(cfg, geom, xp)
-                    fetch_rows = (pl.subgroup_size - 1) * min(
-                        budget, pl.local_count
-                    )
-                    if predictive_fetch_active(cfg, geom, xp):
-                        # speculative round lands+reads too; cached rows
-                        # are read in place (one read, no landing)
-                        spec = resolve_spec_budget(cfg, geom, xp)
-                        fetch_rows += (pl.subgroup_size - 1) * min(
-                            spec, pl.local_count
+                for gname, n_moe_g in _moe_layer_groups(cfg):
+                    if demand_fetch_active(cfg, geom, xp, gname):
+                        # demand lands + reads back only the
+                        # budget-padded fetched rows — strictly below
+                        # the full remote bank whenever the budget is
+                        # (rows * top_k under-full)
+                        budget = resolve_demand_budget(
+                            cfg, geom, xp, gname
                         )
+                        fetch_rows = (pl.subgroup_size - 1) * min(
+                            budget, pl.local_count
+                        )
+                        if predictive_fetch_active(cfg, geom, xp, gname):
+                            # speculative round lands+reads too; cached
+                            # rows are read in place (one read, no
+                            # landing)
+                            spec = resolve_spec_budget(
+                                cfg, geom, xp, gname
+                            )
+                            fetch_rows += (pl.subgroup_size - 1) * min(
+                                spec, pl.local_count
+                            )
+                            gathered_extra += (
+                                n_moe_g
+                                * resolve_cache_rows(cfg, geom, xp, gname)
+                                * per_layer * dtype_bytes
+                            )
                         gathered_extra += (
-                            n_moe * resolve_cache_rows(cfg, geom, xp)
-                            * per_layer * dtype_bytes
+                            2.0 * n_moe_g * fetch_rows * per_layer
+                            * dtype_bytes
                         )
-                    gathered_extra += (
-                        2.0 * n_moe * fetch_rows * per_layer * dtype_bytes
-                    )
-                elif split_bank_active(geom, xp, "moe/experts"):
-                    gathered_extra += (
-                        2.0 * bank_landed * dtype_bytes * pl.remote_fraction
-                    )
-                else:
-                    gathered_extra += 2.0 * bank_landed * dtype_bytes
+                    elif split_bank_active(
+                        geom, xp, "moe/experts", gname
+                    ):
+                        gathered_extra += (
+                            2.0 * n_moe_g * pl.num_padded * per_layer
+                            * dtype_bytes * pl.remote_fraction
+                        )
+                    else:
+                        gathered_extra += (
+                            2.0 * n_moe_g * pl.num_padded * per_layer
+                            * dtype_bytes
+                        )
             elif geom.moe_exec == "rotate" and pl.subgroup_size > 1:
                 # rotate streams every non-resident shard through HBM
                 # once per layer (transient landing + read) — same remote

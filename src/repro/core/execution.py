@@ -480,8 +480,10 @@ def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
     split — ``{"spec": ..., "corr": ...}`` — separating the layer-ahead
     (overlappable) speculative round from the post-routing
     (critical-path) correction round; plain demand's one post-routing
-    round counts under ``corr``. Counts the stacked transformer
-    families; the rare flat cell/rec gathers are not modeled here.
+    round counts under ``corr``, and sync-free steps add a per-STEP
+    ``mirror`` entry (the one mirror-fold all-gather, counted once —
+    not per layer). Counts the stacked transformer families; the rare
+    flat cell/rec gathers are not modeled here.
     """
     cfg, geom = model.cfg, model.geom
     ws = jnp.dtype(model.dtype).itemsize
@@ -492,6 +494,7 @@ def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
     }
     rounds = {"spec": 0.0, "corr": 0.0}
     any_rounds = False
+    any_sync = False
 
     def add(fam: str, n_cycles: int, full_b: float, fetched_b=None):
         fams[fam]["full"] += full_b * n_cycles
@@ -522,6 +525,7 @@ def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
                             cfg, geom, xp, group.name
                         )
                         if sync_free_active(cfg, geom, xp, group.name):
+                            any_sync = True
                             by_round = prefetch.sync_free_fetch_bytes(
                                 pl, spec_b, corr_b, _routed_tokens(xp),
                                 pe, validate=xp.validated,
@@ -572,6 +576,15 @@ def gathered_wire_bytes_per_step(model: Model, xp: ExecutionPlan) -> dict:
                 rounds["corr"] += fetched * group.n_cycles
                 add("moe_experts", group.n_cycles,
                     prefetch.gather_bytes(pl, pe), fetched)
+    if any_sync:
+        # the ONE per-step mirror-fold all-gather (routing/position
+        # signals) — per STEP, not per layer, so it adds once, outside
+        # the group/cycle loops
+        mb = float(prefetch.sync_free_mirror_bytes(
+            geom.moe_placement, _routed_tokens(xp)
+        ))
+        rounds["mirror"] = mb
+        fams["moe_experts"]["fetched"] += mb
     out = {
         "full": sum(v["full"] for v in fams.values()),
         "fetched": sum(v["fetched"] for v in fams.values()),
@@ -1426,8 +1439,6 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
             # mirrored views: leading dim = subgroup position. This
             # rank's own slots are the position-p rows.
             m_ema = pred.ema[0]
-            m_aff, m_posb = pred.aff[0], pred.posb[0]
-            m_sigw = pred.sigw[0]
             m_cids, m_cvalid = pred.cache_ids[0], pred.cache_valid[0]
             cache_ids = lax.dynamic_index_in_dim(
                 m_cids, p, 0, keepdims=False
@@ -1489,12 +1500,14 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
         have_ids = jnp.concatenate([cache_ids, spec_bank.fetched_ids])
         have_valid = jnp.concatenate([cache_valid_v, spec_valid_eff])
         if sync_free:
-            # correction round, sync-free form: ONE packed bool
-            # all-gather carries the residual (miss) bitmaps AND the
-            # per-row routing/position signals every mirror folds — the
-            # mode's entire per-layer index traffic. The correction
-            # payload compaction then derives from the exchanged
-            # residuals exactly as the demand contract does.
+            # correction round, sync-free form: the residual (miss)
+            # bitmap all-gather is the mode's ONLY per-layer index
+            # traffic — the senders need every requester's residual to
+            # compact the payload, exactly the demand contract. The
+            # routing/position signals that feed the mirrors are
+            # returned to ``forward_decode`` instead (PredictState.
+            # routed), which unions them across layers and runs ONE
+            # per-step mirror fold after the stack.
             residual = wanted & ~prefetch.exclude_bitmap(
                 e_pad, have_ids, have_valid
             )
@@ -1505,15 +1518,8 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
                 ),
                 e_pad,
             )
-            buckets = prefetch.position_buckets(ctx.pos)
-            packed = prefetch.pack_correction_payload(
-                residual, routed, buckets
-            )
-            all_packed = lax.all_gather(
-                packed, axis, axis_index_groups=pl.axis_index_groups()
-            )
-            resid_all, routed_all, buckets_all = (
-                prefetch.unpack_correction_payload(all_packed, e_pad, t)
+            resid_all = lax.all_gather(
+                residual, axis, axis_index_groups=pl.axis_index_groups()
             )
             corr_ids, corr_valid, ovf_raw = prefetch.plan_from_bitmap(
                 residual, p, g, local, cbudget
@@ -1524,16 +1530,6 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
             plan = prefetch.DemandPlan(
                 masks=resid_all, fetched_ids=corr_ids, valid=corr_valid,
                 overflow=overflow,
-            )
-            # mirrored predictor fold: every rank folds EVERY position's
-            # exchanged routing — deterministic in the payload alone, so
-            # the mirrors stay bit-identical across ranks.
-            (new_prev_all, new_ema_all, new_aff, new_posb, new_sig,
-             new_sigw) = jax.vmap(prefetch.update_predictor)(
-                m_ema, m_aff, m_posb, m_sigw, routed_all, buckets_all
-            )
-            new_ema = lax.dynamic_index_in_dim(
-                new_ema_all, p, 0, keepdims=False
             )
         else:
             plan = prefetch.plan_demand_fetch(
@@ -1729,9 +1725,13 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
         # bookkeeping from exchanged/mirrored inputs only — the derived
         # (masks, resid_all) schedules plus the STRUCTURAL (unverified)
         # carried validity, never the local checksum results, so all
-        # mirrors agree bit-for-bit. A corrupt row that stays cached is
-        # caught again at next step's consume-time verify and re-fetched
-        # through the correction round — still exact, one step later.
+        # mirrors agree bit-for-bit. Eviction scores read the PRE-step
+        # mirror EMA (``m_ema`` — the fold moved to the per-step site in
+        # ``forward_decode``, after this layer runs); it is mirror-shared,
+        # so replay determinism is unchanged. A corrupt row that stays
+        # cached is caught again at next step's consume-time verify and
+        # re-fetched through the correction round — still exact, one
+        # step later.
         def replay(q, resid_q, ema_q, cids_q, cvalid_q, mask_q):
             s_ids, s_valid, _ = prefetch.plan_from_bitmap(
                 mask_q, q, g, local, sbudget
@@ -1752,7 +1752,7 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
             return ids_q[order_q], valid_q[order_q], order_q
 
         rep_ids, rep_valid, rep_order = jax.vmap(replay)(
-            jnp.arange(g), resid_all, new_ema_all, m_cids, m_cvalid, masks
+            jnp.arange(g), resid_all, m_ema, m_cids, m_cvalid, masks
         )
         nc_ids = lax.dynamic_index_in_dim(rep_ids, p, 0, keepdims=False)
         nc_valid = lax.dynamic_index_in_dim(
@@ -1783,17 +1783,22 @@ def _moe_demand_apply(x2d, experts, d, cap: int, ctx: Ctx,
         ),
     )
     if sync_free:
+        # predictor fields pass through UNCHANGED — the per-step mirror
+        # fold in ``forward_decode`` overwrites them once for every
+        # sync-free layer from the one exchanged mirror payload; this
+        # layer only contributes its routed bitmaps to that fold.
         new_pred = prefetch.PredictState(
-            prev=new_prev_all[None],
-            ema=new_ema_all[None],
+            prev=pred.prev,
+            ema=pred.ema,
             cache_ids=rep_ids[None],
             cache_valid=rep_valid[None],
             cache=jax.tree.map(lambda w: w[None], nc_w),
             stats=stats[None],
-            aff=new_aff[None],
-            posb=new_posb[None],
-            sig=new_sig[None],
-            sigw=new_sigw[None],
+            aff=pred.aff,
+            posb=pred.posb,
+            sig=pred.sig,
+            sigw=pred.sigw,
+            routed=routed[None],
         )
     else:
         new_pred = prefetch.PredictState(
@@ -2286,6 +2291,85 @@ def forward_prefill(params, batch, ctx: Ctx):
     return out
 
 
+def _fold_mirrors(new_preds: dict, preds_in, ctx: Ctx) -> dict:
+    """The sync-free per-STEP mirror fold: union every sync-free layer's
+    routed bitmaps (returned through the transient ``PredictState.routed``
+    channel), exchange them in ONE packed all-gather over the subgroup,
+    fold once with :func:`prefetch.update_predictor` from the pre-step
+    mirror state, and write the folded predictor fields into EVERY
+    sync-free layer's outgoing state. The predictor models the rank, not
+    the layer, so one fold per step replaces the old per-layer packed
+    exchange — (n_moe_layers - 1) fewer metadata gathers per step, and
+    the per-layer index traffic shrinks to the correction residual
+    bitmap alone. Deterministic in the exchanged payload, so the mirrors
+    stay bit-identical across ranks exactly as the per-layer fold did.
+
+    No-op (returns ``new_preds`` unchanged) when no layer ran sync-free
+    this step — plain predictive layers fold locally in-layer."""
+    sf_keys = [
+        (gname, pos)
+        for gname, gdict in new_preds.items()
+        for pos, ps in gdict.items()
+        if ps.routed is not None
+    ]
+    if not sf_keys:
+        return new_preds
+    geom = ctx.geom
+    pl = geom.moe_placement
+    axis = geom.expert_axes[0]
+    e_pad = pl.num_padded
+
+    def _local_rows(leaf, nd):
+        # strip the leading stack dims (scan cycles x rank shard) down
+        # to the per-mirror view: (..., *leaf.shape[-nd:]) -> cycle 0
+        return leaf.reshape((-1,) + leaf.shape[-nd:])[0]
+
+    routed_u = None
+    for gname, pos in sf_keys:
+        r = new_preds[gname][pos].routed  # (1, rows, E) | (n, 1, rows, E)
+        r = jnp.any(r.reshape((-1,) + r.shape[-2:]), axis=0)
+        routed_u = r if routed_u is None else (routed_u | r)
+    buckets = prefetch.position_buckets(ctx.pos)
+    packed = prefetch.pack_mirror_payload(routed_u, buckets)
+    all_packed = lax.all_gather(
+        packed, axis, axis_index_groups=pl.axis_index_groups()
+    )
+    routed_all, buckets_all = prefetch.unpack_mirror_payload(
+        all_packed, e_pad
+    )
+    # pre-step mirror state: identical across sync-free layers by
+    # construction (cold init is uniform zeros; every later step writes
+    # the same folded fields everywhere), so any layer's incoming state
+    # seeds the fold
+    g0, p0 = sf_keys[0]
+    m = preds_in[g0][p0]
+    new_prev, new_ema, new_aff, new_posb, new_sig, new_sigw = jax.vmap(
+        prefetch.update_predictor
+    )(
+        _local_rows(m.ema, 2), _local_rows(m.aff, 3),
+        _local_rows(m.posb, 3), _local_rows(m.sigw, 2),
+        routed_all, buckets_all,
+    )
+    folded = {
+        "prev": new_prev, "ema": new_ema, "aff": new_aff,
+        "posb": new_posb, "sig": new_sig, "sigw": new_sigw,
+    }
+
+    def _bcast(v, like):
+        return jnp.broadcast_to(
+            v.reshape((1,) * (like.ndim - v.ndim) + v.shape), like.shape
+        )
+
+    out = {g: dict(d) for g, d in new_preds.items()}
+    for gname, pos in sf_keys:
+        ps = out[gname][pos]
+        out[gname][pos] = ps._replace(
+            routed=None,
+            **{k: _bcast(v, getattr(ps, k)) for k, v in folded.items()},
+        )
+    return out
+
+
 def forward_decode(params, batch, state, ctx: Ctx):
     assert AXIS_MODEL not in ctx.xp.batch_axes
     ctx.pos = state["pos"]
@@ -2294,6 +2378,8 @@ def forward_decode(params, batch, state, ctx: Ctx):
     x, new_layer_states, new_preds, _, fstats = _run_stack(
         params, x, ctx, state
     )
+    if new_preds:
+        new_preds = _fold_mirrors(new_preds, state.get("pred"), ctx)
     x = rms_norm(x, params["final_norm"], ctx.cfg.norm_eps)
     logits = (x[:, 0] @ _w(_head_local(params, ctx), x)).astype(jnp.float32)
     logits = softcap(logits, ctx.cfg.logit_softcap)

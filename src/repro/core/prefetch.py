@@ -242,9 +242,16 @@ class PredictState(NamedTuple):
     from each signal's measured alignment with the step's actual routing
     (:data:`SIGW_DECAY`).
 
-    Every sync-free field is updated ONLY from the packed correction-
-    round payload (:func:`pack_correction_payload`), which all ranks see
-    identically — the mirror never drifts on a healthy step.
+    Every sync-free field is updated ONLY from exchanged payloads —
+    per-layer correction residuals plus the ONE per-step mirror
+    all-gather (:func:`pack_mirror_payload`) — which all ranks see
+    identically, so the mirror never drifts on a healthy step.
+
+    ``routed`` is a TRANSIENT within-step channel, never part of the
+    carried state: a sync-free layer returns its own rows' routed
+    bitmaps here so ``forward_decode`` can union them across layers and
+    run the single per-step mirror fold; the fold strips it back to
+    ``None`` before the state leaves the step.
     """
 
     prev: jax.Array
@@ -257,6 +264,7 @@ class PredictState(NamedTuple):
     posb: Any = None
     sig: Any = None
     sigw: Any = None
+    routed: Any = None
 
 
 class DemandPlan(NamedTuple):
@@ -794,34 +802,34 @@ def position_buckets(pos: jax.Array) -> jax.Array:
     return b[..., None] == jnp.arange(N_POS_BUCKETS)
 
 
-def pack_correction_payload(
-    residual: jax.Array, routed: jax.Array, buckets: jax.Array
-) -> jax.Array:
-    """Flatten one rank's correction-round metadata into a single bool
-    vector: ``[residual (num_padded,) | routed (rows * num_padded,) |
-    buckets (rows * N_POS_BUCKETS,)]``. ONE all-gather of this vector is
-    the sync-free mode's whole per-layer index traffic — it both plans
-    the correction fetch (the residual bitmaps) and feeds every mirror's
-    predictor fold (the per-row routing + position signals)."""
-    return jnp.concatenate(
-        [residual, routed.reshape(-1), buckets.reshape(-1)]
-    )
+def pack_mirror_payload(routed: jax.Array, buckets: jax.Array) -> jax.Array:
+    """Flatten one rank's per-STEP mirror-fold metadata into a single
+    bool vector: ``[routed (rows * num_padded,) | buckets
+    (rows * N_POS_BUCKETS,)]``. ONE all-gather of this vector per decode
+    step feeds every mirror's predictor fold — the routing/position
+    signals are layer-agnostic (the predictor models the rank, not the
+    layer), so the fold runs once after the stack instead of once per
+    layer. The per-layer index traffic that remains is the correction
+    residual bitmap alone (it plans the compacted payload fetch, so the
+    senders need it per layer)."""
+    return jnp.concatenate([routed.reshape(-1), buckets.reshape(-1)])
 
 
-def unpack_correction_payload(
-    packed: jax.Array, num_padded: int, rows: int
-) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Inverse of :func:`pack_correction_payload` (leading dims pass
-    through, so it unpacks the all-gathered ``(G', total)`` form too)."""
-    resid = packed[..., :num_padded]
-    r_end = num_padded + rows * num_padded
-    routed = packed[..., num_padded:r_end].reshape(
+def unpack_mirror_payload(
+    packed: jax.Array, num_padded: int
+) -> tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`pack_mirror_payload` (leading dims pass
+    through, so it unpacks the all-gathered ``(G', total)`` form too;
+    ``rows`` is recovered from the packed length)."""
+    rows = packed.shape[-1] // (num_padded + N_POS_BUCKETS)
+    r_end = rows * num_padded
+    routed = packed[..., :r_end].reshape(
         packed.shape[:-1] + (rows, num_padded)
     )
     buckets = packed[..., r_end:].reshape(
         packed.shape[:-1] + (rows, N_POS_BUCKETS)
     )
-    return resid, routed, buckets
+    return routed, buckets
 
 
 def predict_extra_score(sig: jax.Array, sigw: jax.Array) -> jax.Array:
@@ -850,7 +858,7 @@ def update_predictor(
 
     ``routed``: ``(rows, num_padded)`` bool per-row routed bitmaps;
     ``buckets``: ``(rows, N_POS_BUCKETS)`` bool position one-hots (both
-    straight out of :func:`unpack_correction_payload`).
+    straight out of :func:`unpack_mirror_payload`).
     Returns ``(prev, ema, aff, posb, sig, sigw)`` — ``prev`` is the
     rows-union activation bitmap; ``sig`` holds the two signals
     collapsed to per-expert scores and normalized to [0, 1]; ``sigw``
@@ -1017,18 +1025,30 @@ def sync_free_fetch_bytes(
     ``{"spec": ..., "corr": ...}``. The speculative round is PURE
     payload — zero index metadata, the schedule is derived from the
     mirrored predictor on both endpoints. The correction round carries
-    its payload plus the one packed bool all-gather
-    (:func:`pack_correction_payload`: residual bitmap + ``rows`` per-row
-    routed bitmaps + position one-hots, 1 byte/bit from each subgroup
-    peer) and, when ``validate``, the f32 checksum table that now rides
-    here instead of the (gone) speculative index round."""
+    its payload plus the residual (miss) bitmap all-gather (1 byte per
+    expert from each subgroup peer — the senders need it to compact the
+    payload, so it is the ONLY index traffic that stays per-layer) and,
+    when ``validate``, the f32 checksum table that rides the same round.
+    The routing/position signals that feed the mirrors moved OFF the
+    per-layer path entirely: they ship once per step
+    (:func:`sync_free_mirror_bytes`)."""
     g = placement.subgroup_size
     e = placement.num_padded
     sb = min(spec_budget, placement.local_count)
     cb = min(corr_budget, placement.local_count)
-    packed = e * (1 + rows) + rows * N_POS_BUCKETS
-    meta = packed + (4 * e if validate else 0)
+    meta = e + (4 * e if validate else 0)
     return {
         "spec": (g - 1) * sb * bytes_per_expert,
         "corr": (g - 1) * (cb * bytes_per_expert + meta),
     }
+
+
+def sync_free_mirror_bytes(placement: Placement, rows: int) -> int:
+    """Per-STEP wire bytes of the one mirror-fold all-gather
+    (:func:`pack_mirror_payload`: ``rows`` per-row routed bitmaps +
+    position one-hots, 1 byte/bit from each subgroup peer). Amortized
+    over every sync-free layer in the stack — the fold is per-step, not
+    per-layer."""
+    g = placement.subgroup_size
+    e = placement.num_padded
+    return (g - 1) * (rows * e + rows * N_POS_BUCKETS)

@@ -101,6 +101,38 @@ def predictive_budget_rows(
     return spec, corr
 
 
+def predictive_budget_rungs(
+    n_draws: int,
+    num_experts: int,
+    local: int,
+    factors: tuple = (0.5, 1.0, 1.5, 2.0),
+) -> tuple:
+    """The online speculative-budget LADDER: explicit per-peer row
+    budgets at ``factors`` x the expected per-peer distinct-expert
+    coverage, 8-aligned, clamped to the per-rank expert count and
+    deduplicated (ascending). Each rung is a compile-stable
+    ``GatherPolicy.budget`` value, so a serving engine can pre-compile
+    one forward variant per rung off the serving path and snap the
+    measured ``spec_hit``/``corr`` split to the nearest rung with ZERO
+    recompiles (the zero-recompile online-resizing contract —
+    docs/policy_switching.md). The 1.0x rung coincides with the
+    speculative half of :func:`predictive_budget_rows` wherever the
+    coverage expectation clears the 8-row floor. Budget changes never
+    touch correctness: overflow beyond any rung rides the per-layer
+    exact fallback."""
+    if local <= 0:
+        return (0,)
+    e = max(1, num_experts)
+    expected = local * (1.0 - (1.0 - 1.0 / e) ** n_draws)
+    align = lambda v: -(-math.ceil(v) // 8) * 8
+    rungs: list[int] = []
+    for f in sorted(factors):
+        spec = min(local, max(8, align(f * expected)))
+        if spec not in rungs:
+            rungs.append(spec)
+    return tuple(rungs)
+
+
 def predictive_fetch_terms(
     tokens: int,
     top_k: int,
@@ -141,9 +173,12 @@ def predictive_fetch_terms(
     ``sync_free`` models the mirrored-predictor mode: the speculative
     round is PURE payload — both endpoints derive the schedule from
     mirrored PredictState, so its bitmap index round disappears from
-    the wire entirely. The correction round keeps its index metadata
-    (the packed routing/position payload that feeds every mirror, plus
-    the checksum table when validated rides there too).
+    the wire entirely. The correction round keeps only the residual
+    (miss) bitmap as index metadata — the senders compact the payload
+    against it — plus the checksum table when validated; the
+    routing/position mirror payload ships ONCE per step, not per layer
+    (``prefetch.sync_free_mirror_bytes``), priced as a per-step term by
+    :func:`modeled_step_time`.
     """
     sub = max(1, group // redundancy)
     if sub <= 1:
@@ -274,6 +309,7 @@ def layer_times(
     cache_hit: Optional[float] = None,
     predict_hit: Optional[float] = None,
     validate: bool = False,
+    layer_group: Optional[str] = None,
 ) -> LayerTimes:
     """Per-layer roofline terms for the context phase (batch of `tokens`).
 
@@ -319,18 +355,22 @@ def layer_times(
     flat ``weight_layout`` / ``expert_fetch`` / ``moe_ffn`` arguments
     are ignored. This is what lets the model score heterogeneous
     mixed-policy plans (the ``policy="auto"`` resolver's objective).
+    ``layer_group`` scopes every family lookup to that execution-plan
+    layer group (:func:`layer_group_names`), so per-layer-group
+    PolicyTable overrides price exactly the policy the engine lowers
+    for this layer.
     """
     budget = 0
     cache_rows = 0
     if policies is not None:
-        moe_pol = policies.family("moe_experts")
+        moe_pol = policies.family("moe_experts", layer_group)
         moe_layout = moe_pol.layout
         expert_fetch = moe_pol.fetch
         budget = moe_pol.budget
         cache_rows = moe_pol.cache_budget
-        dense_layout = policies.family("dense_ffn").layout
-        qkv_layout = policies.family("attn_qkv").layout
-        out_layout = policies.family("attn_out").layout
+        dense_layout = policies.family("dense_ffn", layer_group).layout
+        qkv_layout = policies.family("attn_qkv", layer_group).layout
+        out_layout = policies.family("attn_out", layer_group).layout
     else:
         flat = weight_layout if weight_layout is not None else moe_ffn
         moe_layout = dense_layout = qkv_layout = out_layout = flat
@@ -449,6 +489,31 @@ def layer_step_time(lt: LayerTimes) -> float:
     )
 
 
+def layer_group_names(cfg: ArchConfig) -> list[str]:
+    """Per-layer execution-plan layer-group name ("prefix" / "body" /
+    "suffix" — ``models.transformer.make_layer_plan``'s grouping): the
+    key space per-layer-group :class:`strategy.PolicyTable` overrides
+    are scoped by, so the roofline prices a mixed table exactly as the
+    engine lowers it. Lazy model import keeps roofline import-light."""
+    from repro.models.transformer import make_layer_plan
+
+    names = [""] * cfg.num_layers
+    for g in make_layer_plan(cfg):
+        span = g.n_cycles * len(g.sigs)
+        for layer in range(g.first_layer, g.first_layer + span):
+            names[layer] = g.name
+    return names
+
+
+def _rate_for(rate, group_name: Optional[str]):
+    """A replayed hit rate: a scalar applies everywhere; a mapping keys
+    by layer-group name (measured per-group rates — the online
+    resolver's drift input)."""
+    if rate is None or isinstance(rate, (int, float)):
+        return rate
+    return rate.get(group_name)
+
+
 def modeled_step_time(
     cfg: ArchConfig,
     *,
@@ -463,8 +528,8 @@ def modeled_step_time(
     redundancy: int = 1,
     weight_bytes: int = 1,
     act_bytes: int = 2,
-    cache_hit: Optional[float] = None,
-    predict_hit: Optional[float] = None,
+    cache_hit=None,
+    predict_hit=None,
     validate: bool = False,
 ) -> float:
     """Modeled one-step wall time of a full DWDP forward under a policy
@@ -475,19 +540,55 @@ def modeled_step_time(
     exactly the demand-path inversion the predictive fetch takes back
     off the critical path), summed over every layer. The
     ``policy="auto"`` resolver's objective and the surface the
-    acceptance criterion compares uniform vs mixed tables on."""
+    acceptance criterion compares uniform vs mixed tables on.
+
+    Per-layer-group PolicyTable overrides are priced exactly: each
+    layer resolves its policies under its own layer group
+    (:func:`layer_group_names`), and ``cache_hit`` / ``predict_hit``
+    accept a ``{group_name: rate}`` mapping to replay MEASURED
+    per-group hit rates (the online resolver's drift input) alongside
+    the scalar spelling. When any layer runs ``fetch="sync_free"`` the
+    ONE per-step mirror-fold all-gather
+    (``prefetch.sync_free_mirror_bytes`` — routing/position signals
+    shipped once per step, not per layer) is added once."""
+    groups = None
+    if policies is not None and (
+        getattr(policies, "overrides", ())
+        or not isinstance(cache_hit, (int, float, type(None)))
+        or not isinstance(predict_hit, (int, float, type(None)))
+    ):
+        groups = layer_group_names(cfg)
     total = 0.0
+    sync_free_used = False
     for layer in range(cfg.num_layers):
+        gname = groups[layer] if groups else None
         lt = layer_times(
             cfg, tokens=tokens, group=group, hw=hw, layer=layer,
             policies=policies, weight_layout=weight_layout,
             expert_fetch=expert_fetch, attn_gathered=attn_gathered,
             kv_len=kv_len, redundancy=redundancy,
             weight_bytes=weight_bytes, act_bytes=act_bytes,
-            cache_hit=cache_hit, predict_hit=predict_hit,
-            validate=validate,
+            cache_hit=_rate_for(cache_hit, gname),
+            predict_hit=_rate_for(predict_hit, gname),
+            validate=validate, layer_group=gname,
         )
         total += layer_step_time(lt)
+        if cfg.moe is not None and cfg.is_moe_layer(layer):
+            fetch = (
+                policies.family("moe_experts", gname).fetch
+                if policies is not None else expert_fetch
+            )
+            sync_free_used = sync_free_used or fetch == "sync_free"
+    sub = max(1, group // redundancy)
+    if sync_free_used and cfg.moe is not None and sub > 1:
+        moe = cfg.moe
+        partial = tokens * moe.top_k < moe.num_experts * (sub - 1) / sub
+        if partial:
+            from repro.core import prefetch
+            from repro.core.placement import make_placement
+
+            pl = make_placement(moe.num_experts, sub)
+            total += prefetch.sync_free_mirror_bytes(pl, tokens) / hw.link_bw
     return total
 
 
@@ -499,6 +600,7 @@ def degraded_step_times(
     group: int,
     hw: Hardware = GB200,
     validate: bool = True,
+    excluded_peers: int = 1,
     **kw,
 ) -> list[dict]:
     """Price every level of the graceful-degradation ladder the
@@ -507,9 +609,15 @@ def degraded_step_times(
     validation priced in (the checksum table on each index round), plus
     the healthy (non-validated) baseline of the TOP level — so the
     engine / bench can report both the validation overhead and the cost
-    of each demotion before any fault ever fires."""
+    of each demotion before any fault ever fires.
+
+    ``excluded_peers`` sizes the ``+excl`` rung: the HealthMonitor now
+    hands the exclusion rung a peer SET, so asymmetric badness (several
+    hot peers at once) is priced by dropping that many peers' shares of
+    the remote bank from the speculative schedule."""
     from repro.core.strategy import degradation_ladder
 
+    n_excl = max(1, min(int(excluded_peers), max(1, group - 1)))
     rows = []
     base = modeled_step_time(
         cfg, tokens=tokens, group=group, hw=hw, policies=policies,
@@ -520,10 +628,11 @@ def degraded_step_times(
     ):
         sub_kw = dict(kw)
         if excl is None or excl:
-            # the per-peer exclusion rung: the bad peer's experts leave
+            # the per-peer exclusion rung: the bad peers' experts leave
             # the speculative schedule and re-route through the (still
             # validated) correction round — priced as a predictor
-            # hit-rate haircut of one peer's share of the remote bank
+            # hit-rate haircut of the excluded peers' share of the
+            # remote bank
             ph = sub_kw.get("predict_hit")
             if ph is None and cfg.moe is not None:
                 ph = 1.0 - (
@@ -531,7 +640,7 @@ def degraded_step_times(
                 ) ** (tokens * cfg.moe.top_k)
             if ph is not None:
                 sub_kw["predict_hit"] = (
-                    ph * max(0, group - 2) / max(1, group - 1)
+                    ph * max(0, group - 1 - n_excl) / max(1, group - 1)
                 )
         t = modeled_step_time(
             cfg, tokens=tokens, group=group, hw=hw, policies=table,

@@ -391,7 +391,11 @@ def _coerce_policy(policy: PolicyLike) -> Optional[PolicyTable]:
     if isinstance(policy, Mapping):
         return PolicyTable.from_dict(policy)
     if isinstance(policy, str):
-        if policy == "auto":
+        if policy in ("auto", "auto-online"):
+            # "auto-online" resolves like "auto" at plan-build time; the
+            # serving engine's OnlinePolicyScheduler additionally
+            # re-resolves at phase/batch boundaries against measured
+            # drift (runtime/engine.py)
             return None
         return PolicyTable(default=GatherPolicy.parse(policy))
     raise TypeError(f"cannot build a PolicyTable from {policy!r}")
@@ -729,6 +733,7 @@ def resolve_policies(
     *,
     hw=None,
     weight_bytes: int = 1,
+    hit_rates: Optional[Mapping] = None,
 ) -> PolicyTable:
     """Resolve a ``policy=`` argument into a concrete :class:`PolicyTable`.
 
@@ -748,6 +753,20 @@ def resolve_policies(
     headroom (:func:`_auto_cache_rows`). Transports are then assigned
     by the bank-size rule (ring_sliced only above
     RING_SLICED_MIN_BYTES).
+
+    After the family-level winner is fixed, the resolver refines it
+    with PER-LAYER-GROUP ``moe_experts`` overrides: group by group
+    (``roofline.layer_group_names``) it re-scores every eligible
+    (layout, fetch) candidate as an override scoped to that group and
+    keeps the override only when the full-table modeled step time
+    strictly improves — so a mixed table is emitted exactly when the
+    model says heterogeneity pays (e.g. ``fetch="demand"`` for a
+    layer group whose measured predictor hit rate collapsed, the rest
+    staying ``sync_free``). ``hit_rates`` feeds that asymmetry: an
+    optional ``{group_name: {"predict_hit": r, "cache_hit": r}}``
+    mapping of MEASURED per-group rates (an engine's served telemetry
+    — the ``policy="auto-online"`` scheduler's re-resolution input)
+    replayed into the scoring in place of the closed-form defaults.
     """
     table = _coerce_policy(policy)
     if table is not None:
@@ -801,14 +820,38 @@ def resolve_policies(
         return (["split"] if ok else []) + ["merged"]
 
     attn_gathered = bool(geom.attn_axes)
-    best, best_t = None, float("inf")
-    for moe_layout, fetch in moe_cands:
-        moe_pol = GatherPolicy(
-            layout=moe_layout, fetch=fetch,
+    ph_map = ch_map = None
+    if hit_rates:
+        ph_map = {
+            g: float(r["predict_hit"])
+            for g, r in hit_rates.items()
+            if r.get("predict_hit") is not None
+        } or None
+        ch_map = {
+            g: float(r["cache_hit"])
+            for g, r in hit_rates.items()
+            if r.get("cache_hit") is not None
+        } or None
+
+    def score(tab: PolicyTable) -> float:
+        return roofline.modeled_step_time(
+            cfg, tokens=tokens, group=group, hw=hw,
+            policies=tab, kv_len=shape.seq_len,
+            attn_gathered=attn_gathered, weight_bytes=weight_bytes,
+            cache_hit=ch_map, predict_hit=ph_map,
+        )
+
+    def moe_policy(layout: str, fetch: str) -> GatherPolicy:
+        return GatherPolicy(
+            layout=layout, fetch=fetch,
             cache_budget=(
                 cache_rows if fetch in ("predictive", "sync_free") else 0
             ),
         )
+
+    best, best_t = None, float("inf")
+    for moe_layout, fetch in moe_cands:
+        moe_pol = moe_policy(moe_layout, fetch)
         for qkv_layout in dense_cands(attn_split_ok):
             for out_layout in dense_cands(attn_split_ok):
                 for ffn_layout in dense_cands(ffn_split_ok):
@@ -821,18 +864,41 @@ def resolve_policies(
                             ("dense_ffn", GatherPolicy(layout=ffn_layout)),
                         ),
                     )
-                    t = roofline.modeled_step_time(
-                        cfg, tokens=tokens, group=group, hw=hw,
-                        policies=cand, kv_len=shape.seq_len,
-                        attn_gathered=attn_gathered,
-                        weight_bytes=weight_bytes,
-                    )
+                    t = score(cand)
                     if t < best_t:
                         best, best_t = cand, t
 
+    # -- per-layer-group refinement: moe_experts overrides, group by
+    # group, kept only on strict full-table improvement (the PR 4
+    # leftover — e.g. fetch="demand" scoped to the one layer group
+    # whose measured hit rate collapsed) -------------------------------
+    if cfg.moe is not None and pl is not None and len(moe_cands) > 1:
+        gnames = roofline.layer_group_names(cfg)
+        moe_groups = sorted(
+            {gnames[l] for l in range(cfg.num_layers) if cfg.is_moe_layer(l)}
+        )
+        overrides: list[tuple[str, str, GatherPolicy]] = []
+        for gname in moe_groups:
+            chosen = None
+            for moe_layout, fetch in moe_cands:
+                pol = moe_policy(moe_layout, fetch)
+                if pol == best.family("moe_experts"):
+                    continue
+                cand = dataclasses.replace(
+                    best,
+                    overrides=tuple(overrides)
+                    + ((gname, "moe_experts", pol),),
+                )
+                t = score(cand)
+                if t < best_t:
+                    chosen, best_t = (gname, "moe_experts", pol), t
+            if chosen is not None:
+                overrides.append(chosen)
+        if overrides:
+            best = dataclasses.replace(best, overrides=tuple(overrides))
+
     # -- transport per family: bank-size rule -----------------------------
-    fams = []
-    for name, pol in best.families:
+    def with_transport(name: str, pol: GatherPolicy) -> GatherPolicy:
         bank = _family_remote_bank_bytes(
             cfg, geom, name, pol.fetch, pol.budget, weight_bytes,
             routed_rows=rows,
@@ -840,8 +906,16 @@ def resolve_policies(
         transport = (
             "ring_sliced" if bank >= RING_SLICED_MIN_BYTES else "allgather"
         )
-        fams.append((name, dataclasses.replace(pol, transport=transport)))
-    return dataclasses.replace(best, families=tuple(fams))
+        return dataclasses.replace(pol, transport=transport)
+
+    fams = tuple(
+        (name, with_transport(name, pol)) for name, pol in best.families
+    )
+    ovr = tuple(
+        (g, name, with_transport(name, pol))
+        for g, name, pol in best.overrides
+    )
+    return dataclasses.replace(best, families=fams, overrides=ovr)
 
 
 def effective_policies(
@@ -885,8 +959,13 @@ def effective_policies(
     fams = tuple(
         (name, demote(name, table.family(name))) for name in GATHER_FAMILIES
     )
-    return PolicyTable(default=table.default, families=fams,
-                       overrides=table.overrides)
+    # per-layer-group overrides demote by the same rules: the engine
+    # applies the identical predicates per group, so pricing a mixed
+    # table keeps the same honesty contract
+    ovr = tuple(
+        (g, name, demote(name, pol)) for g, name, pol in table.overrides
+    )
+    return PolicyTable(default=table.default, families=fams, overrides=ovr)
 
 
 # --------------------------------------------------------------------------

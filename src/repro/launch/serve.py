@@ -48,25 +48,31 @@ from repro.runtime.engine import (
     DisaggregatedEngine,
     GenerationServer,
     HealthMonitor,
+    OnlinePolicyScheduler,
     Request,
 )
 
 
 def parse_policy_flags(flags, policy_file=None):
-    """``--policy`` / ``--policy-file`` -> a PolicyTable, ``"auto"``, or
-    None (nothing given). Each ``--policy`` value is either the literal
-    ``auto`` (alone) or ``family=layout[:fetch[:transport[:num_slices
-    [:budget]]]]``; the file is the PolicyTable JSON dict. Flags override
-    file entries for the same family. Unknown families or values raise
-    ``ValueError`` (argparse surfaces them as CLI errors)."""
+    """``--policy`` / ``--policy-file`` -> a PolicyTable, ``"auto"``,
+    ``"auto-online"``, or None (nothing given). Each ``--policy`` value
+    is either a standalone literal (``auto`` — roofline-resolved once at
+    boot; ``auto-online`` — additionally re-resolved online between
+    pre-compiled variants) or ``family=layout[:fetch[:transport
+    [:num_slices[:budget]]]]``; the file is the PolicyTable JSON dict.
+    Flags override file entries for the same family. Unknown families or
+    values raise ``ValueError`` (argparse surfaces them as CLI
+    errors)."""
     flags = list(flags or ())
-    if "auto" in flags:
-        if len(flags) > 1 or policy_file:
-            raise ValueError(
-                "--policy auto stands alone (it resolves every family); "
-                "drop the other --policy/--policy-file arguments"
-            )
-        return "auto"
+    for lit in ("auto", "auto-online"):
+        if lit in flags:
+            if len(flags) > 1 or policy_file:
+                raise ValueError(
+                    f"--policy {lit} stands alone (it resolves every "
+                    "family); drop the other --policy/--policy-file "
+                    "arguments"
+                )
+            return lit
     spec: dict = {}
     if policy_file:
         with open(policy_file) as f:
@@ -134,6 +140,8 @@ def build_engine(
     fault_spec=None,
     validate_fetch: bool = False,
     health: "HealthMonitor | None" = None,
+    variant_cache_size: int = 16,
+    switch_interval: int = 8,
 ):
     from repro.launch.mesh import _mesh
     mesh = _mesh(mesh_shape, ("data", "model"))
@@ -159,8 +167,16 @@ def build_engine(
         expert_fetch=expert_fetch, demand_budget=demand_budget,
         cache_budget=cache_budget, policy=policy,
         fault_spec=fault_spec, validate_fetch=validate_fetch,
+        variant_cache_size=variant_cache_size,
     )
-    return DisaggregatedEngine(params, ctx, gen, health=health), model
+    scheduler = None
+    if policy == "auto-online":
+        scheduler = OnlinePolicyScheduler(
+            model, sizes, gen._shape, interval=switch_interval,
+        )
+    return DisaggregatedEngine(
+        params, ctx, gen, health=health, scheduler=scheduler
+    ), model
 
 
 def main(argv=None):
@@ -178,7 +194,11 @@ def main(argv=None):
                          "[:budget]]]] with families moe_experts, "
                          "attn_qkv, attn_out, dense_ffn, default — or "
                          "the literal 'auto' for the roofline-guided "
-                         "resolver")
+                         "resolver, or 'auto-online' to additionally "
+                         "re-resolve online (phase/batch buckets + "
+                         "measured hit-rate drift) switching between "
+                         "pre-compiled forward variants with zero "
+                         "recompiles (docs/policy_switching.md)")
     ap.add_argument("--policy-file", default=None,
                     help="JSON file mapping families to policy specs "
                          "(PolicyTable.to_dict shape); --policy flags "
@@ -236,6 +256,18 @@ def main(argv=None):
                     help="min decode steps between ladder transitions")
     ap.add_argument("--no-health", action="store_true",
                     help="disable the HealthMonitor even when validating")
+    ap.add_argument("--variant-cache-size", type=int, default=16,
+                    help="max pre-compiled forward variants the "
+                         "generation server retains (policy tables x "
+                         "exclusion sets, LRU)")
+    ap.add_argument("--switch-interval", type=int, default=8,
+                    help="decode steps between auto-online drift "
+                         "re-resolutions (bucket boundaries re-resolve "
+                         "immediately)")
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip pre-compiling the scheduler's candidate "
+                         "variants before serving (first switches then "
+                         "pay a trace+compile on the serving path)")
     ap.add_argument("--full", action="store_true",
                     help="use the full config (default: reduced smoke)")
     args = ap.parse_args(argv)
@@ -270,7 +302,12 @@ def main(argv=None):
         fault_spec=args.fault_spec,
         validate_fetch=args.validate_fetch,
         health=health,
+        variant_cache_size=args.variant_cache_size,
+        switch_interval=args.switch_interval,
     )
+    if not args.no_warmup:
+        n = engine.warmup()
+        print(f"warmup: {n} decode variant(s) pre-compiled")
     print("ctx policies:", engine.ctx.xp.policies.describe())
     print("gen policies:", engine.gen.xp.policies.describe())
     rng = np.random.default_rng(0)
@@ -290,6 +327,12 @@ def main(argv=None):
     if engine.gen.level or metrics.policy_transitions:
         print(
             f"ladder level: {engine.gen.level} ({engine.gen.fetch_label})"
+        )
+    if engine.scheduler is not None:
+        print(
+            "variant cache:", dict(engine.gen.variants.stats),
+            f"entries={len(engine.gen.variants)}",
+            f"signatures={engine.gen.variants.compiles()}",
         )
     for rid, toks in list(engine.outputs.items())[:4]:
         print(f"req {rid}: {toks[:10]}{'...' if len(toks) > 10 else ''}")

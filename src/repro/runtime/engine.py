@@ -21,14 +21,391 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import execution
+from repro.core import execution, roofline
 from repro.core.strategy import (
-    PolicyTable, degradation_ladder, make_execution_plan,
+    PolicyTable, degradation_ladder, make_execution_plan, resolve_policies,
 )
 from repro.configs.base import InputShape
 from repro.models.cache import init_decode_state
 from repro.models.transformer import Model
 from repro.runtime.metrics import RequestRecord, ServingMetrics
+
+
+def variant_key(table: PolicyTable, shape: InputShape,
+                excl: tuple = ()) -> tuple:
+    """The pre-compiled forward-variant cache key: canonicalized policy
+    table (``describe()`` — sorted ``to_dict()`` JSON, so two tables
+    collide iff their ``to_dict()`` forms are equal) + the shape bucket
+    the variant was compiled for + the peer-exclusion set. Everything
+    else that shapes the lowered program (model, mesh, mode) is fixed
+    per cache instance."""
+    return (
+        table.describe(),
+        (shape.phase, shape.seq_len, shape.global_batch),
+        tuple(int(p) for p in excl),
+    )
+
+
+class CountingStep:
+    """A jitted step function with a call counter and a compile-cache
+    probe, preserving the jit surface (``.lower``) the AOT tests use.
+
+    ``cache_size()`` reads the underlying jit executable cache — after a
+    variant is warmed, the serving path asserts this number stays flat
+    across policy switches (the zero-recompile contract)."""
+
+    def __init__(self, fn):
+        self._fn = fn
+        self.calls = 0
+
+    def __call__(self, *args, **kwargs):
+        self.calls += 1
+        return self._fn(*args, **kwargs)
+
+    @property
+    def lower(self):
+        return self._fn.lower
+
+    def cache_size(self) -> int:
+        return int(self._fn._cache_size())
+
+
+class PolicyVariantCache:
+    """Pre-compiled forward-variant cache for one server.
+
+    Maps :func:`variant_key` -> ``(plan, CountingStep, wire model)``,
+    built lazily (or eagerly via the warmup path) and retained LRU up to
+    ``max_entries`` so an online scheduler can flip between policy
+    tables without re-tracing: a switch to a cached+warmed variant costs
+    a dict lookup. Eviction only drops COLD state (the jitted callable
+    and its executables) — correctness never depends on an entry being
+    present."""
+
+    def __init__(self, model: Model, mesh, mesh_sizes, shape: InputShape,
+                 *, mode: str, capacity_from: str = "local",
+                 fault_spec=None, validate_fetch: bool = False,
+                 capture_len: int = 0, max_entries: int = 16):
+        self.model = model
+        self._mesh = mesh
+        self._mesh_sizes = mesh_sizes
+        self.shape = shape
+        self._mode = mode
+        self._capacity_from = capacity_from
+        self._fault_spec = fault_spec
+        self._validate_fetch = validate_fetch
+        self._capture_len = capture_len
+        self.max_entries = max(1, int(max_entries))
+        self._entries: dict = {}
+        self.stats = {"hits": 0, "misses": 0, "evictions": 0}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def compiles(self) -> int:
+        """Total jit executables across cached variants — flat after
+        warmup iff the serving path never recompiles."""
+        return sum(step.cache_size() for _, step, _ in
+                   self._entries.values())
+
+    def get(self, table: PolicyTable, excl: tuple = ()):
+        """The (plan, step, wire-bytes) variant for a policy table,
+        building it on miss."""
+        key = variant_key(table, self.shape, excl)
+        if key in self._entries:
+            self.stats["hits"] += 1
+            # refresh LRU position
+            self._entries[key] = self._entries.pop(key)
+            return self._entries[key]
+        self.stats["misses"] += 1
+        xp = make_execution_plan(
+            self.model, self.shape, self._mesh_sizes, mode=self._mode,
+            policy=table, capacity_from=self._capacity_from,
+            fault_spec=self._fault_spec,
+            validate_fetch=self._validate_fetch,
+            exclude_peers=tuple(int(p) for p in excl),
+        )
+        step = CountingStep(execution.make_step_fn(
+            self.model, xp, self._mesh, capture_len=self._capture_len
+        ))
+        entry = (
+            xp, step, execution.gathered_wire_bytes_per_step(self.model, xp)
+        )
+        while len(self._entries) >= self.max_entries:
+            self._entries.pop(next(iter(self._entries)))
+            self.stats["evictions"] += 1
+        self._entries[key] = entry
+        return entry
+
+    def adopt(self, table: PolicyTable, excl: tuple, entry):
+        """Seed the cache with an already-built variant (the server's
+        boot-time plan) without charging a miss."""
+        key = variant_key(table, self.shape, excl)
+        self._entries.setdefault(key, entry)
+
+
+class BudgetTuner:
+    """Online speculative-budget resizing over pre-compiled rungs.
+
+    Watches the measured per-step predictive counters (``pred_stats``:
+    ``[predicted, spec_hit, cache_hit, miss, evicted]`` expert rows) and
+    snaps the speculative/correction row budget to the nearest rung of
+    :func:`repro.core.roofline.predictive_budget_rungs`:
+
+    - miss fraction above ``raise_miss_frac`` -> the correction round is
+      doing the work, the speculative round is under-provisioned: go up
+      one rung;
+    - speculative utilization (``spec_hit / predicted``) below
+      ``lower_util`` while misses are rare -> the speculative round
+      ships rows nobody routes to: come down one rung.
+
+    ``min_dwell`` observed steps must pass between moves (one bursty
+    step must not flap the budget), and every emitted budget is a rung
+    value — so a serving engine that pre-compiled one variant per rung
+    resizes with zero recompiles."""
+
+    def __init__(self, rungs, *, start: Optional[int] = None,
+                 raise_miss_frac: float = 0.25, lower_util: float = 0.5,
+                 lower_miss_frac: float = 0.1, min_dwell: int = 4):
+        rungs = tuple(sorted(int(r) for r in rungs))
+        if not rungs:
+            raise ValueError("BudgetTuner needs at least one rung")
+        self.rungs = rungs
+        if start is None:
+            self.idx = min(len(rungs) - 1, 1)
+        else:
+            self.idx = min(
+                range(len(rungs)), key=lambda i: abs(rungs[i] - start)
+            )
+        self.raise_miss_frac = raise_miss_frac
+        self.lower_util = lower_util
+        self.lower_miss_frac = lower_miss_frac
+        self.min_dwell = min_dwell
+        self._since = min_dwell  # free to act on the first signal
+
+    @property
+    def budget(self) -> int:
+        return self.rungs[self.idx]
+
+    def observe(self, pred_stats) -> Optional[int]:
+        """Feed one decode step's measured counters; returns the new
+        rung budget when a resize fires, else None."""
+        if pred_stats is None:
+            return None
+        pred, spec_hit, cache_hit, miss, _ = (
+            float(s) for s in pred_stats
+        )
+        denom = spec_hit + cache_hit + miss
+        self._since += 1
+        if denom <= 0 or self._since <= self.min_dwell:
+            return None
+        miss_frac = miss / denom
+        util = spec_hit / pred if pred > 0 else 1.0
+        if (miss_frac > self.raise_miss_frac
+                and self.idx + 1 < len(self.rungs)):
+            self.idx += 1
+            self._since = 0
+            return self.rungs[self.idx]
+        if (miss_frac < self.lower_miss_frac and util < self.lower_util
+                and self.idx > 0):
+            self.idx -= 1
+            self._since = 0
+            return self.rungs[self.idx]
+        return None
+
+
+def _with_spec_budget(table: PolicyTable, budget: int) -> PolicyTable:
+    """``table`` with every speculative-fetch moe_experts entry (family
+    AND per-layer-group overrides) pinned to ``budget`` rows — the
+    compile-stable spelling of one budget rung."""
+
+    def upd(name, pol):
+        if name == "moe_experts" and pol.fetch in (
+                "predictive", "sync_free"):
+            return dataclasses.replace(pol, budget=int(budget))
+        return pol
+
+    return dataclasses.replace(
+        table,
+        families=tuple((n, upd(n, p)) for n, p in table.families),
+        overrides=tuple(
+            (g, n, upd(n, p)) for g, n, p in table.overrides
+        ),
+    )
+
+
+class OnlinePolicyScheduler:
+    """Zero-recompile online policy switching (``--policy auto-online``).
+
+    Drives the generation server's :meth:`GenerationServer.set_policy`
+    between pre-compiled forward variants, re-resolving the PolicyTable
+    from three online signals:
+
+    - **batch-shape buckets** — the decode step always runs the compiled
+      ``max_batch`` shape, but the roofline-optimal table depends on how
+      many slots are ACTIVE (the resolver scores with the routed-row
+      count). Active-slot counts are bucketed to powers of two; crossing
+      a bucket boundary re-resolves immediately at the new bucket's row
+      count.
+    - **measured hit-rate drift** — the served ``pred_stats`` split
+      (speculative hits vs residency-cache hits vs correction rows) is
+      EMA-tracked, quantized, and replayed into
+      :func:`repro.core.strategy.resolve_policies` via ``hit_rates=``
+      every ``interval`` decode steps; drifted rates can flip the
+      resolved winner (e.g. sync_free -> demand when the predictor
+      stops hitting) including per-layer-group overrides.
+    - **speculative-budget resizing** — a :class:`BudgetTuner` snaps the
+      speculative/correction row budget to the nearest pre-compiled rung
+      (:func:`repro.core.roofline.predictive_budget_rungs`).
+
+    Every emitted table is canonical (same resolver, quantized inputs),
+    so a revisited operating point hits the variant cache — after
+    :meth:`DisaggregatedEngine.warmup` the whole decision loop runs with
+    ZERO recompiles. The scheduler only acts at degradation-ladder
+    level 0: a health-demoted server belongs to the HealthMonitor until
+    it re-promotes."""
+
+    def __init__(self, model: Model, mesh_sizes, shape: InputShape, *,
+                 interval: int = 8, ema_decay: float = 0.8, hw=None,
+                 tuner: Optional[BudgetTuner] = None):
+        self.model = model
+        self.mesh_sizes = dict(mesh_sizes)
+        self.shape = shape
+        self.interval = max(1, int(interval))
+        self.ema_decay = ema_decay
+        self.hw = hw
+        self.tuner = tuner
+        self._tuner_resolved = tuner is not None
+        self._hit_ema: Optional[tuple] = None  # (predict_hit, cache_hit)
+        self._bucket: Optional[int] = None
+        self._steps = 0
+        self._resolved: dict = {}  # (bucket, quantized rates) -> table
+
+    # -- signals ---------------------------------------------------------
+
+    def _bucket_of(self, active_rows: int) -> int:
+        b = 1
+        while b < active_rows:
+            b *= 2
+        return min(b, self.shape.global_batch)
+
+    def _observe_rates(self, pred_stats) -> None:
+        if pred_stats is None:
+            return
+        _, spec_hit, cache_hit, miss, _ = (float(s) for s in pred_stats)
+        denom = spec_hit + cache_hit + miss
+        if denom <= 0:
+            return
+        # factor the measured split the way the roofline composes it:
+        # (1 - cache_hit) * (1 - predict_hit) = correction fraction
+        cache = cache_hit / denom
+        non_cache = spec_hit + miss
+        predict = spec_hit / non_cache if non_cache > 0 else 1.0
+        rates = (predict, cache)
+        if self._hit_ema is None:
+            self._hit_ema = rates
+        else:
+            d = self.ema_decay
+            self._hit_ema = tuple(
+                d * e + (1.0 - d) * r
+                for e, r in zip(self._hit_ema, rates)
+            )
+
+    def _quantized_rates(self) -> Optional[tuple]:
+        """EMA rates on a 0.05 grid — the resolver-cache key, so jitter
+        between steps cannot mint a new table per step."""
+        if self._hit_ema is None:
+            return None
+        return tuple(round(r * 20) / 20 for r in self._hit_ema)
+
+    # -- resolution ------------------------------------------------------
+
+    def _resolve(self, bucket: int) -> PolicyTable:
+        q = self._quantized_rates()
+        key = (bucket, q)
+        if key not in self._resolved:
+            shape = dataclasses.replace(self.shape, global_batch=bucket)
+            hit_rates = None
+            if q is not None:
+                predict, cache = q
+                groups = set(roofline.layer_group_names(self.model.cfg))
+                hit_rates = {
+                    g: {"predict_hit": predict, "cache_hit": cache}
+                    for g in groups
+                }
+            self._resolved[key] = resolve_policies(
+                self.model, shape, self.mesh_sizes, "auto",
+                hw=self.hw, hit_rates=hit_rates,
+            )
+        return self._resolved[key]
+
+    def _ensure_tuner(self, gen: "GenerationServer") -> None:
+        if self._tuner_resolved:
+            return
+        self._tuner_resolved = True
+        cfg, pl = self.model.cfg, self.model.geom.moe_placement
+        if cfg.moe is None or pl is None or pl.subgroup_size <= 1:
+            return
+        rows = max(1, gen.xp.local_batch)
+        rungs = roofline.predictive_budget_rungs(
+            rows * cfg.moe.top_k, cfg.moe.num_experts, pl.local_count
+        )
+        start = gen.xp.policies.family("moe_experts").budget or None
+        self.tuner = BudgetTuner(rungs, start=start)
+
+    def _snap_budget(self, table: PolicyTable) -> PolicyTable:
+        if self.tuner is None:
+            return table
+        return _with_spec_budget(table, self.tuner.budget)
+
+    # -- the decision loop ----------------------------------------------
+
+    def step(self, gen: "GenerationServer",
+             active_rows: int) -> Optional[str]:
+        """One pre-decode-step decision: returns "switch" / "resize" /
+        None (what, if anything, the server moved to)."""
+        if gen.level != 0:
+            return None
+        self._ensure_tuner(gen)
+        self._steps += 1
+        self._observe_rates(gen.last_pred_stats)
+        resized = (
+            self.tuner.observe(gen.last_pred_stats) is not None
+            if self.tuner is not None else False
+        )
+        bucket = self._bucket_of(max(1, active_rows))
+        boundary = bucket != self._bucket
+        if boundary or self._steps % self.interval == 0 or resized:
+            self._bucket = bucket
+            table = self._snap_budget(self._resolve(bucket))
+            if gen.set_policy(table):
+                return "resize" if resized and not boundary else "switch"
+        return None
+
+    def candidate_tables(self, gen: "GenerationServer") -> list:
+        """The tables a warmup pass should pre-compile: the resolved
+        table per batch bucket (at default drift) x the budget rungs,
+        deduplicated, capped at the variant cache size so warming never
+        evicts what it just compiled."""
+        self._ensure_tuner(gen)
+        out, seen = [], set()
+        budgets: tuple = (None,)
+        if self.tuner is not None:
+            budgets = (None, *self.tuner.rungs)
+        bucket, buckets = 1, []
+        while bucket <= self.shape.global_batch:
+            buckets.append(bucket)
+            bucket *= 2
+        for b in buckets:
+            base = self._resolve(b)
+            for budget in budgets:
+                t = base if budget is None else _with_spec_budget(
+                    base, budget
+                )
+                d = t.describe()
+                if d not in seen:
+                    seen.add(d)
+                    out.append(t)
+        return out[: gen.variants.max_entries]
 
 
 def _resolve_policy(policy, *, prefetch="allgather", weight_layout=None,
@@ -47,6 +424,16 @@ def _resolve_policy(policy, *, prefetch="allgather", weight_layout=None,
         budget=demand_budget,
         cache_budget=cache_budget,
     )
+
+
+def _resolve_policy_table(model, shape, mesh_sizes, policy) -> PolicyTable:
+    """A CONCRETE PolicyTable for the variant cache's canonical key:
+    explicit tables pass through; dicts/specs/"auto"/"auto-online" run
+    through :func:`resolve_policies` (idempotent with what
+    make_execution_plan resolves internally)."""
+    if isinstance(policy, PolicyTable):
+        return policy
+    return resolve_policies(model, shape, mesh_sizes, policy)
 
 
 @dataclasses.dataclass
@@ -125,6 +512,23 @@ class HealthMonitor:
             return None
         return int(np.argmax(self.ema))
 
+    def bad_peers(self) -> tuple:
+        """The peer SET the ladder's exclusion rung drops from the
+        speculative/cache plans: every subgroup position whose
+        fault-pressure EMA sits above ``demote_threshold``, hottest
+        first. Falls back to the single worst peer when a demotion
+        fired on a step whose decay already pulled every EMA back under
+        the threshold. Never names every position — at least one peer
+        stays in the speculative schedule, so the exclusion rung
+        degrades toward (not past) plain demand fetch."""
+        if self.ema.size == 0:
+            return ()
+        order = np.argsort(-self.ema, kind="stable")
+        hot = [int(p) for p in order if self.ema[p] > self.demote_threshold]
+        if not hot:
+            hot = [int(order[0])]
+        return tuple(hot[: max(1, self.ema.size - 1)])
+
 
 class ContextServer:
     """Prefill worker: returns (first_token, captured decode state)."""
@@ -149,15 +553,24 @@ class ContextServer:
             capacity_from=capacity_from,
             fault_spec=fault_spec, validate_fetch=validate_fetch,
         )
-        self.step = execution.make_step_fn(
+        self.step = CountingStep(execution.make_step_fn(
             model, self.xp, mesh, capture_len=cache_len
-        )
+        ))
         # static gathered-weight wire bytes of one prefill call (fetched =
         # what the lowered program ships, full = the expert_fetch="all"
         # counterfactual) — attributed per request by the engine
         self.gather_bytes = execution.gathered_wire_bytes_per_step(
             model, self.xp
         )
+
+    def warmup(self, params) -> None:
+        """Trace+compile the prefill step off the serving path (the
+        first real request then hits a warm jit cache)."""
+        if self.step.calls == 0:
+            self.prefill(
+                params, np.zeros(self.prefill_len, np.int32)
+            )
+            self.step.calls = 0
 
     def prefill(self, params, tokens: np.ndarray):
         """tokens: (prompt_len,) -> (first_token, state). The demo engine
@@ -182,7 +595,8 @@ class GenerationServer:
                  capacity_from: str = "local",
                  expert_fetch: str = "all", demand_budget: int = 0,
                  cache_budget: int = 0, policy=None,
-                 fault_spec=None, validate_fetch: bool = False):
+                 fault_spec=None, validate_fetch: bool = False,
+                 variant_cache_size: int = 16):
         self.model = model
         self.max_batch = max_batch
         self.cache_len = cache_len
@@ -194,36 +608,37 @@ class GenerationServer:
         self._capacity_from = capacity_from
         self.fault_spec = fault_spec
         self.validate_fetch = validate_fetch
-        self.xp = make_execution_plan(
-            model, shape, mesh_sizes, mode=mode,
-            policy=_resolve_policy(
-                policy, weight_layout=weight_layout,
-                expert_fetch=expert_fetch, demand_budget=demand_budget,
-                cache_budget=cache_budget,
-            ),
-            capacity_from=capacity_from,
-            fault_spec=fault_spec, validate_fetch=validate_fetch,
+        # every (policy table, exclusion set) the server runs — the boot
+        # table, degradation-ladder rungs, online-scheduler switches —
+        # is one entry of the pre-compiled forward-variant cache; a
+        # switch to a warmed entry costs a dict lookup, zero recompiles
+        self.variants = PolicyVariantCache(
+            model, mesh, mesh_sizes, shape, mode=mode,
+            capacity_from=capacity_from, fault_spec=fault_spec,
+            validate_fetch=validate_fetch, max_entries=variant_cache_size,
         )
-        self.step = execution.make_step_fn(model, self.xp, mesh)
-        # static gathered-weight wire bytes per decode step (see
-        # ContextServer.gather_bytes) — shared by the step's active slots
-        self.gather_bytes = execution.gathered_wire_bytes_per_step(
-            model, self.xp
+        self.xp, self.step, self.gather_bytes = self.variants.get(
+            _resolve_policy_table(
+                model, shape, mesh_sizes,
+                _resolve_policy(
+                    policy, weight_layout=weight_layout,
+                    expert_fetch=expert_fetch, demand_budget=demand_budget,
+                    cache_budget=cache_budget,
+                ),
+            )
         )
+        self.excl: tuple = ()
         # graceful-degradation ladder over the resolved policy table:
         # level 0 is the configured table; each further level leans one
         # notch less on per-peer payload rounds (predictive/sync_free ->
         # per-peer exclusion -> demand -> all-gather). Plans/steps are
-        # built lazily per (level, excluded peers) and cached; see
-        # set_level for the predictive-state handoff.
+        # built lazily per (table, excluded peers) via the variant
+        # cache; see set_level for the predictive-state handoff.
         self.ladder = degradation_ladder(self.xp.policies)
         self.level = 0
-        self._level_cache = {
-            (0, ()): (self.xp, self.step, self.gather_bytes)
-        }
-        self.state = execution.attach_predict_state(
+        self.state = self._committed(execution.attach_predict_state(
             init_decode_state(model, max_batch, cache_len), model, self.xp
-        )
+        ), self.xp)
         # bytes of one expert's weight rows — converts the predictive
         # fetch's per-step row counters into the byte counters the
         # serving metrics report
@@ -237,7 +652,57 @@ class GenerationServer:
         # inactive slots: pos points at an empty cache; emitted tokens junk
         self.slot_req: list[Optional[int]] = [None] * max_batch
         self.slot_remaining = np.zeros(max_batch, np.int64)
-        self.cur_token = jnp.zeros((max_batch, 1), jnp.int32)
+        self.cur_token = self._committed_token(
+            jnp.zeros((max_batch, 1), jnp.int32)
+        )
+
+    def _committed(self, state, xp):
+        """The decode state committed to the step's OUTPUT shardings.
+        The jit executable cache keys on input shardings, so a
+        freshly-built host-backed state would compile a throwaway
+        executable distinct from the steady-state one whose inputs are
+        the previous step's (committed) outputs — committing here gives
+        boot, warmup and serving calls ONE signature, which is what lets
+        the warmup pass guarantee zero serving-path recompiles."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        specs = execution.state_pspecs(self.model, xp)
+        pred = execution.predict_state_pspecs(self.model, xp)
+        if "pred" in state:
+            specs = dict(specs)
+            specs["pred"] = pred
+
+        def canon(s):
+            # the jit's output shardings carry trailing-None-stripped
+            # specs; commit to the same canonical form or the cache
+            # keys won't collide
+            parts = tuple(s)
+            while parts and parts[-1] is None:
+                parts = parts[:-1]
+            return P(*parts)
+
+        return jax.tree.map(
+            # optional PredictState leaves (the richer-predictor fields)
+            # are None in plain predictive mode — in both the state and
+            # its spec tree — and stay None
+            lambda x, s: x if x is None else jax.device_put(
+                x, NamedSharding(self._mesh, canon(s))
+            ),
+            state, specs,
+            is_leaf=lambda x: x is None,
+        )
+
+    def _committed_token(self, tok):
+        """The token row committed to the decode step's next_token
+        output sharding (same signature-stability argument as
+        :meth:`_committed`)."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        return jax.device_put(
+            tok, NamedSharding(self._mesh, P(self.xp.batch_spec(), None))
+        )
 
     @property
     def fetch_label(self) -> str:
@@ -245,8 +710,7 @@ class GenerationServer:
         "<root>+excl" / "demand" / "all")."""
         return self.ladder[self.level][0]
 
-    def set_level(self, level: int,
-                  worst_peer: Optional[int] = None) -> bool:
+    def set_level(self, level: int, bad_peers: tuple = ()) -> bool:
         """Move to a degradation-ladder level (clamped); returns whether
         the level changed. Swaps in that level's (plan, step fn, wire
         model) — built lazily on first use — and re-attaches a COLD
@@ -256,39 +720,91 @@ class GenerationServer:
         recurrent slot state carries over untouched.
 
         A per-peer-exclusion rung (excl ``None`` in the ladder) is
-        instantiated against ``worst_peer`` — the HealthMonitor's
-        hottest subgroup position — and cached per (level, exclusion),
-        so re-entering the rung against a different bad peer rebuilds
-        the plan for that peer."""
+        instantiated against ``bad_peers`` — the HealthMonitor's
+        over-threshold subgroup positions (:meth:`HealthMonitor.
+        bad_peers`) — and cached per (table, exclusion set) in the
+        variant cache, so re-entering the rung against a different bad
+        set rebuilds the plan for exactly those peers."""
         level = max(0, min(int(level), len(self.ladder) - 1))
         if level == self.level:
             return False
         _, table, excl = self.ladder[level]
         if excl is None:
-            excl = (worst_peer,) if worst_peer is not None else ()
-        key = (level, tuple(int(p) for p in excl))
-        if key not in self._level_cache:
-            xp = make_execution_plan(
-                self.model, self._shape, self._mesh_sizes, mode=self._mode,
-                policy=table, capacity_from=self._capacity_from,
-                fault_spec=self.fault_spec,
-                validate_fetch=self.validate_fetch,
-                exclude_peers=excl,
-            )
-            self._level_cache[key] = (
-                xp,
-                execution.make_step_fn(self.model, xp, self._mesh),
-                execution.gathered_wire_bytes_per_step(self.model, xp),
-            )
-        self.xp, self.step, self.gather_bytes = self._level_cache[key]
-        bare = {k: v for k, v in self.state.items() if k != "pred"}
-        self.state = execution.attach_predict_state(
-            bare, self.model, self.xp
-        )
+            excl = tuple(bad_peers)
+        self._swap(table, tuple(int(p) for p in excl))
         self.level = level
+        return True
+
+    def set_policy(self, table: PolicyTable) -> bool:
+        """Online policy SWITCH (the auto-online scheduler's entry
+        point): move the decode step to a different resolved policy
+        table — a pre-compiled variant when warmed, a lazy build
+        otherwise — and rebase the degradation ladder on it. Only legal
+        at ladder level 0 (a health-degraded server keeps its rung until
+        the monitor re-promotes); returns whether anything changed."""
+        if self.level != 0:
+            return False
+        if (table.describe() == self.xp.policies.describe()
+                and not self.excl):
+            return False
+        self._swap(table, ())
+        self.ladder = degradation_ladder(table)
+        self.level = 0
+        return True
+
+    def _swap(self, table: PolicyTable, excl: tuple) -> None:
+        """Install the (table, exclusion set) variant and re-attach a
+        COLD predictive state shaped for it (see set_level)."""
+        self.xp, self.step, self.gather_bytes = self.variants.get(
+            table, excl
+        )
+        self.excl = excl
+        bare = {k: v for k, v in self.state.items() if k != "pred"}
+        self.state = self._committed(execution.attach_predict_state(
+            bare, self.model, self.xp
+        ), self.xp)
         self.last_pred_stats = None
         self.last_fault_stats = None
-        return True
+
+    def warmup(self, params, tables=()) -> int:
+        """Pre-compile forward variants OFF the serving path: for each
+        policy table (plus the currently-installed one) build its plan
+        and run one decode step on a THROWAWAY state (the decode jit
+        donates its state argument, so warming must not consume the live
+        slots). After this, switching to any warmed table is
+        trace-free and compile-free — the no-recompile contract the
+        serving tests assert via ``variants.compiles()``. Returns the
+        number of variants compiled."""
+        compiled = 0
+        tok = self._committed_token(
+            jnp.zeros((self.max_batch, 1), jnp.int32)
+        )
+        seen = set()
+        for table in (self.xp.policies, *tables):
+            key = variant_key(table, self._shape, ())
+            if key in seen:
+                continue
+            seen.add(key)
+            xp, step, _ = self.variants.get(table, ())
+            if step.calls:
+                continue
+            state = self._committed(execution.attach_predict_state(
+                init_decode_state(self.model, self.max_batch,
+                                  self.cache_len),
+                self.model, xp,
+            ), xp)
+            # two chained calls: the first runs the boot-state signature
+            # (freshly-committed inputs — what the server sees right
+            # after a switch re-commits its state), the second runs the
+            # steady-state signature (the previous step's outputs, whose
+            # sharding spellings the jit normalizes differently). Both
+            # land in the dispatch cache, so neither the first
+            # post-switch step nor any later step re-keys.
+            out = step(params, {"token": tok}, state)
+            step(params, {"token": out["next_token"]}, out["state"])
+            step.calls = 0
+            compiled += 1
+        return compiled
 
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -347,16 +863,33 @@ class DisaggregatedEngine:
     """Queues + rate matching between context and generation servers."""
 
     def __init__(self, params, ctx: ContextServer, gen: GenerationServer,
-                 health: Optional[HealthMonitor] = None):
+                 health: Optional[HealthMonitor] = None,
+                 scheduler: Optional[OnlinePolicyScheduler] = None):
         self.params = params
         self.ctx = ctx
         self.gen = gen
         self.health = health
+        self.scheduler = scheduler
         self.queue: list[Request] = []
         self.records: dict[int, RequestRecord] = {}
         self.outputs: dict[int, list[int]] = {}
         self.metrics = ServingMetrics(num_gpus=1)
         self.t = 0.0
+
+    def warmup(self) -> int:
+        """Pre-compile the serving variants OFF the serving path: the
+        prefill step plus every decode-policy variant the online
+        scheduler can switch to (its bucket tables x budget rungs).
+        After this, request traffic — including every scheduler switch
+        and budget resize — runs with zero recompiles
+        (``gen.variants.compiles()`` stays flat). Returns the number of
+        decode variants compiled."""
+        self.ctx.warmup(self.params)
+        tables = (
+            self.scheduler.candidate_tables(self.gen)
+            if self.scheduler is not None else ()
+        )
+        return self.gen.warmup(self.params, tables)
 
     def submit(self, req: Request):
         # engine-shape validation (the Request itself checked basic
@@ -397,6 +930,19 @@ class DisaggregatedEngine:
                 self.outputs[req.req_id].append(first)
                 self.gen.admit(slot, req.req_id, first, state)
                 self.gen.slot_remaining[slot] = req.target_len - 1
+            if self.scheduler is not None:
+                # re-resolve BEFORE the step so the bucket matches the
+                # slots about to decode; drift input (last_pred_stats)
+                # is the previous step's measured split
+                moved = self.scheduler.step(
+                    self.gen,
+                    sum(r is not None for r in self.gen.slot_req),
+                )
+                if moved:
+                    self.metrics.record_transition(
+                        int(self.t), moved, self.gen.level,
+                        self.gen.fetch_label,
+                    )
             toks = self.gen.decode_step(self.params)
             self.t += 1.0
             from repro.core.faults import FAULT_STAT_BASE
@@ -421,7 +967,7 @@ class DisaggregatedEngine:
                 if move == "demote":
                     if self.gen.set_level(
                         self.gen.level + 1,
-                        worst_peer=self.health.worst_peer(),
+                        bad_peers=self.health.bad_peers(),
                     ):
                         self.metrics.record_transition(
                             int(self.t), "demote", self.gen.level,
@@ -430,7 +976,7 @@ class DisaggregatedEngine:
                 elif move == "promote" and self.gen.level > 0:
                     if self.gen.set_level(
                         self.gen.level - 1,
-                        worst_peer=self.health.worst_peer(),
+                        bad_peers=self.health.bad_peers(),
                     ):
                         self.metrics.record_transition(
                             int(self.t), "promote", self.gen.level,

@@ -108,7 +108,8 @@ class ServingMetrics:
     # (faults.FAULT_STAT_NAMES) + per-subgroup-position detected counts
     fault_counts: dict = dataclasses.field(default_factory=dict)
     detected_by_peer: list = dataclasses.field(default_factory=list)
-    # HealthMonitor ladder moves: {"step", "kind", "level", "fetch"}
+    # HealthMonitor ladder moves + online-scheduler policy switches /
+    # budget resizes: {"step", "kind", "level", "fetch"}
     policy_transitions: list = dataclasses.field(default_factory=list)
 
     def record_fault_stats(self, vec):
@@ -216,4 +217,16 @@ class ServingMetrics:
             ]
         if self.policy_transitions:
             out["policy_transitions"] = list(self.policy_transitions)
+            # decision-loop counters: health-ladder moves vs the online
+            # scheduler's zero-recompile switches / budget resizes
+            for kind, field in (("switch", "policy_switches"),
+                                ("resize", "budget_resizes"),
+                                ("demote", "ladder_demotions"),
+                                ("promote", "ladder_promotions")):
+                n = sum(
+                    1 for t in self.policy_transitions
+                    if t["kind"] == kind
+                )
+                if n:
+                    out[field] = n
         return out

@@ -36,6 +36,14 @@ class SimConfig:
                                         # table from the flat fields below
                                         # (kept as the simple spelling for
                                         # sweeps).
+    gen_policies: Optional[PolicyTable] = None
+                                        # PHASE SPLIT: a separate table
+                                        # for the generation (decode)
+                                        # servers — what a phase-aware
+                                        # scheduler resolves per phase
+                                        # (prefill keeps ``policies``).
+                                        # None = the generation side uses
+                                        # ``policies`` too.
     weight_layout: str = "split"        # gathered-weight representation of
                                         # the DWDP context phase (engine
                                         # default): "split" lands only the
@@ -154,6 +162,14 @@ class SimConfig:
             default=GatherPolicy(layout=self.weight_layout), families=fams
         )
 
+    def gen_table(self) -> PolicyTable:
+        """The policy table the GENERATION servers run: the phase split a
+        phase-aware scheduler produces (ctx keeps :meth:`table`). Defaults
+        to :meth:`table` when no split is configured."""
+        if self.gen_policies is not None:
+            return self.gen_policies
+        return self.table()
+
 
 class ClusterSimulator:
     def __init__(self, sc: SimConfig):
@@ -206,7 +222,7 @@ class ClusterSimulator:
         per_expert = 3 * cfg.d_model * moe.d_ff * 1.0  # NVFP4-ish
         n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
         g = sc.gen_gpus
-        pol = sc.table().family("moe_experts")
+        pol = sc.gen_table().family("moe_experts")
         if pol.fetch in ("predictive", "sync_free"):
             per_layer, _ = roofline.predictive_fetch_terms(
                 batch, moe.top_k, moe.num_experts, g, per_expert,
@@ -238,7 +254,7 @@ class ClusterSimulator:
         moe = cfg.moe
         per_expert = 3 * cfg.d_model * moe.d_ff * 1.0
         n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
-        pol = sc.table().family("moe_experts")
+        pol = sc.gen_table().family("moe_experts")
         if pol.fetch in ("predictive", "sync_free"):
             _, serial = roofline.predictive_fetch_terms(
                 batch, moe.top_k, moe.num_experts, sc.gen_gpus, per_expert,
@@ -320,7 +336,7 @@ class ClusterSimulator:
                 t = (1.0 - sc.fault_rate) * t + sc.fault_rate * t_fault
         return t + 2e-4  # + fixed step overhead
 
-    def degraded_table(self) -> list[dict]:
+    def degraded_table(self, peer_badness=None) -> list[dict]:
         """Price every rung of the policy degradation ladder the
         HealthMonitor can walk (predictive -> demand -> all-gather) at
         this deployment's decode shape — ``roofline.degraded_step_times``
@@ -328,11 +344,29 @@ class ClusterSimulator:
         validation/straggler/fault-rate replay applied on top of each
         rung via :meth:`gen_step_time` semantics. Returns one row per
         rung: {"level", "fetch", "t_step_us", "vs_healthy",
-        "t_scenario_us"}."""
+        "t_scenario_us"}.
+
+        ``peer_badness`` (optional): per-peer fault-pressure weights in
+        [0, 1] — e.g. a replayed ``HealthMonitor.ema`` — pricing the
+        ``+excl`` rung under ASYMMETRIC badness. Every peer above the
+        monitor's default demote threshold (0.5) joins the exclusion
+        set (falling back to the single hottest when none cross it yet,
+        and never naming every peer), and the rung's predictor-hit
+        haircut scales with the set's share of the remote bank. The
+        rung's row gains ``excluded_peers`` listing the set."""
         sc = self.sc
+        bad: tuple = ()
+        if peer_badness is not None:
+            arr = [float(x) for x in peer_badness]
+            order = sorted(range(len(arr)), key=lambda i: (-arr[i], i))
+            bad = tuple(i for i in order if arr[i] > 0.5)
+            if not bad and any(a > 0.0 for a in arr):
+                bad = (order[0],)
+            bad = bad[: max(1, len(arr) - 1)]
         rows = roofline.degraded_step_times(
-            sc.cfg, sc.table(), tokens=sc.gen_batch, group=sc.gen_gpus,
+            sc.cfg, sc.gen_table(), tokens=sc.gen_batch, group=sc.gen_gpus,
             hw=sc.hw, validate=sc.validate_fetch or sc.fault_rate > 0,
+            excluded_peers=max(1, len(bad)),
         )
         from repro.core.strategy import degradation_ladder
 
@@ -340,13 +374,32 @@ class ClusterSimulator:
         # tables back in rather than re-deriving from the label (the
         # "+excl" rung keeps the root table, only the engine-side
         # speculative plan shrinks)
-        ladder = degradation_ladder(sc.table())
+        ladder = degradation_ladder(sc.gen_table())
         assert len(rows) == len(ladder)
-        for row, (_, rung_table, _) in zip(rows, ladder):
+        for row, (_, rung_table, rung_excl) in zip(rows, ladder):
             # replay the scenario at this rung: swap the rung's table in
-            # and re-price the full gen step (memory/compute + wire +
-            # straggler stretch + fault-fallback blend)
-            sub = dataclasses.replace(sc, policies=rung_table)
+            # GEN-side only (the ladder is a decode-path response; the
+            # ctx servers keep their table) and re-price the full gen
+            # step (memory/compute + wire + straggler stretch +
+            # fault-fallback blend)
+            sub = dataclasses.replace(sc, gen_policies=rung_table)
+            if rung_excl is None or rung_excl:
+                row["excluded_peers"] = list(bad)
+                # the exclusion set's share of the remote bank re-routes
+                # through the serial correction round: replay the same
+                # predictor-hit haircut into the scenario pricing
+                ph = sc.predict_hit_rate
+                if ph is None and sc.cfg.moe is not None:
+                    moe = sc.cfg.moe
+                    ph = 1.0 - (
+                        1.0 - 1.0 / max(1, moe.num_experts)
+                    ) ** (sc.gen_batch * moe.top_k)
+                if ph is not None:
+                    n_excl = max(1, len(bad))
+                    scale = max(0, sc.gen_gpus - 1 - n_excl) / max(
+                        1, sc.gen_gpus - 1
+                    )
+                    sub = dataclasses.replace(sub, predict_hit_rate=ph * scale)
             row["t_scenario_us"] = round(
                 ClusterSimulator(sub).gen_step_time(sc.gen_batch) * 1e6, 3
             )

@@ -1188,10 +1188,13 @@ elif kind == "hlo_syncfree":
         return sum(len(p.findall(txt)) for p in pats)
     d, fe = CFG.d_model, CFG.moe.d_ff
     e = CFG.moe.num_experts
-    # decode B=4 over data=2 -> 2 routed rows/rank; the packed
-    # correction vector is E*(1+rows) + rows*N_POS_BUCKETS = 68 bools
+    # decode B=4 over data=2 -> 2 routed rows/rank; the LEGACY per-layer
+    # packed correction vector was E*(1+rows) + rows*N_POS_BUCKETS = 68
+    # bools (must be GONE); the per-STEP mirror payload is
+    # rows*E + rows*N_POS_BUCKETS = 48 bools (exactly one gather)
     rows = 2
-    packed = e * (1 + rows) + rows * 4
+    legacy_packed = e * (1 + rows) + rows * 4
+    mirror = rows * e + rows * 4
     txt_sf = lowered_decode_text(
         {"moe_experts": "split:sync_free:allgather:4:4:8"}
     )
@@ -1199,12 +1202,18 @@ elif kind == "hlo_syncfree":
         {"moe_experts": "split:predictive:allgather:4:4:8"}
     )
     results = {
-        # per-layer (G', E) bool bitmap exchanges: the spec round's index
-        # traffic in predictive mode, GONE entirely in sync_free
+        # per-layer (G', E) bool bitmap exchanges: predictive ships one
+        # per round (speculative + correction); sync_free keeps ONLY the
+        # correction residual — the speculative index exchange is gone
         "pred_bitmap_gathers": count_allgather(txt_pred, (4, e), "i1"),
         "sync_bitmap_gathers": count_allgather(txt_sf, (4, e), "i1"),
-        # the ONE packed correction gather is sync_free's index traffic
-        "sync_packed_gathers": count_allgather(txt_sf, (4, packed), "i1"),
+        # the legacy per-layer packed correction gather must not appear
+        "sync_legacy_packed_gathers": count_allgather(
+            txt_sf, (4, legacy_packed), "i1"
+        ),
+        # the ONE per-step mirror-fold gather is the only other index
+        # traffic
+        "sync_mirror_gathers": count_allgather(txt_sf, (4, mirror), "i1"),
         # and no full expert bank anywhere (the spec round adds none)
         "sync_full_bank": tensor_shape_count(txt_sf, (e, d, fe))
         + tensor_shape_count(txt_sf, (e, fe, d)),
@@ -1366,17 +1375,22 @@ def test_syncfree_prefill_lowers_as_demand():
 
 @pytest.mark.slow
 def test_syncfree_hlo_no_bitmap_exchange():
-    """The tentpole's structural claim, asserted on the lowering: the
-    sync_free decode module contains ZERO per-layer (G', E) bool bitmap
-    all-gathers — the speculative round's index exchange is gone, not
-    moved — while plain predictive lowers them; sync_free's only index
-    traffic is the single packed correction all-gather
-    (E*(1+rows) + rows*N_POS_BUCKETS bools), and no full (E, D, Fe)
-    expert bank appears anywhere."""
+    """The structural claim, asserted on the lowering: the sync_free
+    decode module ships STRICTLY fewer per-layer (G', E) bool bitmap
+    all-gathers than plain predictive — only the correction round's
+    residual bitmap remains (the senders compact the payload against
+    it); the speculative round's index exchange is gone, not moved. The
+    routing/position mirror payload rides ONE per-step all-gather
+    (rows*E + rows*N_POS_BUCKETS bools) instead of the legacy per-layer
+    packed vector (E*(1+rows) + ... bools — must not appear), and no
+    full (E, D, Fe) expert bank appears anywhere."""
     r = run_predict_case({"kind": "hlo_syncfree"})
     assert r["pred_bitmap_gathers"] > 0, r   # detector sanity
-    assert r["sync_bitmap_gathers"] == 0, r  # no index exchange at all
-    assert r["sync_packed_gathers"] > 0, r   # the packed round exists
+    # correction residual only: fewer index gathers than predictive's
+    # two-per-layer (speculative plan + correction plan)
+    assert 0 < r["sync_bitmap_gathers"] < r["pred_bitmap_gathers"], r
+    assert r["sync_legacy_packed_gathers"] == 0, r  # per-layer fold gone
+    assert r["sync_mirror_gathers"] > 0, r          # per-step fold exists
     assert r["sync_full_bank"] == 0, r
 
 

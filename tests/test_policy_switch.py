@@ -1,0 +1,232 @@
+"""Zero-recompile online policy switching (PR 8).
+
+Three contracts:
+
+1. ``variant_key`` is exactly as fine as the canonical PolicyTable form:
+   two keys collide iff ``PolicyTable.to_dict()`` + the shape bucket +
+   the exclusion set are equal (hypothesis property).
+2. After ``DisaggregatedEngine.warmup()``, switching the generation
+   server between warmed policy tables across >= 3
+   prefill -> decode -> prefill cycles adds ZERO jit executables — the
+   variant cache's ``compiles()`` and the ctx step's cache stay flat
+   (subprocess, 8 fake host devices, the real sharded fetch paths).
+3. The served greedy-token trace under ``--policy auto-online``
+   switching is bitwise identical to the best static resolved table
+   (the fetch paths are exact — a policy switch may move bytes, never
+   values).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+
+
+# --------------------------------------------------------------------------
+# 1. the variant-cache key: collides iff canonical table + bucket equal
+# --------------------------------------------------------------------------
+# (layout, fetch) pairs GatherPolicy accepts: demand-class fetches imply
+# the split layout (merged + non-all is rejected at construction)
+_POLS = (
+    ("split", "all"), ("merged", "all"), ("split", "demand"),
+    ("split", "predictive"), ("split", "sync_free"),
+)
+
+
+def _table(pol, budget):
+    from repro.core.strategy import PolicyTable
+
+    layout, fetch = pol
+    return PolicyTable.uniform(layout=layout, fetch=fetch, budget=budget)
+
+
+@settings(max_examples=60)
+@given(
+    pol_a=st.sampled_from(_POLS),
+    pol_b=st.sampled_from(_POLS),
+    budget_a=st.sampled_from((0, 8, 16)),
+    budget_b=st.sampled_from((0, 8, 16)),
+    batch_a=st.sampled_from((1, 2, 4, 8)),
+    batch_b=st.sampled_from((1, 2, 4, 8)),
+    excl_a=st.sampled_from(((), (1,), (1, 3))),
+    excl_b=st.sampled_from(((), (1,), (1, 3))),
+)
+def test_variant_key_collides_iff_canonical_form_equal(
+    pol_a, pol_b, budget_a, budget_b,
+    batch_a, batch_b, excl_a, excl_b,
+):
+    from repro.configs.base import InputShape
+    from repro.runtime.engine import variant_key
+
+    ta = _table(pol_a, budget_a)
+    tb = _table(pol_b, budget_b)
+    sa = InputShape("gen", 32, batch_a, "decode")
+    sb = InputShape("gen", 32, batch_b, "decode")
+    ka = variant_key(ta, sa, excl_a)
+    kb = variant_key(tb, sb, excl_b)
+    same = (
+        ta.to_dict() == tb.to_dict()
+        and (sa.phase, sa.seq_len, sa.global_batch)
+        == (sb.phase, sb.seq_len, sb.global_batch)
+        and excl_a == excl_b
+    )
+    assert (ka == kb) == same, (ka, kb)
+
+
+def test_variant_key_ignores_non_bucket_shape_fields():
+    """The key buckets on (phase, seq_len, global_batch) — the name is
+    presentation, not a compile axis."""
+    from repro.configs.base import InputShape
+    from repro.runtime.engine import variant_key
+
+    t = _table(("split", "demand"), 8)
+    a = InputShape("gen", 32, 4, "decode")
+    b = InputShape("renamed", 32, 4, "decode")
+    assert variant_key(t, a) == variant_key(t, b)
+    c = InputShape("gen", 32, 4, "prefill")
+    assert variant_key(t, a) != variant_key(t, c)
+
+
+def test_variant_key_equivalent_spellings_collide():
+    """Two differently-constructed tables with the same canonical
+    ``to_dict()`` form map to ONE variant (no duplicate compiles)."""
+    from repro.configs.base import InputShape
+    from repro.core.strategy import PolicyTable, GatherPolicy
+    from repro.runtime.engine import variant_key
+
+    a = PolicyTable.uniform(layout="split", fetch="demand")
+    b = PolicyTable(
+        default=GatherPolicy(layout="split"),
+        families=(
+            ("moe_experts", GatherPolicy(layout="split", fetch="demand")),
+        ),
+    )
+    assert a.to_dict() == b.to_dict()
+    shape = InputShape("gen", 32, 4, "decode")
+    assert variant_key(a, shape) == variant_key(b, shape)
+
+
+# --------------------------------------------------------------------------
+# 2 + 3. zero recompiles across switches; bitwise trace equivalence
+# (subprocess: needs the 8 fake host devices for the sharded fetch paths)
+# --------------------------------------------------------------------------
+SWITCH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import warnings; warnings.filterwarnings("ignore")
+import json
+import numpy as np
+from repro.configs import get_arch, reduced_variant
+from repro.core.strategy import PolicyTable
+from repro.launch.serve import build_engine
+from repro.runtime.engine import Request
+
+cfg = reduced_variant(get_arch("deepseek-r1"))
+MESH = (2, 4)
+
+
+def reqs(n, target=5):
+    rng = np.random.default_rng(7)
+    return [
+        Request(
+            req_id=i,
+            tokens=rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+            target_len=target,
+        )
+        for i in range(n)
+    ]
+
+
+res = {}
+
+# --- forced-switch engine: >= 3 prefill -> decode -> prefill cycles ----
+engine, model = build_engine(
+    cfg, mesh_shape=MESH, prefill_len=16, cache_len=32, max_batch=4,
+    ctx_mode="dwdp", gen_mode="dwdp", policy="auto",
+)
+gen, ctx = engine.gen, engine.ctx
+boot = gen.xp.policies
+alt = PolicyTable.uniform(layout="split", fetch="demand")
+if alt.describe() == boot.describe():
+    alt = PolicyTable.uniform(layout="split", fetch="all")
+ctx.warmup(engine.params)
+gen.warmup(engine.params, tables=[alt])
+res["warm_variants"] = len(gen.variants)
+c0 = gen.variants.compiles()
+x0 = ctx.step.cache_size()
+res["warm_compiles"] = c0
+
+tables = [alt, boot, alt, boot]
+switches = 0
+for i, req in enumerate(reqs(4)):
+    switches += bool(gen.set_policy(tables[i % len(tables)]))
+    engine.submit(req)
+    engine.run(steps=4)           # prefill admit + decode steps
+res["switches"] = switches
+res["compiles_after"] = gen.variants.compiles()
+res["ctx_cache_delta"] = ctx.step.cache_size() - x0
+res["variant_hits"] = gen.variants.stats["hits"]
+res["variant_misses"] = gen.variants.stats["misses"]
+res["boot_describe_ne_alt"] = boot.describe() != alt.describe()
+
+# --- bitwise: auto-online switching vs the best static table -----------
+def serve(policy, steps=30):
+    eng, _ = build_engine(
+        cfg, mesh_shape=MESH, prefill_len=16, cache_len=32, max_batch=4,
+        ctx_mode="dwdp", gen_mode="dwdp", policy=policy, seed=0,
+        switch_interval=2,
+    )
+    eng.warmup()
+    for r in reqs(6, target=5):
+        eng.submit(r)
+    metrics = eng.run(steps=steps)
+    return eng, metrics.summary(horizon=float(steps))
+
+online_eng, online_sum = serve("auto-online")
+static_eng, static_sum = serve("auto")
+res["online_completed"] = online_sum["completed"]
+res["static_completed"] = static_sum["completed"]
+res["trace_match"] = online_eng.outputs == static_eng.outputs
+res["online_transitions"] = online_sum.get("policy_switches", 0) + \
+    online_sum.get("budget_resizes", 0)
+res["online_compiles_flat"] = (
+    online_eng.gen.variants.stats["misses"] == len(online_eng.gen.variants)
+)
+print("RESULT::" + json.dumps(res))
+"""
+
+
+@pytest.mark.slow
+def test_policy_switching_zero_recompile_and_bitwise():
+    """(a) After warmup, >= 3 forced policy switches interleaved with
+    prefill -> decode -> prefill traffic add ZERO jit executables on
+    either server (the zero-recompile contract, asserted via the jit
+    cache probes). (b) The full auto-online engine serves a greedy-token
+    trace bitwise identical to the static resolved table."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-c", SWITCH_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [
+        l for l in out.stdout.splitlines() if l.startswith("RESULT::")
+    ][-1]
+    r = json.loads(line[len("RESULT::"):])
+    # two genuinely distinct warmed tables, switched between >= 3 times
+    assert r["boot_describe_ne_alt"], r
+    assert r["warm_variants"] >= 2, r
+    assert r["switches"] >= 3, r
+    # ZERO recompiles: the executable counts never moved after warmup
+    assert r["compiles_after"] == r["warm_compiles"], r
+    assert r["ctx_cache_delta"] == 0, r
+    # every switch was a cache hit (misses only ever built new entries)
+    assert r["variant_misses"] == r["warm_variants"], r
+    assert r["variant_hits"] >= r["switches"], r
+    # bitwise: switching moved bytes, never values
+    assert r["online_completed"] == r["static_completed"] >= 1, r
+    assert r["trace_match"], r

@@ -183,23 +183,45 @@ def test_schedule_digest_single_bit_sensitivity(seed, flip):
     assert float(prefetch.schedule_digest(masks)) == float(d0)
 
 
-def test_pack_unpack_correction_roundtrip():
+def test_pack_unpack_mirror_roundtrip():
     rng = np.random.default_rng(0)
     e, rows = 20, 3
-    resid = jnp.asarray(rng.random(e) < 0.4)
     routed = jnp.asarray(rng.random((rows, e)) < 0.2)
     buckets = prefetch.position_buckets(jnp.asarray([0, 70, 999]))
-    packed = prefetch.pack_correction_payload(resid, routed, buckets)
-    assert packed.shape == (e * (1 + rows) + rows * prefetch.N_POS_BUCKETS,)
-    r2, m2, b2 = prefetch.unpack_correction_payload(packed, e, rows)
-    assert bool(jnp.all(r2 == resid))
+    packed = prefetch.pack_mirror_payload(routed, buckets)
+    assert packed.shape == (rows * (e + prefetch.N_POS_BUCKETS),)
+    m2, b2 = prefetch.unpack_mirror_payload(packed, e)
     assert bool(jnp.all(m2 == routed))
     assert bool(jnp.all(b2 == buckets))
-    # leading dims pass through (the all-gathered (G', total) form)
+    # leading dims pass through (the all-gathered (G', total) form) and
+    # rows is recovered from the packed length
     stacked = jnp.stack([packed, packed])
-    r3, m3, b3 = prefetch.unpack_correction_payload(stacked, e, rows)
-    assert r3.shape == (2, e) and m3.shape == (2, rows, e)
-    assert bool(jnp.all(r3[1] == resid))
+    m3, b3 = prefetch.unpack_mirror_payload(stacked, e)
+    assert m3.shape == (2, rows, e)
+    assert b3.shape == (2, rows, prefetch.N_POS_BUCKETS)
+    assert bool(jnp.all(m3[1] == routed))
+
+
+def test_sync_free_mirror_bytes_per_step():
+    """The per-step mirror round's wire accounting matches the packed
+    payload the fold actually gathers, and the per-layer correction
+    meta shrank to the residual bitmap alone."""
+    from repro.core.placement import make_placement
+
+    pl = make_placement(20, 4)
+    rows = 3
+    packed = prefetch.pack_mirror_payload(
+        jnp.zeros((rows, pl.num_padded), bool),
+        jnp.zeros((rows, prefetch.N_POS_BUCKETS), bool),
+    )
+    assert prefetch.sync_free_mirror_bytes(pl, rows) == (
+        (pl.subgroup_size - 1) * packed.shape[0]
+    )
+    by = prefetch.sync_free_fetch_bytes(pl, 4, 4, rows, 100)
+    by_v = prefetch.sync_free_fetch_bytes(pl, 4, 4, rows, 100, validate=True)
+    g, e = pl.subgroup_size, pl.num_padded
+    assert by["corr"] == (g - 1) * (4 * 100 + e)
+    assert by_v["corr"] - by["corr"] == (g - 1) * 4 * e  # checksum table
 
 
 # --------------------------------------------------------------------------
