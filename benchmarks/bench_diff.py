@@ -1,0 +1,89 @@
+"""Bench regression guard: freshly regenerated vs committed JSON.
+
+``python -m benchmarks.bench_diff BENCH_serving_sweep.json`` compares
+the working-tree bench JSON (regenerated earlier in the CI job by
+``benchmarks.run``) against the version committed at HEAD
+(``git show HEAD:<file>``) and FAILS if any shared operating point's
+TPS/GPU regressed by more than the tolerance (default 10%).
+
+Improvements and new operating points pass; only regressions fail. The
+guard keys rows by ``tps_user`` (the fixed operating point), so sweeps
+may re-grid without tripping it — a point must exist on BOTH sides to
+be compared. Fields compared are every ``*_tps_per_gpu`` column.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+
+DEFAULT_TOLERANCE = 0.10
+
+
+def _committed(path: str):
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{path}"],
+            capture_output=True, text=True, check=True,
+        ).stdout
+    except subprocess.CalledProcessError:
+        return None  # new bench this PR: nothing to regress against
+    return json.loads(blob)
+
+
+def diff_bench(path: str, tolerance: float = DEFAULT_TOLERANCE) -> list[str]:
+    """Regression messages (empty == pass)."""
+    with open(path) as f:
+        fresh = json.load(f)
+    base = _committed(path)
+    if base is None:
+        return []
+    base_rows = {r["tps_user"]: r for r in base.get("rows", [])
+                 if "tps_user" in r}
+    failures = []
+    for row in fresh.get("rows", []):
+        ref = base_rows.get(row.get("tps_user"))
+        if ref is None:
+            continue
+        for key, have in row.items():
+            if not key.endswith("_tps_per_gpu"):
+                continue
+            want = ref.get(key)
+            if not isinstance(want, (int, float)) or want <= 0:
+                continue
+            if have < want * (1.0 - tolerance):
+                failures.append(
+                    f"{path}: tps_user={row['tps_user']}: {key} "
+                    f"regressed {want} -> {have} "
+                    f"({have / want - 1.0:+.1%}, tolerance -{tolerance:.0%})"
+                )
+    return failures
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    if not argv:
+        print("usage: python -m benchmarks.bench_diff BENCH_*.json "
+              "[--tolerance 0.10]")
+        return 2
+    tol = DEFAULT_TOLERANCE
+    paths = []
+    it = iter(argv)
+    for a in it:
+        if a == "--tolerance":
+            tol = float(next(it))
+        else:
+            paths.append(a)
+    failures = []
+    for p in paths:
+        failures += diff_bench(p, tol)
+    for msg in failures:
+        print(f"BENCH REGRESSION: {msg}")
+    if not failures:
+        print(f"bench_diff: {len(paths)} file(s) within -{tol:.0%} "
+              "of committed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,6 +16,7 @@ def _all_benchmarks():
         paper_tables,
         policy_switch_bench,
         roofline_table,
+        serving_bench,
         syncfree_bench,
     )
 
@@ -38,6 +39,7 @@ def _all_benchmarks():
         "fault_degradation": faults_bench.bench_fault_degradation,
         "syncfree": syncfree_bench.bench_syncfree_decode,
         "policy_switch": policy_switch_bench.bench_policy_switch,
+        "serving_sweep": serving_bench.bench_serving_sweep,
         "dryrun_roofline": roofline_table.bench_dryrun_roofline,
     }
 

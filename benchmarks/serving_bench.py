@@ -1,0 +1,235 @@
+"""Serving sweep: TPS/GPU at fixed TPS/user, sync-free vs demand
+(the paper's headline +TPS/GPU-at-comparable-TPS/user claim, §5 /
+Table 5, replayed through the serving subsystem).
+
+``python -m benchmarks.run serving_sweep`` rewrites
+``BENCH_serving_sweep.json`` (committed per PR; CI diffs it and the
+bench-diff guard fails the build if the mid-sweep point regresses).
+
+The fleet is TWO data-parallel replicas (ctx 2 + gen 8 GPUs each)
+behind the least-loaded router, serving a skewed-ISL workload (mixed
+4K/8K prompts, jittered 1K outputs) with replica 1 a STRAGGLER
+(one slow peer in its gen group — every fetch round completes at the
+slowest contributor). Service times are the §3 roofline via
+``ModeledReplicaClient`` at a depth-scaled R1 shape (the paper's 8K/1K
+lengths and full E=256/top-8 routing structure kept; layers scaled so
+the sweep lands the paper's 20-100 TPS/user operating band on the
+modeled hardware).
+
+Sweeping closed-loop concurrency traces each fetch policy's
+(TPS/user, TPS/GPU) frontier; interpolating both frontiers at FIXED
+TPS/user operating points gives the paper's comparison: output TPS/GPU
+at comparable per-user rate. Acceptance (tests/test_serving.py, on the
+committed JSON):
+
+- >= 4 operating points inside 20-100 TPS/user;
+- sync-free decode >= 1.05x demand TPS/GPU at every point (the
+  straggler serializes demand's whole fetch round; sync-free only
+  stretches its small correction residual);
+- every measured point within 2x of the ``pareto_sweep`` modeled
+  frontier (the independent open-loop simulator over the same shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.kernels_bench import write_bench_json
+
+BENCH_SERVING_JSON = "BENCH_serving_sweep.json"
+
+R1 = "deepseek-r1"
+SCALED_LAYERS = 6          # depth-scaled R1: 5 MoE layers of 6
+ISL_BUCKETS = (4096, 8192)  # skewed-ISL mix (paper shape 8K + short tail)
+ISL_WEIGHTS = (0.3, 0.7)
+OSL = 1024
+OSL_JITTER = 0.25
+CTX_GPUS, GEN_GPUS = 2, 8
+STRAGGLER_SLOWDOWN = 1.5   # replica 1: one peer at 2/3 link bandwidth
+# measured predictor/cache split replayed into the roofline (the
+# syncfree bench's trace-driven hit rate clears 0.9; the residency
+# cache serves about half the wanted remote rows)
+PREDICT_HIT = 0.9
+CACHE_HIT = 0.5
+CACHE_ROWS = 128
+CONCURRENCY = (2, 4, 8, 16, 24, 32, 48, 64, 96, 128, 192)
+OPERATING_POINTS = (30.0, 40.0, 50.0, 55.0)  # fixed TPS/user
+
+
+def scaled_r1():
+    """Depth-scaled R1: full MoE routing structure (E=256, top-8,
+    shared expert), 8K/1K serving lengths, layers cut to land the
+    modeled decode in the paper's 20-100 TPS/user band."""
+    from repro.configs import get_arch
+
+    cfg = get_arch(R1)
+    moe = dataclasses.replace(cfg.moe, first_dense=1)
+    return dataclasses.replace(
+        cfg, name=f"{R1}-L{SCALED_LAYERS}", num_layers=SCALED_LAYERS,
+        moe=moe,
+    )
+
+
+def _gen_table(fetch: str):
+    from repro.core.strategy import GatherPolicy, PolicyTable
+
+    cache = CACHE_ROWS if fetch in ("predictive", "sync_free") else 0
+    return PolicyTable(
+        default=GatherPolicy(layout="split"),
+        families=(
+            ("moe_experts", GatherPolicy(
+                layout="split", fetch=fetch, cache_budget=cache,
+            )),
+        ),
+    )
+
+
+def _replica_sim(cfg, fetch: str, slots: int, straggler: bool):
+    from repro.runtime.simulator import SimConfig
+
+    return SimConfig(
+        cfg=cfg, ctx_gpus=CTX_GPUS, gen_gpus=GEN_GPUS,
+        ctx_mode="dwdp", gen_mode="dwdp", gen_batch=slots,
+        gen_policies=_gen_table(fetch),
+        predict_hit_rate=PREDICT_HIT, cache_hit_rate=CACHE_HIT,
+        isl_max=max(ISL_BUCKETS), osl=OSL,
+        straggler_ranks=1 if straggler else 0,
+        straggler_slowdown=STRAGGLER_SLOWDOWN,
+    )
+
+
+def _run_fleet(cfg, fetch: str, concurrency: int) -> dict:
+    """One closed-loop operating point: 2 replicas (replica 1
+    straggles), concurrency users split by the router, run to drain on
+    independent clocks."""
+    from repro.runtime.serving import (
+        AdmissionController, ModeledReplicaClient, MultiReplicaEngine,
+        ServingScheduler, SLOConfig, synthesize_workload, WorkloadConfig,
+    )
+
+    slots = max(1, concurrency // 2)
+    scheds = []
+    for i in range(2):
+        client = ModeledReplicaClient(
+            _replica_sim(cfg, fetch, slots, straggler=(i == 1)),
+            num_slots=slots,
+        )
+        adm = AdmissionController(SLOConfig(), client.step_time)
+        scheds.append(ServingScheduler(client, admission=adm))
+    fleet = MultiReplicaEngine(scheds)
+    wl = WorkloadConfig(
+        num_requests=2 * concurrency, isl_buckets=ISL_BUCKETS,
+        isl_weights=ISL_WEIGHTS, osl=OSL, osl_jitter=OSL_JITTER, seed=7,
+    )
+    fleet.submit(synthesize_workload(wl))
+    metrics = fleet.run()
+    s = metrics.summary(fleet.horizon())
+    return {
+        "concurrency": concurrency,
+        "tps_user": float(s["mean_tps_user"]),
+        "tps_per_gpu": float(s["tps_per_gpu"]),
+        "completed": s["completed"],
+    }
+
+
+def _interp(curve: list[dict], point: float):
+    """TPS/GPU at a fixed TPS/user via linear interpolation along the
+    measured frontier; None outside the measured range."""
+    xs = np.asarray([r["tps_user"] for r in curve])
+    ys = np.asarray([r["tps_per_gpu"] for r in curve])
+    order = np.argsort(xs)
+    xs, ys = xs[order], ys[order]
+    if not xs[0] <= point <= xs[-1]:
+        return None
+    return float(np.interp(point, xs, ys))
+
+
+def _modeled_frontier(cfg) -> list[dict]:
+    """The independent cross-check: the open-loop pareto sweep over the
+    same replica shape, traced across slot counts and both replica
+    healths (healthy and straggler) so the modeled frontier spans the
+    measured operating band."""
+    from repro.runtime.simulator import pareto_sweep
+
+    rows = []
+    for strag in (0, 1):
+        for gen_batch in (2, 4, 8, 16, 32, 64):
+            rows += pareto_sweep(
+                cfg, ctx_mode="dwdp", ctx_gpu_options=(CTX_GPUS,),
+                rate_options=(0.2, 0.8),
+                gen_gpus=GEN_GPUS, gen_mode="dwdp", gen_batch=gen_batch,
+                gen_policies=_gen_table("sync_free"),
+                predict_hit_rate=PREDICT_HIT, cache_hit_rate=CACHE_HIT,
+                isl_max=max(ISL_BUCKETS), osl=OSL, horizon_s=300.0,
+                straggler_ranks=strag,
+                straggler_slowdown=STRAGGLER_SLOWDOWN,
+            )
+    return [
+        r for r in rows
+        if r["completed"] and r["mean_tps_user"] and r["tps_per_gpu"]
+    ]
+
+
+def bench_serving_sweep(out_path: str = BENCH_SERVING_JSON) -> list[dict]:
+    cfg = scaled_r1()
+    curves = {
+        fetch: [_run_fleet(cfg, fetch, c) for c in CONCURRENCY]
+        for fetch in ("demand", "sync_free")
+    }
+    modeled = _modeled_frontier(cfg)
+
+    def modeled_at(point: float):
+        # the pareto-frontier value: best modeled TPS/GPU among rows
+        # that still deliver the point's per-user rate
+        feas = [r for r in modeled if r["mean_tps_user"] >= point]
+        if not feas:
+            feas = [min(modeled,
+                        key=lambda r: abs(r["mean_tps_user"] - point))]
+        best = max(feas, key=lambda r: r["tps_per_gpu"])
+        return float(best["tps_per_gpu"]), float(best["mean_tps_user"])
+
+    rows = []
+    for point in OPERATING_POINTS:
+        d = _interp(curves["demand"], point)
+        s = _interp(curves["sync_free"], point)
+        if d is None or s is None:
+            continue  # outside one frontier's measured range
+        m_tps, m_user = modeled_at(point)
+        rows.append({
+            "tps_user": point,
+            "demand_tps_per_gpu": round(d, 3),
+            "syncfree_tps_per_gpu": round(s, 3),
+            "syncfree_vs_demand": round(s / d, 4),
+            "modeled_tps_per_gpu": round(m_tps, 3),
+            "modeled_at_tps_user": round(m_user, 2),
+            "measured_vs_modeled": round(s / m_tps, 4),
+        })
+    assert len(rows) >= 4, (
+        f"sweep covered only {len(rows)} operating points: "
+        f"{[(c['tps_user'], round(c['tps_per_gpu'], 1)) for c in curves['sync_free']]}"
+    )
+    write_bench_json(
+        out_path, "serving_sweep",
+        {
+            "arch": cfg.name, "base_arch": R1,
+            "replicas": 2, "ctx_gpus": CTX_GPUS, "gen_gpus": GEN_GPUS,
+            "straggler": {"replica": 1, "ranks": 1,
+                          "slowdown": STRAGGLER_SLOWDOWN},
+            "isl_buckets": list(ISL_BUCKETS),
+            "isl_weights": list(ISL_WEIGHTS),
+            "osl": OSL, "osl_jitter": OSL_JITTER,
+            "predict_hit": PREDICT_HIT, "cache_hit": CACHE_HIT,
+            "cache_rows": CACHE_ROWS,
+            "concurrency": list(CONCURRENCY),
+            "hw": "GB200",
+            "sweep": {f: curves[f] for f in curves},
+        },
+        rows,
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in bench_serving_sweep():
+        print(r)

@@ -140,6 +140,13 @@ def main():
     metrics = engine.run(steps)
     summary = metrics.summary(horizon=float(steps))
     print("summary:", summary)
+    print(
+        "latency percentiles:"
+        f" ttft p50/p95/p99 = {summary['ttft_p50_s']}"
+        f"/{summary['ttft_p95_s']}/{summary['ttft_p99_s']} s,"
+        f" tpot p50/p95/p99 = {summary['tpot_p50_s']}"
+        f"/{summary['tpot_p95_s']}/{summary['tpot_p99_s']} s"
+    )
     if "gathered_mb_fetched" in summary:
         saved = 1.0 - summary["gather_fetch_ratio"]
         print(

@@ -91,6 +91,125 @@ def zipf_routing_trace(
     return out
 
 
+def from_served_trace(
+    bitmaps: np.ndarray,
+    top_k: int,
+) -> np.ndarray:
+    """Convert REAL routed-expert bitmaps captured from a serving run
+    (``GenerationServer.routed_bitmaps`` per decode step) into the
+    ``(steps, rows, top_k)`` trace format every predictor harness and
+    bench consumes — so predictor tuning can replay served routing
+    instead of synthetic Zipf draws.
+
+    ``bitmaps``: ``(steps, ranks, num_experts)`` bool (or
+    ``(steps, num_experts)`` for a single rank). Each rank's activated
+    set per step is split into ceil(n_active / top_k) trace rows of
+    ``top_k`` DISTINCT ids (the without-replacement contract of
+    :func:`zipf_routing_trace`); every rank keeps a FIXED span of output
+    rows across steps (sized by its busiest step) so row identity — the
+    signal the affinity predictor learns — survives the conversion.
+    Rows with fewer than ``top_k`` active ids are padded with that
+    rank's trace-hottest ids not already in the row (trace-global
+    hottest as fallback), so padding follows the served skew rather
+    than inventing uniform mass."""
+    bm = np.asarray(bitmaps).astype(bool)
+    if bm.ndim == 2:
+        bm = bm[:, None, :]
+    if bm.ndim != 3:
+        raise ValueError(
+            f"bitmaps must be (steps, ranks, E) or (steps, E); "
+            f"got shape {bm.shape}"
+        )
+    steps, ranks, e = bm.shape
+    if top_k < 1 or top_k > e:
+        raise ValueError(f"top_k must be in [1, {e}], got {top_k}")
+    # per-rank and global hotness over the whole trace (padding order)
+    rank_counts = bm.sum(axis=0)                      # (ranks, E)
+    global_hot = np.argsort(-rank_counts.sum(axis=0), kind="stable")
+    # fixed per-rank row spans, sized by the busiest step
+    per_rank_rows = np.maximum(
+        1, -(-bm.sum(axis=2).max(axis=0) // top_k)
+    )                                                  # (ranks,)
+    offsets = np.concatenate([[0], np.cumsum(per_rank_rows)])
+    total_rows = int(offsets[-1])
+    out = np.empty((steps, total_rows, top_k), np.int32)
+    for r in range(ranks):
+        hot_r = np.argsort(-rank_counts[r], kind="stable")
+        pad_order = list(dict.fromkeys(
+            [*hot_r.tolist(), *global_hot.tolist()]
+        ))
+        for s in range(steps):
+            active = np.flatnonzero(bm[s, r]).tolist()
+            for c in range(int(per_rank_rows[r])):
+                ids = active[c * top_k:(c + 1) * top_k]
+                if len(ids) < top_k:
+                    have = set(ids)
+                    for x in pad_order:
+                        if len(ids) == top_k:
+                            break
+                        if x not in have:
+                            ids.append(int(x))
+                            have.add(x)
+                out[s, offsets[r] + c] = ids
+    return out
+
+
+def predictor_hit_rate(
+    trace: np.ndarray,
+    num_experts: int,
+    subgroup_size: int,
+    *,
+    budget: int,
+    rich: bool = True,
+) -> float:
+    """Replay one rank's mirrored predictor over a routing trace and
+    return the speculative hit rate — the public spelling of the
+    sync-free acceptance harness, usable on served traces
+    (:func:`from_served_trace`) as well as synthetic ones.
+
+    Predicts BEFORE each step from state folded on the steps so far
+    (pure :mod:`repro.core.prefetch` arithmetic — exactly what both
+    transfer endpoints run), scores hits against the step's actual
+    remote wanted set from subgroup position 0, and skips the cold-start
+    step (nothing can hit it)."""
+    import jax.numpy as jnp
+
+    from repro.core import prefetch
+    from repro.core.placement import make_placement
+
+    trace = np.asarray(trace)
+    if trace.ndim != 3:
+        raise ValueError(
+            f"trace must be (steps, rows, top_k), got {trace.shape}"
+        )
+    pl = make_placement(num_experts, subgroup_size)
+    e = pl.num_padded
+    steps, rows, _ = trace.shape
+    own = jnp.arange(e) // pl.local_count == 0
+    ema = jnp.zeros(e)
+    prev = jnp.zeros(e, bool)
+    posb = jnp.zeros((prefetch.N_POS_BUCKETS, e))
+    aff = jnp.zeros((rows, e))
+    sigw = jnp.zeros(2)
+    sig = jnp.zeros((2, e))
+    hit = want = 0.0
+    for s in range(steps):
+        extra = prefetch.predict_extra_score(sig, sigw) if rich else None
+        spec = prefetch.predict_bitmap(
+            prev, ema, pl, budget=budget, extra_score=extra
+        )
+        routed = prefetch.routed_bitmaps(jnp.asarray(trace[s]), e)
+        buckets = prefetch.position_buckets(jnp.full((rows,), s))
+        wanted_remote = jnp.any(routed, axis=0) & ~own
+        if s > 0:
+            hit += float(jnp.sum(wanted_remote & spec))
+            want += float(jnp.sum(wanted_remote))
+        prev, ema, aff, posb, sig, sigw = prefetch.update_predictor(
+            ema, aff, posb, sigw, routed, buckets
+        )
+    return hit / max(want, 1.0)
+
+
 def trace_skew(trace: np.ndarray, num_experts: int) -> float:
     """Fraction of all draws landing in the trace's own top-``k`` hottest
     experts, where ``k = top_k`` of the trace — 1.0 for a frozen hot set,

@@ -124,6 +124,7 @@ def build_engine(
     *,
     mesh_shape=(1, 1),
     prefill_len: int = 64,
+    prefill_buckets: tuple = (),
     cache_len: int = 128,
     max_batch: int = 4,
     ctx_mode: str = "dwdp",
@@ -154,6 +155,7 @@ def build_engine(
     params = model.init_params(jax.random.key(seed))
     ctx = ContextServer(
         model, mesh, sizes, mode=ctx_mode, prefill_len=prefill_len,
+        prefill_buckets=prefill_buckets,
         cache_len=cache_len, prefetch=prefetch,
         weight_layout=weight_layout, capacity_from=capacity_from,
         expert_fetch=expert_fetch, demand_budget=demand_budget,
@@ -177,6 +179,85 @@ def build_engine(
     return DisaggregatedEngine(
         params, ctx, gen, health=health, scheduler=scheduler
     ), model
+
+
+def run_serving(args, cfg, policy):
+    """The --serving path: N live replicas (same weights, independent
+    clocks) behind the least-loaded router, continuous-batching rolling
+    admission, optional SLO gate. Prints the percentile summary
+    (TTFT/TPOT p50/p95/p99) and the admission counters."""
+    from repro.runtime.serving import (
+        AdmissionController,
+        LiveReplicaClient,
+        MultiReplicaEngine,
+        ServingScheduler,
+        SLOConfig,
+        WorkloadConfig,
+        synthesize_workload,
+    )
+
+    if args.isl_buckets:
+        buckets = tuple(
+            sorted({int(b) for b in args.isl_buckets.split(",")})
+        )
+    else:
+        buckets = (args.prefill_len,)
+    slo = SLOConfig(
+        target_tps_user=args.slo_tps_user,
+        ttft_budget_s=args.slo_ttft,
+        max_queue=args.max_queue,
+    )
+    gated = args.slo_tps_user or args.slo_ttft or args.max_queue
+    schedulers = []
+    for i in range(args.replicas):
+        engine, _ = build_engine(
+            cfg,
+            prefill_len=max(buckets),
+            prefill_buckets=buckets,
+            cache_len=max(buckets) + args.output_len,
+            max_batch=args.max_batch,
+            ctx_mode=args.ctx_mode,
+            gen_mode=args.gen_mode,
+            weight_layout=args.weight_layout,
+            capacity_from=args.capacity_from,
+            expert_fetch=args.expert_fetch or "all",
+            demand_budget=args.demand_budget or 0,
+            cache_budget=args.cache_budget or 0,
+            policy=policy,
+            variant_cache_size=args.variant_cache_size,
+            switch_interval=args.switch_interval,
+        )
+        client = LiveReplicaClient.from_engine(engine)
+        if not args.no_warmup:
+            client.warmup()
+        admission = (
+            AdmissionController(slo, client.step_time) if gated else None
+        )
+        schedulers.append(ServingScheduler(client, admission=admission))
+    if not args.no_warmup:
+        print(f"warmup: {args.replicas} replica(s), prefill buckets "
+              f"{list(buckets)} pre-compiled")
+    fleet = MultiReplicaEngine(schedulers)
+    wl = WorkloadConfig(
+        num_requests=args.requests,
+        isl_buckets=buckets,
+        osl=args.output_len,
+        arrival_rate=args.arrival_rate,
+    )
+    fleet.submit(synthesize_workload(wl, vocab_size=cfg.vocab_size))
+    metrics = fleet.run()
+    s = metrics.summary(horizon=fleet.horizon())
+    print("serving summary:", s)
+    print("ttft p50/p95/p99:",
+          s["ttft_p50_s"], s["ttft_p95_s"], s["ttft_p99_s"])
+    print("tpot p50/p95/p99:",
+          s["tpot_p50_s"], s["tpot_p95_s"], s["tpot_p99_s"])
+    for i, sched in enumerate(schedulers):
+        n = sum(1 for r in fleet.assignments.values() if r == i)
+        print(f"replica {i}: {n} request(s), {sched.steps} decode "
+              f"step(s), horizon {sched.t:.3f}s")
+    for rid, toks in list(schedulers[0].outputs.items())[:4]:
+        print(f"req {rid}: {toks[:10]}{'...' if len(toks) > 10 else ''}")
 
 
 def main(argv=None):
@@ -270,6 +351,41 @@ def main(argv=None):
                          "pay a trace+compile on the serving path)")
     ap.add_argument("--full", action="store_true",
                     help="use the full config (default: reduced smoke)")
+    serving = ap.add_argument_group(
+        "serving", "continuous-batching serving path (docs/serving.md): "
+        "rolling admission into decode slots as they free, SLO-aware "
+        "admission control, N independent data-parallel replicas behind "
+        "the least-loaded router"
+    )
+    serving.add_argument("--serving", action="store_true",
+                         help="serve through ServingScheduler / "
+                              "MultiReplicaEngine instead of the "
+                              "fixed-slot engine loop")
+    serving.add_argument("--replicas", type=int, default=1,
+                         help="independent engine replicas (no "
+                              "cross-replica synchronization; the "
+                              "router balances by backlog)")
+    serving.add_argument("--isl-buckets", default=None,
+                         metavar="L1,L2,...",
+                         help="prompt-length mix for the synthesized "
+                              "workload (each a pow2 prefill bucket, "
+                              "pre-compiled at warmup; default: one "
+                              "bucket of --prefill-len)")
+    serving.add_argument("--arrival-rate", type=float, default=0.0,
+                         help="Poisson arrival rate, requests/s of "
+                              "simulated queue time (0 = all requests "
+                              "queued at t=0)")
+    serving.add_argument("--slo-tps-user", type=float, default=0.0,
+                         help="per-user decode-rate floor: admissions "
+                              "projected below it queue; sustained "
+                              "violation evicts-to-queue (0 = off)")
+    serving.add_argument("--slo-ttft", type=float, default=0.0,
+                         help="TTFT budget in seconds: queued requests "
+                              "whose wait alone exceeds it are shed "
+                              "(0 = off)")
+    serving.add_argument("--max-queue", type=int, default=0,
+                         help="queued requests beyond which arrivals "
+                              "are shed (0 = unbounded)")
     args = ap.parse_args(argv)
     try:
         policy = resolve_cli_policy(args)
@@ -278,6 +394,8 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if not args.full:
         cfg = reduced_variant(cfg)
+    if args.serving:
+        return run_serving(args, cfg, policy)
     health = None
     if (args.fault_spec or args.validate_fetch) and not args.no_health:
         health = HealthMonitor(

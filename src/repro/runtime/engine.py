@@ -107,10 +107,15 @@ class PolicyVariantCache:
         return sum(step.cache_size() for _, step, _ in
                    self._entries.values())
 
-    def get(self, table: PolicyTable, excl: tuple = ()):
+    def get(self, table: PolicyTable, excl: tuple = (),
+            shape: Optional[InputShape] = None):
         """The (plan, step, wire-bytes) variant for a policy table,
-        building it on miss."""
-        key = variant_key(table, self.shape, excl)
+        building it on miss. ``shape`` overrides the cache's home shape
+        bucket — the ctx server's pow2 prefill-length buckets key in
+        through here (decode buckets keep the home shape and vary the
+        table instead)."""
+        shape = shape if shape is not None else self.shape
+        key = variant_key(table, shape, excl)
         if key in self._entries:
             self.stats["hits"] += 1
             # refresh LRU position
@@ -118,7 +123,7 @@ class PolicyVariantCache:
             return self._entries[key]
         self.stats["misses"] += 1
         xp = make_execution_plan(
-            self.model, self.shape, self._mesh_sizes, mode=self._mode,
+            self.model, shape, self._mesh_sizes, mode=self._mode,
             policy=table, capacity_from=self._capacity_from,
             fault_spec=self._fault_spec,
             validate_fetch=self._validate_fetch,
@@ -136,10 +141,12 @@ class PolicyVariantCache:
         self._entries[key] = entry
         return entry
 
-    def adopt(self, table: PolicyTable, excl: tuple, entry):
+    def adopt(self, table: PolicyTable, excl: tuple, entry,
+              shape: Optional[InputShape] = None):
         """Seed the cache with an already-built variant (the server's
         boot-time plan) without charging a miss."""
-        key = variant_key(table, self.shape, excl)
+        key = variant_key(table, shape if shape is not None else self.shape,
+                          excl)
         self._entries.setdefault(key, entry)
 
 
@@ -531,7 +538,16 @@ class HealthMonitor:
 
 
 class ContextServer:
-    """Prefill worker: returns (first_token, captured decode state)."""
+    """Prefill worker: returns (first_token, captured decode state).
+
+    Prompt lengths are served from pow2 seq-len BUCKETS: each configured
+    bucket is one pre-compilable variant of the prefill step, keyed into
+    the same :func:`variant_key` cache the decode server's policy
+    variants use (the shape leg of the key varies instead of the table).
+    ``prefill_len`` is the home bucket (and the only one by default —
+    the pre-bucket behaviour); ``prefill_buckets`` adds more lengths,
+    each a power of two. :meth:`warmup` pre-compiles every bucket, so
+    serving mixed prompt lengths never traces on the request path."""
 
     def __init__(self, model: Model, mesh, mesh_sizes, *, mode="dwdp",
                  prefill_len: int, cache_len: int, prefetch="allgather",
@@ -539,46 +555,62 @@ class ContextServer:
                  capacity_from: str = "local",
                  expert_fetch: str = "all", demand_budget: int = 0,
                  cache_budget: int = 0, policy=None,
-                 fault_spec=None, validate_fetch: bool = False):
+                 fault_spec=None, validate_fetch: bool = False,
+                 prefill_buckets: tuple = ()):
         self.model = model
         self.prefill_len = prefill_len
+        for b in prefill_buckets:
+            b = int(b)
+            if b < 1 or b & (b - 1):
+                raise ValueError(
+                    f"prefill_buckets must be powers of two, got {b}"
+                )
+        self.prefill_lens = tuple(sorted(
+            {int(prefill_len), *(int(b) for b in prefill_buckets)}
+        ))
         shape = InputShape("ctx", prefill_len, 1, "prefill")
-        self.xp = make_execution_plan(
-            model, shape, mesh_sizes, mode=mode,
-            policy=_resolve_policy(
+        self._table = _resolve_policy_table(
+            model, shape, mesh_sizes,
+            _resolve_policy(
                 policy, prefetch=prefetch, weight_layout=weight_layout,
                 expert_fetch=expert_fetch, demand_budget=demand_budget,
                 cache_budget=cache_budget,
             ),
-            capacity_from=capacity_from,
-            fault_spec=fault_spec, validate_fetch=validate_fetch,
         )
-        self.step = CountingStep(execution.make_step_fn(
-            model, self.xp, mesh, capture_len=cache_len
-        ))
-        # static gathered-weight wire bytes of one prefill call (fetched =
-        # what the lowered program ships, full = the expert_fetch="all"
-        # counterfactual) — attributed per request by the engine
-        self.gather_bytes = execution.gathered_wire_bytes_per_step(
-            model, self.xp
+        self.variants = PolicyVariantCache(
+            model, mesh, mesh_sizes, shape, mode=mode,
+            capacity_from=capacity_from, fault_spec=fault_spec,
+            validate_fetch=validate_fetch, capture_len=cache_len,
+            max_entries=max(16, len(self.prefill_lens)),
+        )
+        self.xp, self.step, self.gather_bytes = self._bucket(prefill_len)
+
+    def _bucket(self, length: int):
+        """The (plan, step, wire-bytes) variant of one prefill-length
+        bucket (built on first use; warm after :meth:`warmup`)."""
+        return self.variants.get(
+            self._table,
+            shape=InputShape("ctx", int(length), 1, "prefill"),
         )
 
     def warmup(self, params) -> None:
-        """Trace+compile the prefill step off the serving path (the
-        first real request then hits a warm jit cache)."""
-        if self.step.calls == 0:
-            self.prefill(
-                params, np.zeros(self.prefill_len, np.int32)
-            )
-            self.step.calls = 0
+        """Trace+compile the prefill step of EVERY configured bucket off
+        the serving path (the first real request of any bucketed length
+        then hits a warm jit cache)."""
+        for length in self.prefill_lens:
+            _, step, _ = self._bucket(length)
+            if step.calls == 0:
+                self.prefill(params, np.zeros(length, np.int32))
+                step.calls = 0
 
     def prefill(self, params, tokens: np.ndarray):
-        """tokens: (prompt_len,) -> (first_token, state). The demo engine
-        uses fixed-length prompts (the request generator packs/clips);
-        variable lengths are exercised by the cluster simulator."""
-        assert len(tokens) == self.prefill_len, (
-            len(tokens), self.prefill_len,
-        )
+        """tokens: (prompt_len,) -> (first_token, state). The prompt
+        length must exactly match a configured bucket (the request
+        generator packs/clips); variable lengths beyond the bucket set
+        are exercised by the cluster simulator."""
+        length = len(tokens)
+        assert length in self.prefill_lens, (length, self.prefill_lens)
+        self.xp, self.step, self.gather_bytes = self._bucket(length)
         row = jnp.asarray(tokens[None, :], jnp.int32)
         out = self.step(params, {"tokens": row})
         logits = out["last_logits"]
@@ -858,6 +890,77 @@ class GenerationServer:
     def release(self, slot: int):
         self.slot_req[slot] = None
 
+    def snapshot_slot(self, slot: int) -> dict:
+        """Host-side copy of one slot's decode state in the ctx-transfer
+        layout (batch dim 1), re-admittable verbatim via :meth:`admit` —
+        the serving layer's evict-to-queue hook. ``token`` is the slot's
+        pending input token (the last one it emitted). The shared
+        predictive state ("pred") is per-RANK, not per-slot, and is
+        deliberately not captured: eviction must not disturb the
+        predictor/cache the other slots are hitting."""
+        layers = {}
+        for group in self.model.plan:
+            stacked = group.scan and group.n_cycles > 1
+            bax = 1 if stacked else 0
+
+            def read(src, bax=bax):
+                idx = (slice(None),) * bax + (slice(slot, slot + 1),)
+                return np.asarray(src[idx])
+
+            layers[group.name] = jax.tree.map(
+                read, self.state["layers"][group.name]
+            )
+        return {
+            "pos": np.asarray(self.state["pos"][slot:slot + 1]),
+            "layers": layers,
+            "token": int(np.asarray(self.cur_token[slot, 0])),
+        }
+
+    def _subgroup_positions(self) -> np.ndarray:
+        """Each flat rank's position within its expert-gather subgroup
+        (the ``axis_index % subgroup_size`` the mirrored predictor
+        indexes by), in the per-rank state-dim order."""
+        sizes = self._mesh_sizes
+        n = int(np.prod(list(sizes.values())))
+        rem, coords = np.arange(n), {}
+        for ax in reversed(list(sizes)):
+            coords[ax] = rem % sizes[ax]
+            rem = rem // sizes[ax]
+        idx = np.zeros(n, np.int64)
+        for ax in self.model.geom.expert_axes:
+            idx = idx * sizes[ax] + coords[ax]
+        return idx % self.model.geom.moe_placement.subgroup_size
+
+    def routed_bitmaps(self, group: Optional[str] = None):
+        """The LAST decode step's per-rank routed-expert bitmaps,
+        ``(n_ranks, num_experts)`` bool, read from the predictive
+        state's ``prev`` leaf (the serving trace-capture hook; None when
+        the installed plan runs no predictive/sync-free layers).
+
+        ``group`` picks the layer group (first predictive group in plan
+        order by default); scan-stacked groups report their first cycle
+        (one layer's routing — the shape the trace tooling consumes).
+        Sync-free plans carry the mirrored per-subgroup-position view;
+        each rank's OWN row is selected by its subgroup position."""
+        pred = self.state.get("pred")
+        if not pred:
+            return None
+        if group is None:
+            group = next(
+                g.name for g in self.model.plan if g.name in pred
+            )
+        gdict = pred[group]
+        st = gdict[sorted(gdict)[0]]
+        gobj = next(g for g in self.model.plan if g.name == group)
+        prev = np.asarray(st.prev)
+        if gobj.scan and gobj.n_cycles > 1:
+            prev = prev[0]
+        if prev.ndim == 3:  # mirrored: (n_ranks, G', e_pad) -> own row
+            n_ranks = prev.shape[0]
+            pos = self._subgroup_positions()
+            prev = prev[np.arange(n_ranks), pos]
+        return prev[:, : self.model.cfg.moe.num_experts].astype(bool)
+
 
 class DisaggregatedEngine:
     """Queues + rate matching between context and generation servers."""
@@ -894,14 +997,17 @@ class DisaggregatedEngine:
     def submit(self, req: Request):
         # engine-shape validation (the Request itself checked basic
         # well-formedness at construction)
-        if len(req.tokens) != self.ctx.prefill_len:
+        buckets = getattr(self.ctx, "prefill_lens",
+                          (self.ctx.prefill_len,))
+        if len(req.tokens) not in buckets:
             raise ValueError(
-                f"Request {req.req_id}: prompt length {len(req.tokens)} != "
-                f"context server prefill_len {self.ctx.prefill_len}"
+                f"Request {req.req_id}: prompt length {len(req.tokens)} "
+                f"matches no context-server bucket (prefill_lens="
+                f"{buckets})"
             )
-        if self.ctx.prefill_len + req.target_len - 1 > self.gen.cache_len:
+        if len(req.tokens) + req.target_len - 1 > self.gen.cache_len:
             raise ValueError(
-                f"Request {req.req_id}: prompt ({self.ctx.prefill_len}) + "
+                f"Request {req.req_id}: prompt ({len(req.tokens)}) + "
                 f"output ({req.target_len}) tokens exceed the decode ring "
                 f"capacity cache_len={self.gen.cache_len}"
             )

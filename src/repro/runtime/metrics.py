@@ -6,8 +6,19 @@ savings and WHERE the gathered bytes go under a mixed PolicyTable."""
 from __future__ import annotations
 
 import dataclasses
+import math
 import statistics
 from typing import Optional
+
+
+def _pct(xs: list, q: float) -> float:
+    """Nearest-rank percentile (q in (0, 1]); 0.0 on an empty sample —
+    the zero-denominator contract every summary ratio follows."""
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    i = max(0, min(len(s) - 1, int(math.ceil(q * len(s))) - 1))
+    return float(s[i])
 
 
 @dataclasses.dataclass
@@ -99,6 +110,19 @@ class RequestRecord:
             return None
         return (self.tokens_out - 1) / dur
 
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean time-per-output-token over the decode phase (excludes
+        the prefill-emitted first token); None until the request is done
+        or when it produced a single token."""
+        if self.done_time is None or self.first_token_time is None:
+            return None
+        if self.tokens_out < 2:
+            return None
+        return (self.done_time - self.first_token_time) / (
+            self.tokens_out - 1
+        )
+
 
 @dataclasses.dataclass
 class ServingMetrics:
@@ -111,6 +135,12 @@ class ServingMetrics:
     # HealthMonitor ladder moves + online-scheduler policy switches /
     # budget resizes: {"step", "kind", "level", "fetch"}
     policy_transitions: list = dataclasses.field(default_factory=list)
+    # SLO-admission outcome counters fed by the serving layer
+    # (admitted / queued / rejected / evicted / resumed)
+    admission: dict = dataclasses.field(default_factory=dict)
+
+    def record_admission(self, kind: str, n: int = 1):
+        self.admission[kind] = self.admission.get(kind, 0) + int(n)
 
     def record_fault_stats(self, vec):
         """Accumulate one decode step's psum'd fault-stats vector
@@ -151,6 +181,15 @@ class ServingMetrics:
             "tps_per_gpu": total_tokens / horizon / self.num_gpus,
             "total_output_tokens": total_tokens,
         }
+        # TTFT / TPOT tail percentiles: ALWAYS present and 0.0 on an
+        # empty sample (the gather_fetch_ratio contract) so SLO
+        # dashboards and the serving bench never branch on key presence
+        tpots = [t for t in (r.tpot for r in done) if t is not None]
+        for stat, xs in (("ttft", ttfts), ("tpot", tpots)):
+            for q in (0.50, 0.95, 0.99):
+                out[f"{stat}_p{int(q * 100)}_s"] = round(_pct(xs, q), 6)
+        if self.admission:
+            out["admission"] = dict(sorted(self.admission.items()))
         # ratio fields are ALWAYS present and 0.0 on a zero denominator
         # (empty or fault-aborted runs must not divide by zero or make
         # downstream consumers branch on key presence)

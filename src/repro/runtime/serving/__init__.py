@@ -1,0 +1,43 @@
+"""Production serving layer above the disaggregated engine (paper §5).
+
+The engine (`runtime/engine.py`) is one correct replica: a context
+server, a slot-based generation server, and bitwise-exact fetch paths.
+This package is the system the paper actually evaluates on top of that:
+
+- :mod:`workload` — seeded request synthesis from configurable ISL/OSL
+  distributions (per-replica skew included) + the request lifecycle
+  dataclass.
+- :mod:`admission` — the SLO-aware admission controller: target
+  TPS/user and TTFT budget, queue/reject decisions from the projected
+  per-user decode rate, evict-to-queue on sustained violation.
+- :mod:`scheduler` — the continuous-batching scheduler: admits into
+  decode slots as they free (no fixed-slot epochs; ``epoch_mode``
+  keeps the fixed-slot reference for the bitwise regression tests).
+- :mod:`replicas` — multi-replica data-parallel scale-out: N
+  independent replicas behind a least-loaded / warm-bucket-locality
+  router, each progressing on its OWN clock with zero cross-replica
+  synchronization (the imbalance scenario sync-free decode exists for).
+- :mod:`modeled` — a replica client backed by the roofline-modelled
+  ``ClusterSimulator`` service times (what the serving bench sweeps).
+- :mod:`live` — a replica client over live ctx/gen servers (real
+  arrays; used by ``launch/serve.py --serving`` and the trace-capture
+  fixture recorder).
+
+See docs/serving.md for the admission state machine and how
+``BENCH_serving_sweep.json`` maps to the paper's TPS/GPU-at-fixed-
+TPS/user claim.
+"""
+from repro.runtime.serving.admission import (            # noqa: F401
+    ADMIT, QUEUE, REJECT, AdmissionController, SLOConfig,
+)
+from repro.runtime.serving.live import (                 # noqa: F401
+    LiveReplicaClient, RoutedTraceRecorder,
+)
+from repro.runtime.serving.modeled import ModeledReplicaClient  # noqa: F401
+from repro.runtime.serving.replicas import (             # noqa: F401
+    MultiReplicaEngine, ReplicaRouter,
+)
+from repro.runtime.serving.scheduler import ServingScheduler    # noqa: F401
+from repro.runtime.serving.workload import (             # noqa: F401
+    ServedRequest, WorkloadConfig, synthesize_workload,
+)

@@ -1,0 +1,103 @@
+"""SLO-aware admission control (docs/serving.md state machine).
+
+The controller gates every admission on the PROJECTED per-user decode
+rate: admitting into a batch of ``active + 1`` slots gives every user
+``1 / step_time(active + 1)`` tokens/s (one token per user per decode
+step — the engine's slot semantics), so an admission that would drag
+the fleet below ``target_tps_user`` holds the request in the queue
+instead. A queued request whose wait has already blown the TTFT budget
+is shed (rejected) rather than served dead-on-arrival, as is anything
+beyond ``max_queue``. On the drain side, ``evict_after`` consecutive
+decode steps measured below target trip an evict-to-queue of the
+youngest slot — shrinking the batch until the surviving users meet the
+target again.
+
+``step_time_fn(batch) -> seconds`` is the projection: the modeled
+client hands in the roofline simulator's ``gen_step_time``, the live
+client an EMA of measured step durations per batch bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+ADMIT = "admit"
+QUEUE = "queue"
+REJECT = "reject"
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    target_tps_user: float = 0.0   # tokens/s/user floor (0 = no gate)
+    ttft_budget_s: float = 0.0     # max queue wait before shedding
+                                   # (0 = never shed on wait)
+    max_queue: int = 0             # queued requests before shedding
+                                   # (0 = unbounded queue)
+    evict_after: int = 8           # consecutive violating steps before
+                                   # an evict-to-queue fires
+
+    def __post_init__(self):
+        if self.target_tps_user < 0 or self.ttft_budget_s < 0:
+            raise ValueError("SLO targets must be >= 0")
+        if self.evict_after < 1:
+            raise ValueError(
+                f"evict_after must be >= 1, got {self.evict_after}"
+            )
+
+
+class AdmissionController:
+    """One replica's admission gate + sustained-violation detector."""
+
+    def __init__(self, slo: SLOConfig,
+                 step_time_fn: Callable[[int], float]):
+        self.slo = slo
+        self.step_time_fn = step_time_fn
+        self._violations = 0
+        self.counters = {
+            "admitted": 0, "queued": 0, "rejected": 0,
+            "evicted": 0, "resumed": 0,
+        }
+
+    def projected_tps_user(self, batch: int) -> float:
+        t = self.step_time_fn(max(1, batch))
+        return 1.0 / t if t > 0 else float("inf")
+
+    def decide(self, *, active: int, queue_len: int,
+               queued_for: float) -> str:
+        """ADMIT / QUEUE / REJECT for the queue's head request.
+        ``queued_for`` is how long it has already waited."""
+        slo = self.slo
+        # shed what can no longer meet its TTFT budget — the queue wait
+        # alone has blown it, serving the request would report a dead SLO
+        if slo.ttft_budget_s and queued_for > slo.ttft_budget_s:
+            return REJECT
+        rate_ok = (
+            not slo.target_tps_user
+            or self.projected_tps_user(active + 1) >= slo.target_tps_user
+        )
+        # an idle replica always admits: batch-1 is the best rate any
+        # user can get here — holding the queue would starve forever
+        if rate_ok or active == 0:
+            return ADMIT
+        if slo.max_queue and queue_len >= slo.max_queue:
+            return REJECT
+        return QUEUE
+
+    def observe_step(self, step_time: float, active: int) -> bool:
+        """Feed one measured decode step; True when the sustained-
+        violation eviction should fire (the streak then resets)."""
+        slo = self.slo
+        if not slo.target_tps_user or active < 2 or step_time <= 0:
+            self._violations = 0
+            return False
+        if 1.0 / step_time < slo.target_tps_user:
+            self._violations += 1
+        else:
+            self._violations = 0
+        if self._violations >= slo.evict_after:
+            self._violations = 0
+            return True
+        return False
+
+    def count(self, kind: str, n: int = 1) -> None:
+        self.counters[kind] = self.counters.get(kind, 0) + n

@@ -1,0 +1,115 @@
+"""Replica client over live ctx/gen servers (real arrays).
+
+Wraps one (params, ContextServer, GenerationServer) trio — usually an
+existing ``DisaggregatedEngine``'s — behind the scheduler's client
+surface: admissions run a real bucketed prefill, decode ticks run the
+real jitted step, evictions snapshot the slot's decode state
+bitwise (``GenerationServer.snapshot_slot``) for later re-admission,
+and the per-request gathered/predictive byte attribution matches the
+engine loop's. Durations are measured wall time; the admission
+projection is an EMA of measured step durations per batch size.
+
+``RoutedTraceRecorder`` is the trace-capture hook: pass one as the
+scheduler's ``on_step`` to collect each decode step's REAL per-rank
+routed-expert bitmaps (``GenerationServer.routed_bitmaps``), then feed
+``core.traces.from_served_trace`` — how the committed served-routing
+fixture was recorded.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+
+class LiveReplicaClient:
+    def __init__(self, params, ctx, gen, *, num_gpus: int = 1):
+        self.params = params
+        self.ctx = ctx
+        self.gen = gen
+        self.num_slots = gen.max_batch
+        self.num_gpus = num_gpus
+        self._step_ema: dict[int, float] = {}
+
+    @classmethod
+    def from_engine(cls, engine, *, num_gpus: int = 1):
+        return cls(engine.params, engine.ctx, engine.gen,
+                   num_gpus=num_gpus)
+
+    def warmup(self, tables=()) -> int:
+        self.ctx.warmup(self.params)
+        return self.gen.warmup(self.params, tables)
+
+    def admit(self, slot: int, req) -> tuple:
+        t0 = time.perf_counter()
+        if req.resume is not None:
+            self.gen.admit(slot, req.req_id, req.resume["token"],
+                           req.resume)
+            return None, time.perf_counter() - t0
+        first, state = self.ctx.prefill(self.params, req.tokens)
+        self.gen.admit(slot, req.req_id, first, state)
+        return first, time.perf_counter() - t0
+
+    def attribute_admit(self, rec) -> None:
+        rec.add_gather_share(self.ctx.gather_bytes)
+
+    def step(self, active: list) -> tuple:
+        t0 = time.perf_counter()
+        toks = self.gen.decode_step(self.params)
+        dur = time.perf_counter() - t0
+        b = len(active)
+        ema = self._step_ema.get(b)
+        self._step_ema[b] = dur if ema is None else 0.7 * ema + 0.3 * dur
+        return toks, dur
+
+    def attribute_step(self, recs) -> None:
+        share = 1.0 / max(1, len(recs))
+        for rec in recs:
+            rec.add_gather_share(self.gen.gather_bytes, share)
+            if self.gen.last_pred_stats is not None:
+                rec.add_predict_share(
+                    self.gen.last_pred_stats, self.gen.expert_bytes,
+                    share,
+                )
+
+    def step_time(self, batch: int) -> float:
+        b = max(1, int(batch))
+        if b in self._step_ema:
+            return self._step_ema[b]
+        if self._step_ema:
+            # nearest measured batch — decode steps vary slowly in batch
+            near = min(self._step_ema, key=lambda k: abs(k - b))
+            return self._step_ema[near]
+        return 0.0  # no measurement yet: admission never blocks on it
+
+    def release(self, slot: int) -> None:
+        self.gen.release(slot)
+
+    def evict(self, slot: int) -> dict:
+        snap = self.gen.snapshot_slot(slot)
+        self.gen.release(slot)
+        return snap
+
+    def has_bucket(self, prompt_len: int) -> bool:
+        return prompt_len in self.ctx.prefill_lens
+
+
+class RoutedTraceRecorder:
+    """Scheduler ``on_step`` hook collecting per-step routed bitmaps."""
+
+    def __init__(self, group: Optional[str] = None):
+        self.group = group
+        self.bitmaps: list = []
+
+    def __call__(self, client) -> None:
+        bm = client.gen.routed_bitmaps(self.group)
+        if bm is not None:
+            self.bitmaps.append(bm)
+
+    def as_array(self) -> np.ndarray:
+        """(steps, ranks, num_experts) bool."""
+        return np.stack(self.bitmaps)
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(path, bitmaps=self.as_array())

@@ -1,0 +1,62 @@
+"""Replica client backed by the roofline-modelled cluster simulator.
+
+One ``ModeledReplicaClient`` prices a (ctx pool + gen group) replica
+with ``ClusterSimulator`` service times — the same §3 roofline the
+resolver and the pareto sweep use — so the serving scheduler can sweep
+concurrency at cluster scale without arrays. A straggler replica is
+just a ``SimConfig`` with ``straggler_ranks``/``straggler_slowdown``
+set (the `core/faults.py` scenario-replay hooks): every fetch round of
+that replica completes at its slowest peer, which is exactly the
+imbalance sync-free decode rides out and demand fetch serializes on.
+
+Prefill is charged inline at admission (matching the live engine's
+loop); decode steps price the ACTIVE batch, so a draining replica
+speeds up as slots free — the continuous-batching effect the bench
+measures.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.runtime.simulator import ClusterSimulator, SimConfig
+
+
+class ModeledReplicaClient:
+    def __init__(self, sim_cfg: SimConfig,
+                 num_slots: Optional[int] = None):
+        self.sim_cfg = sim_cfg
+        self.sim = ClusterSimulator(sim_cfg)
+        self.num_slots = int(
+            num_slots if num_slots is not None else sim_cfg.gen_batch
+        )
+        self.num_gpus = sim_cfg.ctx_gpus + sim_cfg.gen_gpus
+        self._step_time: dict[int, float] = {}
+        self._ctx_time: dict[int, float] = {}
+
+    def admit(self, slot: int, req) -> tuple:
+        if req.resume is not None:
+            return None, 0.0
+        L = int(req.prompt_len)
+        if L not in self._ctx_time:
+            self._ctx_time[L] = self.sim.ctx_time([L])
+        return None, self._ctx_time[L]
+
+    def step(self, active: list) -> tuple:
+        return None, self.step_time(len(active))
+
+    def step_time(self, batch: int) -> float:
+        b = max(1, int(batch))
+        if b not in self._step_time:
+            self._step_time[b] = self.sim.gen_step_time(b)
+        return self._step_time[b]
+
+    def release(self, slot: int) -> None:
+        pass
+
+    def evict(self, slot: int) -> dict:
+        # modeled slots carry no array state; the scheduler keeps the
+        # remaining-token bookkeeping, which is all a resume needs
+        return {}
+
+    def has_bucket(self, prompt_len: int) -> bool:
+        return True

@@ -1,0 +1,126 @@
+"""Seeded serving workloads: per-request ISL/OSL draws + lifecycle.
+
+Requests draw their prompt length from configurable BUCKETS (the pow2
+prefill-length buckets the context server pre-compiles) with optional
+weights — skewing the weights per replica is how the bench builds the
+imbalanced fleet — and their output length from a jittered mean.
+Arrivals are Poisson at ``arrival_rate`` (0 = closed loop: everything
+arrives at t=0 and concurrency is capped by the decode slots).
+Everything is deterministic from ``seed``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServedRequest:
+    """One request's serving lifecycle (see docs/serving.md for the
+    state machine): arrived -> admitted | queued | rejected; active ->
+    evicted (back to the queue, decode state snapshotted in ``resume``)
+    -> resumed; active -> done."""
+
+    req_id: int
+    prompt_len: int
+    target_len: int
+    arrival: float = 0.0
+    tokens: Optional[np.ndarray] = None   # live clients prefill these
+    # evict-to-queue bookkeeping: the GenerationServer.snapshot_slot
+    # payload + output tokens still owed when the snapshot was taken
+    resume: Optional[dict] = None
+    remaining: Optional[int] = None
+
+    def __post_init__(self):
+        if self.prompt_len < 1:
+            raise ValueError(
+                f"Request {self.req_id}: prompt_len must be >= 1, "
+                f"got {self.prompt_len}"
+            )
+        if self.target_len < 1:
+            raise ValueError(
+                f"Request {self.req_id}: target_len must be >= 1, "
+                f"got {self.target_len}"
+            )
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadConfig:
+    """Distribution spec of one replica's traffic."""
+
+    num_requests: int
+    isl_buckets: tuple = (64,)     # prompt-length buckets (pow2 on live
+                                   # engines — the ctx variant buckets)
+    isl_weights: tuple = ()        # bucket draw weights (uniform if empty)
+    osl: int = 16                  # mean output tokens
+    osl_jitter: float = 0.0        # uniform +/- fraction of the mean
+    arrival_rate: float = 0.0      # Poisson req/s; 0 = closed loop (t=0)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.num_requests < 0:
+            raise ValueError(f"num_requests >= 0, got {self.num_requests}")
+        if not self.isl_buckets:
+            raise ValueError("isl_buckets must name at least one bucket")
+        if self.isl_weights and len(self.isl_weights) != len(
+                self.isl_buckets):
+            raise ValueError(
+                f"isl_weights ({len(self.isl_weights)}) must match "
+                f"isl_buckets ({len(self.isl_buckets)})"
+            )
+        if not 0.0 <= self.osl_jitter < 1.0:
+            raise ValueError(
+                f"osl_jitter must lie in [0, 1), got {self.osl_jitter}"
+            )
+
+
+def synthesize_workload(
+    cfg: WorkloadConfig,
+    *,
+    vocab_size: int = 0,
+    req_id_base: int = 0,
+) -> list[ServedRequest]:
+    """Deterministic request list from a workload spec, arrival-sorted.
+    ``vocab_size > 0`` additionally materializes prompt token arrays
+    (live engines need them; modeled clients only price lengths)."""
+    rng = np.random.default_rng(cfg.seed)
+    weights = None
+    if cfg.isl_weights:
+        w = np.asarray(cfg.isl_weights, np.float64)
+        weights = w / w.sum()
+    lens = rng.choice(
+        np.asarray(cfg.isl_buckets, np.int64),
+        size=cfg.num_requests, p=weights,
+    )
+    if cfg.osl_jitter > 0.0:
+        osls = np.maximum(1, np.round(
+            cfg.osl * rng.uniform(
+                1.0 - cfg.osl_jitter, 1.0 + cfg.osl_jitter,
+                cfg.num_requests,
+            )
+        ).astype(np.int64))
+    else:
+        osls = np.full(cfg.num_requests, max(1, cfg.osl), np.int64)
+    if cfg.arrival_rate > 0.0:
+        arrivals = np.cumsum(
+            rng.exponential(1.0 / cfg.arrival_rate, cfg.num_requests)
+        )
+    else:
+        arrivals = np.zeros(cfg.num_requests)
+    out = []
+    for i in range(cfg.num_requests):
+        tokens = None
+        if vocab_size > 0:
+            tokens = rng.integers(
+                0, vocab_size, int(lens[i])
+            ).astype(np.int32)
+        out.append(ServedRequest(
+            req_id=req_id_base + i,
+            prompt_len=int(lens[i]),
+            target_len=int(osls[i]),
+            arrival=float(arrivals[i]),
+            tokens=tokens,
+        ))
+    return out

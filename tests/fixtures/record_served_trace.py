@@ -1,0 +1,67 @@
+"""Record the served-routing fixture (served_routing_trace.npz).
+
+    python tests/fixtures/record_served_trace.py
+
+Runs a REAL sync-free engine — 8 fake host devices, (2, 4) mesh, a
+32-expert test arch so routing is non-trivial — through the continuous
+batching ``ServingScheduler`` with a ``RoutedTraceRecorder`` hooked on
+``on_step``, and saves every decode step's per-rank routed-expert
+bitmaps (``GenerationServer.routed_bitmaps``: the mirrored sync-free
+predictor's ground-truth rows). tests/test_serving.py replays the
+fixture through ``core.traces.from_served_trace`` +
+``predictor_hit_rate`` and asserts the sync-free predictor's hit rate
+on real served routing; re-run this script only when the routing or
+predictor stack changes the recorded semantics (then re-baseline the
+test's threshold).
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=8"
+)
+
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+from repro.configs.base import ArchConfig, MoEConfig  # noqa: E402
+from repro.launch.serve import build_engine  # noqa: E402
+from repro.runtime.serving import (  # noqa: E402
+    LiveReplicaClient,
+    RoutedTraceRecorder,
+    ServingScheduler,
+    WorkloadConfig,
+    synthesize_workload,
+)
+
+CFG = ArchConfig(
+    name="served-trace", family="moe", num_layers=4, d_model=32,
+    num_heads=2, num_kv_heads=2, head_dim=16, d_ff=0, vocab_size=128,
+    moe=MoEConfig(num_experts=32, top_k=2, d_ff=48),
+)
+MESH = (2, 4)
+OUT = os.path.join(os.path.dirname(__file__), "served_routing_trace.npz")
+
+
+def main():
+    engine, _ = build_engine(
+        CFG, mesh_shape=MESH, prefill_len=8, cache_len=64, max_batch=4,
+        gen_mode="dwdp",
+        policy={"moe_experts": "split:sync_free:allgather:4:4:8"},
+    )
+    client = LiveReplicaClient.from_engine(engine)
+    recorder = RoutedTraceRecorder()
+    sched = ServingScheduler(client, on_step=recorder)
+    wl = WorkloadConfig(num_requests=8, isl_buckets=(8,), osl=24, seed=3)
+    sched.submit(synthesize_workload(wl, vocab_size=CFG.vocab_size))
+    sched.run()
+    bitmaps = recorder.as_array()
+    recorder.save(OUT)
+    print(f"saved {OUT}: bitmaps {bitmaps.shape} "
+          f"({bitmaps.mean():.4f} mean routed density)")
+
+
+if __name__ == "__main__":
+    main()
