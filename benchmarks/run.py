@@ -15,6 +15,7 @@ def _all_benchmarks():
         kernels_bench,
         paper_tables,
         policy_switch_bench,
+        rank_death_bench,
         roofline_table,
         serving_bench,
         syncfree_bench,
@@ -40,6 +41,7 @@ def _all_benchmarks():
         "syncfree": syncfree_bench.bench_syncfree_decode,
         "policy_switch": policy_switch_bench.bench_policy_switch,
         "serving_sweep": serving_bench.bench_serving_sweep,
+        "rank_death": rank_death_bench.bench_rank_death,
         "dryrun_roofline": roofline_table.bench_dryrun_roofline,
     }
 

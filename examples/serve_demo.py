@@ -175,6 +175,13 @@ def main():
             f" fallbacks (outputs stay bitwise-exact); per-peer detected:"
             f" {summary.get('detected_by_peer')}"
         )
+    print(
+        f"recovery: {summary['rank_deaths']} rank death(s),"
+        f" {summary['migrated']} migrated / {summary['requeued']} requeued"
+        f" in-flight request(s), time-to-recover p50/p95 ="
+        f" {summary['time_to_recover_p50_s']}"
+        f"/{summary['time_to_recover_p95_s']} s"
+    )
     for tr in summary.get("policy_transitions", []):
         print(
             f"  step {tr['step']:>4}: {tr['kind']} -> level {tr['level']}"

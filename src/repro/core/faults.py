@@ -32,18 +32,31 @@ the tamper site (``prefetch.gather_demand_payload``) and the counting
 site (``execution._moe_demand_apply``) recompute identical masks from
 the same key — injected-row counts never ride the payload.
 
+Fail-stop faults ride a different surface: ``rank_death`` is a
+:class:`FaultTrace` event kind, not an in-jit injection — under
+``jit``/``shard_map`` a dead rank kills the whole program, so the
+recovery path (quarantine the rank, re-plan onto the shrunk subgroup,
+migrate/requeue the in-flight slots) lives in the host-side serving
+layer (``runtime/serving``) and the simulator's trace replay, not in
+the traced forward. :class:`FaultTrace` also replaces the simulator's
+synthetic Bernoulli ``fault_rate`` with timestamped (step, kind,
+rank/peer) events recorded from a real fault-injected run
+(``tests/fixtures/record_fault_trace.py``).
+
 The detection/repair side lives in ``prefetch.verify_rows`` /
 ``execution._moe_demand_apply``; see docs/robustness.md for the failure
-model and what is out of scope (SPMD rank death, adversarial
-corruption below the checksum tolerance).
+model and what remains out of scope (adversarial corruption below the
+checksum tolerance).
 """
 from __future__ import annotations
 
 import dataclasses
 import zlib
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.placement import Placement
@@ -65,6 +78,152 @@ FAULT_STAT_NAMES = (
     "injected_cache", "detected", "fault_fallbacks",
     "mirror_divergence",
 )
+
+
+#: Event kinds a :class:`FaultTrace` may carry. The payload kinds map
+#: onto the Bernoulli injection sites above (their replay prices a
+#: forced full-gather fallback on that decode step, attributed to the
+#: event's peer); ``rank_death`` is the fail-stop kind — the named gen
+#: rank is quarantined and the replica re-plans onto the survivors.
+TRACE_KINDS = ("drop", "zero", "corrupt", "cache", "mirror", "rank_death")
+RANK_DEATH = "rank_death"
+
+#: payload-kind -> index into the FAULT_STAT_NAMES prefix (what a
+#: replayed event increments; rank_death is accounted host-side in
+#: ServingMetrics, never in the traced stats vector)
+_TRACE_STAT_INDEX = {"drop": 0, "zero": 1, "corrupt": 2, "cache": 3,
+                     "mirror": 6}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultTrace:
+    """A timestamped fault-event trace: what actually went wrong, when,
+    and where — recorded from a real fault-injected run (or authored)
+    and replayed in place of synthetic Bernoulli draws.
+
+    ``steps`` are decode-step indices (sorted, ties allowed), ``kinds``
+    the per-event :data:`TRACE_KINDS` entry, ``ranks`` the subgroup
+    position that served the faulty rows (payload kinds) or the flat
+    gen rank that died (``rank_death``)."""
+
+    steps: np.ndarray
+    kinds: tuple
+    ranks: np.ndarray
+
+    def __post_init__(self):
+        steps = np.asarray(self.steps, np.int64)
+        ranks = np.asarray(self.ranks, np.int64)
+        kinds = tuple(str(k) for k in self.kinds)
+        if not (len(steps) == len(kinds) == len(ranks)):
+            raise ValueError(
+                f"FaultTrace arrays disagree: {len(steps)} steps, "
+                f"{len(kinds)} kinds, {len(ranks)} ranks"
+            )
+        if np.any(steps[1:] < steps[:-1]):
+            raise ValueError("FaultTrace steps must be sorted ascending")
+        if np.any(steps < 0) or np.any(ranks < 0):
+            raise ValueError("FaultTrace steps/ranks must be >= 0")
+        bad = sorted(set(kinds) - set(TRACE_KINDS))
+        if bad:
+            raise ValueError(
+                f"unknown FaultTrace kinds {bad}; expected {TRACE_KINDS}"
+            )
+        object.__setattr__(self, "steps", steps)
+        object.__setattr__(self, "ranks", ranks)
+        object.__setattr__(self, "kinds", kinds)
+
+    def __len__(self) -> int:
+        return len(self.steps)
+
+    @classmethod
+    def from_events(cls, events) -> "FaultTrace":
+        """Build from an iterable of ``(step, kind, rank)`` tuples (any
+        order — sorted here)."""
+        ev = sorted((int(s), str(k), int(r)) for s, k, r in events)
+        return cls(
+            steps=np.asarray([e[0] for e in ev], np.int64),
+            kinds=tuple(e[1] for e in ev),
+            ranks=np.asarray([e[2] for e in ev], np.int64),
+        )
+
+    def events_in(self, start: int, stop: int) -> list:
+        """``(step, kind, rank)`` events with ``start <= step < stop``."""
+        lo = int(np.searchsorted(self.steps, start, side="left"))
+        hi = int(np.searchsorted(self.steps, stop, side="left"))
+        return [
+            (int(self.steps[i]), self.kinds[i], int(self.ranks[i]))
+            for i in range(lo, hi)
+        ]
+
+    def events_at(self, step: int) -> list:
+        """``(kind, rank)`` events at one decode step."""
+        return [(k, r) for _, k, r in self.events_in(step, step + 1)]
+
+    def next_event_step(self, step: int) -> Optional[int]:
+        """The first event step ``>= step`` (None past the end) — what
+        the simulator clamps its multi-step advance to so replayed
+        events are never skipped over."""
+        i = int(np.searchsorted(self.steps, step, side="left"))
+        return int(self.steps[i]) if i < len(self.steps) else None
+
+    def fallback_rate(self, horizon_steps: Optional[int] = None) -> float:
+        """Fraction of decode steps carrying at least one PAYLOAD fault
+        event — the trace's drop-in replacement for the simulator's
+        synthetic Bernoulli ``fault_rate``. ``horizon_steps`` defaults
+        to the last event step + 1."""
+        payload = [
+            int(s) for s, k in zip(self.steps, self.kinds)
+            if k != RANK_DEATH
+        ]
+        if not payload:
+            return 0.0
+        horizon = int(horizon_steps) if horizon_steps else payload[-1] + 1
+        fault_steps = {s for s in payload if s < horizon}
+        return len(fault_steps) / max(1, horizon)
+
+    def peer_pressure(self, n_peers: int) -> np.ndarray:
+        """Per-subgroup-position payload-fault event counts, normalized
+        to [0, 1] — a replayable ``HealthMonitor``-style badness vector
+        (``ClusterSimulator.degraded_table``'s ``peer_badness``)."""
+        counts = np.zeros(max(1, int(n_peers)), np.float64)
+        for k, r in zip(self.kinds, self.ranks):
+            if k != RANK_DEATH:
+                counts[int(r) % len(counts)] += 1.0
+        top = counts.max()
+        return counts / top if top > 0 else counts
+
+    def stat_vector(self, step: int, n_peers: int) -> Optional[np.ndarray]:
+        """This step's payload events as a fault-stats vector in the
+        ``FAULT_STAT_NAMES`` + per-peer-detected-tail layout — what a
+        replay feeds ``ServingMetrics.record_fault_stats`` and the
+        ``HealthMonitor`` (None when the step carries no payload
+        event)."""
+        vec = np.zeros(FAULT_STAT_BASE + max(1, int(n_peers)), np.float64)
+        any_payload = False
+        for kind, rank in self.events_at(step):
+            if kind == RANK_DEATH:
+                continue
+            any_payload = True
+            vec[_TRACE_STAT_INDEX[kind]] += 1.0
+            vec[4] += 1.0  # detected
+            vec[5] += 1.0  # fault_fallbacks
+            vec[FAULT_STAT_BASE + int(rank) % max(1, int(n_peers))] += 1.0
+        return vec if any_payload else None
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path, steps=self.steps,
+            kinds=np.asarray(self.kinds, dtype="U16"), ranks=self.ranks,
+        )
+
+    @classmethod
+    def load(cls, path: str) -> "FaultTrace":
+        with np.load(path) as z:
+            return cls(
+                steps=z["steps"],
+                kinds=tuple(str(k) for k in z["kinds"]),
+                ranks=z["ranks"],
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +248,12 @@ class FaultSpec:
     # independently so all ranks agree who drifted, but only that rank
     # perturbs its own mirror row — producing genuinely divergent
     # speculative schedules for the digest to catch.
+    trace: Optional[str] = None
+    # Path to a recorded FaultTrace (.npz) replayed by the host-side
+    # consumers (ClusterSimulator, serving layer) in place of the
+    # Bernoulli rates above. The traced injector ignores it — trace
+    # replay is host-level by construction (rank_death cannot be
+    # injected inside jit).
 
     def __post_init__(self):
         for name in ("drop_rate", "zero_rate", "corrupt_rate",
@@ -112,12 +277,20 @@ class FaultSpec:
             or self.mirror_rate
         )
 
+    def load_trace(self) -> Optional[FaultTrace]:
+        """The recorded :class:`FaultTrace` named by ``trace=`` (None
+        when the spec carries no trace)."""
+        if self.trace is None:
+            return None
+        return FaultTrace.load(self.trace)
+
     @classmethod
     def parse(cls, text: str) -> "FaultSpec":
         """Parse the ``--fault-spec`` flag syntax: comma-separated
         ``key=value`` pairs, e.g. ``"seed=3,drop=0.1,corrupt=0.05,
         peers=2|5"``. Keys: seed, drop, zero, corrupt, cache, mirror,
-        peers (``|``-separated subgroup positions)."""
+        peers (``|``-separated subgroup positions), trace (path to a
+        recorded FaultTrace .npz)."""
         kw: dict = {}
         names = {
             "seed": "seed", "drop": "drop_rate", "zero": "zero_rate",
@@ -139,12 +312,14 @@ class FaultSpec:
                 )
             elif k == "seed":
                 kw["seed"] = int(v)
+            elif k == "trace":
+                kw["trace"] = v
             elif k in names:
                 kw[names[k]] = float(v)
             else:
                 raise ValueError(
-                    f"unknown fault-spec key {k!r} "
-                    f"(expected seed/drop/zero/corrupt/cache/mirror/peers)"
+                    f"unknown fault-spec key {k!r} (expected seed/drop/"
+                    f"zero/corrupt/cache/mirror/peers/trace)"
                 )
         return cls(**kw)
 
@@ -159,6 +334,8 @@ class FaultSpec:
                 parts.append(f"{key}={v}")
         if self.bad_peers:
             parts.append("peers=" + "|".join(str(p) for p in self.bad_peers))
+        if self.trace is not None:
+            parts.append(f"trace={self.trace}")
         return ",".join(parts)
 
 

@@ -515,6 +515,66 @@ def gather_bytes(placement: Placement, bytes_per_expert: int) -> int:
     return (placement.subgroup_size - 1) * placement.local_count * bytes_per_expert
 
 
+def reshard_split_bank(
+    shards: list,
+    old: Placement,
+    new: Placement,
+    dead: int,
+    source: PyTree,
+) -> list:
+    """Fail-stop re-shard of one family's resident shards after a rank
+    death: ``G' -> G'-1``.
+
+    ``shards`` holds each OLD subgroup position's resident tree in the
+    canonical per-rank layout (leading dim ``old.local_count``, row ids
+    per ``Placement.table()`` — what ``merge_split_bank`` would
+    concatenate back into the ``(num_padded, ...)`` buffer). The
+    survivors' rows redistribute to the NEW placement's ownership
+    ranges (the point-to-point wire a real deployment pays —
+    ``roofline.rank_death_recovery`` prices it); every row the dead
+    rank held is recovered from ``source`` — the checkpoint/source
+    weight tree with leading dim ``>= num_experts`` — and NEVER read
+    from ``shards[dead]`` (recovery must not trust a failed peer's
+    memory; callers may pass garbage there). New padding rows are
+    zero, matching a fresh ``make_placement`` shard of ``source``.
+
+    Returns the ``G'-1`` new per-position resident trees."""
+    if new.num_experts != old.num_experts:
+        raise ValueError(
+            f"reshard must keep the expert set: {old.num_experts} != "
+            f"{new.num_experts}"
+        )
+    if new.subgroup_size != old.subgroup_size - 1:
+        raise ValueError(
+            f"reshard shrinks the subgroup by exactly the dead rank: "
+            f"{old.subgroup_size} -> {new.subgroup_size}"
+        )
+    dead = int(dead) % old.subgroup_size
+    e = old.num_experts
+
+    def rows_for(position: int) -> PyTree:
+        def build(src_leaf, *shard_leaves):
+            out = []
+            for j in range(new.local_count):
+                r = position * new.local_count + j
+                if r >= e:
+                    out.append(jnp.zeros_like(src_leaf[0]))
+                    continue
+                owner = min(r // old.local_count, old.subgroup_size - 1)
+                if owner == dead:
+                    out.append(jnp.asarray(src_leaf[r]))
+                else:
+                    out.append(shard_leaves[owner][r - owner * old.local_count])
+            return jnp.stack(out, axis=0)
+
+        # the dead shard's leaves are replaced by the source rows at
+        # tree-map time, so its contents are structurally unreadable
+        safe = [source if i == dead else s for i, s in enumerate(shards)]
+        return jax.tree.map(build, source, *safe)
+
+    return [rows_for(p) for p in range(new.subgroup_size)]
+
+
 # --------------------------------------------------------------------------
 # On-demand expert fetch: the two-round route-before-gather primitive.
 # --------------------------------------------------------------------------

@@ -592,6 +592,83 @@ def modeled_step_time(
     return total
 
 
+def reshard_plan_rows(num_experts: int, group: int, dead: int) -> dict:
+    """Row accounting of the fail-stop re-shard ``G -> G-1`` on the
+    canonical split-bank layout (``prefetch.merge_split_bank`` order:
+    old owner of row ``r`` is ``r // ceil(E/G)``): per surviving new
+    owner, how many of its new rows are already local, arrive from a
+    surviving peer (point-to-point wire), or must come from the
+    checkpoint/source copy because the dead rank held them — rows are
+    NEVER recovered from the dead peer.
+
+    Returns ``{"local", "wire", "source"}`` row counts as
+    ``(group-1,)`` arrays indexed by new owner, plus ``"new_local"``
+    (the shrunk layout's rows-per-rank)."""
+    import numpy as np
+
+    e, g = int(num_experts), int(group)
+    if g < 2:
+        raise ValueError(f"reshard needs group >= 2, got {g}")
+    dead = int(dead) % g
+    old_l = -(-e // g)
+    new_l = -(-e // (g - 1))
+    survivors = [r for r in range(g) if r != dead]
+    local = np.zeros(g - 1, np.int64)
+    wire = np.zeros(g - 1, np.int64)
+    source = np.zeros(g - 1, np.int64)
+    for s, old_rank in enumerate(survivors):
+        for r in range(s * new_l, min((s + 1) * new_l, e)):
+            owner = min(r // old_l, g - 1)
+            if owner == dead:
+                source[s] += 1
+            elif owner == old_rank:
+                local[s] += 1
+            else:
+                wire[s] += 1
+    return {"local": local, "wire": wire, "source": source,
+            "new_local": new_l}
+
+
+def rank_death_recovery(
+    cfg: ArchConfig,
+    *,
+    group: int,
+    hw: Hardware = GB200,
+    weight_bytes: int = 1,
+) -> dict:
+    """Price a gen-rank fail-stop recovery: the ``G -> G-1`` re-shard's
+    wire bytes and the recovery stall the replica eats before its first
+    post-recovery decode step.
+
+    The expert banks re-shard per :func:`reshard_plan_rows`; surviving
+    peers exchange their redistributed rows point-to-point in parallel
+    (time = the max per-survivor incoming share), and the dead rank's
+    rows are re-fetched from the checkpoint/source copy over the same
+    fabric (never from the dead peer). Non-expert split families are
+    negligible next to the expert banks at MoE scale and are not
+    modeled. The stall adds one fixed plan-swap overhead (same constant
+    as the simulator's per-step overhead); with the ``G'-1`` variant
+    pre-warmed there is no compile term — that is the zero-recompile
+    contract the serving tests assert."""
+    g = int(group)
+    out = {"wire_bytes": 0.0, "source_bytes": 0.0, "seconds": 2e-4,
+           "per_survivor_wire_bytes": 0.0}
+    if cfg.moe is None or g < 2:
+        return out
+    moe = cfg.moe
+    per_expert = 3 * cfg.d_model * moe.d_ff * float(weight_bytes)
+    n_moe = sum(cfg.is_moe_layer(l) for l in range(cfg.num_layers))
+    plan = reshard_plan_rows(moe.num_experts, g, dead=g - 1)
+    wire_rows = float(plan["wire"].sum())
+    source_rows = float(plan["source"].sum())
+    worst_in = float((plan["wire"] + plan["source"]).max())
+    out["wire_bytes"] = n_moe * wire_rows * per_expert
+    out["source_bytes"] = n_moe * source_rows * per_expert
+    out["per_survivor_wire_bytes"] = n_moe * worst_in * per_expert
+    out["seconds"] += out["per_survivor_wire_bytes"] / hw.link_bw
+    return out
+
+
 def degraded_step_times(
     cfg: ArchConfig,
     policies,
@@ -614,7 +691,13 @@ def degraded_step_times(
     ``excluded_peers`` sizes the ``+excl`` rung: the HealthMonitor now
     hands the exclusion rung a peer SET, so asymmetric badness (several
     hot peers at once) is priced by dropping that many peers' shares of
-    the remote bank from the speculative schedule."""
+    the remote bank from the speculative schedule.
+
+    The terminal ``"reshard"`` rung (fail-stop: a rank died) is priced
+    at the SHRUNK group ``group - 1`` — the post-recovery steady state —
+    and its row additionally carries the one-time re-shard cost
+    (:func:`rank_death_recovery`): ``reshard_wire_mb`` and
+    ``recovery_stall_us``."""
     from repro.core.strategy import degradation_ladder
 
     n_excl = max(1, min(int(excluded_peers), max(1, group - 1)))
@@ -627,6 +710,24 @@ def degraded_step_times(
         degradation_ladder(policies)
     ):
         sub_kw = dict(kw)
+        if label == "reshard":
+            shrunk = max(1, group - 1)
+            t = modeled_step_time(
+                cfg, tokens=tokens, group=shrunk, hw=hw, policies=table,
+                validate=validate, **sub_kw,
+            )
+            rec = rank_death_recovery(cfg, group=group, hw=hw)
+            rows.append({
+                "level": level,
+                "fetch": label,
+                "t_step_us": t * 1e6,
+                "vs_healthy": t / max(base, 1e-30),
+                "reshard_wire_mb": round(
+                    (rec["wire_bytes"] + rec["source_bytes"]) / 1e6, 3
+                ),
+                "recovery_stall_us": round(rec["seconds"] * 1e6, 3),
+            })
+            continue
         if excl is None or excl:
             # the per-peer exclusion rung: the bad peers' experts leave
             # the speculative schedule and re-route through the (still

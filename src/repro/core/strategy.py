@@ -1013,16 +1013,24 @@ def degradation_ladder(
 ) -> tuple[tuple[str, PolicyTable, Optional[tuple]], ...]:
     """The engine's fault-degradation ladder for a RESOLVED policy
     table: ``((label, table, exclude_peers), ...)`` from level 0 (as
-    configured) down to the all-gather floor, with no-op levels
-    collapsed — a table already at ``fetch="all"`` has a one-level
-    ladder. Labels are the expert-fetch mode each level runs.
+    configured) down through the all-gather fail-silent floor to the
+    terminal ``"reshard"`` rung, with no-op fail-silent levels
+    collapsed. Labels are the expert-fetch mode each level runs.
 
     ``exclude_peers`` is ``()`` for the ordinary rungs. When the root
     fetch is predictive/sync_free a finer-grained ``"<fetch>+excl"``
     rung sits between it and the demand demotion: same table, but with
     the (runtime-chosen) worst peer's rows dropped from the speculative
     plan and residency cache — ``None`` here means "the engine fills in
-    its HealthMonitor's worst peer when stepping onto the rung"."""
+    its HealthMonitor's worst peer when stepping onto the rung".
+
+    The final ``"reshard"`` rung is the FAIL-STOP response — a rank
+    died, the subgroup shrinks to the survivors and the split banks
+    re-shard over ``G'-1``. It runs the all-gather table (no per-peer
+    payload rounds during recovery) but is NOT reachable by the
+    HealthMonitor's fail-silent demotions (they cap at ``"all"``): only
+    an explicit rank-death quarantine steps onto it, and the post-
+    recovery engine runs at the shrunk mesh sizes."""
     root_fetch = table.family("moe_experts").fetch
     out: list[tuple[str, PolicyTable, Optional[tuple]]] = [
         (root_fetch, table, ())
@@ -1033,6 +1041,7 @@ def degradation_ladder(
         t = degrade_policy_table(table, fetch)
         if t != out[-1][1]:
             out.append((fetch, t, ()))
+    out.append(("reshard", degrade_policy_table(table, "all"), ()))
     return tuple(out)
 
 

@@ -12,7 +12,26 @@ from repro.compat import make_mesh
 
 
 def _mesh(shape, axes):
-    return make_mesh(shape, axes)
+    """A mesh of ``prod(shape)`` devices. When the shape covers every
+    visible device this is :func:`repro.compat.make_mesh`; a SMALLER
+    shape builds a SUB-mesh over the first ``prod(shape)`` devices —
+    what a rank-death standby replica runs on (the shrunk ``G'-1``
+    subgroup excludes the quarantined device)."""
+    import math
+
+    n = math.prod(shape)
+    devices = jax.devices()
+    if n == len(devices):
+        return make_mesh(shape, axes)
+    if n > len(devices):
+        raise ValueError(
+            f"mesh shape {shape} needs {n} devices; only "
+            f"{len(devices)} visible"
+        )
+    import numpy as np
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -252,6 +252,9 @@ def run_serving(args, cfg, policy):
           s["ttft_p50_s"], s["ttft_p95_s"], s["ttft_p99_s"])
     print("tpot p50/p95/p99:",
           s["tpot_p50_s"], s["tpot_p95_s"], s["tpot_p99_s"])
+    print("recovery:", {k: s[k] for k in (
+        "rank_deaths", "migrated", "requeued",
+        "time_to_recover_p50_s", "time_to_recover_p95_s")})
     for i, sched in enumerate(schedulers):
         n = sum(1 for r in fleet.assignments.values() if r == i)
         print(f"replica {i}: {n} request(s), {sched.steps} decode "

@@ -31,6 +31,37 @@ from repro.models.transformer import Model
 from repro.runtime.metrics import RequestRecord, ServingMetrics
 
 
+def validate_restore_plan(snapshot_plan: Optional[dict],
+                          current_plan: dict) -> None:
+    """Reject restoring a ``snapshot_slot`` payload into a server whose
+    active plan no longer matches the one the snapshot was taken under.
+
+    A snapshot's KV/position layout is only re-admittable verbatim when
+    the destination runs the SAME model at the SAME mesh sizes and
+    cache length with the SAME policy table and exclusion set — e.g. a
+    post-rank-death shrunk replica, a health-demoted ladder rung, or a
+    different ``PolicyTable`` would all restore into a mismatched
+    variant and silently corrupt the stream. Raises ``ValueError``
+    naming every mismatched field; the serving scheduler converts that
+    into a requeue-from-prompt. ``None`` (a pre-plan-stamp snapshot)
+    passes — legacy payloads keep working within one server."""
+    if snapshot_plan is None:
+        return
+    bad = [
+        f"{k}: snapshot {snapshot_plan.get(k)!r} != active "
+        f"{current_plan.get(k)!r}"
+        for k in sorted(set(snapshot_plan) | set(current_plan))
+        if snapshot_plan.get(k) != current_plan.get(k)
+    ]
+    if bad:
+        raise ValueError(
+            "snapshot_slot resume rejected — the destination's active "
+            "plan differs from the snapshot's ("
+            + "; ".join(bad)
+            + "); requeue the request from its prompt instead"
+        )
+
+
 def variant_key(table: PolicyTable, shape: InputShape,
                 excl: tuple = ()) -> tuple:
     """The pre-compiled forward-variant cache key: canonicalized policy
@@ -739,8 +770,35 @@ class GenerationServer:
     @property
     def fetch_label(self) -> str:
         """The current ladder rung's label ("sync_free" / "predictive" /
-        "<root>+excl" / "demand" / "all")."""
+        "<root>+excl" / "demand" / "all" / "reshard")."""
         return self.ladder[self.level][0]
+
+    @property
+    def max_silent_level(self) -> int:
+        """The deepest ladder level FAIL-SILENT demotions may reach:
+        the all-gather floor. The terminal ``"reshard"`` rung is the
+        fail-stop response — only an explicit rank-death quarantine
+        (the serving layer's ``kill_rank`` path) steps past this cap,
+        and it does so by swapping in a shrunk-mesh standby engine, not
+        by ``set_level``."""
+        top = len(self.ladder) - 1
+        if self.ladder[top][0] == "reshard":
+            return max(0, top - 1)
+        return top
+
+    def restore_plan(self) -> dict:
+        """The active plan descriptor stamped into every
+        :meth:`snapshot_slot` payload and checked by
+        :func:`validate_restore_plan` on re-admission."""
+        return {
+            "model": self.model.cfg.name,
+            "mesh": tuple(sorted(
+                (str(a), int(s)) for a, s in self._mesh_sizes.items()
+            )),
+            "cache_len": int(self.cache_len),
+            "policies": self.xp.policies.describe(),
+            "excl": tuple(int(p) for p in self.excl),
+        }
 
     def set_level(self, level: int, bad_peers: tuple = ()) -> bool:
         """Move to a degradation-ladder level (clamped); returns whether
@@ -846,7 +904,15 @@ class GenerationServer:
         carry a leading cycle axis, so the batch axis is 1 there. The
         predictive-fetch state ("pred" — per-RANK predictor + residency
         cache, shared by every slot) is untouched: admitting a request
-        must not flush the cache the other slots are hitting."""
+        must not flush the cache the other slots are hitting.
+
+        A ``snapshot_slot`` payload carries its origin plan descriptor
+        under ``"plan"`` and is validated against the ACTIVE plan
+        before any state is written (``validate_restore_plan`` raises
+        ``ValueError`` on mismatch — the serving layer converts that
+        into a requeue-from-prompt)."""
+        if isinstance(ctx_state, dict) and "plan" in ctx_state:
+            validate_restore_plan(ctx_state["plan"], self.restore_plan())
         new_layers = {}
         for group in self.model.plan:
             stacked = group.scan and group.n_cycles > 1
@@ -914,6 +980,7 @@ class GenerationServer:
             "pos": np.asarray(self.state["pos"][slot:slot + 1]),
             "layers": layers,
             "token": int(np.asarray(self.cur_token[slot, 0])),
+            "plan": self.restore_plan(),
         }
 
     def _subgroup_positions(self) -> np.ndarray:
@@ -1071,8 +1138,12 @@ class DisaggregatedEngine:
                     self.health.observe(tail) if tail is not None else None
                 )
                 if move == "demote":
+                    # fail-silent demotions cap at the all-gather floor:
+                    # the terminal "reshard" rung is reserved for the
+                    # fail-stop (rank-death) path
                     if self.gen.set_level(
-                        self.gen.level + 1,
+                        min(self.gen.level + 1,
+                            self.gen.max_silent_level),
                         bad_peers=self.health.bad_peers(),
                     ):
                         self.metrics.record_transition(

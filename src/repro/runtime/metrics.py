@@ -138,9 +138,24 @@ class ServingMetrics:
     # SLO-admission outcome counters fed by the serving layer
     # (admitted / queued / rejected / evicted / resumed)
     admission: dict = dataclasses.field(default_factory=dict)
+    # fail-stop recovery accounting (rank_death events): cumulative
+    # counters + per-event recovery stalls in seconds
+    recovery: dict = dataclasses.field(default_factory=dict)
+    recovery_times: list = dataclasses.field(default_factory=list)
 
     def record_admission(self, kind: str, n: int = 1):
         self.admission[kind] = self.admission.get(kind, 0) + int(n)
+
+    def record_rank_death(self, *, migrated: int = 0, requeued: int = 0,
+                          seconds: float = 0.0):
+        """Account one gen-rank fail-stop recovery: how many in-flight
+        slots migrated bitwise (survivor KV) vs requeued from prompt
+        (their KV shard died), and the measured/modeled time from kill
+        to the first post-recovery decode step."""
+        for k, v in (("rank_deaths", 1), ("migrated", int(migrated)),
+                     ("requeued", int(requeued))):
+            self.recovery[k] = self.recovery.get(k, 0) + v
+        self.recovery_times.append(float(seconds))
 
     def record_fault_stats(self, vec):
         """Accumulate one decode step's psum'd fault-stats vector
@@ -188,6 +203,16 @@ class ServingMetrics:
         for stat, xs in (("ttft", ttfts), ("tpot", tpots)):
             for q in (0.50, 0.95, 0.99):
                 out[f"{stat}_p{int(q * 100)}_s"] = round(_pct(xs, q), 6)
+        # fail-stop recovery counters: ALWAYS present (0 / 0.0 when no
+        # rank ever died — the same zero-denominator contract as the
+        # percentiles above, so dashboards never branch on key
+        # presence)
+        for key in ("rank_deaths", "migrated", "requeued"):
+            out[key] = int(self.recovery.get(key, 0))
+        for q in (0.50, 0.95):
+            out[f"time_to_recover_p{int(q * 100)}_s"] = round(
+                _pct(self.recovery_times, q), 6
+            )
         if self.admission:
             out["admission"] = dict(sorted(self.admission.items()))
         # ratio fields are ALWAYS present and 0.0 on a zero denominator

@@ -17,6 +17,11 @@ This package is the system the paper actually evaluates on top of that:
   independent replicas behind a least-loaded / warm-bucket-locality
   router, each progressing on its OWN clock with zero cross-replica
   synchronization (the imbalance scenario sync-free decode exists for).
+  ``MultiReplicaEngine.kill_rank`` is the fail-stop entry point: the
+  owning replica quarantines the dead gen rank and re-plans onto its
+  survivors, migrated in-flight requests resume bitwise on other
+  replicas, requeued ones replay from their prompt (docs/
+  robustness.md) — no accepted request is ever dropped.
 - :mod:`modeled` — a replica client backed by the roofline-modelled
   ``ClusterSimulator`` service times (what the serving bench sweeps).
 - :mod:`live` — a replica client over live ctx/gen servers (real

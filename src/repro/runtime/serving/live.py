@@ -24,18 +24,23 @@ import numpy as np
 
 
 class LiveReplicaClient:
-    def __init__(self, params, ctx, gen, *, num_gpus: int = 1):
+    def __init__(self, params, ctx, gen, *, num_gpus: int = 1,
+                 standby=None):
         self.params = params
         self.ctx = ctx
         self.gen = gen
         self.num_slots = gen.max_batch
         self.num_gpus = num_gpus
+        self.standby = standby      # pre-built shrunk-mesh engine the
+                                    # fail-stop path swaps to (see
+                                    # kill_rank); pre-warm its variant
+                                    # cache for zero-recompile recovery
         self._step_ema: dict[int, float] = {}
 
     @classmethod
-    def from_engine(cls, engine, *, num_gpus: int = 1):
+    def from_engine(cls, engine, *, num_gpus: int = 1, standby=None):
         return cls(engine.params, engine.ctx, engine.gen,
-                   num_gpus=num_gpus)
+                   num_gpus=num_gpus, standby=standby)
 
     def warmup(self, tables=()) -> int:
         self.ctx.warmup(self.params)
@@ -90,6 +95,77 @@ class LiveReplicaClient:
         snap = self.gen.snapshot_slot(slot)
         self.gen.release(slot)
         return snap
+
+    def kill_rank(self, dead_rank: int, active_slots=()) -> dict:
+        """Fail-stop one gen rank: quarantine it and swap to the
+        pre-built ``standby`` engine — ``strategy.resolve_policies``
+        re-resolved at the survivors' mesh sizes, split banks
+        re-sharded from SOURCE weights (checkpoint recovery — the dead
+        peer is never read), and its own pre-warmed variant cache so
+        the swap triggers no recompile.
+
+        The decode batch is sharded over the mesh's data axis, so a
+        slot's KV rows live on one data shard: slots on the dead rank's
+        data row lost their KV and requeue from their prompt; every
+        other active slot is snapshotted BITWISE from its surviving
+        shard (``snapshot_slot`` before the swap) and migrates. Returns
+        ``{"migrate": {slot: snapshot}, "requeue": [slots], "seconds",
+        "wire_bytes"}``; seconds is measured swap wall time floored by
+        the modeled re-shard stall."""
+        if self.standby is None:
+            raise ValueError(
+                "kill_rank needs a pre-built standby engine "
+                "(LiveReplicaClient(..., standby=...))"
+            )
+        from repro.core import roofline
+
+        t0 = time.perf_counter()
+        gen = self.gen
+        sizes = dict(gen._mesh_sizes)
+        data = int(sizes.get("data", 1))
+        model_size = max(
+            1, int(np.prod([v for a, v in sizes.items() if a != "data"]))
+        )
+        g = data * model_size
+        dead = int(dead_rank) % g
+        dead_row = dead // model_size  # flat ranks are data-major
+        rows_per = max(1, gen.max_batch // max(1, data))
+        migrate, requeue = {}, []
+        for slot in active_slots:
+            if slot // rows_per == dead_row:
+                requeue.append(int(slot))
+            else:
+                migrate[int(slot)] = gen.snapshot_slot(slot)
+        sb = self.standby
+        if sb.gen.max_batch != gen.max_batch:
+            raise ValueError(
+                "standby engine must keep the decode slot count: "
+                f"{sb.gen.max_batch} != {gen.max_batch}"
+            )
+        self.params, self.ctx, self.gen = sb.params, sb.ctx, sb.gen
+        self.standby = None
+        self.num_gpus = max(1, self.num_gpus - 1)
+        self._step_ema.clear()
+        rec = roofline.rank_death_recovery(gen.model.cfg, group=g)
+        return {
+            "migrate": migrate,
+            "requeue": requeue,
+            "seconds": max(time.perf_counter() - t0, rec["seconds"]),
+            "wire_bytes": rec["wire_bytes"] + rec["source_bytes"],
+        }
+
+    def can_resume(self, plan) -> bool:
+        """True when a snapshot stamped with ``plan`` restores bitwise
+        on THIS replica's active plan — the router's probe for routing
+        migrants after a fail-stop (a re-planned owner rejects its own
+        pre-death snapshots; a same-plan peer accepts them)."""
+        from repro.runtime.engine import validate_restore_plan
+
+        try:
+            validate_restore_plan(plan, self.gen.restore_plan())
+        except ValueError:
+            return False
+        return True
 
     def has_bucket(self, prompt_len: int) -> bool:
         return prompt_len in self.ctx.prefill_lens

@@ -16,8 +16,10 @@ measures.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
+from repro.core import roofline
 from repro.runtime.simulator import ClusterSimulator, SimConfig
 
 
@@ -57,6 +59,45 @@ class ModeledReplicaClient:
         # modeled slots carry no array state; the scheduler keeps the
         # remaining-token bookkeeping, which is all a resume needs
         return {}
+
+    def kill_rank(self, dead_rank: int, active_slots=()) -> dict:
+        """Fail-stop one gen rank of this modeled replica: the gen
+        group shrinks to the survivors (``gen_gpus - 1``) and every
+        service time re-prices at the shrunk subgroup. Decode slots are
+        batch-sharded over the group, so the dead rank's slots
+        (``slot % g == dead``) lose their KV shard and must requeue
+        from their prompt; every other active slot migrates (an empty
+        snapshot — the scheduler's bookkeeping is the whole modeled
+        state). Returns the recovery report the scheduler consumes:
+        ``{"migrate": {slot: snapshot}, "requeue": [slots], "seconds",
+        "wire_bytes"}`` with the re-shard stall and wire bytes priced
+        by ``roofline.rank_death_recovery``."""
+        g = self.sim_cfg.gen_gpus
+        if g < 2:
+            raise ValueError(
+                f"cannot kill a rank of a {g}-GPU generation group"
+            )
+        dead = int(dead_rank) % g
+        rec = roofline.rank_death_recovery(
+            self.sim_cfg.cfg, group=g, hw=self.sim_cfg.hw
+        )
+        migrate = {int(s): {} for s in active_slots if s % g != dead}
+        requeue = [int(s) for s in active_slots if s % g == dead]
+        self.sim_cfg = dataclasses.replace(self.sim_cfg, gen_gpus=g - 1)
+        self.sim = ClusterSimulator(self.sim_cfg)
+        self._step_time.clear()
+        self._ctx_time.clear()
+        self.num_gpus = self.sim_cfg.ctx_gpus + self.sim_cfg.gen_gpus
+        return {
+            "migrate": migrate,
+            "requeue": requeue,
+            "seconds": rec["seconds"],
+            "wire_bytes": rec["wire_bytes"] + rec["source_bytes"],
+        }
+
+    def can_resume(self, plan) -> bool:
+        # modeled slots carry no array state, so any snapshot restores
+        return True
 
     def has_bucket(self, prompt_len: int) -> bool:
         return True

@@ -60,6 +60,40 @@ class MultiReplicaEngine:
     def horizon(self) -> float:
         return max(s.t for s in self.schedulers)
 
+    def kill_rank(self, replica_idx: int, dead_rank: int) -> dict:
+        """Fail-stop one gen rank of one replica. The owner quarantines
+        the rank and re-plans onto its survivors
+        (``ServingScheduler.quarantine_rank``); its migrated in-flight
+        requests — bitwise snapshots attached — re-route through the
+        router to the LEAST-LOADED replica whose client can admit the
+        snapshot's plan (``client.can_resume``; the re-planned owner is
+        back in the pool when plan-compatible, which is what keeps the
+        post-recovery fleet balanced). Record and emitted stream travel
+        with the migrant, so TTFT stands and the stream resumes
+        mid-sentence. Requeued requests stay at the head of the owner's
+        queue and replay from their prompt. When NO replica accepts the
+        plan the migrant falls back to the owner, whose admit path
+        (``validate_restore_plan``) downgrades it to a prompt replay.
+        No accepted request is ever dropped."""
+        src = self.schedulers[replica_idx]
+        moved = src.quarantine_rank(dead_rank)
+        for req, rec, outputs in moved:
+            plan = (req.resume or {}).get("plan")
+            cands = [
+                i for i, s in enumerate(self.schedulers)
+                if getattr(s.client, "can_resume", lambda p: True)(plan)
+            ]
+            if cands:
+                i = min(cands, key=lambda j: self.schedulers[j].load())
+            else:
+                i = replica_idx
+            self.schedulers[i].adopt(req, rec, outputs)
+            self.assignments[req.req_id] = i
+        return {
+            "migrated": len(moved),
+            "requeued": int(src.metrics.recovery.get("requeued", 0)),
+        }
+
     def merged_metrics(self) -> ServingMetrics:
         out = ServingMetrics(
             num_gpus=sum(s.metrics.num_gpus for s in self.schedulers)
@@ -68,4 +102,7 @@ class MultiReplicaEngine:
             out.records.extend(s.metrics.records)
             for k, v in s.metrics.admission.items():
                 out.record_admission(k, v)
+            for k, v in s.metrics.recovery.items():
+                out.recovery[k] = out.recovery.get(k, 0) + v
+            out.recovery_times.extend(s.metrics.recovery_times)
         return out

@@ -99,7 +99,22 @@ class ServingScheduler:
 
     def _admit_into(self, slot: int, req: ServedRequest) -> None:
         rec = self.records[req.req_id]
-        first, dur = self.client.admit(slot, req)
+        try:
+            first, dur = self.client.admit(slot, req)
+        except ValueError:
+            if req.resume is None:
+                raise
+            # the destination's active plan differs from the snapshot's
+            # (``engine.validate_restore_plan``): a bitwise resume would
+            # decode against the wrong table/mesh, so fall back to a
+            # full replay from the prompt — fresh TTFT accounting, the
+            # emitted stream restarts
+            req.resume = None
+            rec.tokens_out = 0
+            rec.first_token_time = None
+            self.outputs[req.req_id] = []
+            self._count("requeued")
+            first, dur = self.client.admit(slot, req)
         self.t += dur
         if req.resume is not None:
             self._count("resumed")
@@ -201,6 +216,63 @@ class ServingScheduler:
         self.slots[slot] = None
         self.queue.insert(0, req)  # it already waited: head of queue
         self._count("evicted")
+
+    # -- fail-stop recovery ----------------------------------------------
+
+    def quarantine_rank(self, dead_rank: int) -> list:
+        """Fail-stop one gen rank of this replica's client
+        (``client.kill_rank``) and sort the in-flight slots by the
+        report: migrated slots leave with their bitwise snapshot
+        attached (returned as ``(req, record, outputs)`` triples for
+        the fleet to :meth:`adopt` elsewhere — record and emitted
+        stream travel WITH the request, TTFT stands); requeued slots
+        (their KV shard died) restart from their prompt at the head of
+        this replica's queue with TTFT re-accounted. Accepted requests
+        are never dropped — every active slot lands in exactly one of
+        the two buckets."""
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        report = self.client.kill_rank(dead_rank, active)
+        self.t += float(report.get("seconds", 0.0))
+        migrated = []
+        for slot, snap in sorted(report.get("migrate", {}).items()):
+            req = self.slots[slot]
+            req.resume = snap
+            req.remaining = self.remaining[slot]
+            self.slots[slot] = None
+            self.remaining[slot] = 0
+            migrated.append((
+                req,
+                self.records.pop(req.req_id),
+                self.outputs.pop(req.req_id),
+            ))
+        requeued = sorted(report.get("requeue", ()), reverse=True)
+        for slot in requeued:
+            req = self.slots[slot]
+            rec = self.records[req.req_id]
+            req.resume = None
+            rec.tokens_out = 0
+            rec.first_token_time = None
+            self.outputs[req.req_id] = []
+            self.slots[slot] = None
+            self.remaining[slot] = 0
+            self.queue.insert(0, req)
+            self._count("requeued")
+        self.metrics.record_rank_death(
+            migrated=len(migrated), requeued=len(requeued),
+            seconds=float(report.get("seconds", 0.0)),
+        )
+        return migrated
+
+    def adopt(self, req: ServedRequest, rec: RequestRecord,
+              outputs: list) -> None:
+        """Take over a migrated in-flight request from another replica:
+        its record (arrival/TTFT already accounted) and emitted stream
+        move with it; it resumes from its snapshot at the head of this
+        replica's queue (resumes bypass SLO admission — the request
+        already earned its slot)."""
+        self.records[req.req_id] = rec
+        self.outputs[req.req_id] = list(outputs)
+        self.queue.insert(0, req)
 
     def run(self, max_steps: Optional[int] = None) -> ServingMetrics:
         """Tick until drained (or ``max_steps`` decode steps)."""

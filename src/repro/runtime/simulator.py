@@ -111,6 +111,18 @@ class SimConfig:
                                         # factor of a straggler peer
                                         # (>= 1; 3.0 = a third of the
                                         # healthy link)
+    fault_trace: object = None          # a faults.FaultTrace (or .npz
+                                        # path): timestamped (step,
+                                        # kind, rank) events replayed
+                                        # in place of the synthetic
+                                        # Bernoulli fault_rate —
+                                        # payload kinds price a forced
+                                        # full-gather fallback on their
+                                        # exact step; rank_death
+                                        # shrinks the gen group to the
+                                        # survivors mid-run (re-shard
+                                        # stall + dead-shard slot
+                                        # requeue, docs/robustness.md)
     isl_max: int = 8192
     isl_ratio: float = 0.8              # lengths U[ratio*max, max]
     osl: int = 1024
@@ -135,6 +147,10 @@ class SimConfig:
             raise ValueError(
                 f"straggler_ranks must be >= 0; got {self.straggler_ranks}"
             )
+        if isinstance(self.fault_trace, str):
+            from repro.core.faults import FaultTrace
+
+            self.fault_trace = FaultTrace.load(self.fault_trace)
 
     def table(self) -> PolicyTable:
         """The resolved per-family policy table: ``policies`` verbatim,
@@ -269,7 +285,9 @@ class ClusterSimulator:
             return self.decode_wire_bytes(batch)
         return 0.0
 
-    def gen_step_time(self, batch: int) -> float:
+    def gen_step_time(
+        self, batch: int, fault_rate: Optional[float] = None
+    ) -> float:
         """One decode iteration on a generation server (memory-bound).
 
         Weight traffic counts every *routed* expert: with batch B and
@@ -278,8 +296,13 @@ class ClusterSimulator:
         streams nearly the full model each step. Under
         ``gen_mode="dwdp"`` the per-layer expert gather's wire time
         joins the max (DWDP overlaps prefetch with compute), which is
-        where ``expert_fetch="demand"`` moves the decode frontier."""
+        where ``expert_fetch="demand"`` moves the decode frontier.
+
+        ``fault_rate`` overrides the config's Bernoulli blend for trace
+        replay: 0.0 prices a clean step, 1.0 the forced full-gather
+        fallback step an actual payload-fault event costs."""
         sc = self.sc
+        fr = sc.fault_rate if fault_rate is None else fault_rate
         cfg = sc.cfg
         w_params = cfg.active_param_count()
         if cfg.moe is not None:
@@ -320,7 +343,7 @@ class ClusterSimulator:
             # remote bank ships and it all sits serially behind routing
             # (the fallback is taken post-validation). Blend by the
             # replayed per-step fallback probability.
-            if sc.fault_rate > 0.0 and cfg.moe is not None:
+            if fr > 0.0 and cfg.moe is not None:
                 moe = cfg.moe
                 per_expert = 3 * cfg.d_model * moe.d_ff * 1.0
                 n_moe = sum(
@@ -333,12 +356,13 @@ class ClusterSimulator:
                 if min(sc.straggler_ranks, sc.gen_gpus - 1) > 0:
                     full_wire *= sc.straggler_slowdown
                 t_fault = max(t_mem, t_flops) + full_wire
-                t = (1.0 - sc.fault_rate) * t + sc.fault_rate * t_fault
+                t = (1.0 - fr) * t + fr * t_fault
         return t + 2e-4  # + fixed step overhead
 
     def degraded_table(self, peer_badness=None) -> list[dict]:
-        """Price every rung of the policy degradation ladder the
-        HealthMonitor can walk (predictive -> demand -> all-gather) at
+        """Price every rung of the policy degradation ladder
+        (predictive -> demand -> all-gather, plus the terminal
+        fail-stop ``"reshard"`` rung priced at the survivor subgroup) at
         this deployment's decode shape — ``roofline.degraded_step_times``
         over the resolved policy table, with this scenario's
         validation/straggler/fault-rate replay applied on top of each
@@ -376,13 +400,28 @@ class ClusterSimulator:
         # speculative plan shrinks)
         ladder = degradation_ladder(sc.gen_table())
         assert len(rows) == len(ladder)
-        for row, (_, rung_table, rung_excl) in zip(rows, ladder):
+        for row, (label, rung_table, rung_excl) in zip(rows, ladder):
             # replay the scenario at this rung: swap the rung's table in
             # GEN-side only (the ladder is a decode-path response; the
             # ctx servers keep their table) and re-price the full gen
             # step (memory/compute + wire + straggler stretch +
             # fault-fallback blend)
             sub = dataclasses.replace(sc, gen_policies=rung_table)
+            if label == "reshard":
+                # fail-stop terminal rung: post-recovery steady state
+                # runs the survivor subgroup (one fewer gen GPU and a
+                # dead straggler no longer in the group); the one-off
+                # re-shard stall is priced separately in the row
+                sub = dataclasses.replace(
+                    sub,
+                    gen_gpus=max(1, sc.gen_gpus - 1),
+                    straggler_ranks=max(0, sc.straggler_ranks - 1),
+                )
+                row["t_scenario_us"] = round(
+                    ClusterSimulator(sub).gen_step_time(sc.gen_batch) * 1e6,
+                    3,
+                )
+                continue
             if rung_excl is None or rung_excl:
                 row["excluded_peers"] = list(bad)
                 # the exclusion set's share of the remote bank re-routes
@@ -421,6 +460,8 @@ class ClusterSimulator:
         events: list[tuple[float, str]] = [(next_arrival, "arrival")]
         ready: list[RequestRecord] = []  # prefilled, waiting for a slot
         t_gen = 0.0
+        tr = sc.fault_trace
+        steps_done = 0  # decode steps taken — the trace's clock
 
         while events and t < sc.horizon_s:
             t, kind = heapq.heappop(events)
@@ -488,7 +529,76 @@ class ClusterSimulator:
                 n = 1
                 if not ready:
                     n = max(1, min(64, min(gen_remaining[i] for i in active_idx)))
-                dur = self.gen_step_time(len(active_idx)) * n
+                if tr is None:
+                    dur = self.gen_step_time(len(active_idx)) * n
+                else:
+                    # trace replay: clamp the multi-step advance to the
+                    # next recorded event so none is skipped, then price
+                    # this window's LEADING step by what the trace says
+                    # actually happened on it (subsequent steps in the
+                    # window are clean by construction of the clamp)
+                    nxt = tr.next_event_step(steps_done + 1)
+                    if nxt is not None:
+                        n = max(1, min(n, nxt - steps_done))
+                    stall = 0.0
+                    vec = tr.stat_vector(steps_done, self.sc.gen_gpus)
+                    k_fault = 0
+                    if vec is not None:
+                        metrics.record_fault_stats(vec)
+                        k_fault = 1
+                    for kind_ev, rank_ev in tr.events_at(steps_done):
+                        if kind_ev != "rank_death" or self.sc.gen_gpus < 2:
+                            continue
+                        g = self.sc.gen_gpus
+                        dead = int(rank_ev) % g
+                        rec = roofline.rank_death_recovery(
+                            self.sc.cfg, group=g, hw=self.sc.hw
+                        )
+                        stall += rec["seconds"]
+                        # the dead rank's KV shard is gone: slots batch-
+                        # sharded onto it requeue from their prompt
+                        # (back through the context phase — TTFT
+                        # re-accounts); survivor slots keep their decode
+                        # state bitwise and ride through the swap
+                        migrated = requeued = 0
+                        for i in active_idx:
+                            if i % g == dead:
+                                r = gen_active[i]
+                                r.tokens_out = 0
+                                r.first_token_time = None
+                                gen_active[i] = None
+                                gen_remaining[i] = 0
+                                queue.append(r)
+                                requeued += 1
+                            else:
+                                migrated += 1
+                        self.sc = dataclasses.replace(
+                            self.sc, gen_gpus=g - 1
+                        )
+                        metrics.record_rank_death(
+                            migrated=migrated, requeued=requeued,
+                            seconds=rec["seconds"],
+                        )
+                        if ctx_free_at <= t and queue:
+                            heapq.heappush(events, (t, "ctx_start"))
+                        active_idx = [
+                            i for i in active_idx
+                            if gen_active[i] is not None
+                        ]
+                    if not active_idx:
+                        steps_done += n
+                        t_gen = t + stall
+                        if ready:
+                            heapq.heappush(events, (t_gen, "gen_step"))
+                        continue
+                    t_clean = self.gen_step_time(
+                        len(active_idx), fault_rate=0.0
+                    )
+                    t_fault = self.gen_step_time(
+                        len(active_idx), fault_rate=1.0
+                    )
+                    dur = t_fault * k_fault + t_clean * (n - k_fault) + stall
+                steps_done += n
                 t_gen = t + dur
                 for i in active_idx:
                     gen_active[i].tokens_out += n

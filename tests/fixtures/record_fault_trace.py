@@ -1,0 +1,104 @@
+"""Record the fault-trace fixture (fault_trace.npz).
+
+    python tests/fixtures/record_fault_trace.py
+
+Runs a REAL fault-injected engine — 8 fake host devices, (2, 4) mesh,
+the 20-expert fault-test arch, a storm ``FaultSpec`` — and converts
+each decode step's psum'd fault-stats vector (``GenerationServer.
+last_fault_stats``: per-kind counters + the per-peer detected tail)
+into timestamped ``FaultTrace`` events: one event per kind seen on the
+step, attributed to the hottest peer of the step's detected tail. A
+``rank_death`` event is stamped three quarters of the way through —
+rank death is a host-level fail-stop (it cannot be injected inside
+jit), so the recorder places it the way an operator's incident log
+would: at a wall-clock step, against a flat gen rank.
+
+tests/test_rank_death.py replays the fixture through
+``ClusterSimulator`` (SimConfig.fault_trace) and the ``HealthMonitor``
+(FaultTrace.stat_vector) and asserts replayed pressure drives the same
+ladder the Bernoulli storm does; re-run this script only when the
+injector or the stats layout changes the recorded semantics.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count=8"
+)
+
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import ArchConfig, MoEConfig  # noqa: E402
+from repro.core.faults import (  # noqa: E402
+    FAULT_STAT_BASE,
+    RANK_DEATH,
+    _TRACE_STAT_INDEX,
+    FaultTrace,
+)
+from repro.launch.serve import build_engine  # noqa: E402
+from repro.runtime.engine import Request  # noqa: E402
+
+CFG = ArchConfig(
+    name="fault-trace", family="moe", num_layers=4, d_model=32,
+    num_heads=2, num_kv_heads=2, head_dim=16, d_ff=0, vocab_size=128,
+    moe=MoEConfig(num_experts=20, top_k=2, d_ff=48),
+)
+MESH = (2, 4)
+SPEC = "seed=1,drop=0.004,zero=0.002,corrupt=0.003,cache=0.005"
+STEPS = 32
+OUT = os.path.join(os.path.dirname(__file__), "fault_trace.npz")
+
+# fault-stats prefix index -> trace kind (inverse of _TRACE_STAT_INDEX)
+_KIND_AT = {v: k for k, v in _TRACE_STAT_INDEX.items()}
+
+
+def main():
+    engine, _ = build_engine(
+        CFG, mesh_shape=MESH, prefill_len=8, cache_len=48, max_batch=4,
+        gen_mode="dwdp",
+        policy={"moe_experts": "split:predictive:allgather:4:4:8"},
+        fault_spec=SPEC,
+    )
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        engine.submit(Request(
+            req_id=i,
+            tokens=rng.integers(0, CFG.vocab_size, 8).astype(np.int32),
+            target_len=STEPS,
+        ))
+    engine.ctx.warmup(engine.params)
+    while engine.queue and any(
+        r is None for r in engine.gen.slot_req
+    ):
+        req = engine.queue.pop(0)
+        slot = engine.gen.slot_req.index(None)
+        first, state = engine.ctx.prefill(engine.params, req.tokens)
+        engine.gen.admit(slot, req.req_id, first, state)
+    events = []
+    for step in range(STEPS):
+        engine.gen.decode_step(engine.params)
+        fs = engine.gen.last_fault_stats
+        if fs is None:
+            continue
+        tail = np.asarray(fs[FAULT_STAT_BASE:])
+        peer = int(tail.argmax()) if tail.size and tail.max() > 0 else 0
+        for idx, kind in _KIND_AT.items():
+            if fs[idx] > 0:
+                events.append((step, kind, peer))
+    # host-level fail-stop incident: flat gen rank 3 dies at 3/4 run
+    events.append((3 * STEPS // 4, RANK_DEATH, 3))
+    trace = FaultTrace.from_events(events)
+    trace.save(OUT)
+    payload = sum(1 for k in trace.kinds if k != RANK_DEATH)
+    print(f"saved {OUT}: {len(trace)} events over {STEPS} steps "
+          f"({payload} payload, fallback rate "
+          f"{trace.fallback_rate(STEPS):.3f})")
+
+
+if __name__ == "__main__":
+    main()

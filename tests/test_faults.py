@@ -430,28 +430,33 @@ def test_degradation_ladder():
     ))
     ladder = degradation_ladder(t)
     assert [label for label, _, _ in ladder] == [
-        "predictive", "predictive+excl", "demand", "all",
+        "predictive", "predictive+excl", "demand", "all", "reshard",
     ]
     # the +excl rung keeps the root table; its peer set is the engine's
     # runtime choice (None = "fill in the HealthMonitor's worst peer"),
     # every other rung excludes nobody
-    assert [excl for _, _, excl in ladder] == [(), None, (), ()]
+    assert [excl for _, _, excl in ladder] == [(), None, (), (), ()]
     assert ladder[1][1] is ladder[0][1]
     assert ladder[2][1].family("moe_experts").fetch == "demand"
     assert ladder[3][1].family("moe_experts").fetch == "all"
+    # the terminal fail-stop rung runs the all-gather table (no
+    # per-peer payload rounds during recovery)
+    assert ladder[4][1].family("moe_experts").fetch == "all"
     # sync_free roots walk the same shape
     ts = PolicyTable(default=GatherPolicy(layout="split"), families=(
         ("moe_experts", GatherPolicy(layout="split", fetch="sync_free",
                                      budget=4, cache_budget=8)),
     ))
     assert [label for label, _, _ in degradation_ladder(ts)] == [
-        "sync_free", "sync_free+excl", "demand", "all",
+        "sync_free", "sync_free+excl", "demand", "all", "reshard",
     ]
     # a demand-rooted table has no predictive or exclusion rung
     t2 = PolicyTable(default=GatherPolicy(layout="split"), families=(
         ("moe_experts", GatherPolicy(layout="split", fetch="demand")),
     ))
-    assert [lab for lab, _, _ in degradation_ladder(t2)] == ["demand", "all"]
+    assert [lab for lab, _, _ in degradation_ladder(t2)] == [
+        "demand", "all", "reshard",
+    ]
 
 
 def test_checksum_overhead_under_2pct():
@@ -491,9 +496,13 @@ def test_simulator_scenario_replay():
     assert t2 > t1           # fallback + straggler replay costs real time
     rows = storm.degraded_table()
     assert [r["fetch"] for r in rows] == [
-        "predictive", "predictive+excl", "demand", "all",
+        "predictive", "predictive+excl", "demand", "all", "reshard",
     ]
     assert all(r["t_scenario_us"] > 0 for r in rows)
+    # the fail-stop rung prices the survivor subgroup and carries the
+    # one-off recovery cost columns
+    assert rows[-1]["reshard_wire_mb"] > 0
+    assert rows[-1]["recovery_stall_us"] > 0
     # sync_free replays through the same ladder, rooted at its own rung
     sf = ClusterSimulator(SimConfig(
         **{**base, "expert_fetch": "sync_free"}, validate_fetch=True,
@@ -501,7 +510,7 @@ def test_simulator_scenario_replay():
     ))
     sf_rows = sf.degraded_table()
     assert [r["fetch"] for r in sf_rows] == [
-        "sync_free", "sync_free+excl", "demand", "all",
+        "sync_free", "sync_free+excl", "demand", "all", "reshard",
     ]
     with pytest.raises(ValueError):
         SimConfig(cfg=cfg, fault_rate=1.5)
